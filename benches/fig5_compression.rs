@@ -1,0 +1,40 @@
+//! Bench for Figure 5's substrate: Wanda mask construction and GPTQ
+//! quantization cost across sparsity levels and layer shapes.
+
+use sqft::quant::{gptq_quantize, rtn_quantize};
+use sqft::sparsity::{nm_mask, topk_row_mask, wanda_mask_host};
+use sqft::tensor::{Rng, Tensor};
+use sqft::util::bench::bench;
+
+fn main() {
+    println!("# fig5 bench: compression substrate across shapes/sparsities");
+    let mut rng = Rng::new(1);
+    for (m, n) in [(256, 256), (1024, 256), (256, 1024)] {
+        let w = Tensor::randn(&mut rng, &[m, n], 0.5);
+        let norms = Tensor::rand_uniform(&mut rng, &[n], 0.1, 2.0);
+        for sp in [0.3, 0.5, 0.7] {
+            bench(&format!("wanda_mask/{m}x{n}/s{sp}"), 1, 5, || {
+                wanda_mask_host(&w, &norms, sp);
+            });
+        }
+        bench(&format!("nm_mask_2_4/{m}x{n}"), 1, 5, || {
+            nm_mask(&w, 2, 4).unwrap();
+        });
+        let scores = Tensor::rand_uniform(&mut rng, &[m, n], 0.0, 1.0);
+        bench(&format!("topk_row_mask/{m}x{n}"), 1, 5, || {
+            topk_row_mask(&scores, 0.5);
+        });
+    }
+    // GPTQ vs RTN at a transformer-layer shape
+    let n = 256;
+    let w = Tensor::randn(&mut rng, &[256, n], 0.5);
+    let x = Tensor::randn(&mut rng, &[512, n], 1.0);
+    let mut h = Tensor::zeros(&[n, n]);
+    x.accumulate_gram(&mut h);
+    bench("rtn_quantize/256x256", 1, 5, || {
+        rtn_quantize(&w, 32, 4, None).unwrap();
+    });
+    bench("gptq_quantize/256x256", 1, 3, || {
+        gptq_quantize(&w, &h, 32, 4, None, 0.01).unwrap();
+    });
+}

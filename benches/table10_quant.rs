@@ -1,0 +1,45 @@
+//! Bench for Table 10's substrate: GPTQ vs RTN quantization quality *and*
+//! cost at every layer shape of the tiny/small configs, plus fake-quant
+//! merge kernels through the runtime.
+
+use sqft::quant::{gptq_quantize, rtn_quantize};
+use sqft::runtime::Runtime;
+use sqft::tensor::{Rng, Tensor};
+use sqft::util::bench::bench;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    println!("# table10 bench: quantization substrate");
+    let mut rng = Rng::new(1);
+    for (m, n) in [(64, 64), (128, 64), (64, 128), (256, 256)] {
+        let w = Tensor::randn(&mut rng, &[m, n], 0.4);
+        let x = Tensor::randn(&mut rng, &[4 * n, n], 1.0);
+        let mut h = Tensor::zeros(&[n, n]);
+        x.accumulate_gram(&mut h);
+        let g = gptq_quantize(&w, &h, 32.min(n), 4, None, 0.01)?;
+        let r = rtn_quantize(&w, 32.min(n), 4, None)?;
+        println!("quality {m}x{n}: gptq weighted_err {:.4e} vs rtn {:.4e} ({:.2}x better)",
+            g.weighted_err(&w, &h), r.weighted_err(&w, &h),
+            r.weighted_err(&w, &h) / g.weighted_err(&w, &h).max(1e-12));
+        bench(&format!("gptq/{m}x{n}"), 1, 3, || {
+            gptq_quantize(&w, &h, 32.min(n), 4, None, 0.01).unwrap();
+        });
+    }
+
+    // fakequant artifact through the runtime (merge path)
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::new(&dir)?;
+        let exe = rt.shape_executable("fakequant_64x64g2")?;
+        let w = Tensor::randn(&mut rng, &[64, 64], 0.4);
+        let scales = Tensor::full(&[64, 2], 0.05);
+        let zeros = Tensor::full(&[64, 2], 8.0);
+        let qmax = Tensor::scalar(15.0);
+        bench("fakequant_artifact/64x64", 2, 10, || {
+            exe.run(&rt.client, &[w.clone().into(), scales.clone().into(),
+                                  zeros.clone().into(), qmax.clone().into()])
+                .unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Bench for Table 1's underlying work: per-method pipeline stage timings
+//! (prepare = calib + wanda + gptq; one fine-tune step; one eval pass) on
+//! the tiny config.  Run via `cargo bench --bench table1_pipeline`.
+
+use sqft::data::{Batcher, Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::nls::SearchSpace;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::tensor::Rng;
+use sqft::train::TrainOpts;
+use sqft::util::bench::bench;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+    let ds = Dataset::generate(Task::SynGsm, 600, 0, 100, 7);
+    let mut rng = Rng::new(7);
+    let base = init_base(&hyper, &mut rng);
+
+    println!("# table1 bench: pipeline stages, {config}");
+    for method in [Method::SparsePeft, Method::QaSparsePeft] {
+        bench(&format!("prepare/{}", method.cli_name()), 1, 3, || {
+            let mut r = Rng::new(9);
+            pipeline::prepare(&rt, config, &base, method, 0.5, &ds.train, &tok,
+                              2, &mut r).unwrap();
+        });
+    }
+
+    // one train step + one eval pass per method
+    for method in [Method::Lora, Method::SparsePeft, Method::QaSparsePeft] {
+        let prepared = pipeline::prepare(&rt, config, &base, method, 0.5,
+                                         &ds.train, &tok, 2, &mut Rng::new(9))?;
+        let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+        let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+        let opts = TrainOpts { steps: 1, lr: 1e-3, log_every: 1, seed: 1,
+                               fixed_rank: false };
+        let (mut trainer, _) =
+            pipeline::finetune(&rt, config, &prepared, space, &ds.train, &tok, &opts)?;
+        let batcher = Batcher::new(&ds.train, &tok, hyper.seq_len, hyper.batch);
+        let mut brng = Rng::new(3);
+        bench(&format!("train_step/{}", method.cli_name()), 2, 10, || {
+            let b = batcher.random_batch(&mut brng).unwrap();
+            trainer.step_batch(&b, 1e-3).unwrap();
+        });
+        let cfg = trainer.space.heuristic_config();
+        bench(&format!("eval_100/{}", method.cli_name()), 1, 3, || {
+            pipeline::evaluate_unmerged(&rt, config, &prepared, &trainer, &cfg,
+                                        &ds.test, &tok).unwrap();
+        });
+    }
+    Ok(())
+}

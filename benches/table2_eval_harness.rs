@@ -1,0 +1,48 @@
+//! Bench for Tables 2/3's cost driver: multi-task evaluation throughput
+//! (batched eval artifact + exact-match scoring) and batcher encoding.
+
+use sqft::data::{Batcher, Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::tensor::Rng;
+use sqft::util::bench::{bench, bench_throughput};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+
+    println!("# table2/3 bench: eval harness + batcher throughput");
+    // batcher encoding throughput (host-side substrate)
+    let ds_all = Dataset::generate(Task::SynGsm, 2000, 0, 0, 7);
+    bench_throughput("batcher_encode_2000", 1, 5, || {
+        let mut b = Batcher::new(&ds_all.train, &tok, hyper.seq_len, hyper.batch);
+        let mut n = 0;
+        while let Some(batch) = b.next_batch().unwrap() {
+            n += batch.real;
+        }
+        n
+    });
+
+    // eval throughput per task family
+    let base = init_base(&hyper, &mut Rng::new(7));
+    let prepared = pipeline::prepare(&rt, config, &base, Method::Lora, 0.0,
+                                     &Dataset::generate(Task::SynGsm, 100, 0, 0, 7).train,
+                                     &tok, 0, &mut Rng::new(9))?;
+    for task in [Task::SynGsm, Task::SynBoolq] {
+        let ds = Dataset::generate(task, 0, 0, 200, 7);
+        bench(&format!("eval_200/{}", task.name()), 1, 3, || {
+            pipeline::evaluate_base(&rt, config, &prepared, &ds.test, &tok).unwrap();
+        });
+    }
+    Ok(())
+}

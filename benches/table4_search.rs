@@ -1,0 +1,56 @@
+//! Bench for Table 4's cost driver: configuration-evaluation throughput
+//! during hill-climbing (Algorithm 1's Eval step dominates the search
+//! budget) and the search bookkeeping itself.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::nls::{hill_climb, SearchSpace};
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::tensor::Rng;
+use sqft::train::TrainOpts;
+use sqft::util::bench::bench;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let tok = Tokenizer::new();
+    let ds = Dataset::generate(Task::SynArcE, 400, 100, 50, 7);
+    let hyper = rt.model(config)?.clone();
+    let base = init_base(&hyper, &mut Rng::new(7));
+
+    println!("# table4 bench: NLS config-eval throughput + search bookkeeping");
+    let prepared = pipeline::prepare(&rt, config, &base, Method::SparsePeft, 0.5,
+                                     &ds.train, &tok, 2, &mut Rng::new(9))?;
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+    let opts = TrainOpts { steps: 5, lr: 1e-3, log_every: 5, seed: 1,
+                           fixed_rank: false };
+    let (trainer, _) = pipeline::finetune(&rt, config, &prepared, space,
+                                          &ds.train, &tok, &opts)?;
+    let cfg = trainer.space.heuristic_config();
+
+    bench("eval_one_config_100val", 1, 5, || {
+        pipeline::evaluate_unmerged(&rt, config, &prepared, &trainer, &cfg,
+                                    &ds.val, &tok).unwrap();
+    });
+    bench("realize_rank_masks", 2, 50, || {
+        trainer.space.realize(&cfg).unwrap();
+    });
+    // pure search bookkeeping with a synthetic objective
+    let space2 = trainer.space.clone();
+    bench("hill_climb_bookkeeping_t10_n8", 1, 5, || {
+        let mut rng = Rng::new(5);
+        let s = space2.clone();
+        hill_climb(&s, s.heuristic_config(), 10, 8, 2,
+                   |c| Ok(c.iter().sum::<usize>() as f64), &mut rng).unwrap();
+    });
+    Ok(())
+}

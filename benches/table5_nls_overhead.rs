@@ -1,0 +1,52 @@
+//! Bench for Table 5's axis: the cost of NLS elastic-rank sampling vs
+//! fixed-rank LoRA in the train step (paper: "slightly slower due to the
+//! additional mask and adapter calculations").
+
+use sqft::data::{Batcher, Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::nls::SearchSpace;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::tensor::Rng;
+use sqft::train::TrainOpts;
+use sqft::util::bench::bench;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+    let ds = Dataset::generate(Task::SynGsm, 600, 0, 50, 7);
+    let base = init_base(&hyper, &mut Rng::new(7));
+
+    println!("# table5 bench: LoRA vs NLS step cost, dense vs masked adapters");
+    for (label, method, fixed) in [
+        ("lora_fixed_rank", Method::Shears, true),
+        ("nls_sampled_rank", Method::Shears, false),
+        ("sparsepeft_nls", Method::SparsePeft, false),
+        ("qa_sparsepeft_nls", Method::QaSparsePeft, false),
+    ] {
+        let prepared = pipeline::prepare(&rt, config, &base, method, 0.5,
+                                         &ds.train, &tok, 2, &mut Rng::new(9))?;
+        let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+        let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+        let opts = TrainOpts { steps: 1, lr: 1e-3, log_every: 1, seed: 1,
+                               fixed_rank: fixed };
+        let (mut trainer, _) =
+            pipeline::finetune(&rt, config, &prepared, space, &ds.train, &tok, &opts)?;
+        let batcher = Batcher::new(&ds.train, &tok, hyper.seq_len, hyper.batch);
+        let mut brng = Rng::new(3);
+        bench(label, 2, 15, || {
+            let b = batcher.random_batch(&mut brng).unwrap();
+            trainer.step_batch(&b, 1e-3).unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Bench for Table 7's inference columns: serving throughput of merged vs
+//! unmerged models (the paper's adapter-overhead claim) and the merge /
+//! pack costs themselves.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::quant::pack::pack_int4;
+use sqft::runtime::Runtime;
+use sqft::serve::Engine;
+use sqft::tensor::Rng;
+use sqft::util::bench::{bench, bench_throughput};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 600, 0, 50, 7);
+    let base = init_base(&hyper, &mut Rng::new(7));
+
+    println!("# table7 bench: merged vs unmerged serving + merge/pack costs");
+    let prepared = pipeline::prepare(&rt, config, &base, Method::QaSparsePeft,
+                                     0.5, &ds.train, &tok, 2, &mut Rng::new(9))?;
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = sqft::nls::SearchSpace::new(&prepared.hyper, choices, alpha)?;
+    let opts = sqft::train::TrainOpts { steps: 5, lr: 1e-3, log_every: 5,
+                                        seed: 1, fixed_rank: false };
+    let (trainer, _) = pipeline::finetune(&rt, config, &prepared, space,
+                                          &ds.train, &tok, &opts)?;
+    let cfg = trainer.space.heuristic_config();
+
+    bench("merge_qa_sparsepeft", 1, 5, || {
+        pipeline::merged_state(&prepared, &trainer, &cfg).unwrap();
+    });
+    let merged = pipeline::merged_state(&prepared, &trainer, &cfg)?;
+    let codes = merged.codes.as_ref().unwrap().get("codes_q").unwrap().index0(0);
+    bench("pack_int4/64x64", 2, 10, || {
+        pack_int4(&codes).unwrap();
+    });
+
+    // unmerged engine (adapter path) vs merged engine
+    let frozen_un = prepared.frozen_set()?;
+    let engine_un = Engine::new(&rt, config, &frozen_un,
+                                Some((&trainer.adapters, &trainer.space, &cfg)),
+                                "eval_qa")?;
+    let mut frozen_m = sqft::model::ParamSet::new();
+    for (n, v) in merged.base.iter() {
+        frozen_m.insert(n, v.clone());
+    }
+    for (n, v) in pipeline::dense_adapter_masks(&hyper).iter() {
+        frozen_m.insert(n, v.clone());
+    }
+    let engine_m = Engine::new(&rt, config, &frozen_m, None, "eval")?;
+
+    let mut grng = Rng::new(11);
+    let prompts: Vec<String> =
+        (0..8).map(|_| task.gen_sample(&mut grng).prompt).collect();
+    let t_un = bench_throughput("serve_unmerged_batch8", 1, 8, || {
+        engine_un.generate_batch(&prompts).unwrap();
+        prompts.len()
+    });
+    let t_m = bench_throughput("serve_merged_batch8", 1, 8, || {
+        engine_m.generate_batch(&prompts).unwrap();
+        prompts.len()
+    });
+    println!("merged/unmerged inference speedup: {:.2}x (paper: 4 > 1)",
+             t_m / t_un);
+    Ok(())
+}

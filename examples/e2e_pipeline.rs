@@ -1,0 +1,73 @@
+//! End-to-end driver (DESIGN.md §4 headline run): pretrain a base
+//! transformer on the synthetic GSM task for a few hundred steps (loss
+//! curve logged), run the full SQFT pipeline — Wanda 50% → GPTQ INT4 →
+//! QA-SparsePEFT NLS fine-tuning → Eq. 3 merge — and record everything in
+//! EXPERIMENTS.md.
+//!
+//!   SQFT_MODEL=sqft-small SQFT_PRETRAIN_STEPS=600 \
+//!     cargo run --release --example e2e_pipeline
+
+use sqft::data::Task;
+use sqft::harness::{self, Harness};
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::report::{pct, Table};
+use sqft::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let h = Harness::from_env()?;
+    let task = Task::SynGsm;
+    let ds = &h.datasets(&[task])[0];
+    let hyper = h.rt.model(&h.model)?.clone();
+    println!("== e2e: {} ({:.1}M params) on {} ==",
+        h.model, hyper.param_count as f64 / 1e6, task.name());
+
+    let sw = Stopwatch::start();
+    let (base, curve) = h.base_for(task.name(), &ds.train)?;
+    let pretrain_secs = sw.secs();
+
+    let dense = h.baseline_acc(&base, Method::Lora, 0.0, &ds.train, &ds.test)?;
+    let sparse_untuned =
+        h.baseline_acc(&base, Method::QaSparsePeft, 0.5, &ds.train, &ds.test)?;
+
+    let sw = Stopwatch::start();
+    let (prepared, trainer) = h.tune(&base, Method::QaSparsePeft, 0.5, &ds.train)?;
+    let tune_secs = sw.secs();
+    let (acc, macc, preserved) = h.eval_cell(&prepared, &trainer, &ds.test)?;
+    let macc = macc.unwrap();
+
+    let mut t = Table::new(
+        &format!("E2E pipeline: {} on {}", h.model, task.name()),
+        &["Stage", "Accuracy(%)", "Notes"]);
+    t.row(vec!["dense base (pretrained)".into(), pct(dense.accuracy()),
+               format!("{} pretrain steps, {:.0}s", h.pretrain_steps, pretrain_secs)]);
+    t.row(vec!["wanda 50% + GPTQ INT4, w/o tune".into(),
+               pct(sparse_untuned.accuracy()),
+               format!("sparsity {:.1}%", prepared.measured_sparsity() * 100.0)]);
+    t.row(vec!["QA-SparsePEFT fine-tuned (unmerged)".into(), pct(acc.accuracy()),
+               format!("{} NLS steps, {:.0}s", h.steps, tune_secs)]);
+    t.row(vec!["QA-SparsePEFT merged (INT4)".into(), pct(macc.accuracy()),
+               format!("sparsity preserved: {}", preserved.unwrap())]);
+    print!("{}", t.render());
+
+    assert!(
+        (acc.accuracy() - macc.accuracy()).abs() <= 1.0 / acc.total.max(1) as f64 + 1e-9,
+        "merge must preserve accuracy ({} vs {})", acc.correct, macc.correct);
+    let body = format!(
+        "{}\nPretraining loss curve ({} steps):\n{}\n\
+         Fine-tuning recovered {:.1} accuracy points of the {:.1}-point \
+         compression drop; merged INT4 model is bit-identical in accuracy \
+         to the unmerged adapter form (paper §2.4 claim).\n",
+        harness::table_with_note(&t,
+            "paper-shape check: compression drops accuracy, SQFT recovers it, \
+             merge costs nothing"),
+        h.pretrain_steps,
+        harness::render_curve(&curve),
+        (acc.accuracy() - sparse_untuned.accuracy()) * 100.0,
+        (dense.accuracy() - sparse_untuned.accuracy()) * 100.0);
+    harness::log_experiment(
+        &format!("E2E pipeline ({} / {})", h.model, task.name()), &body)?;
+    println!("logged to EXPERIMENTS.md");
+    let _ = &pipeline::default_space_for(&prepared.hyper); // doc reference
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Paper Table 2: math instruction tuning — fine-tune once on the unified
+//! math mixture (syn-gsm + syn-mawps + syn-svamp), evaluate per task +
+//! average, all methods at 50% sparsity.
+//!
+//!   cargo run --release --example table2_math_instruct
+
+use sqft::data::{Dataset, Task};
+use sqft::harness::{self, Harness};
+use sqft::peft::Method;
+use sqft::report::{pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let h = Harness::from_env()?;
+    let tasks = Task::math();
+    let datasets = h.datasets(&tasks);
+    let unified = Dataset::unified(&datasets, h.seed);
+    let (base, _) = h.base_for("math", &unified)?;
+    let sparsity = 0.5;
+
+    let mut t = Table::new(
+        &format!("Table 2 — {} math instruction tuning (50% sparsity)", h.model),
+        &["Method", "Mergeable", "Final Precision",
+          "syn-gsm", "syn-mawps", "syn-svamp", "Average"]);
+
+    let eval_all = |prepared: &sqft::pipeline::Prepared,
+                    trainer: &sqft::train::Trainer|
+     -> anyhow::Result<(Vec<f64>, Option<bool>)> {
+        let mut accs = Vec::new();
+        let mut ok = None;
+        for ds in &datasets {
+            let (a, m, o) = h.eval_cell(prepared, trainer, &ds.test)?;
+            accs.push(m.map(|x| x.accuracy()).unwrap_or(a.accuracy()));
+            ok = ok.or(o);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        accs.push(avg);
+        Ok((accs, ok))
+    };
+
+    // untuned references
+    let mut untuned = vec![];
+    for ds in &datasets {
+        untuned.push(
+            h.baseline_acc(&base, Method::SparsePeft, sparsity, &unified, &ds.test)?
+                .accuracy());
+    }
+    let avg = untuned.iter().sum::<f64>() / untuned.len() as f64;
+    let mut row = vec!["w/o tune (50% sparse)".into(), "-".into(), "FP16".into()];
+    row.extend(untuned.iter().map(|&a| pct(a)));
+    row.push(pct(avg));
+    t.row(row);
+
+    for method in [Method::Lora, Method::Shears, Method::SparsePeft,
+                   Method::GptqLora, Method::Sqft, Method::QaSparsePeft] {
+        let (prepared, trainer) = h.tune(&base, method, sparsity, &unified)?;
+        let (accs, ok) = eval_all(&prepared, &trainer)?;
+        t.row(h.method_row(method, &accs, ok));
+        eprintln!("[table2] {} avg {}", method.name(), pct(*accs.last().unwrap()));
+    }
+
+    print!("{}", t.render());
+    harness::log_experiment(
+        &format!("Table 2 ({} / math instruct)", h.model),
+        &harness::table_with_note(&t,
+            "paper-shape: SparsePEFT tops or matches the FP16 block while \
+             mergeable; QA-SparsePEFT competitive in the INT4 block"))?;
+    Ok(())
+}

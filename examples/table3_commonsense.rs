@@ -1,0 +1,69 @@
+//! Paper Table 3: commonsense reasoning — unified training over the seven
+//! synthetic MC tasks, per-task + average accuracy, all methods at 50%.
+//!
+//!   cargo run --release --example table3_commonsense
+
+use sqft::data::{Dataset, Task};
+use sqft::harness::{self, Harness};
+use sqft::peft::Method;
+use sqft::report::{pct, Table};
+
+fn main() -> anyhow::Result<()> {
+    let h = Harness::from_env()?;
+    let tasks = Task::commonsense();
+    let datasets = h.datasets(&tasks);
+    let unified = Dataset::unified(&datasets, h.seed);
+    let (base, _) = h.base_for("commonsense", &unified)?;
+    let sparsity = 0.5;
+
+    let mut headers: Vec<String> =
+        vec!["Method".into(), "Mergeable".into(), "Precision".into()];
+    headers.extend(tasks.iter().map(|t| t.name().to_string()));
+    headers.push("Average".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Table 3 — {} commonsense reasoning (50% sparsity)", h.model),
+        &hdr_refs);
+
+    // dense + untuned references
+    for (label, method, sp) in [
+        ("w/o tune (dense)", Method::Lora, 0.0),
+        ("w/o tune (50% sparse)", Method::SparsePeft, sparsity),
+    ] {
+        let mut accs = Vec::new();
+        for ds in &datasets {
+            accs.push(h.baseline_acc(&base, method, sp, &unified, &ds.test)?
+                .accuracy());
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        let mut row = vec![label.to_string(), "-".into(),
+                           if sp > 0.0 { "FP16" } else { "FP16" }.into()];
+        row.extend(accs.iter().map(|&a| pct(a)));
+        row.push(pct(avg));
+        t.row(row);
+    }
+
+    for method in [Method::Lora, Method::Shears, Method::SparsePeft,
+                   Method::GptqLora, Method::Sqft, Method::QaSparsePeft] {
+        let (prepared, trainer) = h.tune(&base, method, sparsity, &unified)?;
+        let mut accs = Vec::new();
+        let mut ok = None;
+        for ds in &datasets {
+            let (a, m, o) = h.eval_cell(&prepared, &trainer, &ds.test)?;
+            accs.push(m.map(|x| x.accuracy()).unwrap_or(a.accuracy()));
+            ok = ok.or(o);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        accs.push(avg);
+        t.row(h.method_row(method, &accs, ok));
+        eprintln!("[table3] {} avg {}", method.name(), pct(avg));
+    }
+
+    print!("{}", t.render());
+    harness::log_experiment(
+        &format!("Table 3 ({} / commonsense)", h.model),
+        &harness::table_with_note(&t,
+            "paper-shape: all methods within a band; QA-SparsePEFT gives the \
+             most efficient (INT4, merged) model at competitive accuracy"))?;
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Paper Tables 6 + 7: cost analysis of the four pipeline configurations —
+//! model storage, fine-tuning speed/memory, inference speed/memory —
+//! measured on this testbed.
+//!
+//!   cargo run --release --example table7_cost_analysis
+//!
+//! Expected orderings (paper Table 6): storage 1 > 3 >> 2 > 4;
+//! ft time 1 ≈ 2 < 3 ≈ 4; inference speed 4 > 2 > 3 > 1; inf mem 4<2<3<1.
+
+use sqft::data::{Batcher, Task};
+use sqft::harness::{self, Harness};
+use sqft::peft::Method;
+use sqft::quant::pack::{fp16_storage_bytes, int4_storage_bytes};
+use sqft::report::Table;
+use sqft::serve::Engine;
+use sqft::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let h = Harness::from_env()?;
+    let task = Task::SynGsm;
+    let ds = &h.datasets(&[task])[0];
+    let (base, _) = h.base_for(task.name(), &ds.train)?;
+    let hyper = h.rt.model(&h.model)?.clone();
+    let sparsity = 0.5;
+
+    // storage model: linear weights in base precision (+ packed groups for
+    // INT4) + embed/norms FP16 + (unmerged only) FP16 adapters at r_max
+    let linear_elems: Vec<(usize, usize)> = {
+        let d = hyper.d_model;
+        let ff = hyper.d_ff;
+        let mut v = Vec::new();
+        for _ in 0..hyper.n_layers {
+            v.extend([(d, d), (d, d), (d, d), (d, d), (ff, d), (ff, d), (d, ff)]);
+        }
+        v
+    };
+    let other_bytes: usize =
+        (hyper.vocab * hyper.d_model + hyper.d_model * (1 + 2 * hyper.n_layers)) * 2;
+    let adapter_bytes: usize = hyper
+        .mods
+        .iter()
+        .map(|m| {
+            let (out, inp) = hyper.mod_dims(m);
+            hyper.n_layers * hyper.r_max * (out + inp) * 2
+        })
+        .sum();
+    let storage = |quant: bool, merged: bool| -> f64 {
+        let w: usize = linear_elems
+            .iter()
+            .map(|&(o, i)| if quant {
+                int4_storage_bytes(o, i, hyper.group_size)
+            } else {
+                fp16_storage_bytes(o, i)
+            })
+            .sum();
+        (w + other_bytes + if merged { 0 } else { adapter_bytes }) as f64 / 1e6
+    };
+
+    let mut t = Table::new(
+        &format!("Table 7 — cost analysis ({}, 50% sparsity)", h.model),
+        &["ID", "Pipeline", "Mergeable", "Final Precision", "Storage (MB)",
+          "FT steps/s", "FT state (MB)", "Inference req/s", "Inf weights (MB)"]);
+
+    let methods = [
+        ("1", Method::Shears),       // LoRA/Shears: FP16 + FP16
+        ("2", Method::Sqft),         // INT4 + FP16
+        ("3", Method::SparsePeft),   // FP16 merged
+        ("4", Method::QaSparsePeft), // INT4 merged
+    ];
+
+    for (id, method) in methods {
+        let (prepared, mut trainer) = h.tune(&base, method, sparsity, &ds.train)?;
+        // fine-tuning speed: timed extra steps
+        let batcher = Batcher::new(&ds.train, &h.tok, hyper.seq_len, hyper.batch);
+        let mut rng = sqft::tensor::Rng::new(99);
+        let warm = batcher.random_batch(&mut rng)?;
+        trainer.step_batch(&warm, 1e-3)?;
+        let sw = Stopwatch::start();
+        let timed_steps = 10;
+        for _ in 0..timed_steps {
+            let b = batcher.random_batch(&mut rng)?;
+            trainer.step_batch(&b, 1e-3)?;
+        }
+        let steps_per_sec = timed_steps as f64 / sw.secs();
+        let ft_state_mb = trainer.trainable_bytes() as f64 / 1e6;
+
+        // inference throughput: merged methods serve the folded model (no
+        // adapter path); unmerged methods carry the adapter math forever
+        let cfg = h.deploy_config(&trainer);
+        let engine = if method.mergeable() {
+            let merged = sqft::pipeline::merged_state(&prepared, &trainer, &cfg)?;
+            let mut frozen = sqft::model::ParamSet::new();
+            for (n, v) in merged.base.iter() {
+                frozen.insert(n, v.clone());
+            }
+            for (n, v) in sqft::pipeline::dense_adapter_masks(&hyper).iter() {
+                frozen.insert(n, v.clone());
+            }
+            Engine::new(&h.rt, &h.model, &frozen, None, "eval")?
+        } else {
+            let frozen = prepared.frozen_set()?;
+            Engine::new(&h.rt, &h.model, &frozen,
+                        Some((&trainer.adapters, &trainer.space, &cfg)),
+                        method.eval_kind())?
+        };
+        let mut grng = sqft::tensor::Rng::new(7);
+        let prompts: Vec<String> =
+            (0..48).map(|_| task.gen_sample(&mut grng).prompt).collect();
+        let stats = sqft::serve::benchmark_engine(
+            &engine, prompts, std::time::Duration::from_millis(1))?;
+
+        let quant = method.quantized_base();
+        let merged = method.mergeable();
+        t.row(vec![
+            id.into(),
+            method.name().into(),
+            if merged { "yes" } else { "no" }.into(),
+            method.final_precision().into(),
+            format!("{:.1}", storage(quant, merged)),
+            format!("{:.2}", steps_per_sec),
+            format!("{:.1}", ft_state_mb),
+            format!("{:.1}", stats.throughput),
+            format!("{:.1}", storage(quant, true)),
+        ]);
+        eprintln!("[table7] {} done", method.name());
+    }
+
+    print!("{}", t.render());
+    harness::log_experiment(
+        &format!("Tables 6+7 ({})", h.model),
+        &harness::table_with_note(&t,
+            "paper orderings to check: storage 1 > 3 >> 2 > 4; fine-tuning \
+             speed 1 ≈ 2 >= 3 ≈ 4 (mask/fake-quant overhead); inference \
+             weight footprint 4 < 2 < 3 < 1"))?;
+    Ok(())
+}

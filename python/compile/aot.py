@@ -1,0 +1,153 @@
+"""AOT compiler: lower every SQFT artifact to HLO *text* + manifest.json.
+
+This is the only entry point that runs Python; after `make artifacts` the
+rust binary is self-contained.  HLO text (not ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids that xla_extension 0.5.1 (the version behind the published ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--configs sqft-tiny,...]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DTYPES = {jnp.float32: "f32", jnp.int32: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs_to_json(specs):
+    out = []
+    for name, shape, dtype in specs:
+        out.append({
+            "name": name,
+            "shape": list(shape),
+            "dtype": DTYPES[dtype],
+        })
+    return out
+
+
+def _shape_structs(specs):
+    return [jax.ShapeDtypeStruct(s, d) for _, s, d in specs]
+
+
+def lower_artifact(fn, specs, path):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*_shape_structs(specs))
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    print(f"  wrote {os.path.basename(path):40s} "
+          f"{len(text) / 1e6:7.2f} MB  {time.time() - t0:6.1f}s")
+    return digest
+
+
+def build_config(cfg: M.ModelConfig, out_dir: str, manifest: dict):
+    print(f"[aot] {cfg.name}: ~{cfg.param_count() / 1e6:.1f}M params")
+    entry = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len, "batch": cfg.batch,
+            "r_max": cfg.r_max, "group_size": cfg.group_size,
+            "param_count": cfg.param_count(),
+            "mods": list(M.MODS),
+            "mod_dims": {m: list(cfg.mod_dims(m)) for m in M.MODS},
+        },
+        "artifacts": {},
+    }
+
+    def art(kind, fn, specs, out_names):
+        fname = f"{kind}_{cfg.name}.hlo.txt"
+        digest = lower_artifact(fn, specs, os.path.join(out_dir, fname))
+        entry["artifacts"][kind] = {
+            "file": fname,
+            "inputs": _specs_to_json(specs),
+            "outputs": out_names,
+            "sha256_16": digest,
+        }
+
+    art("pretrain", M.make_pretrain_step(cfg),
+        M.pretrain_input_specs(cfg), M.pretrain_output_names(cfg))
+    art("train", M.make_train_step(cfg, qa=False),
+        M.train_input_specs(cfg, qa=False), M.train_output_names(cfg))
+    art("train_qa", M.make_train_step(cfg, qa=True),
+        M.train_input_specs(cfg, qa=True), M.train_output_names(cfg))
+    art("eval", M.make_eval_step(cfg, qa=False),
+        M.eval_input_specs(cfg, qa=False), ["logits"])
+    art("eval_qa", M.make_eval_step(cfg, qa=True),
+        M.eval_input_specs(cfg, qa=True), ["logits"])
+    art("calib", M.make_calib_step(cfg),
+        M.calib_input_specs(cfg), M.calib_output_names())
+    manifest["configs"][cfg.name] = entry
+
+    # per-shape utility artifacts, deduped across configs
+    for (m, n) in cfg.layer_shapes():
+        wkey = f"wanda_{m}x{n}"
+        if wkey not in manifest["shape_artifacts"]:
+            specs = [("w", (m, n), jnp.float32), ("act_norm", (n,), jnp.float32)]
+            fname = f"{wkey}.hlo.txt"
+            digest = lower_artifact(M.make_wanda(m, n), specs,
+                                    os.path.join(out_dir, fname))
+            manifest["shape_artifacts"][wkey] = {
+                "file": fname, "inputs": _specs_to_json(specs),
+                "outputs": ["scores"], "sha256_16": digest,
+            }
+        g = n // cfg.group_size
+        fkey = f"fakequant_{m}x{n}g{g}"
+        if fkey not in manifest["shape_artifacts"]:
+            specs = [
+                ("w", (m, n), jnp.float32),
+                ("scales", (m, g), jnp.float32),
+                ("zeros", (m, g), jnp.float32),
+                ("qmax", (1,), jnp.float32),
+            ]
+            fname = f"{fkey}.hlo.txt"
+            digest = lower_artifact(M.make_fakequant(m, n, cfg.group_size),
+                                    specs, os.path.join(out_dir, fname))
+            manifest["shape_artifacts"][fkey] = {
+                "file": fname, "inputs": _specs_to_json(specs),
+                "outputs": ["dequant", "codes"], "sha256_16": digest,
+            }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs",
+                    default="sqft-tiny,sqft-small,sqft-base,sqft-large")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "configs": {}, "shape_artifacts": {}}
+    t0 = time.time()
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        build_config(M.CONFIGS[name], args.out_dir, manifest)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for SQFT (interpret=True; see DESIGN.md §2).
+
+Public surface consumed by the Layer-2 model:
+  - sparse_lora_matmul / qa_sparse_lora_matmul  (fused adapted projections)
+  - fake_quant / quantize_codes                 (paper Eq. 3-4 merge path)
+  - wanda_score                                 (sparsification scoring)
+  - int4_matmul                                 (packed serving path)
+Reference semantics live in kernels.ref.
+"""
+
+from . import ref  # noqa: F401
+from .fake_quant import fake_quant, quantize_codes  # noqa: F401
+from .int4 import int4_matmul  # noqa: F401
+from .sparse_lora import qa_sparse_lora_matmul, sparse_lora_matmul  # noqa: F401
+from .wanda import wanda_score  # noqa: F401

@@ -1,0 +1,31 @@
+"""Block-size selection shared by the SQFT Pallas kernels.
+
+TPU mapping rationale (DESIGN.md §Hardware-Adaptation): the MXU systolic array
+is 128x128 and VMEM is ~16 MiB/core, so we prefer 128-aligned tiles and shrink
+toward the actual dimension when the problem is smaller.  On CPU the kernels
+run under interpret=True, where block shape only affects the lowered HLO
+structure, not machine tiling — we still pick MXU-friendly shapes so the same
+BlockSpecs are valid for a real Mosaic lowering.
+"""
+
+
+PREFERRED = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+def pick_block(dim: int, cap: int = 128) -> int:
+    """Largest preferred block <= cap that divides ``dim``."""
+    for b in PREFERRED:
+        if b <= cap and dim % b == 0:
+            return b
+    return 1
+
+
+def vmem_bytes_f32(*shapes) -> int:
+    """Static VMEM footprint estimate for a set of f32 blocks (for §Perf)."""
+    total = 0
+    for s in shapes:
+        n = 4
+        for d in s:
+            n *= d
+        total += n
+    return total

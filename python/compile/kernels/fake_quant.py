@@ -1,0 +1,69 @@
+"""Standalone group-wise fake-quantization kernel (paper Eq. 3-4).
+
+Used by the merge path (``fakequant_{m}x{n}`` artifacts): the coordinator
+calls it once at merge time to realize Eq. 3 on (W^p + L^p), and the result is
+bit-identical to what the QA-SparsePEFT train step computed on-the-fly — the
+property the paper's "mergeable without accuracy loss" claim rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .blocks import pick_block
+
+
+def _fq_kernel(w_ref, s_ref, z_ref, qmax_ref, o_ref):
+    qmax = qmax_ref[0]
+    w = w_ref[...]
+    bn, k = w.shape
+    g = s_ref[...].shape[1]
+    wg = w.reshape(bn, g, k // g)
+    q = jnp.clip(
+        jnp.round(wg / s_ref[...][:, :, None]) + z_ref[...][:, :, None],
+        0.0, qmax,
+    )
+    o_ref[...] = ((q - z_ref[...][:, :, None]) * s_ref[...][:, :, None]).reshape(bn, k)
+
+
+def _quant_kernel(w_ref, s_ref, z_ref, qmax_ref, o_ref):
+    """Integer codes (as f32 for PJRT-friendliness): clamp(round(w/s)+z)."""
+    qmax = qmax_ref[0]
+    w = w_ref[...]
+    bn, k = w.shape
+    g = s_ref[...].shape[1]
+    wg = w.reshape(bn, g, k // g)
+    q = jnp.clip(
+        jnp.round(wg / s_ref[...][:, :, None]) + z_ref[...][:, :, None],
+        0.0, qmax,
+    )
+    o_ref[...] = q.reshape(bn, k)
+
+
+def _call(kernel, w, scales, zeros, qmax):
+    n, k = w.shape
+    g = scales.shape[1]
+    bn = pick_block(n)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, g), lambda i: (i, 0)),
+            pl.BlockSpec((bn, g), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), w.dtype),
+        interpret=True,
+    )(w, scales, zeros, qmax)
+
+
+def fake_quant(w, scales, zeros, qmax):
+    """Dequantized fake-quant value s*(clamp(round(w/s)+z,0,qmax)-z)."""
+    return _call(_fq_kernel, w, scales, zeros, qmax)
+
+
+def quantize_codes(w, scales, zeros, qmax):
+    """Integer quantization codes of Eq. 3, returned as f32."""
+    return _call(_quant_kernel, w, scales, zeros, qmax)

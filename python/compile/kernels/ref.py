@@ -1,0 +1,132 @@
+"""Pure-jnp reference oracles for the SQFT Pallas kernels.
+
+Every kernel in this package has an exact functional counterpart here.  The
+pytest suite (python/tests/) asserts allclose between the Pallas
+(interpret=True) implementations and these references across shape/dtype
+sweeps, and checks the custom_vjp gradients against jax autodiff of these
+references.  These are the single source of truth for kernel semantics.
+
+Conventions (shared by kernels, model.py and the rust coordinator):
+  - Linear layers compute ``y = x @ W.T`` with ``W: (out_features, in_features)``.
+  - LoRA adapters: ``A: (r_max, in)``, ``B: (out, r_max)``; the dense delta is
+    ``B @ A``.  NLS elastic rank is expressed with a 0/1 ``rank_mask: (r_max,)``
+    that deactivates trailing rank components; ``scale`` is ``alpha / r_active``
+    and is supplied by the coordinator as a scalar.
+  - SparsePEFT (paper Eq. 1): the delta is multiplied elementwise by the binary
+    sparsity mask ``M`` of the base weight before it touches the activations,
+    so merging (Eq. 2) can never densify the base model.
+  - Fake quantization (paper Eq. 3-4): asymmetric, group-wise along the input
+    dimension; ``q = clamp(round(w/s) + z, 0, qmax)``; dequant ``s * (q - z)``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_delta(a, b, rank_mask, scale):
+    """Dense (unmasked) low-rank delta ``scale * B @ diag(rank_mask) @ A``."""
+    return scale * (b * rank_mask[None, :]) @ a
+
+
+def sparse_lora_delta(a, b, mask, rank_mask, scale):
+    """SparsePEFT delta  L^p = (B A) .* M   (paper Eq. 1), elastic-rank form."""
+    return lora_delta(a, b, rank_mask, scale) * mask
+
+
+def effective_weight(w, a, b, mask, rank_mask, scale):
+    """W^p + L^p  (paper Eq. 2) — the merged weight SparsePEFT trains against."""
+    return w + sparse_lora_delta(a, b, mask, rank_mask, scale)
+
+
+def sparse_lora_matmul(x, w, a, b, mask, rank_mask, scale):
+    """Fused SparsePEFT projection  y = x @ (W^p + (BA) .* M).T.
+
+    x: (M, K), w: (N, K), a: (r, K), b: (N, r), mask: (N, K),
+    rank_mask: (r,), scale: scalar  ->  (M, N)
+    """
+    return x @ effective_weight(w, a, b, mask, rank_mask, scale).T
+
+
+def fake_quant(w, scales, zeros, qmax):
+    """Group-wise asymmetric fake quantization (paper Eq. 3 then Eq. 4).
+
+    w: (N, K), scales/zeros: (N, G) with group size K // G.
+    """
+    n, k = w.shape
+    g = scales.shape[1]
+    gs = k // g
+    wg = w.reshape(n, g, gs)
+    q = jnp.clip(jnp.round(wg / scales[:, :, None]) + zeros[:, :, None], 0, qmax)
+    return ((q - zeros[:, :, None]) * scales[:, :, None]).reshape(n, k)
+
+
+def fake_quant_ste(w, scales, zeros, qmax):
+    """fake_quant with a clamp-aware straight-through estimator.
+
+    Gradient flows through positions whose pre-clamp quantized value lies in
+    [0, qmax]; clamped positions get zero gradient.  This is the function the
+    QA-SparsePEFT train step differentiates through.
+    """
+    n, k = w.shape
+    g = scales.shape[1]
+    gs = k // g
+    wg = w.reshape(n, g, gs)
+    pre = jnp.round(wg / scales[:, :, None]) + zeros[:, :, None]
+    inside = ((pre >= 0) & (pre <= qmax)).astype(w.dtype).reshape(n, k)
+    dq = fake_quant(w, scales, zeros, qmax)
+    return w * inside + jax.lax.stop_gradient(dq - w * inside)
+
+
+def qa_merged_weight(w, a, b, mask, rank_mask, scale, scales, zeros, qmax):
+    """QA-SparsePEFT effective weight: fake-quantized (W^p + L^p) with the
+    base model's shared scales/zeros (paper Eq. 3-4, STE for training)."""
+    merged = effective_weight(w, a, b, mask, rank_mask, scale)
+    return fake_quant_ste(merged, scales, zeros, qmax)
+
+
+def qa_sparse_lora_matmul(x, w, a, b, mask, rank_mask, scale, scales, zeros, qmax):
+    """Fused QA-SparsePEFT projection  y = x @ fq(W^p + L^p).T."""
+    return x @ qa_merged_weight(
+        w, a, b, mask, rank_mask, scale, scales, zeros, qmax
+    ).T
+
+
+def wanda_score(w, act_norm):
+    """Wanda importance  Psi(W) = |W| * ||X||_2  (Sun et al. 2023).
+
+    w: (N, K), act_norm: (K,) = column-wise L2 norm of calibration inputs.
+    """
+    return jnp.abs(w) * act_norm[None, :]
+
+
+def wanda_mask(w, act_norm, sparsity):
+    """Per-output-row unstructured Wanda mask keeping the top (1-s) fraction."""
+    n, k = w.shape
+    scores = wanda_score(w, act_norm)
+    keep = k - int(round(sparsity * k))
+    order = jnp.argsort(scores, axis=1)[:, ::-1]
+    ranks = jnp.argsort(order, axis=1)
+    return (ranks < keep).astype(w.dtype)
+
+
+def unpack_int4(packed):
+    """(N, K//2) uint8 -> (N, K) int32 in [0, 15]; low nibble first."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+
+
+def int4_dequant(packed, scales, zeros):
+    """Dequantize packed INT4 weights to f32.  packed: (N, K//2) uint8."""
+    q = unpack_int4(packed).astype(jnp.float32)
+    n, k = q.shape
+    g = scales.shape[1]
+    gs = k // g
+    qg = q.reshape(n, g, gs)
+    return ((qg - zeros[:, :, None]) * scales[:, :, None]).reshape(n, k)
+
+
+def int4_matmul(x, packed, scales, zeros):
+    """y = x @ dequant(packed).T — the serving-path projection for merged
+    QA-SparsePEFT models."""
+    return x @ int4_dequant(packed, scales, zeros).T

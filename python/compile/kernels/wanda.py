@@ -1,0 +1,36 @@
+"""Wanda importance-score kernel:  Psi(W) = |W| * ||X||_2  (Sun et al. 2023).
+
+The score is embarrassingly elementwise (one VPU pass over the weight tile
+with the activation-norm vector broadcast from VMEM), so the kernel exists
+mostly to keep the whole sparsification path inside the AOT artifact set —
+the rust coordinator streams calibration batches through ``eval`` artifacts,
+accumulates column norms, then runs this kernel per layer and does the
+per-row top-k threshold on the host.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .blocks import pick_block
+
+
+def _wanda_kernel(w_ref, n_ref, o_ref):
+    o_ref[...] = jnp.abs(w_ref[...]) * n_ref[...][None, :]
+
+
+def wanda_score(w, act_norm):
+    """w: (N, K), act_norm: (K,) -> scores (N, K)."""
+    n, k = w.shape
+    bn = pick_block(n)
+    return pl.pallas_call(
+        _wanda_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), w.dtype),
+        interpret=True,
+    )(w, act_norm)

@@ -1,0 +1,523 @@
+"""Layer-2: the adapted transformer (JAX), lowered AOT for the rust runtime.
+
+A GPT-style decoder-only model (RMSNorm, RoPE causal attention, SwiGLU MLP)
+whose Q, K, V, Up and Down projections — the paper's adapter target modules
+(Table 8) — run through the Layer-1 fused SparsePEFT / QA-SparsePEFT Pallas
+kernels.  Everything here executes exactly once, at `make artifacts` time;
+the rust coordinator then drives the lowered HLO through PJRT.
+
+Artifact functions (see DESIGN.md §5 for the full contract):
+  - train_step      SparsePEFT/LoRA/Shears fine-tune step, Adam inside graph
+  - train_qa_step   QA-SparsePEFT fine-tune step (shared-scale fake quant, STE)
+  - eval_step       batched forward -> logits (mask/rank-mask parameterized)
+  - eval_qa_step    forward through the fake-quantized merged weights
+  - calib_step      forward that also captures per-site activations for
+                    Wanda column norms and GPTQ Hessians
+
+All layer-indexed parameters are stacked on a leading L axis so the artifact
+input list stays small and the rust side can hold one buffer per logical
+tensor.  Input ordering is canonical: see ``train_input_specs`` etc.; aot.py
+serializes it into artifacts/manifest.json, and rust/src/runtime/manifest.rs
+checks it at load time.
+"""
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+
+# Adapter target modules, matching the paper's Q,K,V,Up,Down set (Table 8).
+MODS = ("q", "k", "v", "up", "down")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static hyperparameters of one model variant (= one artifact set)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+    r_max: int
+    group_size: int = 32  # INT4 quantization group size along in-features
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def mod_dims(self, mod: str) -> Tuple[int, int]:
+        """(out_features, in_features) of an adapted module."""
+        d, ff = self.d_model, self.d_ff
+        return {"q": (d, d), "k": (d, d), "v": (d, d),
+                "up": (ff, d), "down": (d, ff)}[mod]
+
+    def mod_groups(self, mod: str) -> int:
+        return self.mod_dims(mod)[1] // self.group_size
+
+    def layer_shapes(self) -> List[Tuple[int, int]]:
+        """Distinct (out, in) linear shapes — drives wanda/fakequant artifacts."""
+        d, ff = self.d_model, self.d_ff
+        return sorted({(d, d), (ff, d), (d, ff)})
+
+    def param_count(self) -> int:
+        d, ff, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * ff * d + 2 * d
+        return v * d + l * per_layer + d
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        # ~0.9M params — unit/integration tests, fast CI
+        ModelConfig("sqft-tiny", 64, 64, 2, 2, 128, 48, 8, 8),
+        # ~4.2M params — table-reproduction workhorse
+        ModelConfig("sqft-small", 64, 256, 4, 4, 1024, 64, 8, 16),
+        # ~27M params — end-to-end example driver
+        ModelConfig("sqft-base", 64, 512, 8, 8, 1536, 64, 8, 32),
+        # ~100M params — scale reference config
+        ModelConfig("sqft-large", 64, 768, 12, 12, 2560, 128, 8, 32),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# core model ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, positions):
+    """Rotary position embedding over the last dim (rotate-half form).
+
+    x: (B, S, H, Dh), positions: (S,)
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def adapted_proj(x2d, w, a, b, mask, rank_mask, scale, qparams=None):
+    """Dispatch one adapted projection through the L1 kernel."""
+    if qparams is None:
+        return K.sparse_lora_matmul(x2d, w, a, b, mask, rank_mask, scale)
+    qscales, qzeros, qmax = qparams
+    return K.qa_sparse_lora_matmul(
+        x2d, w, a, b, mask, rank_mask, scale, qscales, qzeros, qmax
+    )
+
+
+def forward(cfg: ModelConfig, base, adapters, tokens, qa=None, capture=False):
+    """Adapted-transformer forward.
+
+    base: dict of stacked frozen tensors (see ``base_param_specs``).
+    adapters: dict with per-module stacks a_/b_/mask_/rankmask_/scale_.
+    qa: None or dict with qscales_/qzeros_ stacks + qmax (1,).
+    capture: also return per-site activations for calibration.
+    Returns logits (B, S, V) [, captures].
+    """
+    bsz, seq = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = base["embed"][tokens]  # (B, S, d)
+    positions = jnp.arange(seq)
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    caps = {"xqkv": [], "xo": [], "xmlp": [], "xdown": []}
+
+    def proj(mod, l, x2d):
+        w = base["w" + mod][l] if mod in ("q", "k", "v") else base["w" + mod][l]
+        qp = None
+        if qa is not None:
+            qp = (qa["qscales_" + mod][l], qa["qzeros_" + mod][l], qa["qmax"])
+        return adapted_proj(
+            x2d, w,
+            adapters["a_" + mod][l], adapters["b_" + mod][l],
+            adapters["mask_" + mod][l], adapters["rankmask_" + mod][l],
+            adapters["scale_" + mod][l:l + 1], qp,
+        )
+
+    for l in range(cfg.n_layers):
+        # --- attention block -------------------------------------------
+        hln = rms_norm(x, base["ln1"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        if capture:
+            caps["xqkv"].append(h2d)
+        q = proj("q", l, h2d).reshape(bsz, seq, h, dh)
+        k = proj("k", l, h2d).reshape(bsz, seq, h, dh)
+        v = proj("v", l, h2d).reshape(bsz, seq, h, dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+        att = jnp.where(causal[None, None, :, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz * seq, d)
+        if capture:
+            caps["xo"].append(o)
+        x = x + (o @ base["wo"][l].T).reshape(bsz, seq, d)
+
+        # --- SwiGLU MLP block -------------------------------------------
+        hln = rms_norm(x, base["ln2"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        if capture:
+            caps["xmlp"].append(h2d)
+        gate = h2d @ base["wgate"][l].T
+        up = proj("up", l, h2d)
+        act = jax.nn.silu(gate) * up  # (B*S, ff)
+        if capture:
+            caps["xdown"].append(act)
+        down = proj("down", l, act)
+        x = x + down.reshape(bsz, seq, d)
+
+    x = rms_norm(x, base["final_ln"])
+    logits = x @ base["embed"].T
+    if capture:
+        stacks = {k2: jnp.stack(v2) for k2, v2 in caps.items()}
+        return logits, stacks
+    return logits
+
+
+def loss_fn(cfg, base, adapters, tokens, targets, loss_mask, qa=None):
+    """Masked next-token cross entropy (loss only on answer positions)."""
+    logits = forward(cfg, base, adapters, tokens, qa=qa)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum(nll * loss_mask) / denom
+
+
+# ---------------------------------------------------------------------------
+# train / eval step builders
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def _adam_update(p, g, m, v, step, lr):
+    m = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m / (1 - ADAM_B1 ** step)
+    vhat = v / (1 - ADAM_B2 ** step)
+    return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+def base_param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    d, ff, v, l = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    return [
+        ("embed", (v, d)),
+        ("final_ln", (d,)),
+        ("ln1", (l, d)),
+        ("ln2", (l, d)),
+        ("wq", (l, d, d)),
+        ("wk", (l, d, d)),
+        ("wv", (l, d, d)),
+        ("wo", (l, d, d)),
+        ("wgate", (l, ff, d)),
+        ("wup", (l, ff, d)),
+        ("wdown", (l, d, ff)),
+    ]
+
+
+def adapter_param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    l, r = cfg.n_layers, cfg.r_max
+    specs = []
+    for m in MODS:
+        out, inp = cfg.mod_dims(m)
+        specs.append((f"a_{m}", (l, r, inp)))
+    for m in MODS:
+        out, inp = cfg.mod_dims(m)
+        specs.append((f"b_{m}", (l, out, r)))
+    for m in MODS:
+        out, inp = cfg.mod_dims(m)
+        specs.append((f"mask_{m}", (l, out, inp)))
+    for m in MODS:
+        specs.append((f"rankmask_{m}", (l, r)))
+    for m in MODS:
+        specs.append((f"scale_{m}", (l,)))
+    return specs
+
+
+def qa_param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    l = cfg.n_layers
+    specs = []
+    for m in MODS:
+        out, _ = cfg.mod_dims(m)
+        specs.append((f"qscales_{m}", (l, out, cfg.mod_groups(m))))
+    for m in MODS:
+        out, _ = cfg.mod_dims(m)
+        specs.append((f"qzeros_{m}", (l, out, cfg.mod_groups(m))))
+    specs.append(("qmax", (1,)))
+    return specs
+
+
+def opt_param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    l, r = cfg.n_layers, cfg.r_max
+    specs = []
+    for kind in ("m", "v"):
+        for m in MODS:
+            out, inp = cfg.mod_dims(m)
+            specs.append((f"{kind}_a_{m}", (l, r, inp)))
+        for m in MODS:
+            out, inp = cfg.mod_dims(m)
+            specs.append((f"{kind}_b_{m}", (l, out, r)))
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, with_targets=True):
+    b, s = cfg.batch, cfg.seq_len
+    specs = [("tokens", (b, s), jnp.int32)]
+    if with_targets:
+        specs += [
+            ("targets", (b, s), jnp.int32),
+            ("loss_mask", (b, s), jnp.float32),
+            ("step", (1,), jnp.float32),
+            ("lr", (1,), jnp.float32),
+        ]
+    return specs
+
+
+def train_input_specs(cfg: ModelConfig, qa: bool):
+    """Canonical input ordering for the train artifacts."""
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    specs += [(n, s, jnp.float32) for n, s in adapter_param_specs(cfg)]
+    if qa:
+        specs += [(n, s, jnp.float32) for n, s in qa_param_specs(cfg)]
+    specs += [(n, s, jnp.float32) for n, s in opt_param_specs(cfg)]
+    specs += batch_specs(cfg, with_targets=True)
+    return specs
+
+
+def eval_input_specs(cfg: ModelConfig, qa: bool):
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    specs += [(n, s, jnp.float32) for n, s in adapter_param_specs(cfg)]
+    if qa:
+        specs += [(n, s, jnp.float32) for n, s in qa_param_specs(cfg)]
+    specs += batch_specs(cfg, with_targets=False)
+    return specs
+
+
+def calib_input_specs(cfg: ModelConfig):
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    specs += [(n, s, jnp.float32) for n, s in adapter_param_specs(cfg)]
+    specs += batch_specs(cfg, with_targets=False)
+    return specs
+
+
+def _unflatten(cfg, args, qa):
+    """Rebuild the base/adapters/qa dicts from positional args."""
+    names_base = [n for n, _ in base_param_specs(cfg)]
+    names_ad = [n for n, _ in adapter_param_specs(cfg)]
+    i = 0
+    base = {}
+    for n in names_base:
+        base[n] = args[i]
+        i += 1
+    adapters = {}
+    for n in names_ad:
+        adapters[n] = args[i]
+        i += 1
+    qad = None
+    if qa:
+        qad = {}
+        for n, _ in qa_param_specs(cfg):
+            qad[n] = args[i]
+            i += 1
+    return base, adapters, qad, i
+
+
+def make_train_step(cfg: ModelConfig, qa: bool):
+    """Build the positional train-step function for AOT lowering.
+
+    Returns (new adapter a/b stacks in MODS order, new m/v stacks, loss).
+    """
+    trainable = [f"a_{m}" for m in MODS] + [f"b_{m}" for m in MODS]
+
+    def step_fn(*args):
+        base, adapters, qad, i = _unflatten(cfg, args, qa)
+        opt = {}
+        for n, _ in opt_param_specs(cfg):
+            opt[n] = args[i]
+            i += 1
+        tokens, targets, loss_mask, step, lr = args[i:i + 5]
+
+        def closure(train_params):
+            ad = dict(adapters)
+            ad.update(train_params)
+            return loss_fn(cfg, base, ad, tokens, targets, loss_mask, qa=qad)
+
+        tp = {n: adapters[n] for n in trainable}
+        loss, grads = jax.value_and_grad(closure)(tp)
+        outs = []
+        new_m, new_v = [], []
+        st = step[0]
+        lrv = lr[0]
+        for n in trainable:
+            p, m_, v_ = _adam_update(
+                tp[n], grads[n], opt["m_" + n], opt["v_" + n], st, lrv
+            )
+            outs.append(p)
+            new_m.append(m_)
+            new_v.append(v_)
+        return tuple(outs + new_m + new_v + [jnp.reshape(loss, (1,))])
+
+    return step_fn
+
+
+def train_output_names(cfg: ModelConfig) -> List[str]:
+    trainable = [f"a_{m}" for m in MODS] + [f"b_{m}" for m in MODS]
+    return (
+        trainable
+        + ["m_" + n for n in trainable]
+        + ["v_" + n for n in trainable]
+        + ["loss"]
+    )
+
+
+def make_eval_step(cfg: ModelConfig, qa: bool):
+    def eval_fn(*args):
+        base, adapters, qad, i = _unflatten(cfg, args, qa)
+        tokens = args[i]
+        logits = forward(cfg, base, adapters, tokens, qa=qad)
+        return (logits,)
+
+    return eval_fn
+
+
+def make_calib_step(cfg: ModelConfig):
+    """Forward capturing the four linear-input activation sites.
+
+    Outputs: logits, xqkv (L,T,d), xo (L,T,d), xmlp (L,T,d), xdown (L,T,ff)
+    with T = batch*seq — consumed by the rust Wanda/GPTQ drivers.
+    """
+
+    def calib_fn(*args):
+        base, adapters, _, i = _unflatten(cfg, args, qa=False)
+        tokens = args[i]
+        logits, caps = forward(cfg, base, adapters, tokens, capture=True)
+        return (logits, caps["xqkv"], caps["xo"], caps["xmlp"], caps["xdown"])
+
+    return calib_fn
+
+
+def calib_output_names() -> List[str]:
+    return ["logits", "xqkv", "xo", "xmlp", "xdown"]
+
+
+# --- pretraining (full-weight) path ----------------------------------------
+#
+# The SQFT pipeline starts from a *pretrained* base model.  The paper uses
+# HF checkpoints; here (DESIGN.md §1) we pretrain the synthetic-task base
+# ourselves, which needs gradients w.r.t. every base weight.  The adapted
+# forward cannot be reused for this: the L1 kernels' custom_vjp freezes W
+# (PEFT semantics), so pretraining uses a plain-jnp forward.
+
+
+def forward_plain(cfg: ModelConfig, base, tokens):
+    """Unadapted forward (no adapters, no masks) for pretraining."""
+    bsz, seq = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = base["embed"][tokens]
+    positions = jnp.arange(seq)
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    for l in range(cfg.n_layers):
+        hln = rms_norm(x, base["ln1"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        q = (h2d @ base["wq"][l].T).reshape(bsz, seq, h, dh)
+        k = (h2d @ base["wk"][l].T).reshape(bsz, seq, h, dh)
+        v = (h2d @ base["wv"][l].T).reshape(bsz, seq, h, dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+        att = jnp.where(causal[None, None, :, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz * seq, d)
+        x = x + (o @ base["wo"][l].T).reshape(bsz, seq, d)
+        hln = rms_norm(x, base["ln2"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        act = jax.nn.silu(h2d @ base["wgate"][l].T) * (h2d @ base["wup"][l].T)
+        x = x + (act @ base["wdown"][l].T).reshape(bsz, seq, d)
+    x = rms_norm(x, base["final_ln"])
+    return x @ base["embed"].T
+
+
+def pretrain_input_specs(cfg: ModelConfig):
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    for kind in ("m", "v"):
+        specs += [(f"{kind}_{n}", s, jnp.float32) for n, s in base_param_specs(cfg)]
+    specs += batch_specs(cfg, with_targets=True)
+    return specs
+
+
+def pretrain_output_names(cfg: ModelConfig) -> List[str]:
+    names = [n for n, _ in base_param_specs(cfg)]
+    return names + ["m_" + n for n in names] + ["v_" + n for n in names] + ["loss"]
+
+
+def make_pretrain_step(cfg: ModelConfig):
+    names = [n for n, _ in base_param_specs(cfg)]
+
+    def step_fn(*args):
+        base = {n: a for (n, _), a in zip(base_param_specs(cfg), args)}
+        i = len(names)
+        opt = {}
+        for kind in ("m", "v"):
+            for n in names:
+                opt[f"{kind}_{n}"] = args[i]
+                i += 1
+        tokens, targets, loss_mask, step, lr = args[i:i + 5]
+
+        def closure(params):
+            logits = forward_plain(cfg, params, tokens)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+            denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+            return jnp.sum(nll * loss_mask) / denom
+
+        loss, grads = jax.value_and_grad(closure)(base)
+        outs, ms, vs = [], [], []
+        for n in names:
+            p, m_, v_ = _adam_update(
+                base[n], grads[n], opt["m_" + n], opt["v_" + n], step[0], lr[0])
+            outs.append(p)
+            ms.append(m_)
+            vs.append(v_)
+        return tuple(outs + ms + vs + [jnp.reshape(loss, (1,))])
+
+    return step_fn
+
+
+# --- per-shape utility artifacts -------------------------------------------
+
+
+def make_wanda(m: int, n: int):
+    """Wanda scores for one (m, n) weight shape via the L1 kernel."""
+
+    def fn(w, act_norm):
+        return (K.wanda_score(w, act_norm),)
+
+    return fn
+
+
+def make_fakequant(m: int, n: int, group_size: int):
+    """Eq. 3-4 for one (m, n) weight shape: (dequantized, integer codes)."""
+
+    def fn(w, scales, zeros, qmax):
+        return (
+            K.fake_quant(w, scales, zeros, qmax),
+            K.quantize_codes(w, scales, zeros, qmax),
+        )
+
+    return fn

@@ -1,0 +1,24 @@
+"""Shared fixtures/helpers for the SQFT python test suite."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def rand_f32(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def rand_mask(rng, shape, sparsity=0.5):
+    return jnp.asarray(rng.random(size=shape) >= sparsity, jnp.float32)
+
+
+def rand_qparams(rng, n, g):
+    scales = jnp.asarray(np.abs(rng.normal(size=(n, g))) + 0.05, jnp.float32)
+    zeros = jnp.asarray(rng.integers(0, 16, size=(n, g)), jnp.float32)
+    return scales, zeros

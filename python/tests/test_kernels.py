@@ -1,0 +1,257 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+These are the core correctness signal for the whole stack — the AOT
+artifacts embed exactly these kernels, so agreement here + artifact-level
+integration tests on the rust side together certify the request path.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from compile.kernels.blocks import pick_block, vmem_bytes_f32
+
+from .conftest import rand_f32, rand_mask, rand_qparams
+
+SHAPES = [
+    # (M, K, N, r) — mixes block-divisible and odd sizes
+    (8, 32, 16, 4),
+    (16, 64, 64, 8),
+    (128, 64, 128, 16),
+    (4, 16, 8, 2),
+    (384, 64, 128, 8),   # tiny-config projection shape (B*S=384)
+    (6, 10, 14, 3),      # non-power-of-two everything
+]
+
+
+def _inputs(rng, m, k, n, r, sparsity=0.5, active=None):
+    x = rand_f32(rng, (m, k))
+    w = rand_f32(rng, (n, k))
+    a = rand_f32(rng, (r, k), 0.1)
+    b = rand_f32(rng, (n, r), 0.1)
+    mask = rand_mask(rng, (n, k), sparsity)
+    active = r if active is None else active
+    rm = jnp.asarray([1.0] * active + [0.0] * (r - active), jnp.float32)
+    scale = jnp.array([2.0 / max(active, 1)], jnp.float32)
+    return x, w, a, b, mask, rm, scale
+
+
+class TestSparseLoraMatmul:
+    @pytest.mark.parametrize("m,k,n,r", SHAPES)
+    def test_forward_matches_ref(self, rng, m, k, n, r):
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r)
+        got = K.sparse_lora_matmul(x, w, a, b, mask, rm, scale)
+        want = ref.sparse_lora_matmul(x, w, a, b, mask, rm, scale[0])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("active", [0, 1, 3])
+    def test_elastic_rank(self, rng, active):
+        """Deactivated rank components must not contribute at all."""
+        m, k, n, r = 16, 32, 16, 4
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r, active=active)
+        got = K.sparse_lora_matmul(x, w, a, b, mask, rm, scale)
+        a_trunc = a.at[active:].set(0.0)
+        want = ref.sparse_lora_matmul(x, w, a_trunc, b, mask, rm, scale[0])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_adapter_is_base_matmul(self, rng):
+        m, k, n, r = 16, 32, 16, 4
+        x, w, _, _, mask, rm, scale = _inputs(rng, m, k, n, r)
+        za, zb = jnp.zeros((r, k)), jnp.zeros((n, r))
+        got = K.sparse_lora_matmul(x, w, za, zb, mask, rm, scale)
+        np.testing.assert_allclose(got, x @ w.T, rtol=1e-5, atol=1e-5)
+
+    def test_full_mask_equals_dense_lora(self, rng):
+        """mask=1 reduces SparsePEFT to plain LoRA — the paper's Fig. 1 left."""
+        m, k, n, r = 16, 32, 16, 4
+        x, w, a, b, _, rm, scale = _inputs(rng, m, k, n, r)
+        ones = jnp.ones((n, k), jnp.float32)
+        got = K.sparse_lora_matmul(x, w, a, b, ones, rm, scale)
+        want = x @ (w + scale[0] * b @ a).T
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n,r", SHAPES[:4])
+    def test_grads_match_ref(self, rng, m, k, n, r):
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r)
+
+        def lp(a_, b_, x_):
+            return jnp.sum(K.sparse_lora_matmul(x_, w, a_, b_, mask, rm, scale) ** 2)
+
+        def lr_(a_, b_, x_):
+            return jnp.sum(ref.sparse_lora_matmul(x_, w, a_, b_, mask, rm, scale[0]) ** 2)
+
+        gp = jax.grad(lp, argnums=(0, 1, 2))(a, b, x)
+        gr = jax.grad(lr_, argnums=(0, 1, 2))(a, b, x)
+        for p, q in zip(gp, gr):
+            np.testing.assert_allclose(p, q, rtol=1e-4, atol=1e-4)
+
+    def test_frozen_inputs_get_zero_grads(self, rng):
+        m, k, n, r = 8, 16, 8, 2
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r)
+
+        def lw(w_):
+            return jnp.sum(K.sparse_lora_matmul(x, w_, a, b, mask, rm, scale))
+
+        assert jnp.all(jax.grad(lw)(w) == 0.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 40), k=st.integers(1, 48),
+        n=st.integers(1, 40), r=st.integers(1, 8),
+        sparsity=st.floats(0.0, 0.95),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, m, k, n, r, sparsity, seed):
+        rng = np.random.default_rng(seed)
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r, sparsity)
+        got = K.sparse_lora_matmul(x, w, a, b, mask, rm, scale)
+        want = ref.sparse_lora_matmul(x, w, a, b, mask, rm, scale[0])
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+class TestQASparseLoraMatmul:
+    @pytest.mark.parametrize("m,k,n,r", [(8, 32, 16, 4), (16, 64, 64, 8)])
+    def test_forward_matches_ref(self, rng, m, k, n, r):
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r)
+        g = max(k // 16, 1)
+        scales, zeros = rand_qparams(rng, n, g)
+        qmax = jnp.array([15.0], jnp.float32)
+        got = K.qa_sparse_lora_matmul(x, w, a, b, mask, rm, scale, scales, zeros, qmax)
+        want = ref.qa_sparse_lora_matmul(x, w, a, b, mask, rm, scale[0], scales, zeros, 15.0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_grads_match_ref_ste(self, rng):
+        m, k, n, r = 8, 32, 16, 4
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r)
+        scales, zeros = rand_qparams(rng, n, 2)
+        qmax = jnp.array([15.0], jnp.float32)
+
+        def lp(a_, b_, x_):
+            return jnp.sum(
+                K.qa_sparse_lora_matmul(x_, w, a_, b_, mask, rm, scale, scales, zeros, qmax) ** 2)
+
+        def lr_(a_, b_, x_):
+            return jnp.sum(
+                ref.qa_sparse_lora_matmul(x_, w, a_, b_, mask, rm, scale[0], scales, zeros, 15.0) ** 2)
+
+        gp = jax.grad(lp, argnums=(0, 1, 2))(a, b, x)
+        gr = jax.grad(lr_, argnums=(0, 1, 2))(a, b, x)
+        for p, q in zip(gp, gr):
+            np.testing.assert_allclose(p, q, rtol=1e-4, atol=1e-4)
+
+    def test_train_eval_merge_consistency(self, rng):
+        """The QA forward equals an exact-merge then int4 serve — the paper's
+        central QA-SparsePEFT claim (merge loses nothing)."""
+        m, k, n, r = 8, 32, 16, 4
+        x, w, a, b, mask, rm, scale = _inputs(rng, m, k, n, r)
+        scales, zeros = rand_qparams(rng, n, 2)
+        qmax = jnp.array([15.0], jnp.float32)
+        y_train = K.qa_sparse_lora_matmul(x, w, a, b, mask, rm, scale, scales, zeros, qmax)
+        merged = ref.effective_weight(w, a, b, mask, rm, scale[0])
+        wq = ref.fake_quant(merged, scales, zeros, 15.0)
+        np.testing.assert_allclose(y_train, x @ wq.T, rtol=1e-4, atol=1e-4)
+
+
+class TestFakeQuant:
+    @pytest.mark.parametrize("n,k,g", [(16, 32, 2), (64, 64, 4), (8, 16, 16)])
+    def test_matches_ref(self, rng, n, k, g):
+        w = rand_f32(rng, (n, k))
+        scales, zeros = rand_qparams(rng, n, g)
+        qmax = jnp.array([15.0], jnp.float32)
+        got = K.fake_quant(w, scales, zeros, qmax)
+        want = ref.fake_quant(w, scales, zeros, 15.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_codes_in_range_and_consistent(self, rng):
+        n, k, g = 16, 32, 2
+        w = rand_f32(rng, (n, k))
+        scales, zeros = rand_qparams(rng, n, g)
+        qmax = jnp.array([15.0], jnp.float32)
+        codes = K.quantize_codes(w, scales, zeros, qmax)
+        assert float(codes.min()) >= 0.0 and float(codes.max()) <= 15.0
+        assert jnp.all(codes == jnp.round(codes))
+        # dequantizing the codes reproduces fake_quant exactly (Eq. 4)
+        gs = k // g
+        cg = codes.reshape(n, g, gs)
+        dq = ((cg - zeros[:, :, None]) * scales[:, :, None]).reshape(n, k)
+        np.testing.assert_allclose(dq, K.fake_quant(w, scales, zeros, qmax),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_idempotent(self, rng):
+        """fq(fq(w)) == fq(w): quantization is a projection."""
+        n, k, g = 16, 32, 2
+        w = rand_f32(rng, (n, k))
+        scales, zeros = rand_qparams(rng, n, g)
+        qmax = jnp.array([15.0], jnp.float32)
+        fq1 = K.fake_quant(w, scales, zeros, qmax)
+        fq2 = K.fake_quant(fq1, scales, zeros, qmax)
+        np.testing.assert_allclose(fq1, fq2, rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 32), g=st.integers(1, 4),
+           gs=st.integers(1, 8), seed=st.integers(0, 2**16))
+    def test_hypothesis_sweep(self, n, g, gs, seed):
+        rng = np.random.default_rng(seed)
+        k = g * gs
+        w = rand_f32(rng, (n, k))
+        scales, zeros = rand_qparams(rng, n, g)
+        qmax = jnp.array([15.0], jnp.float32)
+        np.testing.assert_allclose(
+            K.fake_quant(w, scales, zeros, qmax),
+            ref.fake_quant(w, scales, zeros, 15.0),
+            rtol=1e-5, atol=1e-5)
+
+
+class TestWanda:
+    @pytest.mark.parametrize("n,k", [(16, 32), (64, 64), (7, 13)])
+    def test_matches_ref(self, rng, n, k):
+        w = rand_f32(rng, (n, k))
+        an = jnp.abs(rand_f32(rng, (k,)))
+        np.testing.assert_allclose(K.wanda_score(w, an),
+                                   ref.wanda_score(w, an),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_mask_sparsity_level(self, rng):
+        w = rand_f32(rng, (32, 64))
+        an = jnp.abs(rand_f32(rng, (64,)))
+        m = ref.wanda_mask(w, an, 0.5)
+        assert float(m.mean()) == pytest.approx(0.5)
+        # per-row exactness (Wanda compares within output rows)
+        np.testing.assert_allclose(np.asarray(m.sum(axis=1)), 32.0)
+
+
+class TestInt4:
+    @pytest.mark.parametrize("m,n,k,g", [(8, 16, 32, 2), (16, 64, 64, 4)])
+    def test_matches_ref(self, rng, m, n, k, g):
+        x = rand_f32(rng, (m, k))
+        packed = jnp.asarray(rng.integers(0, 256, size=(n, k // 2)), jnp.uint8)
+        scales, zeros = rand_qparams(rng, n, g)
+        np.testing.assert_allclose(
+            K.int4_matmul(x, packed, scales, zeros),
+            ref.int4_matmul(x, packed, scales, zeros),
+            rtol=1e-4, atol=1e-4)
+
+    def test_unpack_nibble_order(self):
+        packed = jnp.array([[0x21, 0x43]], jnp.uint8)  # low nibble first
+        got = ref.unpack_int4(packed)
+        np.testing.assert_array_equal(np.asarray(got), [[1, 2, 3, 4]])
+
+
+class TestBlocks:
+    def test_pick_block_divides(self):
+        for dim in [1, 2, 7, 48, 64, 127, 128, 384, 2560]:
+            b = pick_block(dim)
+            assert dim % b == 0 and b <= 128
+
+    def test_pick_block_prefers_large(self):
+        assert pick_block(256) == 128
+        assert pick_block(384) == 128
+        assert pick_block(48) == 16
+
+    def test_vmem_estimate(self):
+        assert vmem_bytes_f32((128, 128)) == 128 * 128 * 4
+        assert vmem_bytes_f32((2, 2), (3,)) == 16 + 12

@@ -1,0 +1,267 @@
+"""L2 correctness: the adapted transformer + train/eval/calib step builders.
+
+Exercises the exact functions that aot.py lowers, in-process (interpret
+pallas), so failures localize to the model rather than the PJRT bridge.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.CONFIGS["sqft-tiny"]
+
+
+def init_base(rng, cfg=CFG, sparsity=0.0):
+    base = {}
+    for name, shape in M.base_param_specs(cfg):
+        if name.startswith("ln") or name == "final_ln":
+            base[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 0.02 if name == "embed" else 1.0 / np.sqrt(shape[-1])
+            base[name] = jnp.asarray(rng.normal(size=shape) * std, jnp.float32)
+    return base
+
+
+def init_adapters(rng, cfg=CFG, zero_b=True, mask_sparsity=0.0):
+    ad = {}
+    for name, shape in M.adapter_param_specs(cfg):
+        if name.startswith("a_"):
+            ad[name] = jnp.asarray(rng.normal(size=shape) * 0.02, jnp.float32)
+        elif name.startswith("b_"):
+            ad[name] = (jnp.zeros(shape, jnp.float32) if zero_b
+                        else jnp.asarray(rng.normal(size=shape) * 0.02, jnp.float32))
+        elif name.startswith("mask_"):
+            ad[name] = jnp.asarray(rng.random(size=shape) >= mask_sparsity,
+                                   jnp.float32)
+        elif name.startswith("rankmask_"):
+            ad[name] = jnp.ones(shape, jnp.float32)
+        elif name.startswith("scale_"):
+            ad[name] = jnp.full(shape, 2.0 / cfg.r_max, jnp.float32)
+    return ad
+
+
+def init_qa(rng, cfg=CFG):
+    qa = {}
+    for name, shape in M.qa_param_specs(cfg):
+        if name.startswith("qscales_"):
+            qa[name] = jnp.asarray(np.abs(rng.normal(size=shape)) * 0.05 + 0.02,
+                                   jnp.float32)
+        elif name.startswith("qzeros_"):
+            qa[name] = jnp.asarray(rng.integers(4, 12, size=shape), jnp.float32)
+        else:
+            qa[name] = jnp.array([15.0], jnp.float32)
+    return qa
+
+
+def toy_batch(rng, cfg=CFG):
+    """A trivially learnable task: predict (token + 1) mod vocab."""
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)), jnp.int32)
+    targets = (tokens + 1) % cfg.vocab
+    loss_mask = jnp.ones((cfg.batch, cfg.seq_len), jnp.float32)
+    return tokens, targets, loss_mask
+
+
+def flat_args(cfg, base, adapters, qa=None, opt=None, batch=None):
+    args = [base[n] for n, _ in M.base_param_specs(cfg)]
+    args += [adapters[n] for n, _ in M.adapter_param_specs(cfg)]
+    if qa is not None:
+        args += [qa[n] for n, _ in M.qa_param_specs(cfg)]
+    if opt is not None:
+        args += [opt[n] for n, _ in M.opt_param_specs(cfg)]
+    if batch is not None:
+        args += list(batch)
+    return args
+
+
+def zero_opt(cfg):
+    return {n: jnp.zeros(s, jnp.float32) for n, s in M.opt_param_specs(cfg)}
+
+
+class TestForward:
+    def test_logits_shape_and_finite(self, rng):
+        base = init_base(rng)
+        ad = init_adapters(rng)
+        tokens, _, _ = toy_batch(rng)
+        logits = M.forward(CFG, base, ad, tokens)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_causality(self, rng):
+        """Changing a future token must not affect earlier logits."""
+        base = init_base(rng)
+        ad = init_adapters(rng)
+        tokens, _, _ = toy_batch(rng)
+        l1 = M.forward(CFG, base, ad, tokens)
+        tok2 = tokens.at[:, -1].set((tokens[:, -1] + 3) % CFG.vocab)
+        l2 = M.forward(CFG, base, ad, tok2)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-4, atol=1e-4)
+
+    def test_zero_b_adapter_is_identity(self, rng):
+        """LoRA init (B=0) leaves the base model unchanged."""
+        base = init_base(rng)
+        ad0 = init_adapters(rng, zero_b=True)
+        tokens, _, _ = toy_batch(rng)
+        l_ad = M.forward(CFG, base, ad0, tokens)
+        ad_none = init_adapters(rng, zero_b=True)
+        for m in M.MODS:
+            ad_none[f"a_{m}"] = jnp.zeros_like(ad_none[f"a_{m}"])
+        l_plain = M.forward(CFG, base, ad_none, tokens)
+        np.testing.assert_allclose(l_ad, l_plain, rtol=1e-5, atol=1e-5)
+
+    def test_merged_equals_unmerged_sparsepeft(self, rng):
+        """Paper Eq. 2: folding L^p = (BA)⊙M into W^p is exact — the central
+        SparsePEFT mergeability claim."""
+        base = init_base(rng)
+        ad = init_adapters(rng, zero_b=False, mask_sparsity=0.5)
+        tokens, _, _ = toy_batch(rng)
+        l_unmerged = M.forward(CFG, base, ad, tokens)
+
+        merged = dict(base)
+        zeroed = dict(ad)
+        for m in M.MODS:
+            key = {"q": "wq", "k": "wk", "v": "wv", "up": "wup", "down": "wdown"}[m]
+            stacks = []
+            for l in range(CFG.n_layers):
+                stacks.append(ref.effective_weight(
+                    base[key][l], ad[f"a_{m}"][l], ad[f"b_{m}"][l],
+                    ad[f"mask_{m}"][l], ad[f"rankmask_{m}"][l],
+                    ad[f"scale_{m}"][l]))
+            merged[key] = jnp.stack(stacks)
+            zeroed[f"b_{m}"] = jnp.zeros_like(ad[f"b_{m}"])
+        l_merged = M.forward(CFG, merged, zeroed, tokens)
+        np.testing.assert_allclose(l_unmerged, l_merged, rtol=1e-4, atol=1e-4)
+
+    def test_merge_preserves_sparsity(self, rng):
+        """S{W^p + L^p} ⊆ S{W^p}: merging never densifies (paper §2.3)."""
+        base = init_base(rng)
+        ad = init_adapters(rng, zero_b=False, mask_sparsity=0.6)
+        for m in M.MODS:
+            key = {"q": "wq", "k": "wk", "v": "wv", "up": "wup", "down": "wdown"}[m]
+            w = base[key][0] * ad[f"mask_{m}"][0]
+            merged = w + ref.sparse_lora_delta(
+                ad[f"a_{m}"][0], ad[f"b_{m}"][0], ad[f"mask_{m}"][0],
+                ad[f"rankmask_{m}"][0], ad[f"scale_{m}"][0])
+            assert bool(jnp.all((ad[f"mask_{m}"][0] == 0) <= (merged == 0)))
+
+    def test_qa_forward_equals_fakequant_merged(self, rng):
+        base = init_base(rng)
+        ad = init_adapters(rng, zero_b=False, mask_sparsity=0.5)
+        qa = init_qa(rng)
+        tokens, _, _ = toy_batch(rng)
+        l_qa = M.forward(CFG, base, ad, tokens, qa=qa)
+
+        merged = dict(base)
+        zeroed = dict(ad)
+        for m in M.MODS:
+            key = {"q": "wq", "k": "wk", "v": "wv", "up": "wup", "down": "wdown"}[m]
+            stacks = []
+            for l in range(CFG.n_layers):
+                eff = ref.effective_weight(
+                    base[key][l], ad[f"a_{m}"][l], ad[f"b_{m}"][l],
+                    ad[f"mask_{m}"][l], ad[f"rankmask_{m}"][l],
+                    ad[f"scale_{m}"][l])
+                stacks.append(ref.fake_quant(
+                    eff, qa[f"qscales_{m}"][l], qa[f"qzeros_{m}"][l], 15.0))
+            merged[key] = jnp.stack(stacks)
+            zeroed[f"b_{m}"] = jnp.zeros_like(ad[f"b_{m}"])
+        l_merged = M.forward(CFG, merged, zeroed, tokens)
+        np.testing.assert_allclose(l_qa, l_merged, rtol=1e-4, atol=1e-4)
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("qa", [False, True])
+    def test_loss_decreases(self, rng, qa):
+        cfg = CFG
+        base = init_base(rng)
+        ad = init_adapters(rng)
+        qad = init_qa(rng) if qa else None
+        opt = zero_opt(cfg)
+        step_fn = jax.jit(M.make_train_step(cfg, qa=qa))
+        tokens, targets, loss_mask = toy_batch(rng)
+        losses = []
+        for step in range(10):
+            batch = (tokens, targets, loss_mask,
+                     jnp.array([step + 1.0], jnp.float32),
+                     jnp.array([2e-2], jnp.float32))
+            args = flat_args(cfg, base, ad, qa=qad, opt=opt, batch=batch)
+            outs = step_fn(*args)
+            names = M.train_output_names(cfg)
+            for n, o in zip(names[:10], outs[:10]):
+                ad[n] = o
+            for n, o in zip(names[10:30], outs[10:30]):
+                ad  # noqa: B018 — opt update below
+            trainable = [f"a_{m}" for m in M.MODS] + [f"b_{m}" for m in M.MODS]
+            for j, n in enumerate(trainable):
+                opt["m_" + n] = outs[10 + j]
+                opt["v_" + n] = outs[20 + j]
+            losses.append(float(outs[-1][0]))
+        # fixed batch + Adam on the adapters: loss must fall monotonically
+        # in trend and by a visible margin
+        assert losses[-1] < losses[0] - 0.05, losses
+        assert losses[-1] < min(losses[:3]), losses
+
+    def test_base_weights_unchanged_by_construction(self, rng):
+        """Train step outputs contain only adapter/opt tensors — the frozen
+        base cannot drift (PEFT invariant)."""
+        names = M.train_output_names(CFG)
+        assert all(not n.startswith("w") and "embed" not in n for n in names)
+        assert len(names) == 31
+
+
+class TestCalibStep:
+    def test_capture_shapes(self, rng):
+        cfg = CFG
+        base = init_base(rng)
+        ad = init_adapters(rng)
+        tokens, _, _ = toy_batch(rng)
+        fn = M.make_calib_step(cfg)
+        args = flat_args(cfg, base, ad, batch=(tokens,))
+        logits, xqkv, xo, xmlp, xdown = fn(*args)
+        t = cfg.batch * cfg.seq_len
+        assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+        assert xqkv.shape == (cfg.n_layers, t, cfg.d_model)
+        assert xo.shape == (cfg.n_layers, t, cfg.d_model)
+        assert xmlp.shape == (cfg.n_layers, t, cfg.d_model)
+        assert xdown.shape == (cfg.n_layers, t, cfg.d_ff)
+
+    def test_capture_matches_plain_forward(self, rng):
+        base = init_base(rng)
+        ad = init_adapters(rng)
+        tokens, _, _ = toy_batch(rng)
+        fn = M.make_calib_step(CFG)
+        args = flat_args(CFG, base, ad, batch=(tokens,))
+        logits_c = fn(*args)[0]
+        logits_p = M.forward(CFG, base, ad, tokens)
+        np.testing.assert_allclose(logits_c, logits_p, rtol=1e-5, atol=1e-5)
+
+
+class TestSpecs:
+    @pytest.mark.parametrize("name", list(M.CONFIGS))
+    def test_spec_shapes_consistent(self, name):
+        cfg = M.CONFIGS[name]
+        for specs in (M.train_input_specs(cfg, qa=False),
+                      M.train_input_specs(cfg, qa=True),
+                      M.eval_input_specs(cfg, qa=False),
+                      M.calib_input_specs(cfg)):
+            names = [n for n, _, _ in specs]
+            assert len(names) == len(set(names)), "duplicate input name"
+        # group size must divide every adapted in-dim
+        for m in M.MODS:
+            _, inp = cfg.mod_dims(m)
+            assert inp % cfg.group_size == 0
+
+    @pytest.mark.parametrize("name", list(M.CONFIGS))
+    def test_param_count_formula(self, name):
+        cfg = M.CONFIGS[name]
+        total = 0
+        for _, shape in M.base_param_specs(cfg):
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        assert total == cfg.param_count()

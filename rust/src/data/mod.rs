@@ -1,0 +1,236 @@
+//! Synthetic task suite + tokenizer + batcher.
+//!
+//! Stand-ins for the paper's datasets (DESIGN.md §1): three generative math
+//! tasks (GSM8K / MAWPS / SVAMP analogues, exact-match digit answers) and
+//! seven multiple-choice "commonsense" tasks (BoolQ..OBQA analogues,
+//! one-token answers).  Each task is a deterministic rule over random
+//! instances, so accuracy is a real generalization signal with a
+//! well-defined ceiling of 1.0, a learnable structure for the model, and a
+//! verifiable answer — the same harness shape as lm-eval-harness.
+
+pub mod tasks;
+pub mod tokenizer;
+
+pub use tasks::{Sample, Task};
+pub use tokenizer::Tokenizer;
+
+use crate::tensor::Rng;
+use anyhow::{bail, Result};
+
+/// One tokenized batch ready for a train/eval artifact.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,    // (batch, seq)
+    pub targets: Vec<i32>,   // (batch, seq) next-token targets
+    pub loss_mask: Vec<f32>, // (batch, seq) 1.0 where target is an answer char
+    pub batch: usize,
+    pub seq: usize,
+    /// number of real (non-padding-duplicate) samples in this batch
+    pub real: usize,
+}
+
+/// Train/val/test split of generated samples.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub task: Task,
+    pub train: Vec<Sample>,
+    pub val: Vec<Sample>,
+    pub test: Vec<Sample>,
+}
+
+impl Dataset {
+    /// Generate a dataset with independent RNG streams per split.
+    pub fn generate(task: Task, n_train: usize, n_val: usize, n_test: usize,
+                    seed: u64) -> Dataset {
+        let mut root = Rng::new(seed ^ task.id());
+        let gen = |rng: &mut Rng, n: usize| -> Vec<Sample> {
+            (0..n).map(|_| task.gen_sample(rng)).collect()
+        };
+        let mut r_train = root.fork(1);
+        let mut r_val = root.fork(2);
+        let mut r_test = root.fork(3);
+        Dataset {
+            task,
+            train: gen(&mut r_train, n_train),
+            val: gen(&mut r_val, n_val),
+            test: gen(&mut r_test, n_test),
+        }
+    }
+
+    /// The paper's "unified commonsense training set": concat + shuffle.
+    pub fn unified(datasets: &[Dataset], seed: u64) -> Vec<Sample> {
+        let mut all: Vec<Sample> = datasets.iter().flat_map(|d| d.train.clone()).collect();
+        Rng::new(seed).shuffle(&mut all);
+        all
+    }
+}
+
+/// Encode one sample into (tokens, targets, loss_mask) rows of length `seq`.
+pub fn encode_sample(tok: &Tokenizer, s: &Sample, seq: usize)
+                     -> Result<(Vec<i32>, Vec<i32>, Vec<f32>)> {
+    let text = format!("{}{}", s.prompt, s.answer);
+    let ids = tok.encode(&text)?;
+    // +1 for BOS
+    if ids.len() + 1 > seq {
+        bail!("sample too long ({} + BOS > {seq}): {text:?}", ids.len());
+    }
+    let mut tokens = vec![0i32; seq];
+    tokens[0] = Tokenizer::BOS;
+    for (i, &id) in ids.iter().enumerate() {
+        tokens[i + 1] = id;
+    }
+    // next-token targets
+    let mut targets = vec![0i32; seq];
+    for i in 0..seq - 1 {
+        targets[i] = tokens[i + 1];
+    }
+    // answer region: positions whose *target* is an answer char
+    let ans_start = 1 + tok.encode(&s.prompt)?.len(); // first answer token idx
+    let ans_end = 1 + ids.len(); // one past last answer token idx
+    let mut loss_mask = vec![0f32; seq];
+    for i in ans_start..ans_end {
+        // target at position i-1 predicts token i
+        loss_mask[i - 1] = 1.0;
+    }
+    Ok((tokens, targets, loss_mask))
+}
+
+/// Deterministic batcher with tail padding (repeats the last sample; the
+/// `real` count lets eval ignore the duplicates).
+pub struct Batcher<'a> {
+    samples: &'a [Sample],
+    tok: &'a Tokenizer,
+    seq: usize,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(samples: &'a [Sample], tok: &'a Tokenizer, seq: usize, batch: usize)
+               -> Batcher<'a> {
+        Batcher { samples, tok, seq, batch, pos: 0 }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.samples.len().div_ceil(self.batch)
+    }
+
+    pub fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Next sequential batch (None when exhausted).
+    pub fn next_batch(&mut self) -> Result<Option<Batch>> {
+        if self.pos >= self.samples.len() {
+            return Ok(None);
+        }
+        let end = (self.pos + self.batch).min(self.samples.len());
+        let real = end - self.pos;
+        let mut b = Batch {
+            tokens: Vec::with_capacity(self.batch * self.seq),
+            targets: Vec::with_capacity(self.batch * self.seq),
+            loss_mask: Vec::with_capacity(self.batch * self.seq),
+            batch: self.batch,
+            seq: self.seq,
+            real,
+        };
+        for i in 0..self.batch {
+            let s = &self.samples[(self.pos + i).min(self.samples.len() - 1)];
+            let (t, tg, lm) = encode_sample(self.tok, s, self.seq)?;
+            b.tokens.extend(t);
+            b.targets.extend(tg);
+            b.loss_mask.extend(lm);
+        }
+        self.pos = end;
+        Ok(Some(b))
+    }
+
+    /// A uniformly random batch (for training).
+    pub fn random_batch(&self, rng: &mut Rng) -> Result<Batch> {
+        let mut b = Batch {
+            tokens: Vec::with_capacity(self.batch * self.seq),
+            targets: Vec::with_capacity(self.batch * self.seq),
+            loss_mask: Vec::with_capacity(self.batch * self.seq),
+            batch: self.batch,
+            seq: self.seq,
+            real: self.batch,
+        };
+        for _ in 0..self.batch {
+            let s = &self.samples[rng.below(self.samples.len())];
+            let (t, tg, lm) = encode_sample(self.tok, s, self.seq)?;
+            b.tokens.extend(t);
+            b.targets.extend(tg);
+            b.loss_mask.extend(lm);
+        }
+        Ok(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_masks_answer_region() {
+        let tok = Tokenizer::new();
+        let s = Sample { prompt: "Q:1+2=?A:".into(), answer: "3.".into() };
+        let (tokens, targets, mask) = encode_sample(&tok, &s, 24).unwrap();
+        assert_eq!(tokens[0], Tokenizer::BOS);
+        // positions predicting '3' and '.' are masked
+        let n_mask = mask.iter().filter(|&&m| m == 1.0).count();
+        assert_eq!(n_mask, 2);
+        // the masked targets decode to the answer
+        let ans: String = mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m == 1.0)
+            .map(|(i, _)| tok.decode_one(targets[i]).unwrap())
+            .collect();
+        assert_eq!(ans, "3.");
+    }
+
+    #[test]
+    fn encode_rejects_overlong() {
+        let tok = Tokenizer::new();
+        let s = Sample { prompt: "Q:".repeat(40), answer: "1.".into() };
+        assert!(encode_sample(&tok, &s, 16).is_err());
+    }
+
+    #[test]
+    fn batcher_covers_all_samples() {
+        let tok = Tokenizer::new();
+        let ds = Dataset::generate(Task::SynGsm, 19, 0, 0, 7);
+        let mut b = Batcher::new(&ds.train, &tok, 48, 8);
+        assert_eq!(b.num_batches(), 3);
+        let mut total_real = 0;
+        while let Some(batch) = b.next_batch().unwrap() {
+            assert_eq!(batch.tokens.len(), 8 * 48);
+            total_real += batch.real;
+        }
+        assert_eq!(total_real, 19);
+    }
+
+    #[test]
+    fn dataset_splits_are_deterministic() {
+        let a = Dataset::generate(Task::SynBoolq, 5, 5, 5, 42);
+        let b = Dataset::generate(Task::SynBoolq, 5, 5, 5, 42);
+        assert_eq!(a.train[0].prompt, b.train[0].prompt);
+        assert_eq!(a.test[4].answer, b.test[4].answer);
+        let c = Dataset::generate(Task::SynBoolq, 5, 5, 5, 43);
+        assert!(a.train.iter().zip(&c.train).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn all_tasks_generate_encodable_samples() {
+        let tok = Tokenizer::new();
+        for task in Task::all() {
+            let mut rng = Rng::new(11);
+            for _ in 0..200 {
+                let s = task.gen_sample(&mut rng);
+                let (_, _, mask) = encode_sample(&tok, &s, 48)
+                    .unwrap_or_else(|e| panic!("{task:?}: {e}"));
+                assert!(mask.iter().any(|&m| m == 1.0), "{task:?} empty answer");
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Synthetic task generators — the paper's dataset stand-ins.
+//!
+//! Math tasks (generative, multi-char digit answers, exact match):
+//!   SynGsm   "Q:17+3*42=?A:143."        (GSM8K analogue: two-step arithmetic)
+//!   SynMawps "TOM HAS 25, GETS 17. ALL?A:42."  (MAWPS: templated word problem)
+//!   SynSvamp "JO HAS 31. ADDS 9, SEES 4. NOW?A:40."  (SVAMP: distractor number)
+//!
+//! Commonsense tasks (multiple-choice, single-token answers):
+//!   SynBoolq  "IS 17 OVER 9?A:Y."          yes/no comparison
+//!   SynPiqa   "FIT 7 IN BOX 5?A:N."        physical capacity rule
+//!   SynHellas "NEXT 2,4,6?A:8."            sequence continuation
+//!   SynWinog  "B BEATS F. WINNER?A:B."     referent selection
+//!   SynArcE   "MAX 3,9,5?A:9."             easy reasoning
+//!   SynArcC   "3+8 THEN *7, LAST DIGIT?A:7." harder reasoning
+//!   SynObqa   "IS F IN ADF?A:Y."           knowledge lookup
+//!
+//! Every task is deterministic given its instance, answers are verifiable,
+//! and the instance space is large enough that test accuracy measures
+//! generalization of the rule, not memorization of strings.
+
+use crate::tensor::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub prompt: String,
+    pub answer: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    SynGsm,
+    SynMawps,
+    SynSvamp,
+    SynBoolq,
+    SynPiqa,
+    SynHellas,
+    SynWinog,
+    SynArcE,
+    SynArcC,
+    SynObqa,
+}
+
+impl Task {
+    pub fn all() -> [Task; 10] {
+        [
+            Task::SynGsm, Task::SynMawps, Task::SynSvamp,
+            Task::SynBoolq, Task::SynPiqa, Task::SynHellas, Task::SynWinog,
+            Task::SynArcE, Task::SynArcC, Task::SynObqa,
+        ]
+    }
+
+    pub fn math() -> [Task; 3] {
+        [Task::SynGsm, Task::SynMawps, Task::SynSvamp]
+    }
+
+    pub fn commonsense() -> [Task; 7] {
+        [
+            Task::SynBoolq, Task::SynPiqa, Task::SynHellas, Task::SynWinog,
+            Task::SynArcE, Task::SynArcC, Task::SynObqa,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::SynGsm => "syn-gsm",
+            Task::SynMawps => "syn-mawps",
+            Task::SynSvamp => "syn-svamp",
+            Task::SynBoolq => "syn-boolq",
+            Task::SynPiqa => "syn-piqa",
+            Task::SynHellas => "syn-hellas",
+            Task::SynWinog => "syn-winog",
+            Task::SynArcE => "syn-arce",
+            Task::SynArcC => "syn-arcc",
+            Task::SynObqa => "syn-obqa",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        Task::all().into_iter().find(|t| t.name() == s)
+    }
+
+    /// Stable id used to derive per-task RNG streams.
+    pub fn id(&self) -> u64 {
+        Task::all().iter().position(|t| t == self).unwrap() as u64 + 1
+    }
+
+    pub fn is_multiple_choice(&self) -> bool {
+        !matches!(self, Task::SynGsm | Task::SynMawps | Task::SynSvamp)
+    }
+
+    /// The paper only has validation splits for Arc-e, Arc-c and OBQA
+    /// (§3.3) — the hill-climbing search uses exactly these.
+    pub fn has_validation(&self) -> bool {
+        matches!(self, Task::SynArcE | Task::SynArcC | Task::SynObqa)
+    }
+
+    pub fn gen_sample(&self, rng: &mut Rng) -> Sample {
+        match self {
+            Task::SynGsm => {
+                let a = rng.range(0, 30);
+                let b = rng.range(0, 9);
+                let c = rng.range(0, 9);
+                Sample {
+                    prompt: format!("Q:{a}+{b}*{c}=?A:"),
+                    answer: format!("{}.", a + b * c),
+                }
+            }
+            Task::SynMawps => {
+                let name = ["TOM", "ANN", "BEN", "SUE", "MAX", "EVA"];
+                let n = rng.choose(&name);
+                let a = rng.range(1, 60);
+                let b = rng.range(1, 39);
+                let (verb, ans) = if rng.next_f32() < 0.5 {
+                    ("GETS", a + b)
+                } else if a >= b {
+                    ("LOSES", a - b)
+                } else {
+                    ("GETS", a + b)
+                };
+                Sample {
+                    prompt: format!("{n} HAS {a}, {verb} {b}. ALL?A:"),
+                    answer: format!("{ans}."),
+                }
+            }
+            Task::SynSvamp => {
+                let name = ["JO", "AL", "KIM", "LEE"];
+                let n = rng.choose(&name);
+                let a = rng.range(1, 60);
+                let b = rng.range(1, 30);
+                let d = rng.range(1, 9); // distractor — must be ignored
+                let (verb, ans) = if rng.next_f32() < 0.5 {
+                    ("ADDS", a + b)
+                } else if a >= b {
+                    ("DROPS", a - b)
+                } else {
+                    ("ADDS", a + b)
+                };
+                Sample {
+                    prompt: format!("{n} HAS {a}. {verb} {b}, SEES {d}. NOW?A:"),
+                    answer: format!("{ans}."),
+                }
+            }
+            Task::SynBoolq => {
+                let a = rng.range(0, 99);
+                let b = rng.range(0, 99);
+                Sample {
+                    prompt: format!("IS {a} OVER {b}?A:"),
+                    answer: format!("{}.", if a > b { "Y" } else { "N" }),
+                }
+            }
+            Task::SynPiqa => {
+                let item = rng.range(1, 99);
+                let cap = rng.range(1, 99);
+                Sample {
+                    prompt: format!("FIT {item} IN BOX {cap}?A:"),
+                    answer: format!("{}.", if item <= cap { "Y" } else { "N" }),
+                }
+            }
+            Task::SynHellas => {
+                let start = rng.range(0, 4);
+                let step = rng.range(1, 3);
+                let (a, b, c) = (start, start + step, start + 2 * step);
+                Sample {
+                    prompt: format!("NEXT {a},{b},{c}?A:"),
+                    answer: format!("{}.", (start + 3 * step) % 10),
+                }
+            }
+            Task::SynWinog => {
+                let p = (b'B' + rng.below(12) as u8) as char;
+                let mut q = (b'B' + rng.below(12) as u8) as char;
+                if q == p {
+                    q = if p == 'M' { 'B' } else { ((p as u8) + 1) as char };
+                }
+                let wins_first = rng.next_f32() < 0.5;
+                let verb = if wins_first { "BEATS" } else { "LOSES TO" };
+                let ans = if wins_first { p } else { q };
+                Sample {
+                    prompt: format!("{p} {verb} {q}. WINNER?A:"),
+                    answer: format!("{ans}."),
+                }
+            }
+            Task::SynArcE => {
+                let a = rng.range(0, 9);
+                let b = rng.range(0, 9);
+                let c = rng.range(0, 9);
+                Sample {
+                    prompt: format!("MAX {a},{b},{c}?A:"),
+                    answer: format!("{}.", a.max(b).max(c)),
+                }
+            }
+            Task::SynArcC => {
+                let a = rng.range(0, 9);
+                let b = rng.range(0, 9);
+                let c = rng.range(2, 9);
+                Sample {
+                    prompt: format!("{a}+{b} THEN *{c}, LAST DIGIT?A:"),
+                    answer: format!("{}.", ((a + b) * c) % 10),
+                }
+            }
+            Task::SynObqa => {
+                let mut set: Vec<char> = Vec::new();
+                while set.len() < 3 {
+                    let c = (b'A' + rng.below(16) as u8) as char;
+                    if !set.contains(&c) {
+                        set.push(c);
+                    }
+                }
+                let probe = (b'A' + rng.below(16) as u8) as char;
+                let inside = set.contains(&probe);
+                let s: String = set.iter().collect();
+                Sample {
+                    prompt: format!("IS {probe} IN {s}?A:"),
+                    answer: format!("{}.", if inside { "Y" } else { "N" }),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for t in Task::all() {
+            assert_eq!(Task::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Task::from_name("nope"), None);
+    }
+
+    #[test]
+    fn answers_are_correct_gsm() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let s = Task::SynGsm.gen_sample(&mut rng);
+            // parse "Q:a+b*c=?A:"
+            let body = s.prompt.strip_prefix("Q:").unwrap().strip_suffix("=?A:").unwrap();
+            let (a, rest) = body.split_once('+').unwrap();
+            let (b, c) = rest.split_once('*').unwrap();
+            let want = a.parse::<i64>().unwrap()
+                + b.parse::<i64>().unwrap() * c.parse::<i64>().unwrap();
+            assert_eq!(s.answer, format!("{want}."));
+        }
+    }
+
+    #[test]
+    fn mc_answers_are_single_char() {
+        let mut rng = Rng::new(2);
+        for t in Task::commonsense() {
+            for _ in 0..50 {
+                let s = t.gen_sample(&mut rng);
+                assert_eq!(s.answer.len(), 2, "{t:?}: {}", s.answer); // "X."
+                assert!(s.answer.ends_with('.'));
+            }
+        }
+    }
+
+    #[test]
+    fn prompts_fit_small_seq() {
+        let mut rng = Rng::new(3);
+        for t in Task::all() {
+            for _ in 0..300 {
+                let s = t.gen_sample(&mut rng);
+                assert!(s.prompt.len() + s.answer.len() + 1 <= 48,
+                    "{t:?} too long: {}{}", s.prompt, s.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn winog_entities_distinct() {
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let s = Task::SynWinog.gen_sample(&mut rng);
+            let p = s.prompt.chars().next().unwrap();
+            let q = s.prompt.split_whitespace().rev().nth(1).unwrap()
+                .trim_end_matches('.').chars().next().unwrap();
+            assert_ne!(p, q, "{}", s.prompt);
+        }
+    }
+
+    #[test]
+    fn validation_split_rule_matches_paper() {
+        let with_val: Vec<_> =
+            Task::all().into_iter().filter(|t| t.has_validation()).collect();
+        assert_eq!(with_val.len(), 3); // Arc-e, Arc-c, OBQA only (paper §3.3)
+    }
+}

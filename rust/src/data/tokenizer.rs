@@ -1,0 +1,101 @@
+//! Byte-level tokenizer over a fixed 64-symbol alphabet (= model vocab).
+//!
+//! The alphabet covers everything the synthetic task generators emit.
+//! Index 0 is PAD (also the ignore target), index 63 is BOS.
+
+use anyhow::{bail, Result};
+
+pub struct Tokenizer {
+    to_id: [i32; 256],
+    to_char: Vec<char>,
+}
+
+/// digits, operators, punctuation, upper-case letters, a few lower-case.
+const ALPHABET: &str = "\u{0}0123456789+-*/=?:. ,ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnop";
+
+impl Tokenizer {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 63;
+
+    pub fn new() -> Tokenizer {
+        let chars: Vec<char> = ALPHABET.chars().collect();
+        assert_eq!(chars.len(), 63, "alphabet must be 63 chars + BOS = 64");
+        let mut to_id = [-1i32; 256];
+        for (i, &c) in chars.iter().enumerate() {
+            to_id[c as usize] = i as i32;
+        }
+        let mut to_char = chars;
+        to_char.push('#'); // BOS renders as '#'
+        Tokenizer { to_id, to_char }
+    }
+
+    pub fn vocab(&self) -> usize {
+        64
+    }
+
+    pub fn encode(&self, s: &str) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(s.len());
+        for c in s.chars() {
+            let id = if (c as usize) < 256 { self.to_id[c as usize] } else { -1 };
+            if id < 0 {
+                bail!("character {c:?} not in alphabet");
+            }
+            out.push(id);
+        }
+        Ok(out)
+    }
+
+    pub fn decode_one(&self, id: i32) -> Result<char> {
+        if id < 0 || id as usize >= self.to_char.len() {
+            bail!("token id {id} out of range");
+        }
+        Ok(self.to_char[id as usize])
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> Result<String> {
+        ids.iter().map(|&i| self.decode_one(i)).collect()
+    }
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let s = "Q:12+34*5=?A:182. YES and no";
+        let ids = t.encode(s).unwrap();
+        assert_eq!(t.decode(&ids).unwrap(), s);
+    }
+
+    #[test]
+    fn vocab_is_64() {
+        let t = Tokenizer::new();
+        assert_eq!(t.vocab(), 64);
+        // ids stay within vocab
+        let ids = t.encode("ABCxyz? no wait").unwrap_err();
+        let _ = ids; // 'x','y','z' beyond 'p' are rejected
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        let t = Tokenizer::new();
+        assert!(t.encode("hello!").is_err()); // '!' not in alphabet
+        assert!(t.encode("émoji").is_err());
+    }
+
+    #[test]
+    fn pad_and_bos_distinct() {
+        let t = Tokenizer::new();
+        assert_eq!(Tokenizer::PAD, 0);
+        assert_eq!(Tokenizer::BOS, 63);
+        assert_eq!(t.decode_one(Tokenizer::BOS).unwrap(), '#');
+    }
+}

@@ -1,0 +1,140 @@
+//! Evaluation harness — the lm-eval-harness analogue.
+//!
+//! Generative tasks: exact match over the masked answer positions under
+//! teacher forcing (every answer token's argmax must be correct).
+//! Multiple-choice tasks degenerate to the same rule with a single masked
+//! position.  Batched through the `eval`/`eval_qa` artifacts; eval state
+//! (adapters, rank config) is passed per call so NLS search can sweep
+//! configurations against one device-resident base.
+
+use crate::data::{Batcher, Sample, Task, Tokenizer};
+use crate::model::ParamSet;
+use crate::nls::{Config, SearchSpace};
+use crate::runtime::{args::build_args, DeviceStore, Runtime};
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub correct: usize,
+    pub total: usize,
+    pub mean_loss: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.correct as f64 / self.total as f64 }
+    }
+}
+
+/// Evaluate one adapter/rank state on a sample set.
+///
+/// `eval_kind` is "eval" or "eval_qa"; `device` holds base weights (+ QA
+/// params when eval_qa); `host_sets` supply adapters/masks/rank params.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate(
+    rt: &Runtime,
+    config: &str,
+    eval_kind: &str,
+    device: &DeviceStore,
+    host_sets: &[&ParamSet],
+    samples: &[Sample],
+    tok: &Tokenizer,
+) -> Result<EvalResult> {
+    let hyper = rt.model(config)?.clone();
+    let exe = rt.executable(config, eval_kind)?;
+    let mut batcher = Batcher::new(samples, tok, hyper.seq_len, hyper.batch);
+    let (mut correct, mut total) = (0usize, 0usize);
+    let mut loss_sum = 0.0f64;
+    let mut loss_n = 0usize;
+    while let Some(batch) = batcher.next_batch()? {
+        let args = build_args(&exe.spec, Some(device), host_sets, Some(&batch), &[])?;
+        let outs = exe.run_mixed(&rt.client, &args)?;
+        let logits = &outs[0]; // (B, S, V)
+        let (b_n, s_n, v_n) = (batch.batch, batch.seq, hyper.vocab);
+        for bi in 0..batch.real {
+            let mut all_ok = true;
+            let mut any = false;
+            for si in 0..s_n {
+                if batch.loss_mask[bi * s_n + si] == 0.0 {
+                    continue;
+                }
+                any = true;
+                let target = batch.targets[bi * s_n + si];
+                let row = &logits.data()
+                    [bi * s_n * v_n + si * v_n..bi * s_n * v_n + (si + 1) * v_n];
+                // argmax
+                let mut best = 0usize;
+                for v in 1..v_n {
+                    if row[v] > row[best] {
+                        best = v;
+                    }
+                }
+                // masked NLL for the loss metric
+                let maxv = row[best];
+                let logsum: f32 =
+                    row.iter().map(|&x| (x - maxv).exp()).sum::<f32>().ln() + maxv;
+                loss_sum += (logsum - row[target as usize]) as f64;
+                loss_n += 1;
+                if best != target as usize {
+                    all_ok = false;
+                }
+            }
+            if any {
+                total += 1;
+                if all_ok {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    Ok(EvalResult {
+        correct,
+        total,
+        mean_loss: if loss_n == 0 { 0.0 } else { loss_sum / loss_n as f64 },
+    })
+}
+
+/// Evaluate one NLS configuration: realize rank masks, then `evaluate`.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_config(
+    rt: &Runtime,
+    config: &str,
+    eval_kind: &str,
+    device: &DeviceStore,
+    adapters: &ParamSet,
+    space: &SearchSpace,
+    nls_cfg: &Config,
+    samples: &[Sample],
+    tok: &Tokenizer,
+) -> Result<EvalResult> {
+    let rank_params = space.realize(nls_cfg)?;
+    evaluate(rt, config, eval_kind, device, &[adapters, &rank_params], samples, tok)
+}
+
+/// Macro-average accuracy over multiple task test sets (Tables 2-3 style).
+pub struct MultiTaskResult {
+    pub per_task: Vec<(Task, EvalResult)>,
+}
+
+impl MultiTaskResult {
+    pub fn average(&self) -> f64 {
+        if self.per_task.is_empty() {
+            return 0.0;
+        }
+        self.per_task.iter().map(|(_, r)| r.accuracy()).sum::<f64>()
+            / self.per_task.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_result_accuracy() {
+        let r = EvalResult { correct: 3, total: 4, mean_loss: 0.5 };
+        assert_eq!(r.accuracy(), 0.75);
+        let z = EvalResult { correct: 0, total: 0, mean_loss: 0.0 };
+        assert_eq!(z.accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Experiment harness shared by examples/ and benches/: pretrained-base
+//! caching, per-method table rows, and EXPERIMENTS.md section writers.
+//!
+//! Scale knobs (env vars, so `cargo run --example table1` is tunable
+//! without recompiling):
+//!   SQFT_MODEL           model config       (default sqft-tiny)
+//!   SQFT_PRETRAIN_STEPS  base pretraining   (default 400)
+//!   SQFT_STEPS           fine-tuning steps  (default 150)
+//!   SQFT_TEST_N          test samples/task  (default 300)
+//!   SQFT_TRAIN_N         train samples/task (default 3000)
+//!   SQFT_SEED            RNG seed           (default 7)
+
+use crate::data::{Dataset, Sample, Task, Tokenizer};
+use crate::evalharness::EvalResult;
+use crate::model::{checkpoint, init_base, ParamSet};
+use crate::nls::SearchSpace;
+use crate::peft::Method;
+use crate::pipeline::{self, Prepared};
+use crate::report::{pct, Table};
+use crate::runtime::Runtime;
+use crate::tensor::Rng;
+use crate::train::{LossCurve, Pretrainer, TrainOpts, Trainer};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub struct Harness {
+    pub rt: Runtime,
+    pub model: String,
+    pub tok: Tokenizer,
+    pub seed: u64,
+    pub pretrain_steps: usize,
+    pub steps: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub ckpt_dir: PathBuf,
+}
+
+impl Harness {
+    pub fn from_env() -> Result<Harness> {
+        let artifacts = std::env::var("SQFT_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        let rt = Runtime::new(Path::new(&artifacts))
+            .context("loading artifacts (run `make artifacts`)")?;
+        Ok(Harness {
+            rt,
+            model: std::env::var("SQFT_MODEL").unwrap_or_else(|_| "sqft-tiny".into()),
+            tok: Tokenizer::new(),
+            seed: env_u64("SQFT_SEED", 7),
+            pretrain_steps: env_usize("SQFT_PRETRAIN_STEPS", 400),
+            steps: env_usize("SQFT_STEPS", 150),
+            train_n: env_usize("SQFT_TRAIN_N", 3000),
+            test_n: env_usize("SQFT_TEST_N", 300),
+            ckpt_dir: PathBuf::from("checkpoints"),
+        })
+    }
+
+    pub fn datasets(&self, tasks: &[Task]) -> Vec<Dataset> {
+        tasks
+            .iter()
+            .map(|&t| {
+                let n_val = if t.has_validation() { 150 } else { 0 };
+                Dataset::generate(t, self.train_n, n_val, self.test_n, self.seed)
+            })
+            .collect()
+    }
+
+    /// Pretrain (or load cached) a base model on a task mixture.
+    pub fn base_for(&self, tag: &str, train: &[Sample]) -> Result<(ParamSet, LossCurve)> {
+        let path = self.ckpt_dir.join(format!(
+            "{}-{}-s{}-p{}.ckpt", self.model, tag, self.seed, self.pretrain_steps));
+        if path.exists() {
+            let (params, _) = checkpoint::load(&path)?;
+            eprintln!("[harness] loaded cached base {}", path.display());
+            return Ok((params, LossCurve::default()));
+        }
+        eprintln!("[harness] pretraining {} on '{tag}' for {} steps...",
+            self.model, self.pretrain_steps);
+        let hyper = self.rt.model(&self.model)?.clone();
+        let mut rng = Rng::new(self.seed);
+        let base = init_base(&hyper, &mut rng);
+        let mut pre = Pretrainer::new(&self.rt, &self.model, base);
+        let opts = TrainOpts {
+            steps: self.pretrain_steps,
+            lr: 2e-3,
+            log_every: (self.pretrain_steps / 20).max(1),
+            seed: self.seed,
+            fixed_rank: false,
+        };
+        let curve = pre.train(train, &self.tok, &opts)?;
+        let meta = Json::obj(vec![
+            ("config", Json::Str(self.model.clone())),
+            ("tag", Json::Str(tag.into())),
+        ]);
+        checkpoint::save(&pre.base, &path, meta)?;
+        Ok((pre.base, curve))
+    }
+
+    pub fn train_opts(&self) -> TrainOpts {
+        TrainOpts {
+            steps: self.steps,
+            lr: 1e-3,
+            log_every: (self.steps / 10).max(1),
+            seed: self.seed,
+            fixed_rank: false,
+        }
+    }
+
+    /// Run prepare + finetune for one method; returns (prepared, trainer).
+    pub fn tune<'a>(
+        &'a self,
+        pretrained: &ParamSet,
+        method: Method,
+        sparsity: f64,
+        train: &[Sample],
+    ) -> Result<(Prepared, Trainer<'a>)> {
+        self.tune_opts(pretrained, method, sparsity, train, &self.train_opts())
+    }
+
+    /// `tune` with explicit TrainOpts (fixed_rank ablation etc.).
+    pub fn tune_opts<'a>(
+        &'a self,
+        pretrained: &ParamSet,
+        method: Method,
+        sparsity: f64,
+        train: &[Sample],
+        opts: &TrainOpts,
+    ) -> Result<(Prepared, Trainer<'a>)> {
+        let mut rng = Rng::new(self.seed ^ 0xA5);
+        let prepared = pipeline::prepare(
+            &self.rt, &self.model, pretrained, method, sparsity, train,
+            &self.tok, 4, &mut rng)?;
+        let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+        let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+        let (trainer, _) = pipeline::finetune(
+            &self.rt, &self.model, &prepared, space, train, &self.tok, opts)?;
+        Ok((prepared, trainer))
+    }
+
+    /// Deployed NLS config per the paper's reference heuristic.
+    pub fn deploy_config(&self, trainer: &Trainer) -> crate::nls::Config {
+        if trainer.method.uses_nls() && !trainer.fixed_rank {
+            trainer.space.heuristic_config()
+        } else {
+            trainer.space.max_config()
+        }
+    }
+
+    /// Evaluate a tuned method on one test set; merged accuracy included
+    /// for mergeable methods.
+    pub fn eval_cell(
+        &self,
+        prepared: &Prepared,
+        trainer: &Trainer,
+        test: &[Sample],
+    ) -> Result<(EvalResult, Option<EvalResult>, Option<bool>)> {
+        let cfg = self.deploy_config(trainer);
+        let acc = pipeline::evaluate_unmerged(
+            &self.rt, &self.model, prepared, trainer, &cfg, test, &self.tok)?;
+        if prepared.method.mergeable() {
+            let merged = pipeline::merged_state(prepared, trainer, &cfg)?;
+            let macc = pipeline::evaluate_merged(
+                &self.rt, &self.model, prepared, &merged, test, &self.tok)?;
+            let preserved = merged.sparsity_after >= merged.sparsity_before - 1e-9;
+            Ok((acc, Some(macc), Some(preserved)))
+        } else {
+            Ok((acc, None, None))
+        }
+    }
+
+    /// "w/o tune" baseline accuracy of a compressed model.
+    pub fn baseline_acc(
+        &self,
+        pretrained: &ParamSet,
+        method: Method,
+        sparsity: f64,
+        train: &[Sample],
+        test: &[Sample],
+    ) -> Result<EvalResult> {
+        let mut rng = Rng::new(self.seed ^ 0xB6);
+        let prepared = pipeline::prepare(
+            &self.rt, &self.model, pretrained, method, sparsity, train,
+            &self.tok, 4, &mut rng)?;
+        pipeline::evaluate_base(&self.rt, &self.model, &prepared, test, &self.tok)
+    }
+
+    /// A Table 1/2/3-style row for one method.
+    pub fn method_row(
+        &self,
+        method: Method,
+        accs: &[f64],
+        merged_ok: Option<bool>,
+    ) -> Vec<String> {
+        let merge_cell = if method.mergeable() {
+            match merged_ok {
+                Some(true) => "yes".to_string(),
+                Some(false) => "VIOLATED".to_string(),
+                None => "yes".to_string(),
+            }
+        } else {
+            "no".to_string()
+        };
+        let mut row = vec![
+            method.name().to_string(),
+            merge_cell,
+            method.final_precision().to_string(),
+        ];
+        row.extend(accs.iter().map(|&a| pct(a)));
+        row
+    }
+}
+
+/// Append a titled section (with provenance line) to EXPERIMENTS.md.
+pub fn log_experiment(section: &str, body: &str) -> Result<()> {
+    let path = Path::new("EXPERIMENTS.md");
+    let stamp = std::process::Command::new("date")
+        .arg("+%Y-%m-%d %H:%M")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .unwrap_or_default();
+    let content = format!("\n## {section}\n_run: {}_\n\n{body}\n", stamp.trim());
+    crate::report::append_to(path, &content)
+}
+
+/// Render a loss curve as a compact sparkline-ish text block.
+pub fn render_curve(curve: &LossCurve) -> String {
+    if curve.points.is_empty() {
+        return "(cached base, no curve)".into();
+    }
+    let mut s = String::from("```\n");
+    s.push_str(&curve.render());
+    s.push_str("\n```\n");
+    s
+}
+
+/// Markdown for a table plus the paper-expectation note.
+pub fn table_with_note(t: &Table, note: &str) -> String {
+    format!("{}\n_{note}_\n", t.render())
+}

@@ -1,0 +1,22 @@
+//! SQFT: Low-cost Model Adaptation in Low-precision Sparse Foundation Models
+//! (Muñoz, Yuan, Jain — EMNLP 2024 Findings) — rust+JAX+Pallas reproduction.
+//!
+//! Layer-3 coordinator crate: everything from sparsification to serving runs
+//! here; model math executes through AOT-compiled XLA artifacts (see
+//! DESIGN.md for the three-layer architecture).
+
+pub mod data;
+pub mod harness;
+pub mod model;
+pub mod evalharness;
+pub mod nls;
+pub mod peft;
+pub mod pipeline;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod sparsity;
+pub mod tensor;
+pub mod train;
+pub mod util;

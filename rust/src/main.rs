@@ -1,0 +1,307 @@
+//! SQFT command-line launcher.
+//!
+//! Subcommands:
+//!   info                         — artifact/manifest summary
+//!   pretrain                     — full-weight pretraining on a task mixture
+//!   pipeline                     — one end-to-end SQFT run (prepare → tune
+//!                                  → merge → eval) for a chosen method
+//!   search                       — hill-climbing NLS search (Algorithm 1)
+//!   serve                        — batched serving demo + throughput stats
+//!
+//! Common flags: --artifacts DIR (default ./artifacts), --model NAME
+//! (default sqft-tiny), --task NAME, --seed N, --steps N, --lr F.
+
+use anyhow::{bail, Context, Result};
+use sqft::data::{Task, Tokenizer};
+use sqft::model::{checkpoint, init_base};
+use sqft::nls::SearchSpace;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::report::{pct, Table};
+use sqft::runtime::Runtime;
+use sqft::tensor::Rng;
+use sqft::train::{Pretrainer, TrainOpts};
+use sqft::util::cli::Args;
+use sqft::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: sqft <info|pretrain|pipeline|search|serve> [options]\n\
+     \n\
+     sqft info      [--artifacts DIR]\n\
+     sqft pretrain  --model M --task T --steps N [--lr F] [--out CKPT]\n\
+     sqft pipeline  --model M --task T --method lora|shears|sparsepeft|\n\
+                    gptq-lora|sqft|qa-sparsepeft --sparsity S [--steps N]\n\
+                    [--ckpt CKPT] [--out CKPT]\n\
+     sqft search    --model M --task T --method M --sparsity S [--turns N]\n\
+     sqft serve     --model M [--ckpt CKPT] [--requests N]\n"
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    if argv.is_empty() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let args = Args::parse(&argv[1..], &["quiet", "merged", "no-merge"])?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match argv[0].as_str() {
+        "info" => info(&artifacts),
+        "pretrain" => pretrain(&artifacts, &args),
+        "pipeline" => cmd_pipeline(&artifacts, &args),
+        "search" => cmd_search(&artifacts, &args),
+        "serve" => cmd_serve(&artifacts, &args),
+        other => bail!("unknown subcommand '{other}'\n{}", usage()),
+    }
+}
+
+fn info(artifacts: &Path) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    println!("platform: {}", rt.client.platform_name());
+    let mut t = Table::new("Model configs", &["name", "params", "d", "L", "ff", "seq", "r_max"]);
+    for (name, entry) in &rt.manifest.configs {
+        let m = &entry.model;
+        t.row(vec![
+            name.clone(),
+            format!("{:.1}M", m.param_count as f64 / 1e6),
+            m.d_model.to_string(),
+            m.n_layers.to_string(),
+            m.d_ff.to_string(),
+            m.seq_len.to_string(),
+            m.r_max.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("artifact kinds per config: {:?}",
+        rt.manifest.configs.values().next()
+            .map(|e| e.artifacts.keys().collect::<Vec<_>>()).unwrap_or_default());
+    println!("shape artifacts: {}", rt.manifest.shape_artifacts.len());
+    Ok(())
+}
+
+fn parse_task(args: &Args) -> Result<Task> {
+    let name = args.get_or("task", "syn-gsm");
+    Task::from_name(name).with_context(|| format!("unknown task '{name}'"))
+}
+
+fn pretrain(artifacts: &Path, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let config = args.get_or("model", "sqft-tiny").to_string();
+    let task = parse_task(args)?;
+    let steps = args.get_usize("steps", 300)?;
+    let lr = args.get_f64("lr", 1e-3)?;
+    let seed = args.get_u64("seed", 7)?;
+    let hyper = rt.model(&config)?.clone();
+    let tok = Tokenizer::new();
+    let ds = pipeline::standard_datasets(task, seed);
+
+    println!("pretraining {config} ({:.1}M params) on {} for {steps} steps",
+        hyper.param_count as f64 / 1e6, task.name());
+    let mut rng = Rng::new(seed);
+    let base = init_base(&hyper, &mut rng);
+    let mut pre = Pretrainer::new(&rt, &config, base);
+    let opts = TrainOpts { steps, lr, log_every: (steps / 20).max(1), seed, fixed_rank: false };
+    let curve = pre.train(&ds.train, &tok, &opts)?;
+    println!("{}", curve.render());
+
+    let prepared = pipeline::prepare(&rt, &config, &pre.base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut rng)?;
+    let acc = pipeline::evaluate_base(&rt, &config, &prepared, &ds.test, &tok)?;
+    println!("dense test accuracy: {}% ({}/{})",
+        pct(acc.accuracy()), acc.correct, acc.total);
+
+    let out = args.get_or("out", "checkpoints/base.ckpt");
+    let meta = Json::obj(vec![
+        ("config", Json::Str(config.clone())),
+        ("task", Json::Str(task.name().into())),
+        ("steps", Json::Num(steps as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("accuracy", Json::Num(acc.accuracy())),
+    ]);
+    checkpoint::save(&pre.base, Path::new(out), meta)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn load_or_pretrain(rt: &Runtime, config: &str, task: Task, args: &Args,
+                    seed: u64) -> Result<sqft::model::ParamSet> {
+    if let Some(ckpt) = args.get("ckpt") {
+        let (params, meta) = checkpoint::load(Path::new(ckpt))?;
+        if let Some(c) = meta.get("config") {
+            if c.as_str()? != config {
+                bail!("checkpoint {ckpt} was trained for config {:?}, not {config}",
+                    c.as_str()?);
+            }
+        }
+        println!("loaded base checkpoint {ckpt}");
+        return Ok(params);
+    }
+    // no checkpoint: quick pretrain
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+    let ds = pipeline::standard_datasets(task, seed);
+    let steps = args.get_usize("pretrain-steps", 300)?;
+    println!("no --ckpt given; pretraining {steps} steps first");
+    let mut rng = Rng::new(seed);
+    let base = init_base(&hyper, &mut rng);
+    let mut pre = Pretrainer::new(rt, config, base);
+    pre.train(&ds.train, &tok,
+              &TrainOpts { steps, lr: 1e-3, log_every: steps.max(1), seed, fixed_rank: false })?;
+    Ok(pre.base)
+}
+
+fn cmd_pipeline(artifacts: &Path, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let config = args.get_or("model", "sqft-tiny").to_string();
+    let task = parse_task(args)?;
+    let method = Method::from_name(args.get_or("method", "sparsepeft"))
+        .context("bad --method")?;
+    let sparsity = args.get_f64("sparsity", 0.5)?;
+    let steps = args.get_usize("steps", 200)?;
+    let lr = args.get_f64("lr", 1e-3)?;
+    let seed = args.get_u64("seed", 7)?;
+    let tok = Tokenizer::new();
+    let ds = pipeline::standard_datasets(task, seed);
+    let pretrained = load_or_pretrain(&rt, &config, task, args, seed)?;
+
+    println!("== SQFT pipeline: {} | {} | sparsity {:.0}% ==",
+        method.name(), task.name(), sparsity * 100.0);
+    let mut rng = Rng::new(seed ^ 2);
+    let prepared = pipeline::prepare(&rt, &config, &pretrained, method, sparsity,
+                                     &ds.train, &tok, 4, &mut rng)?;
+    println!("base sparsity after prepare: {:.1}%",
+        prepared.measured_sparsity() * 100.0);
+    let base_acc = pipeline::evaluate_base(&rt, &config, &prepared, &ds.test, &tok)?;
+    println!("compressed, w/o tune: {}%", pct(base_acc.accuracy()));
+
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+    let opts = TrainOpts { steps, lr, log_every: (steps / 10).max(1), seed, fixed_rank: false };
+    let (trainer, curve) = pipeline::finetune(&rt, &config, &prepared, space,
+                                              &ds.train, &tok, &opts)?;
+    println!("{}", curve.render());
+
+    let cfg = if method.uses_nls() {
+        trainer.space.heuristic_config()
+    } else {
+        trainer.space.max_config()
+    };
+    let acc = pipeline::evaluate_unmerged(&rt, &config, &prepared, &trainer,
+                                          &cfg, &ds.test, &tok)?;
+    println!("fine-tuned ({}): {}%  [final precision {}]",
+        if method.uses_nls() { "NLS heuristic" } else { "LoRA" },
+        pct(acc.accuracy()), method.final_precision());
+
+    if method.mergeable() && !args.has_flag("no-merge") {
+        let merged = pipeline::merged_state(&prepared, &trainer, &cfg)?;
+        let macc = pipeline::evaluate_merged(&rt, &config, &prepared, &merged,
+                                             &ds.test, &tok)?;
+        println!("merged: {}%  sparsity {:.1}% -> {:.1}%  (mergeable: yes)",
+            pct(macc.accuracy()),
+            merged.sparsity_before * 100.0, merged.sparsity_after * 100.0);
+        if let Some(out) = args.get("out") {
+            let meta = Json::obj(vec![
+                ("config", Json::Str(config.clone())),
+                ("method", Json::Str(method.cli_name().into())),
+                ("task", Json::Str(task.name().into())),
+                ("accuracy", Json::Num(macc.accuracy())),
+            ]);
+            checkpoint::save(&merged.base, Path::new(out), meta)?;
+            println!("saved merged model to {out}");
+        }
+    } else if !method.mergeable() {
+        println!("mergeable: no ({} keeps a separate FP16 adapter)", method.name());
+    }
+    Ok(())
+}
+
+fn cmd_search(artifacts: &Path, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let config = args.get_or("model", "sqft-tiny").to_string();
+    let task = parse_task(args)?;
+    let method = Method::from_name(args.get_or("method", "sparsepeft"))
+        .context("bad --method")?;
+    let sparsity = args.get_f64("sparsity", 0.5)?;
+    let steps = args.get_usize("steps", 200)?;
+    let turns = args.get_usize("turns", 5)?;
+    let seed = args.get_u64("seed", 7)?;
+    let tok = Tokenizer::new();
+    let ds = pipeline::standard_datasets(task, seed);
+    if ds.val.is_empty() {
+        bail!("task {} has no validation split (paper uses Arc-e/Arc-c/OBQA)",
+            task.name());
+    }
+    let pretrained = load_or_pretrain(&rt, &config, task, args, seed)?;
+    let mut rng = Rng::new(seed ^ 2);
+    let prepared = pipeline::prepare(&rt, &config, &pretrained, method, sparsity,
+                                     &ds.train, &tok, 4, &mut rng)?;
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+    let opts = TrainOpts { steps, lr: 1e-3, log_every: steps.max(1), seed, fixed_rank: false };
+    let (trainer, _) = pipeline::finetune(&rt, &config, &prepared, space,
+                                          &ds.train, &tok, &opts)?;
+    let start = trainer.space.heuristic_config();
+    println!("hill-climbing from heuristic (Algorithm 1): {turns} turns");
+    let mut search_rng = Rng::new(seed ^ 3);
+    let space_ref = trainer.space.clone();
+    let res = sqft::nls::hill_climb(
+        &space_ref, start, turns, 4, 2,
+        |cfg| {
+            let r = pipeline::evaluate_unmerged(
+                &rt, &config, &prepared, &trainer, cfg, &ds.val, &tok)?;
+            Ok(r.accuracy())
+        },
+        &mut search_rng,
+    )?;
+    println!("evaluated {} configs; best val acc {}%", res.evaluated,
+        pct(res.best_score));
+    let test_h = pipeline::evaluate_unmerged(
+        &rt, &config, &prepared, &trainer,
+        &trainer.space.heuristic_config(), &ds.test, &tok)?;
+    let test_b = pipeline::evaluate_unmerged(
+        &rt, &config, &prepared, &trainer, &res.best, &ds.test, &tok)?;
+    let mut t = Table::new(
+        "Hill-climbing vs heuristic (paper Table 4)",
+        &["Sub-Adapter", "Val Acc(%)", "Test Acc(%)", "Mean rank"]);
+    t.row(vec!["Heuristic".into(), pct(res.trace[0].1), pct(test_h.accuracy()),
+               format!("{:.1}", trainer.space.mean_rank(&trainer.space.heuristic_config()))]);
+    t.row(vec!["Hill-climbing".into(), pct(res.best_score), pct(test_b.accuracy()),
+               format!("{:.1}", trainer.space.mean_rank(&res.best))]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    let config = args.get_or("model", "sqft-tiny").to_string();
+    let task = parse_task(args)?;
+    let n_requests = args.get_usize("requests", 64)?;
+    let seed = args.get_u64("seed", 7)?;
+    let tok = Tokenizer::new();
+    let pretrained = load_or_pretrain(&rt, &config, task, args, seed)?;
+    let mut rng = Rng::new(seed ^ 2);
+    let ds = pipeline::standard_datasets(task, seed);
+    let prepared = pipeline::prepare(&rt, &config, &pretrained, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut rng)?;
+    let frozen = prepared.frozen_set()?;
+    let engine = sqft::serve::Engine::new(&rt, &config, &frozen, None, "eval")?;
+    let mut grng = Rng::new(seed ^ 9);
+    let prompts: Vec<String> =
+        (0..n_requests).map(|_| task.gen_sample(&mut grng).prompt).collect();
+    println!("serving {n_requests} requests (dynamic batching)...");
+    let stats = sqft::serve::benchmark_engine(
+        &engine, prompts, std::time::Duration::from_millis(2))?;
+    println!("served {} in {:.2}s -> {:.1} req/s", stats.served,
+        stats.wall_secs, stats.throughput);
+    if let Some(l) = stats.latency_ms {
+        println!("latency ms: mean {:.1} p50 {:.1} p95 {:.1}", l.mean, l.p50, l.p95);
+    }
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Binary checkpoint format for ParamSets.
+//!
+//! Layout: magic "SQFTCKP1" | u64 header_len | JSON header | raw f32 data.
+//! The header maps each tensor name to {shape, offset} (offsets in f32
+//! elements into the data section, in header order).  Endianness: little
+//! (the only platform we target); the magic encodes the version.
+
+use super::ParamSet;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SQFTCKP1";
+
+pub fn save(params: &ParamSet, path: &Path, meta: Json) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut tensors = Vec::new();
+    let mut offset = 0u64;
+    for (name, t) in params.iter() {
+        tensors.push((
+            name.clone(),
+            Json::obj(vec![
+                ("shape", Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect())),
+                ("offset", Json::Num(offset as f64)),
+            ]),
+        ));
+        offset += t.len() as u64;
+    }
+    let header = Json::obj(vec![
+        ("meta", meta),
+        ("tensors", Json::Obj(tensors.into_iter().collect())),
+    ])
+    .to_string();
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for (_, t) in params.iter() {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not a SQFT checkpoint (bad magic)");
+    }
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let hlen = u64::from_le_bytes(lenb) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+    let meta = header.req("meta")?.clone();
+
+    let mut rest = Vec::new();
+    f.read_to_end(&mut rest)?;
+    if rest.len() % 4 != 0 {
+        bail!("corrupt checkpoint: data section not f32-aligned");
+    }
+    let floats: Vec<f32> = rest
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut params = ParamSet::new();
+    for (name, desc) in header.req("tensors")?.as_obj()? {
+        let shape: Vec<usize> =
+            desc.req("shape")?.as_arr()?.iter().map(|x| x.as_usize().unwrap()).collect();
+        let offset = desc.req("offset")?.as_usize()?;
+        let n: usize = shape.iter().product();
+        if offset + n > floats.len() {
+            bail!("corrupt checkpoint: tensor '{name}' overruns data section");
+        }
+        params.insert(name, Tensor::new(&shape, floats[offset..offset + n].to_vec())?);
+    }
+    Ok((params, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut p = ParamSet::new();
+        p.insert("w1", Tensor::randn(&mut rng, &[3, 4], 1.0));
+        p.insert("w2", Tensor::randn(&mut rng, &[2, 2, 2], 1.0));
+        let dir = std::env::temp_dir().join("sqft_ckpt_test");
+        let path = dir.join("test.ckpt");
+        let meta = Json::obj(vec![("config", Json::Str("sqft-tiny".into()))]);
+        save(&p, &path, meta).unwrap();
+        let (q, m) = load(&path).unwrap();
+        assert_eq!(m.get("config").unwrap().as_str().unwrap(), "sqft-tiny");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.get("w1").unwrap(), p.get("w1").unwrap());
+        assert_eq!(q.get("w2").unwrap(), p.get("w2").unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sqft_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

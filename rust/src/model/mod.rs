@@ -1,0 +1,208 @@
+//! Model-state substrate: named parameter sets, initialization matching the
+//! L2 conventions, and a binary checkpoint format.
+//!
+//! The coordinator never does model math on these tensors — it initializes,
+//! sparsifies, quantizes, merges and ships them to the XLA artifacts.
+
+pub mod checkpoint;
+
+use crate::runtime::ModelHyper;
+use crate::tensor::{Rng, Tensor};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// A named set of host tensors (base weights, adapters, optimizer state...).
+#[derive(Clone, Debug, Default)]
+pub struct ParamSet {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    pub fn new() -> ParamSet {
+        ParamSet { map: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("param set missing '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.map.get_mut(name).with_context(|| format!("param set missing '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total element count (for storage metrics).
+    pub fn total_elems(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Global fraction of exact zeros across a subset of tensors.
+    pub fn sparsity_of(&self, names: &[&str]) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for n in names {
+            if let Some(t) = self.map.get(*n) {
+                zeros += t.data().iter().filter(|&&x| x == 0.0).count();
+                total += t.len();
+            }
+        }
+        if total == 0 { 0.0 } else { zeros as f64 / total as f64 }
+    }
+}
+
+/// The base weight keys in canonical (manifest) order.
+pub fn base_keys() -> [&'static str; 11] {
+    ["embed", "final_ln", "ln1", "ln2", "wq", "wk", "wv", "wo", "wgate", "wup", "wdown"]
+}
+
+/// Linear weights that get sparsified/quantized (everything but norms/embed).
+pub fn linear_keys() -> [&'static str; 7] {
+    ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"]
+}
+
+/// Initialize base weights; mirrors python/tests conventions
+/// (norm gains = 1, embed std 0.02, linear std 1/sqrt(fan_in)).
+pub fn init_base(m: &ModelHyper, rng: &mut Rng) -> ParamSet {
+    let (d, ff, v, l) = (m.d_model, m.d_ff, m.vocab, m.n_layers);
+    let mut p = ParamSet::new();
+    p.insert("embed", Tensor::randn(rng, &[v, d], 0.02));
+    p.insert("final_ln", Tensor::ones(&[d]));
+    p.insert("ln1", Tensor::ones(&[l, d]));
+    p.insert("ln2", Tensor::ones(&[l, d]));
+    let lin = |rng: &mut Rng, shape: &[usize]| {
+        let fan_in = shape[shape.len() - 1];
+        Tensor::randn(rng, shape, 1.0 / (fan_in as f32).sqrt())
+    };
+    p.insert("wq", lin(rng, &[l, d, d]));
+    p.insert("wk", lin(rng, &[l, d, d]));
+    p.insert("wv", lin(rng, &[l, d, d]));
+    p.insert("wo", lin(rng, &[l, d, d]));
+    p.insert("wgate", lin(rng, &[l, ff, d]));
+    p.insert("wup", lin(rng, &[l, ff, d]));
+    p.insert("wdown", lin(rng, &[l, d, ff]));
+    p
+}
+
+/// Adapter parameterization for one method run (LoRA init: A~N(0,0.02),
+/// B=0; masks all-ones until SparsePEFT installs the Wanda masks).
+///
+/// NOTE: rankmask_/scale_ are deliberately NOT part of this set — they are
+/// realized per NLS configuration by `nls::SearchSpace::realize` and passed
+/// as a separate ParamSet.  Keeping them out prevents a stale full-rank
+/// mask from shadowing the active configuration in `build_args` (earlier
+/// host sets win).
+pub fn init_adapters(m: &ModelHyper, rng: &mut Rng, _alpha: f32) -> ParamSet {
+    let (l, r) = (m.n_layers, m.r_max);
+    let mut p = ParamSet::new();
+    for mod_name in &m.mods {
+        let (out, inp) = m.mod_dims(mod_name);
+        p.insert(&format!("a_{mod_name}"), Tensor::randn(rng, &[l, r, inp], 0.02));
+        p.insert(&format!("b_{mod_name}"), Tensor::zeros(&[l, out, r]));
+        p.insert(&format!("mask_{mod_name}"), Tensor::ones(&[l, out, inp]));
+    }
+    p
+}
+
+/// Zeroed Adam state for the adapter parameters.
+pub fn init_opt(m: &ModelHyper) -> ParamSet {
+    let (l, r) = (m.n_layers, m.r_max);
+    let mut p = ParamSet::new();
+    for kind in ["m", "v"] {
+        for mod_name in &m.mods {
+            let (out, inp) = m.mod_dims(mod_name);
+            p.insert(&format!("{kind}_a_{mod_name}"), Tensor::zeros(&[l, r, inp]));
+            p.insert(&format!("{kind}_b_{mod_name}"), Tensor::zeros(&[l, out, r]));
+        }
+    }
+    p
+}
+
+/// Zeroed Adam state for full pretraining (one m/v per base tensor).
+pub fn init_pretrain_opt(base: &ParamSet) -> ParamSet {
+    let mut p = ParamSet::new();
+    for kind in ["m", "v"] {
+        for (n, t) in base.iter() {
+            p.insert(&format!("{kind}_{n}"), Tensor::zeros(t.shape()));
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn hyper() -> ModelHyper {
+        let mods: Vec<String> =
+            ["q", "k", "v", "up", "down"].iter().map(|s| s.to_string()).collect();
+        let mut mod_dims = BTreeMap::new();
+        mod_dims.insert("q".into(), (64, 64));
+        mod_dims.insert("k".into(), (64, 64));
+        mod_dims.insert("v".into(), (64, 64));
+        mod_dims.insert("up".into(), (128, 64));
+        mod_dims.insert("down".into(), (64, 128));
+        ModelHyper {
+            name: "test".into(),
+            vocab: 64, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 128,
+            seq_len: 48, batch: 8, r_max: 8, group_size: 32,
+            param_count: 0, mods, mod_dims,
+        }
+    }
+
+    #[test]
+    fn init_base_shapes() {
+        let m = hyper();
+        let mut rng = Rng::new(1);
+        let p = init_base(&m, &mut rng);
+        assert_eq!(p.get("embed").unwrap().shape(), &[64, 64]);
+        assert_eq!(p.get("wup").unwrap().shape(), &[2, 128, 64]);
+        assert_eq!(p.get("ln1").unwrap().shape(), &[2, 64]);
+        // norms are ones
+        assert!(p.get("ln1").unwrap().data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn adapter_init_invariants() {
+        let m = hyper();
+        let mut rng = Rng::new(2);
+        let p = init_adapters(&m, &mut rng, 16.0);
+        // B = 0 at init => adapter is a no-op (LoRA convention)
+        assert!(p.get("b_q").unwrap().data().iter().all(|&x| x == 0.0));
+        assert!(p.get("mask_up").unwrap().data().iter().all(|&x| x == 1.0));
+        assert_eq!(p.get("a_down").unwrap().shape(), &[2, 8, 128]);
+        // rankmask_/scale_ must NOT be here (realized per NLS config)
+        assert!(!p.contains("rankmask_q") && !p.contains("scale_q"));
+    }
+
+    #[test]
+    fn sparsity_metric_over_subset() {
+        let mut p = ParamSet::new();
+        p.insert("a", Tensor::new(&[4], vec![0., 0., 1., 2.]).unwrap());
+        p.insert("b", Tensor::new(&[2], vec![0., 5.]).unwrap());
+        assert_eq!(p.sparsity_of(&["a", "b"]), 0.5);
+        assert_eq!(p.sparsity_of(&["a"]), 0.5);
+    }
+}

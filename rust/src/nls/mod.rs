@@ -1,0 +1,308 @@
+//! Neural Low-rank Adapter Search (NLS) — elastic-rank adapters.
+//!
+//! Instead of one fixed LoRA rank, every (layer, module) instance picks a
+//! rank from an elastic choice list C = [c_1..c_n] (paper §2.2, following
+//! Shears/Munoz 2024a).  Training samples a random sub-adapter per step
+//! (weight sharing); deployment uses either
+//!   - the *heuristic* configuration — the median choice per instance
+//!     (Munoz 2024b, paper §3.1 "Reference Configuration"), or
+//!   - the hill-climbing search of paper Algorithm 1 over validation
+//!     accuracy.
+//!
+//! A configuration maps to the static-shaped artifacts through per-instance
+//! rank-mask vectors (first r entries 1) and scale = alpha / r.
+
+use crate::model::ParamSet;
+use crate::runtime::ModelHyper;
+use crate::tensor::{Rng, Tensor};
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// Elastic-rank search space: one choice list shared by every
+/// (layer, module) instance, instance order = layer-major over mods.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub choices: Vec<usize>, // ascending, all <= r_max
+    pub n_layers: usize,
+    pub mods: Vec<String>,
+    pub r_max: usize,
+    pub alpha: f32,
+}
+
+/// One NLS configuration: a choice *index* per instance.
+pub type Config = Vec<usize>;
+
+impl SearchSpace {
+    pub fn new(hyper: &ModelHyper, choices: Vec<usize>, alpha: f32) -> Result<SearchSpace> {
+        if choices.is_empty() || choices.iter().any(|&c| c == 0 || c > hyper.r_max) {
+            bail!("invalid rank choices {choices:?} for r_max {}", hyper.r_max);
+        }
+        let mut sorted = choices.clone();
+        sorted.sort_unstable();
+        Ok(SearchSpace {
+            choices: sorted,
+            n_layers: hyper.n_layers,
+            mods: hyper.mods.clone(),
+            r_max: hyper.r_max,
+            alpha,
+        })
+    }
+
+    /// Default space mirroring the paper's Table 8 style ([r, 3r/4, r/2]).
+    pub fn default_for(hyper: &ModelHyper, alpha: f32) -> SearchSpace {
+        let r = hyper.r_max;
+        let mut choices = vec![r / 2, (3 * r) / 4, r];
+        choices.retain(|&c| c > 0);
+        choices.dedup();
+        SearchSpace::new(hyper, choices, alpha).expect("default space")
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.n_layers * self.mods.len()
+    }
+
+    pub fn instance(&self, layer: usize, mod_idx: usize) -> usize {
+        layer * self.mods.len() + mod_idx
+    }
+
+    /// LoRA baseline: every instance at max rank (fixed).
+    pub fn max_config(&self) -> Config {
+        vec![self.choices.len() - 1; self.n_instances()]
+    }
+
+    /// The paper's heuristic reference: median choice per instance.
+    pub fn heuristic_config(&self) -> Config {
+        vec![self.choices.len() / 2; self.n_instances()]
+    }
+
+    /// Random sub-adapter (one per training step under NLS).
+    pub fn sample(&self, rng: &mut Rng) -> Config {
+        (0..self.n_instances()).map(|_| rng.below(self.choices.len())).collect()
+    }
+
+    pub fn rank_of(&self, cfg: &Config, inst: usize) -> usize {
+        self.choices[cfg[inst]]
+    }
+
+    /// Realize a configuration as rankmask_/scale_ tensors.
+    pub fn realize(&self, cfg: &Config) -> Result<ParamSet> {
+        if cfg.len() != self.n_instances() {
+            bail!("config has {} instances, space wants {}", cfg.len(), self.n_instances());
+        }
+        let mut p = ParamSet::new();
+        for (mi, m) in self.mods.iter().enumerate() {
+            let mut rm = Tensor::zeros(&[self.n_layers, self.r_max]);
+            let mut sc = Tensor::zeros(&[self.n_layers]);
+            for l in 0..self.n_layers {
+                let r = self.rank_of(cfg, self.instance(l, mi));
+                for j in 0..r {
+                    rm.data_mut()[l * self.r_max + j] = 1.0;
+                }
+                sc.data_mut()[l] = self.alpha / r as f32;
+            }
+            p.insert(&format!("rankmask_{m}"), rm);
+            p.insert(&format!("scale_{m}"), sc);
+        }
+        Ok(p)
+    }
+
+    /// Unvisited neighbors within `step` index-moves of `anchor`
+    /// (Algorithm 1's Neighbor-sample).
+    pub fn neighbors(&self, anchor: &Config, n: usize, step: usize,
+                     visited: &BTreeSet<Config>, rng: &mut Rng) -> Vec<Config> {
+        let mut out = Vec::new();
+        let mut tries = 0;
+        while out.len() < n && tries < n * 20 {
+            tries += 1;
+            let mut c = anchor.clone();
+            // perturb 1..=step instances by one choice-index each
+            let k = 1 + rng.below(step);
+            for _ in 0..k {
+                let i = rng.below(c.len());
+                let delta: i64 = if rng.next_f32() < 0.5 { -1 } else { 1 };
+                let ni = (c[i] as i64 + delta)
+                    .clamp(0, self.choices.len() as i64 - 1) as usize;
+                c[i] = ni;
+            }
+            if c != *anchor && !visited.contains(&c) && !out.contains(&c) {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// Mean active rank of a configuration (Figure 4 statistic).
+    pub fn mean_rank(&self, cfg: &Config) -> f64 {
+        let total: usize = (0..self.n_instances()).map(|i| self.rank_of(cfg, i)).sum();
+        total as f64 / self.n_instances() as f64
+    }
+
+    /// Histogram of ranks per module type (Figure 4).
+    pub fn rank_histogram(&self, cfg: &Config) -> Vec<(String, Vec<usize>)> {
+        self.mods
+            .iter()
+            .enumerate()
+            .map(|(mi, m)| {
+                let ranks: Vec<usize> = (0..self.n_layers)
+                    .map(|l| self.rank_of(cfg, self.instance(l, mi)))
+                    .collect();
+                (m.clone(), ranks)
+            })
+            .collect()
+    }
+}
+
+/// Paper Algorithm 1: hill-climbing sub-network search.
+/// `eval` scores a configuration on the validation proxy set (higher=better).
+pub struct HillClimbResult {
+    pub best: Config,
+    pub best_score: f64,
+    pub evaluated: usize,
+    pub trace: Vec<(usize, f64)>, // (turn, anchor score)
+}
+
+pub fn hill_climb(
+    space: &SearchSpace,
+    start: Config,
+    turns: usize,
+    n_neighbors: usize,
+    step: usize,
+    mut eval: impl FnMut(&Config) -> Result<f64>,
+    rng: &mut Rng,
+) -> Result<HillClimbResult> {
+    let mut visited: BTreeSet<Config> = BTreeSet::new();
+    visited.insert(start.clone());
+    let mut anchor = start;
+    let mut anchor_score = eval(&anchor)?;
+    let mut evaluated = 1;
+    let mut trace = vec![(0, anchor_score)];
+    for t in 1..=turns {
+        let cands = space.neighbors(&anchor, n_neighbors, step, &visited, rng);
+        let mut best_cand: Option<(Config, f64)> = None;
+        for c in cands {
+            visited.insert(c.clone());
+            let s = eval(&c)?;
+            evaluated += 1;
+            if best_cand.as_ref().map(|(_, bs)| s > *bs).unwrap_or(true) {
+                best_cand = Some((c, s));
+            }
+        }
+        if let Some((c, s)) = best_cand {
+            if s > anchor_score {
+                anchor = c;
+                anchor_score = s;
+            }
+        }
+        trace.push((t, anchor_score));
+    }
+    Ok(HillClimbResult { best: anchor, best_score: anchor_score, evaluated, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn hyper() -> ModelHyper {
+        let mods: Vec<String> =
+            ["q", "k", "v", "up", "down"].iter().map(|s| s.to_string()).collect();
+        let mut mod_dims = BTreeMap::new();
+        for m in &mods {
+            mod_dims.insert(m.clone(), (64usize, 64usize));
+        }
+        ModelHyper {
+            name: "t".into(), vocab: 64, d_model: 64, n_layers: 2, n_heads: 2,
+            d_ff: 128, seq_len: 48, batch: 8, r_max: 8, group_size: 32,
+            param_count: 0, mods, mod_dims,
+        }
+    }
+
+    #[test]
+    fn heuristic_is_median() {
+        let s = SearchSpace::new(&hyper(), vec![4, 6, 8], 16.0).unwrap();
+        let h = s.heuristic_config();
+        assert!(h.iter().all(|&i| s.choices[i] == 6));
+    }
+
+    #[test]
+    fn realize_shapes_and_semantics() {
+        let s = SearchSpace::new(&hyper(), vec![4, 8], 16.0).unwrap();
+        let mut cfg = s.max_config();
+        cfg[0] = 0; // layer 0, module q at rank 4
+        let p = s.realize(&cfg).unwrap();
+        let rm = p.get("rankmask_q").unwrap();
+        assert_eq!(rm.shape(), &[2, 8]);
+        let row0: f32 = rm.data()[..8].iter().sum();
+        assert_eq!(row0, 4.0);
+        let row1: f32 = rm.data()[8..].iter().sum();
+        assert_eq!(row1, 8.0);
+        // prefix property: ones then zeros
+        assert_eq!(&rm.data()[..8], &[1., 1., 1., 1., 0., 0., 0., 0.]);
+        let sc = p.get("scale_q").unwrap();
+        assert_eq!(sc.data()[0], 4.0);
+        assert_eq!(sc.data()[1], 2.0);
+    }
+
+    #[test]
+    fn sample_is_in_space() {
+        let s = SearchSpace::new(&hyper(), vec![4, 6, 8], 16.0).unwrap();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let c = s.sample(&mut rng);
+            assert_eq!(c.len(), s.n_instances());
+            assert!(c.iter().all(|&i| i < 3));
+        }
+    }
+
+    #[test]
+    fn neighbors_are_fresh_and_close() {
+        let s = SearchSpace::new(&hyper(), vec![4, 6, 8], 16.0).unwrap();
+        let mut rng = Rng::new(2);
+        let anchor = s.heuristic_config();
+        let mut visited = BTreeSet::new();
+        visited.insert(anchor.clone());
+        let ns = s.neighbors(&anchor, 5, 2, &visited, &mut rng);
+        assert!(!ns.is_empty());
+        for n in &ns {
+            assert_ne!(*n, anchor);
+            let dist: usize =
+                n.iter().zip(&anchor).map(|(a, b)| a.abs_diff(*b)).sum();
+            assert!(dist >= 1 && dist <= 2, "dist={dist}");
+        }
+    }
+
+    #[test]
+    fn hill_climb_improves_and_never_regresses() {
+        let s = SearchSpace::new(&hyper(), vec![4, 6, 8], 16.0).unwrap();
+        let mut rng = Rng::new(3);
+        // objective: prefer bigger ranks on module 0, smaller elsewhere
+        let space = s.clone();
+        let res = hill_climb(
+            &s,
+            s.heuristic_config(),
+            8, 6, 2,
+            |c| {
+                let mut score = 0.0;
+                for l in 0..space.n_layers {
+                    for (mi, _) in space.mods.iter().enumerate() {
+                        let r = space.rank_of(c, space.instance(l, mi)) as f64;
+                        score += if mi == 0 { r } else { -r };
+                    }
+                }
+                Ok(score)
+            },
+            &mut rng,
+        )
+        .unwrap();
+        let start_score = res.trace[0].1;
+        assert!(res.best_score > start_score);
+        // anchor score is monotone non-decreasing (Algorithm 1 property)
+        for w in res.trace.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        // found the optimum direction: module 0 at max rank
+        for l in 0..space.n_layers {
+            assert_eq!(space.rank_of(&res.best, space.instance(l, 0)), 8);
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! PEFT state + merging — the paper's core contribution, host side.
+//!
+//! Six fine-tuning methods are reproduced (paper Tables 1-3):
+//!   LoRA          dense adapter on sparse FP16 base      (not mergeable)
+//!   Shears        NLS adapter on sparse FP16 base        (not mergeable)
+//!   SparsePEFT    NLS adapter ⊙ mask on sparse base      (mergeable, Eq. 1-2)
+//!   GPTQ+LoRA     dense adapter on INT4 base             (not mergeable)
+//!   SQFT          NLS adapter on INT4 base               (not mergeable)
+//!   QA-SparsePEFT NLS masked adapter, shared scales      (mergeable, Eq. 3-4)
+//!
+//! "Mergeable" follows the paper's criterion: merging must lose neither
+//! accuracy nor sparsity nor numerical precision.  `merge_sparsepeft`
+//! realizes Eq. 2 and `merge_qa` Eq. 3-4; property tests assert bit-exact
+//! equivalence with the (un-merged) training-time forward.
+
+use crate::model::ParamSet;
+use crate::runtime::ModelHyper;
+use crate::tensor::linalg::matmul;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Fine-tuning method selector (drives pipeline + table harness).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Lora,
+    Shears,
+    SparsePeft,
+    GptqLora,
+    Sqft,
+    QaSparsePeft,
+}
+
+impl Method {
+    pub fn all() -> [Method; 6] {
+        [Method::Lora, Method::Shears, Method::SparsePeft,
+         Method::GptqLora, Method::Sqft, Method::QaSparsePeft]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Lora => "LoRA",
+            Method::Shears => "Shears",
+            Method::SparsePeft => "SQFT + SparsePEFT",
+            Method::GptqLora => "GPTQ + LoRA",
+            Method::Sqft => "SQFT",
+            Method::QaSparsePeft => "SQFT + QA-SparsePEFT",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        match s {
+            "lora" => Some(Method::Lora),
+            "shears" => Some(Method::Shears),
+            "sparsepeft" => Some(Method::SparsePeft),
+            "gptq-lora" => Some(Method::GptqLora),
+            "sqft" => Some(Method::Sqft),
+            "qa-sparsepeft" => Some(Method::QaSparsePeft),
+            _ => None,
+        }
+    }
+
+    pub fn cli_name(&self) -> &'static str {
+        match self {
+            Method::Lora => "lora",
+            Method::Shears => "shears",
+            Method::SparsePeft => "sparsepeft",
+            Method::GptqLora => "gptq-lora",
+            Method::Sqft => "sqft",
+            Method::QaSparsePeft => "qa-sparsepeft",
+        }
+    }
+
+    /// Fixed-rank LoRA vs elastic-rank NLS (paper Table 5 ablation axis).
+    pub fn uses_nls(&self) -> bool {
+        matches!(self, Method::Shears | Method::SparsePeft | Method::Sqft
+                       | Method::QaSparsePeft)
+    }
+
+    /// Adapter delta is masked by the base sparsity pattern (Eq. 1).
+    pub fn sparsity_aware(&self) -> bool {
+        matches!(self, Method::SparsePeft | Method::QaSparsePeft)
+    }
+
+    /// Base model is GPTQ-quantized INT4.
+    pub fn quantized_base(&self) -> bool {
+        matches!(self, Method::GptqLora | Method::Sqft | Method::QaSparsePeft)
+    }
+
+    /// Trains through the shared-scale fake quantizer (Eq. 3-4).
+    pub fn qa(&self) -> bool {
+        matches!(self, Method::QaSparsePeft)
+    }
+
+    /// Paper's mergeable criterion.
+    pub fn mergeable(&self) -> bool {
+        matches!(self, Method::SparsePeft | Method::QaSparsePeft)
+    }
+
+    /// "Final Precision (Base + Adapter / Base)" column of Tables 1-3.
+    pub fn final_precision(&self) -> &'static str {
+        match self {
+            Method::Lora | Method::Shears => "FP16 + FP16",
+            Method::SparsePeft => "FP16",
+            Method::GptqLora | Method::Sqft => "INT4 + FP16",
+            Method::QaSparsePeft => "INT4",
+        }
+    }
+
+    /// Which train artifact this method runs through.
+    pub fn train_kind(&self) -> &'static str {
+        if self.qa() { "train_qa" } else { "train" }
+    }
+
+    pub fn eval_kind(&self) -> &'static str {
+        if self.qa() { "eval_qa" } else { "eval" }
+    }
+}
+
+/// Compute the (masked, elastic-rank) adapter delta for one module instance:
+/// `scale * (B diag(rm) A) ⊙ M` — host mirror of the L1 kernel semantics.
+pub fn adapter_delta(a: &Tensor, b: &Tensor, mask: Option<&Tensor>,
+                     rank_mask: &Tensor, scale: f32) -> Result<Tensor> {
+    let r = a.shape()[0];
+    let out = b.shape()[0];
+    // B * diag(rank_mask)
+    let mut bm = b.clone();
+    for i in 0..out {
+        let row = bm.row_mut(i);
+        for j in 0..r {
+            row[j] *= rank_mask.data()[j];
+        }
+    }
+    let mut delta = matmul(&bm, a)?.scale(scale);
+    if let Some(m) = mask {
+        delta = delta.mul(m)?;
+    }
+    Ok(delta)
+}
+
+/// SparsePEFT merge (paper Eq. 2): W^p <- W^p + (BA)⊙M, in place on the
+/// stacked base tensors.  Returns nothing new — sparsity preservation is
+/// structural (the delta carries the same mask).
+pub fn merge_sparsepeft(base: &mut ParamSet, adapters: &ParamSet,
+                        hyper: &ModelHyper) -> Result<()> {
+    for m in &hyper.mods {
+        let wkey = ModelHyper::weight_key(m);
+        let mut w = base.get(wkey)?.clone();
+        let a_s = adapters.get(&format!("a_{m}"))?;
+        let b_s = adapters.get(&format!("b_{m}"))?;
+        let m_s = adapters.get(&format!("mask_{m}"))?;
+        let rm_s = adapters.get(&format!("rankmask_{m}"))?;
+        let sc_s = adapters.get(&format!("scale_{m}"))?;
+        for l in 0..hyper.n_layers {
+            let delta = adapter_delta(
+                &a_s.index0(l), &b_s.index0(l), Some(&m_s.index0(l)),
+                &rm_s.index0(l), sc_s.data()[l])?;
+            let merged = w.index0(l).add(&delta)?;
+            w.set_index0(l, &merged);
+        }
+        base.insert(wkey, w);
+    }
+    Ok(())
+}
+
+/// Host fake quantizer (paper Eq. 3 then Eq. 4), group-wise along in-dim.
+pub fn fake_quant_host(w: &Tensor, scales: &Tensor, zeros: &Tensor,
+                       qmax: f32) -> Result<(Tensor, Tensor)> {
+    let (out, inp) = (w.rows(), w.cols());
+    let g = scales.cols();
+    let gs = inp / g;
+    let mut codes = Tensor::zeros(&[out, inp]);
+    let mut dq = Tensor::zeros(&[out, inp]);
+    for i in 0..out {
+        for j in 0..inp {
+            let s = scales.at2(i, j / gs);
+            let z = zeros.at2(i, j / gs);
+            let q = ((w.at2(i, j) / s).round() + z).clamp(0.0, qmax);
+            codes.set2(i, j, q);
+            dq.set2(i, j, (q - z) * s);
+        }
+    }
+    Ok((codes, dq))
+}
+
+/// QA-SparsePEFT merge (paper Eq. 3): quantize (W^p + L^p) with the *base
+/// model's* shared scales/zeros.  Returns per-module INT4 codes stacked
+/// (L, out, in) in `codes` plus updates `base` weights to the dequantized
+/// merged values (what the serving path computes from the codes).
+pub fn merge_qa(base: &mut ParamSet, adapters: &ParamSet, qa: &ParamSet,
+                hyper: &ModelHyper, qmax: f32) -> Result<ParamSet> {
+    let mut codes_set = ParamSet::new();
+    for m in &hyper.mods {
+        let wkey = ModelHyper::weight_key(m);
+        let mut w = base.get(wkey)?.clone();
+        let a_s = adapters.get(&format!("a_{m}"))?;
+        let b_s = adapters.get(&format!("b_{m}"))?;
+        let m_s = adapters.get(&format!("mask_{m}"))?;
+        let rm_s = adapters.get(&format!("rankmask_{m}"))?;
+        let sc_s = adapters.get(&format!("scale_{m}"))?;
+        let qs_s = qa.get(&format!("qscales_{m}"))?;
+        let qz_s = qa.get(&format!("qzeros_{m}"))?;
+        let mut code_layers = Vec::new();
+        for l in 0..hyper.n_layers {
+            let delta = adapter_delta(
+                &a_s.index0(l), &b_s.index0(l), Some(&m_s.index0(l)),
+                &rm_s.index0(l), sc_s.data()[l])?;
+            let merged = w.index0(l).add(&delta)?;
+            let (codes, dq) =
+                fake_quant_host(&merged, &qs_s.index0(l), &qz_s.index0(l), qmax)?;
+            w.set_index0(l, &dq);
+            code_layers.push(codes);
+        }
+        base.insert(wkey, w);
+        codes_set.insert(&format!("codes_{m}"), Tensor::stack(&code_layers)?);
+    }
+    Ok(codes_set)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn method_taxonomy_matches_paper_table6() {
+        assert!(!Method::Lora.mergeable() && !Method::Shears.mergeable());
+        assert!(Method::SparsePeft.mergeable() && Method::QaSparsePeft.mergeable());
+        assert_eq!(Method::QaSparsePeft.final_precision(), "INT4");
+        assert_eq!(Method::Sqft.final_precision(), "INT4 + FP16");
+        assert!(Method::Shears.uses_nls() && !Method::Lora.uses_nls());
+        for m in Method::all() {
+            assert_eq!(Method::from_name(m.cli_name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn adapter_delta_respects_masks() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&mut rng, &[4, 8], 1.0);
+        let b = Tensor::randn(&mut rng, &[6, 4], 1.0);
+        let mask = Tensor::new(&[6, 8], (0..48).map(|i| (i % 2) as f32).collect()).unwrap();
+        let rm = Tensor::new(&[4], vec![1., 1., 0., 0.]).unwrap();
+        let d = adapter_delta(&a, &b, Some(&mask), &rm, 0.5).unwrap();
+        // masked positions are exactly zero
+        for i in 0..6 {
+            for j in 0..8 {
+                if mask.at2(i, j) == 0.0 {
+                    assert_eq!(d.at2(i, j), 0.0);
+                }
+            }
+        }
+        // deactivated rank components don't contribute: recompute with
+        // truncated a/b and full rank mask
+        let mut a2 = a.clone();
+        for r in 2..4 {
+            for j in 0..8 {
+                a2.set2(r, j, 0.0);
+            }
+        }
+        let d2 = adapter_delta(&a2, &b, Some(&mask), &Tensor::ones(&[4]), 0.5).unwrap();
+        for (x, y) in d.data().iter().zip(d2.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fake_quant_host_is_projection() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[4, 8], 0.5);
+        let scales = Tensor::full(&[4, 2], 0.1);
+        let zeros = Tensor::full(&[4, 2], 8.0);
+        let (codes, dq) = fake_quant_host(&w, &scales, &zeros, 15.0).unwrap();
+        assert!(codes.data().iter().all(|&c| (0.0..=15.0).contains(&c)));
+        let (_, dq2) = fake_quant_host(&dq, &scales, &zeros, 15.0).unwrap();
+        for (x, y) in dq.data().iter().zip(dq2.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,363 @@
+//! Pipeline orchestration — the four Figure-2 configurations end to end.
+//!
+//!   base ckpt → [Wanda sparsify] → [GPTQ quantize] → NLS/LoRA fine-tune
+//!            → [merge (SparsePEFT Eq. 2 / QA-SparsePEFT Eq. 3)] → eval
+//!
+//! `prepare` produces the frozen model state a Method trains against;
+//! `finetune` runs the adapter loop; `merged_state` folds the adapters back
+//! and verifies the paper's mergeability criteria (sparsity preserved,
+//! precision preserved); `evaluate_state` scores any of these states.
+
+use crate::data::{Sample, Task, Tokenizer};
+use crate::evalharness::{evaluate, EvalResult};
+use crate::model::{init_adapters, linear_keys, ParamSet};
+use crate::nls::{Config, SearchSpace};
+use crate::peft::{merge_qa, merge_sparsepeft, Method};
+use crate::quant::{quantize_model, qmax, BITS};
+use crate::runtime::{DeviceStore, ModelHyper, Runtime};
+use crate::sparsity::{adapter_masks_from, apply_masks, calibrate, wanda_masks, CalibStats};
+use crate::tensor::{Rng, Tensor};
+use crate::train::{upload, LossCurve, TrainOpts, Trainer};
+use anyhow::{bail, Result};
+
+/// Frozen model state one Method fine-tunes against.
+pub struct Prepared {
+    pub hyper: ModelHyper,
+    pub method: Method,
+    /// base weights with sparsity/fake-quant applied (artifact values)
+    pub base: ParamSet,
+    /// mask_w* stacks for every linear weight (all-ones if dense)
+    pub weight_masks: ParamSet,
+    /// mask_q.. adapter masks (ones unless sparsity-aware)
+    pub adapter_masks: ParamSet,
+    /// qscales_/qzeros_/qmax (methods with quantized base)
+    pub qa: Option<ParamSet>,
+    /// INT4 codes per linear weight (storage metrics)
+    pub codes: Option<ParamSet>,
+    pub stats: Option<CalibStats>,
+    pub sparsity: f64,
+}
+
+impl Prepared {
+    /// Everything uploaded to the device for train/eval.
+    pub fn frozen_set(&self) -> Result<ParamSet> {
+        let mut f = ParamSet::new();
+        for (n, t) in self.base.iter() {
+            f.insert(n, t.clone());
+        }
+        for (n, t) in self.adapter_masks.iter() {
+            f.insert(n, t.clone());
+        }
+        if let Some(qa) = &self.qa {
+            for m in &self.hyper.mods {
+                f.insert(&format!("qscales_{m}"), qa.get(&format!("qscales_{m}"))?.clone());
+                f.insert(&format!("qzeros_{m}"), qa.get(&format!("qzeros_{m}"))?.clone());
+            }
+            f.insert("qmax", qa.get("qmax")?.clone());
+        }
+        Ok(f)
+    }
+
+    /// Measured sparsity of the adapted base weights.
+    pub fn measured_sparsity(&self) -> f64 {
+        self.base.sparsity_of(&linear_keys())
+    }
+}
+
+/// All-ones adapter masks for dense methods.
+pub fn dense_adapter_masks(hyper: &ModelHyper) -> ParamSet {
+    let mut p = ParamSet::new();
+    for m in &hyper.mods {
+        let (out, inp) = hyper.mod_dims(m);
+        p.insert(&format!("mask_{m}"), Tensor::ones(&[hyper.n_layers, out, inp]));
+    }
+    p
+}
+
+/// Build the frozen state for `method` from a pretrained base.
+#[allow(clippy::too_many_arguments)]
+pub fn prepare(
+    rt: &Runtime,
+    config: &str,
+    pretrained: &ParamSet,
+    method: Method,
+    sparsity: f64,
+    calib_samples: &[Sample],
+    tok: &Tokenizer,
+    calib_batches: usize,
+    rng: &mut Rng,
+) -> Result<Prepared> {
+    let hyper = rt.model(config)?.clone();
+    let mut base = pretrained.clone();
+
+    // calibration runs on the *dense* pretrained model (Wanda convention)
+    let needs_calib = sparsity > 0.0 || method.quantized_base();
+    let stats = if needs_calib {
+        let mut dev = DeviceStore::new();
+        upload(rt, &mut dev, &base)?;
+        // calib artifact wants adapter inputs: pass a no-op adapter
+        // (zero A, full-rank masks realized explicitly)
+        let mut noop = init_adapters(&hyper, rng, 2.0 * hyper.r_max as f32);
+        for m in &hyper.mods {
+            let a = noop.get(&format!("a_{m}"))?.clone();
+            noop.insert(&format!("a_{m}"), Tensor::zeros(a.shape()));
+        }
+        let space = SearchSpace::default_for(&hyper, 1.0);
+        for (n, t) in space.realize(&space.max_config())?.iter() {
+            noop.insert(n, t.clone());
+        }
+        Some(calibrate(rt, config, &dev, &noop, calib_samples, tok,
+                       calib_batches, method.quantized_base(), rng)?)
+    } else {
+        None
+    };
+
+    // 1. Wanda sparsification
+    let weight_masks = if sparsity > 0.0 {
+        let masks = wanda_masks(rt, &base, stats.as_ref().unwrap(), sparsity, &hyper)?;
+        apply_masks(&mut base, &masks)?;
+        masks
+    } else {
+        let mut p = ParamSet::new();
+        for wkey in linear_keys() {
+            p.insert(&format!("mask_{wkey}"), Tensor::ones(base.get(wkey)?.shape()));
+        }
+        p
+    };
+
+    // 2. GPTQ quantization (sparsity-preserving)
+    let (qa, codes) = if method.quantized_base() {
+        let stats_ref = stats.as_ref().unwrap();
+        let masks_opt = if sparsity > 0.0 { Some(&weight_masks) } else { None };
+        let (qa, codes) = quantize_model(
+            &mut base,
+            |wkey, l| Ok(stats_ref.gram(wkey, l)?.clone()),
+            masks_opt,
+            &hyper,
+            true,
+        )?;
+        (Some(qa), Some(codes))
+    } else {
+        (None, None)
+    };
+
+    // 3. adapter masks (Eq. 1) only for sparsity-aware methods
+    let adapter_masks = if method.sparsity_aware() {
+        adapter_masks_from(&weight_masks, &hyper)?
+    } else {
+        dense_adapter_masks(&hyper)
+    };
+
+    Ok(Prepared {
+        hyper,
+        method,
+        base,
+        weight_masks,
+        adapter_masks,
+        qa,
+        codes,
+        stats,
+        sparsity,
+    })
+}
+
+/// Run the fine-tuning loop; returns the trainer (holding tuned adapters)
+/// and the loss curve.
+pub fn finetune<'a>(
+    rt: &'a Runtime,
+    config: &str,
+    prepared: &Prepared,
+    space: SearchSpace,
+    samples: &[Sample],
+    tok: &Tokenizer,
+    opts: &TrainOpts,
+) -> Result<(Trainer<'a>, LossCurve)> {
+    let hyper = prepared.hyper.clone();
+    let mut rng = Rng::new(opts.seed ^ 0xF1D0);
+    let adapters = init_adapters(&hyper, &mut rng, space.alpha);
+    let frozen = prepared.frozen_set()?;
+    let mut trainer = Trainer::new(rt, config, prepared.method, &frozen,
+                                   adapters, space, opts.seed)?;
+    trainer.fixed_rank = opts.fixed_rank;
+    let curve = trainer.train(samples, tok, opts)?;
+    Ok((trainer, curve))
+}
+
+/// Evaluate (base + adapters at `cfg`) — the *unmerged* accuracy.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_unmerged(
+    rt: &Runtime,
+    config: &str,
+    prepared: &Prepared,
+    trainer: &Trainer,
+    cfg: &Config,
+    samples: &[Sample],
+    tok: &Tokenizer,
+) -> Result<EvalResult> {
+    let rank_params = trainer.space.realize(cfg)?;
+    evaluate(rt, config, prepared.method.eval_kind(), &trainer.device,
+             &[&trainer.adapters, &rank_params], samples, tok)
+}
+
+/// Evaluate the base model with no-op adapters ("w/o tune" rows).
+pub fn evaluate_base(
+    rt: &Runtime,
+    config: &str,
+    prepared: &Prepared,
+    samples: &[Sample],
+    tok: &Tokenizer,
+) -> Result<EvalResult> {
+    let hyper = prepared.hyper.clone();
+    let mut rng = Rng::new(1);
+    let adapters = init_adapters(&hyper, &mut rng, 1.0); // B=0 ⇒ no-op
+    let space = SearchSpace::default_for(&hyper, 1.0);
+    let rank_params = space.realize(&space.max_config())?;
+    let mut dev = DeviceStore::new();
+    upload(rt, &mut dev, &prepared.frozen_set()?)?;
+    // base eval always goes through the plain eval artifact: the base
+    // weights already carry fake-quant values when quantized
+    evaluate(rt, config, "eval", &dev, &[&adapters, &rank_params], samples, tok)
+}
+
+/// The merged model state (paper Eq. 2 / Eq. 3) + mergeability checks.
+pub struct MergedState {
+    pub base: ParamSet,
+    pub codes: Option<ParamSet>,
+    /// sparsity of the adapted weights before/after merging
+    pub sparsity_before: f64,
+    pub sparsity_after: f64,
+}
+
+/// Fold the tuned adapters (at `cfg`) into the base weights.
+pub fn merged_state(
+    prepared: &Prepared,
+    trainer: &Trainer,
+    cfg: &Config,
+) -> Result<MergedState> {
+    if !prepared.method.mergeable() {
+        bail!("{} is not mergeable without losing sparsity or precision \
+               (paper Fig. 1); refusing", prepared.method.name());
+    }
+    let hyper = prepared.hyper.clone();
+    let mut base = prepared.base.clone();
+    let sparsity_before = base.sparsity_of(&linear_keys());
+    // adapters at the deployed rank configuration
+    let rank_params = trainer.space.realize(cfg)?;
+    let mut adapters = trainer.adapters.clone();
+    for (n, t) in prepared.adapter_masks.iter() {
+        adapters.insert(n, t.clone());
+    }
+    for (n, t) in rank_params.iter() {
+        adapters.insert(n, t.clone());
+    }
+    let codes = match prepared.method {
+        Method::SparsePeft => {
+            merge_sparsepeft(&mut base, &adapters, &hyper)?;
+            None
+        }
+        Method::QaSparsePeft => {
+            let qa = prepared.qa.as_ref().expect("QA method has quant params");
+            Some(merge_qa(&mut base, &adapters, qa, &hyper, qmax(BITS))?)
+        }
+        _ => unreachable!(),
+    };
+    let sparsity_after = base.sparsity_of(&linear_keys());
+    Ok(MergedState { base, codes, sparsity_before, sparsity_after })
+}
+
+/// Evaluate a merged state (zero adapters on the merged weights).
+pub fn evaluate_merged(
+    rt: &Runtime,
+    config: &str,
+    prepared: &Prepared,
+    merged: &MergedState,
+    samples: &[Sample],
+    tok: &Tokenizer,
+) -> Result<EvalResult> {
+    let hyper = prepared.hyper.clone();
+    let mut rng = Rng::new(1);
+    let adapters = init_adapters(&hyper, &mut rng, 1.0); // B=0 ⇒ no-op
+    let space = SearchSpace::default_for(&hyper, 1.0);
+    let rank_params = space.realize(&space.max_config())?;
+    let mut frozen = ParamSet::new();
+    for (n, t) in merged.base.iter() {
+        frozen.insert(n, t.clone());
+    }
+    for (n, t) in dense_adapter_masks(&hyper).iter() {
+        frozen.insert(n, t.clone());
+    }
+    let mut dev = DeviceStore::new();
+    upload(rt, &mut dev, &frozen)?;
+    evaluate(rt, config, "eval", &dev, &[&adapters, &rank_params], samples, tok)
+}
+
+/// Convenience bundle for the table harness: run one (method, sparsity)
+/// cell end to end and report everything the paper's tables need.
+pub struct CellResult {
+    pub method: Method,
+    pub sparsity: f64,
+    pub accuracy: f64,
+    pub merged_accuracy: Option<f64>,
+    pub sparsity_preserved: Option<bool>,
+    pub loss_curve: LossCurve,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell(
+    rt: &Runtime,
+    config: &str,
+    pretrained: &ParamSet,
+    method: Method,
+    sparsity: f64,
+    train_samples: &[Sample],
+    test_samples: &[Sample],
+    tok: &Tokenizer,
+    space_choices: Vec<usize>,
+    alpha: f32,
+    opts: &TrainOpts,
+) -> Result<CellResult> {
+    let mut rng = Rng::new(opts.seed);
+    let prepared = prepare(rt, config, pretrained, method, sparsity,
+                           train_samples, tok, 4, &mut rng)?;
+    let hyper = prepared.hyper.clone();
+    let space = SearchSpace::new(&hyper, space_choices, alpha)?;
+    let (trainer, curve) = finetune(rt, config, &prepared, space, train_samples,
+                                    tok, opts)?;
+    // deployed config: paper's heuristic (median) for NLS, max for LoRA
+    let cfg = if method.uses_nls() {
+        trainer.space.heuristic_config()
+    } else {
+        trainer.space.max_config()
+    };
+    let acc = evaluate_unmerged(rt, config, &prepared, &trainer, &cfg,
+                                test_samples, tok)?;
+    let (merged_acc, preserved) = if method.mergeable() {
+        let merged = merged_state(&prepared, &trainer, &cfg)?;
+        let macc = evaluate_merged(rt, config, &prepared, &merged,
+                                   test_samples, tok)?;
+        (Some(macc.accuracy()),
+         Some(merged.sparsity_after >= merged.sparsity_before - 1e-9))
+    } else {
+        (None, None)
+    };
+    Ok(CellResult {
+        method,
+        sparsity,
+        accuracy: acc.accuracy(),
+        merged_accuracy: merged_acc,
+        sparsity_preserved: preserved,
+        loss_curve: curve,
+    })
+}
+
+/// Shared experiment defaults per task family.
+pub fn default_space_for(hyper: &ModelHyper) -> (Vec<usize>, f32) {
+    let r = hyper.r_max;
+    (vec![r / 2, (3 * r) / 4, r], 2.0 * r as f32)
+}
+
+/// Standard dataset sizes for the table harness.
+pub fn standard_datasets(task: Task, seed: u64) -> crate::data::Dataset {
+    let n_val = if task.has_validation() { 200 } else { 0 };
+    crate::data::Dataset::generate(task, 4000, n_val, 400, seed)
+}

@@ -1,0 +1,202 @@
+//! Post-training quantization substrate: RTN baseline, GPTQ (the paper's
+//! default), INT4 nibble packing, and quant-parameter bookkeeping.
+//!
+//! Conventions match the L1/L2 layers exactly: asymmetric group-wise
+//! quantization along in-features, codes in [0, 2^bits − 1], dequant
+//! `s · (q − z)` (paper Eq. 3-4 with Q_p = 2^bits − 1).
+
+pub mod gptq;
+pub mod pack;
+pub mod rtn;
+
+pub use gptq::gptq_quantize;
+pub use rtn::rtn_quantize;
+
+use crate::model::ParamSet;
+use crate::runtime::ModelHyper;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+pub const BITS: u32 = 4;
+
+pub fn qmax(bits: u32) -> f32 {
+    ((1u32 << bits) - 1) as f32
+}
+
+/// Quantization result for one weight matrix.
+#[derive(Clone, Debug)]
+pub struct QuantResult {
+    pub codes: Tensor,  // (out, in) integer codes as f32
+    pub scales: Tensor, // (out, G)
+    pub zeros: Tensor,  // (out, G)
+    pub dequant: Tensor, // (out, in) = s*(q-z), the value compute sees
+}
+
+impl QuantResult {
+    /// Mean squared reconstruction error vs the original weight.
+    pub fn mse(&self, w: &Tensor) -> f64 {
+        let mut acc = 0.0f64;
+        for (a, b) in self.dequant.data().iter().zip(w.data()) {
+            acc += ((a - b) as f64).powi(2);
+        }
+        acc / w.len() as f64
+    }
+
+    /// Activation-weighted reconstruction error ||(W-Ŵ)X||² using the
+    /// calibration Gram: tr((W-Ŵ) H (W-Ŵ)^T) — GPTQ's actual objective.
+    pub fn weighted_err(&self, w: &Tensor, h: &Tensor) -> f64 {
+        let (out, inp) = (w.rows(), w.cols());
+        let mut total = 0.0f64;
+        for i in 0..out {
+            let mut d = vec![0.0f64; inp];
+            for j in 0..inp {
+                d[j] = (w.at2(i, j) - self.dequant.at2(i, j)) as f64;
+            }
+            // d H d^T
+            for j in 0..inp {
+                if d[j] == 0.0 {
+                    continue;
+                }
+                let hrow = &h.data()[j * inp..(j + 1) * inp];
+                for k in 0..inp {
+                    total += d[j] * hrow[k] as f64 * d[k];
+                }
+            }
+        }
+        total
+    }
+}
+
+/// Per-group asymmetric (scale, zero) from min/max of `w[i, g*gs..(g+1)*gs]`,
+/// restricted to unmasked entries when a mask is given (masked entries are
+/// structurally zero and must dequantize to exactly 0, so zero-point must
+/// be on the grid — we round z to an integer as GPTQ does).
+pub fn group_params(w: &Tensor, group_size: usize, bits: u32,
+                    mask: Option<&Tensor>) -> (Tensor, Tensor) {
+    let (out, inp) = (w.rows(), w.cols());
+    let g = inp / group_size;
+    let qm = qmax(bits);
+    let mut scales = Tensor::zeros(&[out, g]);
+    let mut zeros = Tensor::zeros(&[out, g]);
+    for i in 0..out {
+        for gi in 0..g {
+            let (mut lo, mut hi) = (0.0f32, 0.0f32); // include 0 so z is on-grid
+            for j in gi * group_size..(gi + 1) * group_size {
+                if let Some(m) = mask {
+                    if m.at2(i, j) == 0.0 {
+                        continue;
+                    }
+                }
+                lo = lo.min(w.at2(i, j));
+                hi = hi.max(w.at2(i, j));
+            }
+            let mut scale = (hi - lo) / qm;
+            if scale <= 0.0 {
+                scale = 1.0;
+            }
+            let zero = (-lo / scale).round().clamp(0.0, qm);
+            scales.set2(i, gi, scale);
+            zeros.set2(i, gi, zero);
+        }
+    }
+    (scales, zeros)
+}
+
+/// Quantize every adapted-module base weight of a model with GPTQ, writing
+/// qscales_/qzeros_ stacks into a ParamSet (the QA artifacts' inputs) and
+/// replacing base weights with their dequantized values.  Non-adapted linear
+/// weights (wo, wgate) are quantized too (whole-model INT4, as GPTQ does).
+pub fn quantize_model(
+    base: &mut ParamSet,
+    grams: impl Fn(&str, usize) -> Result<Tensor>,
+    masks: Option<&ParamSet>,
+    hyper: &ModelHyper,
+    use_gptq: bool,
+) -> Result<(ParamSet, ParamSet)> {
+    let mut qa = ParamSet::new();
+    let mut codes_all = ParamSet::new();
+    for wkey in crate::model::linear_keys() {
+        let w_stack = base.get(wkey)?.clone();
+        let mask_stack = match masks {
+            Some(ms) => Some(ms.get(&format!("mask_{wkey}"))?.clone()),
+            None => None,
+        };
+        let mut new_w = w_stack.clone();
+        let mut scales_l = Vec::new();
+        let mut zeros_l = Vec::new();
+        let mut codes_l = Vec::new();
+        for l in 0..hyper.n_layers {
+            let w = w_stack.index0(l);
+            let mask = mask_stack.as_ref().map(|m| m.index0(l));
+            let qr = if use_gptq {
+                let h = grams(wkey, l)?;
+                gptq_quantize(&w, &h, hyper.group_size, BITS, mask.as_ref(), 0.01)?
+            } else {
+                rtn_quantize(&w, hyper.group_size, BITS, mask.as_ref())?
+            };
+            new_w.set_index0(l, &qr.dequant);
+            scales_l.push(qr.scales);
+            zeros_l.push(qr.zeros);
+            codes_l.push(qr.codes);
+        }
+        base.insert(wkey, new_w);
+        // QA params only needed for adapted modules; store all for metrics
+        qa.insert(&format!("qscales_{wkey}"), Tensor::stack(&scales_l)?);
+        qa.insert(&format!("qzeros_{wkey}"), Tensor::stack(&zeros_l)?);
+        codes_all.insert(&format!("codes_{wkey}"), Tensor::stack(&codes_l)?);
+    }
+    // map adapted-module aliases (qscales_q <- qscales_wq ...)
+    for m in &hyper.mods {
+        let wkey = ModelHyper::weight_key(m);
+        qa.insert(&format!("qscales_{m}"), qa.get(&format!("qscales_{wkey}"))?.clone());
+        qa.insert(&format!("qzeros_{m}"), qa.get(&format!("qzeros_{wkey}"))?.clone());
+    }
+    qa.insert("qmax", Tensor::scalar(qmax(BITS)));
+    Ok((qa, codes_all))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(4), 15.0);
+        assert_eq!(qmax(8), 255.0);
+    }
+
+    #[test]
+    fn group_params_cover_range() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[4, 32], 0.5);
+        let (scales, zeros) = group_params(&w, 16, 4, None);
+        assert_eq!(scales.shape(), &[4, 2]);
+        // every weight quantizes within [0, 15] by construction
+        for i in 0..4 {
+            for j in 0..32 {
+                let s = scales.at2(i, j / 16);
+                let z = zeros.at2(i, j / 16);
+                let q = (w.at2(i, j) / s).round() + z;
+                assert!((-1.0..=16.0).contains(&q), "q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_dequantizes_to_zero() {
+        // masked (structurally zero) entries must map to code z exactly
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[2, 16], 0.5);
+        let (scales, zeros) = group_params(&w, 8, 4, None);
+        for i in 0..2 {
+            for g in 0..2 {
+                let s = scales.at2(i, g);
+                let z = zeros.at2(i, g);
+                let q = (0.0f32 / s).round() + z;
+                let dq = (q.clamp(0.0, 15.0) - z) * s;
+                assert_eq!(dq, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! INT4 nibble packing — true 4-bit storage for the Table 6/7 model-storage
+//! and inference-memory metrics (low nibble = even column, matching the L1
+//! int4 kernel's unpack order).
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Pack integer codes (out, in) with values in [0,15] into (out, in/2) bytes.
+pub fn pack_int4(codes: &Tensor) -> Result<Vec<u8>> {
+    let (out, inp) = (codes.rows(), codes.cols());
+    if inp % 2 != 0 {
+        bail!("pack_int4: odd in-dim {inp}");
+    }
+    let mut bytes = Vec::with_capacity(out * inp / 2);
+    for i in 0..out {
+        let row = codes.row(i);
+        for j in (0..inp).step_by(2) {
+            let lo = row[j] as u8;
+            let hi = row[j + 1] as u8;
+            if lo > 15 || hi > 15 || row[j] < 0.0 || row[j + 1] < 0.0 {
+                bail!("pack_int4: code out of range at ({i},{j})");
+            }
+            bytes.push(lo | (hi << 4));
+        }
+    }
+    Ok(bytes)
+}
+
+/// Inverse of `pack_int4`.
+pub fn unpack_int4(bytes: &[u8], out: usize, inp: usize) -> Result<Tensor> {
+    if bytes.len() != out * inp / 2 {
+        bail!("unpack_int4: {} bytes for ({out},{inp})", bytes.len());
+    }
+    let mut t = Tensor::zeros(&[out, inp]);
+    for i in 0..out {
+        for j in (0..inp).step_by(2) {
+            let b = bytes[i * inp / 2 + j / 2];
+            t.set2(i, j, (b & 0xF) as f32);
+            t.set2(i, j + 1, ((b >> 4) & 0xF) as f32);
+        }
+    }
+    Ok(t)
+}
+
+/// Storage bytes of an INT4-packed matrix incl. FP16 group params
+/// (scales+zeros at 2 bytes each) — used for the Table 7 storage column.
+pub fn int4_storage_bytes(out: usize, inp: usize, group_size: usize) -> usize {
+    out * inp / 2 + 2 * 2 * out * (inp / group_size)
+}
+
+/// FP16 storage of the same matrix.
+pub fn fp16_storage_bytes(out: usize, inp: usize) -> usize {
+    out * inp * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let codes = Tensor::new(
+            &[4, 8], (0..32).map(|_| rng.below(16) as f32).collect()).unwrap();
+        let bytes = pack_int4(&codes).unwrap();
+        assert_eq!(bytes.len(), 16);
+        let back = unpack_int4(&bytes, 4, 8).unwrap();
+        assert_eq!(back, codes);
+    }
+
+    #[test]
+    fn nibble_order_matches_l1_kernel() {
+        // kernel convention: low nibble first
+        let codes = Tensor::new(&[1, 4], vec![1., 2., 3., 4.]).unwrap();
+        let bytes = pack_int4(&codes).unwrap();
+        assert_eq!(bytes, vec![0x21, 0x43]);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let codes = Tensor::new(&[1, 2], vec![16., 0.]).unwrap();
+        assert!(pack_int4(&codes).is_err());
+        assert!(unpack_int4(&[0u8; 3], 1, 4).is_err());
+    }
+
+    #[test]
+    fn storage_ratio_close_to_4x() {
+        let int4 = int4_storage_bytes(1024, 1024, 32) as f64;
+        let fp16 = fp16_storage_bytes(1024, 1024) as f64;
+        let ratio = fp16 / int4;
+        assert!(ratio > 3.0 && ratio < 4.0, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Round-to-nearest quantization — the baseline GPTQ improves on.
+
+use super::{group_params, qmax, QuantResult};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Quantize `w` (out, in) group-wise with plain rounding.  When `mask` is
+/// given, masked entries are forced to code `z` (dequant exactly 0), so
+/// sparsity survives quantization.
+pub fn rtn_quantize(w: &Tensor, group_size: usize, bits: u32,
+                    mask: Option<&Tensor>) -> Result<QuantResult> {
+    let (out, inp) = (w.rows(), w.cols());
+    let (scales, zeros) = group_params(w, group_size, bits, mask);
+    let qm = qmax(bits);
+    let mut codes = Tensor::zeros(&[out, inp]);
+    let mut dequant = Tensor::zeros(&[out, inp]);
+    for i in 0..out {
+        for j in 0..inp {
+            let s = scales.at2(i, j / group_size);
+            let z = zeros.at2(i, j / group_size);
+            let masked = mask.map(|m| m.at2(i, j) == 0.0).unwrap_or(false);
+            let q = if masked {
+                z
+            } else {
+                ((w.at2(i, j) / s).round() + z).clamp(0.0, qm)
+            };
+            codes.set2(i, j, q);
+            dequant.set2(i, j, (q - z) * s);
+        }
+    }
+    Ok(QuantResult { codes, scales, zeros, dequant })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn reconstruction_error_is_bounded_by_scale() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[8, 32], 0.3);
+        let qr = rtn_quantize(&w, 16, 4, None).unwrap();
+        for i in 0..8 {
+            for j in 0..32 {
+                let s = qr.scales.at2(i, j / 16);
+                assert!((qr.dequant.at2(i, j) - w.at2(i, j)).abs() <= 0.5 * s + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn preserves_sparsity_exactly() {
+        let mut rng = Rng::new(2);
+        let w0 = Tensor::randn(&mut rng, &[4, 32], 0.3);
+        let mask = Tensor::new(
+            &[4, 32], (0..128).map(|i| ((i * 7) % 3 != 0) as i32 as f32).collect()).unwrap();
+        let w = w0.mul(&mask).unwrap();
+        let qr = rtn_quantize(&w, 16, 4, Some(&mask)).unwrap();
+        for i in 0..4 {
+            for j in 0..32 {
+                if mask.at2(i, j) == 0.0 {
+                    assert_eq!(qr.dequant.at2(i, j), 0.0, "sparsity lost at ({i},{j})");
+                }
+            }
+        }
+        assert!(qr.dequant.sparsity() >= w.sparsity() - 1e-9);
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[4, 16], 2.0);
+        let qr = rtn_quantize(&w, 8, 4, None).unwrap();
+        assert!(qr.codes.data().iter().all(|&c| (0.0..=15.0).contains(&c)));
+        assert!(qr.codes.data().iter().all(|&c| c == c.round()));
+    }
+}

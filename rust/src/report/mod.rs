@@ -1,0 +1,105 @@
+//! Paper-style markdown table rendering for the reproduction harness.
+
+use std::fmt::Write as _;
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {c:<w$} |");
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &widths));
+        }
+        let _ = writeln!(out);
+        assert_eq!(ncol, widths.len());
+        out
+    }
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+pub fn yesno(b: bool) -> String {
+    (if b { "yes" } else { "no" }).to_string()
+}
+
+pub fn check(mergeable: bool) -> String {
+    (if mergeable { "[x]" } else { "[ ]" }).to_string()
+}
+
+/// Append a section to EXPERIMENTS-style log files.
+pub fn append_to(path: &std::path::Path, content: &str) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(content.as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["Method", "Acc"]);
+        t.row(vec!["LoRA".into(), "50.6".into()]);
+        t.row(vec!["SQFT + SparsePEFT".into(), "52.5".into()]);
+        let s = t.render();
+        assert!(s.contains("### Demo"));
+        assert!(s.contains("| Method "));
+        assert!(s.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("X", &["A", "B"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.525), "52.5");
+        assert_eq!(yesno(true), "yes");
+        assert_eq!(check(false), "[ ]");
+    }
+}

@@ -1,0 +1,78 @@
+//! Positional-argument assembly: maps an artifact's manifest input list to
+//! concrete values drawn from device-resident buffers (frozen base weights),
+//! host ParamSets (adapter/opt/quant state), the current data batch, and
+//! scalar knobs (step, lr, qmax).
+//!
+//! Every artifact call in the coordinator goes through here, so input-order
+//! bugs are impossible by construction: the manifest order *is* the order.
+
+use super::{Arg, ArtifactSpec, DeviceStore, DType, HostValue};
+use crate::data::Batch;
+use crate::model::ParamSet;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+pub fn build_args<'a>(
+    spec: &ArtifactSpec,
+    device: Option<&'a DeviceStore>,
+    host_sets: &[&'a ParamSet],
+    batch: Option<&Batch>,
+    scalars: &[(&str, f32)],
+) -> Result<Vec<Arg<'a>>> {
+    let mut out = Vec::with_capacity(spec.inputs.len());
+    'next: for input in &spec.inputs {
+        let name = input.name.as_str();
+        // 1. device-resident buffers win (frozen base weights)
+        if let Some(d) = device {
+            if d.contains(name) {
+                out.push(Arg::Buf(d.get(name)?));
+                continue 'next;
+            }
+        }
+        // 2. host parameter sets, first hit wins
+        for set in host_sets {
+            if set.contains(name) {
+                let t = set.get(name)?;
+                if t.shape() != input.shape.as_slice() {
+                    bail!("input '{name}': host tensor shape {:?} != spec {:?}",
+                        t.shape(), input.shape);
+                }
+                out.push(Arg::HostRef(t));
+                continue 'next;
+            }
+        }
+        // 3. batch fields
+        if let Some(b) = batch {
+            match name {
+                "tokens" => {
+                    out.push(Arg::Host(HostValue::I32(
+                        vec![b.batch, b.seq], b.tokens.clone())));
+                    continue 'next;
+                }
+                "targets" => {
+                    out.push(Arg::Host(HostValue::I32(
+                        vec![b.batch, b.seq], b.targets.clone())));
+                    continue 'next;
+                }
+                "loss_mask" => {
+                    out.push(Arg::Host(HostValue::F32(
+                        Tensor::new(&[b.batch, b.seq], b.loss_mask.clone())?)));
+                    continue 'next;
+                }
+                _ => {}
+            }
+        }
+        // 4. scalar knobs
+        for (k, v) in scalars {
+            if *k == name {
+                if input.dtype != DType::F32 || input.shape != vec![1] {
+                    bail!("scalar input '{name}' has non-scalar spec {:?}", input.shape);
+                }
+                out.push(Arg::Host(HostValue::F32(Tensor::scalar(*v))));
+                continue 'next;
+            }
+        }
+        bail!("no source for artifact input '{name}' ({:?})", input.shape);
+    }
+    Ok(out)
+}

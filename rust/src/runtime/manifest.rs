@@ -1,0 +1,201 @@
+//! artifacts/manifest.json parsing: the contract between `python/compile`
+//! (which writes it) and the rust runtime (which validates every buffer it
+//! feeds PJRT against these specs).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype '{s}'"),
+        }
+    }
+}
+
+/// One artifact input or output tensor spec.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no input '{name}'", self.file))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s == name)
+            .with_context(|| format!("artifact {} has no output '{name}'", self.file))
+    }
+}
+
+/// Model hyperparameters mirrored from python/compile/model.py.
+#[derive(Clone, Debug)]
+pub struct ModelHyper {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub r_max: usize,
+    pub group_size: usize,
+    pub param_count: usize,
+    pub mods: Vec<String>,
+    /// (out_features, in_features) per adapted module
+    pub mod_dims: BTreeMap<String, (usize, usize)>,
+}
+
+impl ModelHyper {
+    pub fn mod_dims(&self, m: &str) -> (usize, usize) {
+        self.mod_dims[m]
+    }
+
+    pub fn mod_groups(&self, m: &str) -> usize {
+        self.mod_dims[m].1 / self.group_size
+    }
+
+    /// base weight key adapted by module `m` ("q" -> "wq", ...)
+    pub fn weight_key(m: &str) -> &'static str {
+        match m {
+            "q" => "wq",
+            "k" => "wk",
+            "v" => "wv",
+            "up" => "wup",
+            "down" => "wdown",
+            _ => panic!("unknown module {m}"),
+        }
+    }
+}
+
+/// One model config's artifact set.
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub model: ModelHyper,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigEntry>,
+    pub shape_artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_iospec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.req("name")?.as_str()?.to_string(),
+        shape: j.req("shape")?.as_arr()?.iter().map(|x| x.as_usize().unwrap()).collect(),
+        dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+    })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactSpec> {
+    Ok(ArtifactSpec {
+        file: j.req("file")?.as_str()?.to_string(),
+        inputs: j.req("inputs")?.as_arr()?.iter().map(parse_iospec).collect::<Result<_>>()?,
+        outputs: j
+            .req("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|x| Ok(x.as_str()?.to_string()))
+            .collect::<Result<_>>()?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut configs = BTreeMap::new();
+        for (name, entry) in j.req("configs")?.as_obj()? {
+            let m = entry.req("model")?;
+            let mods: Vec<String> = m
+                .req("mods")?
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_str()?.to_string()))
+                .collect::<Result<_>>()?;
+            let mut mod_dims = BTreeMap::new();
+            for (k, v) in m.req("mod_dims")?.as_obj()? {
+                let a = v.as_arr()?;
+                mod_dims.insert(k.clone(), (a[0].as_usize()?, a[1].as_usize()?));
+            }
+            let model = ModelHyper {
+                name: name.clone(),
+                vocab: m.req("vocab")?.as_usize()?,
+                d_model: m.req("d_model")?.as_usize()?,
+                n_layers: m.req("n_layers")?.as_usize()?,
+                n_heads: m.req("n_heads")?.as_usize()?,
+                d_ff: m.req("d_ff")?.as_usize()?,
+                seq_len: m.req("seq_len")?.as_usize()?,
+                batch: m.req("batch")?.as_usize()?,
+                r_max: m.req("r_max")?.as_usize()?,
+                group_size: m.req("group_size")?.as_usize()?,
+                param_count: m.req("param_count")?.as_usize()?,
+                mods,
+                mod_dims,
+            };
+            let mut artifacts = BTreeMap::new();
+            for (k, v) in entry.req("artifacts")?.as_obj()? {
+                artifacts.insert(k.clone(), parse_artifact(v)?);
+            }
+            configs.insert(name.clone(), ConfigEntry { model, artifacts });
+        }
+        let mut shape_artifacts = BTreeMap::new();
+        for (k, v) in j.req("shape_artifacts")?.as_obj()? {
+            shape_artifacts.insert(k.clone(), parse_artifact(v)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), configs, shape_artifacts })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("manifest has no config '{name}' (have: {:?})",
+                self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    /// Per-shape artifact lookup, e.g. wanda_256x1024 / fakequant_256x1024g32.
+    pub fn shape_artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.shape_artifacts
+            .get(key)
+            .with_context(|| format!("manifest has no shape artifact '{key}'"))
+    }
+}

@@ -1,0 +1,285 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the CPU
+//! client.  This is the only module that touches the `xla` crate; everything
+//! above it works with host `Tensor`s and named buffers.
+//!
+//! Design notes:
+//!   - HLO *text* interchange (manifest-declared), parsed by
+//!     `HloModuleProto::from_text_file` — see DESIGN.md §5 / aot.py.
+//!   - Executables are compiled once and cached per (config, kind).
+//!   - Training keeps all parameters device-resident (`DeviceStore`):
+//!     each step passes `PjRtBuffer` handles via `execute_b`, so the host
+//!     only round-trips the scalar loss.
+
+pub mod manifest;
+pub mod args;
+
+pub use manifest::{ArtifactSpec, ConfigEntry, DType, IoSpec, Manifest, ModelHyper};
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// A host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostValue {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32(s, _) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostValue::F32(_) => DType::F32,
+            HostValue::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            _ => bail!("expected f32 host value"),
+        }
+    }
+}
+
+impl From<Tensor> for HostValue {
+    fn from(t: Tensor) -> Self {
+        HostValue::F32(t)
+    }
+}
+
+/// One compiled artifact plus its manifest spec (for validation).
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    fn check_inputs(&self, shapes: &[(&[usize], DType)]) -> Result<()> {
+        if shapes.len() != self.spec.inputs.len() {
+            bail!("{}: expected {} inputs, got {}",
+                self.spec.file, self.spec.inputs.len(), shapes.len());
+        }
+        for (i, ((shape, dtype), spec)) in shapes.iter().zip(&self.spec.inputs).enumerate() {
+            if *shape != spec.shape.as_slice() || *dtype != spec.dtype {
+                bail!("{}: input #{i} ('{}') wants {:?} {:?}, got {:?} {:?}",
+                    self.spec.file, spec.name, spec.shape, spec.dtype, shape, dtype);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host values; returns host f32 tensors in output order.
+    /// (All SQFT artifact outputs are f32.)
+    pub fn run(&self, client: &xla::PjRtClient, inputs: &[HostValue]) -> Result<Vec<Tensor>> {
+        let args: Vec<Arg> = inputs.iter().map(|v| Arg::Host(v.clone())).collect();
+        self.run_mixed(client, &args)
+    }
+
+    /// Execute with a mix of device-resident buffers (frozen base weights)
+    /// and host values (adapter state, batch).  All artifacts are lowered
+    /// with `return_tuple=True`, so PJRT hands back one tuple buffer which
+    /// we decompose on the host.
+    pub fn run_mixed(&self, client: &xla::PjRtClient, inputs: &[Arg]) -> Result<Vec<Tensor>> {
+        let shapes: Vec<(Vec<usize>, DType)> = inputs
+            .iter()
+            .map(|a| match a {
+                Arg::Host(v) => Ok((v.shape().to_vec(), v.dtype())),
+                Arg::HostRef(t) => Ok((t.shape().to_vec(), DType::F32)),
+                Arg::Buf(b) => {
+                    let s = b.on_device_shape()?;
+                    match &s {
+                        xla::Shape::Array(arr) => Ok((
+                            arr.dims().iter().map(|&d| d as usize).collect(),
+                            match arr.ty() {
+                                xla::ElementType::S32 => DType::I32,
+                                _ => DType::F32,
+                            },
+                        )),
+                        _ => bail!("tuple buffer passed as input"),
+                    }
+                }
+            })
+            .collect::<Result<_>>()?;
+        let shape_refs: Vec<(&[usize], DType)> =
+            shapes.iter().map(|(s, d)| (s.as_slice(), d.clone())).collect();
+        self.check_inputs(&shape_refs)?;
+
+        // upload host values, then assemble the positional arg list
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // index into owned, usize::MAX = borrow
+        for a in inputs {
+            match a {
+                Arg::Host(v) => {
+                    owned.push(host_to_buffer(client, v)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::HostRef(t) => {
+                    owned.push(client.buffer_from_host_buffer(t.data(), t.shape(), None)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::Buf(_) => order.push(usize::MAX),
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for (a, &o) in inputs.iter().zip(&order) {
+            match a {
+                Arg::Host(_) | Arg::HostRef(_) => refs.push(&owned[o]),
+                Arg::Buf(b) => refs.push(b),
+            }
+        }
+        let out = self.exe.execute_b(&refs)?;
+        let outs = out.into_iter().next().context("no output replica")?;
+        let buf = outs.into_iter().next().context("no output buffer")?;
+        let mut lit = buf.to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}: got {} tuple elements for {} declared outputs",
+                self.spec.file, parts.len(), self.spec.outputs.len());
+        }
+        parts.into_iter().map(literal_to_tensor).collect()
+    }
+}
+
+/// One positional artifact argument.
+pub enum Arg<'a> {
+    /// owned host value (batch tensors, scalars)
+    Host(HostValue),
+    /// borrowed host tensor (adapter/opt state) — uploaded without cloning
+    /// the host buffer first (perf: saves one memcpy per tensor per step)
+    HostRef(&'a Tensor),
+    Buf(&'a xla::PjRtBuffer),
+}
+
+fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit.to_vec::<f32>()?;
+    Tensor::new(&dims, data)
+}
+
+pub fn host_to_buffer(client: &xla::PjRtClient, v: &HostValue) -> Result<xla::PjRtBuffer> {
+    match v {
+        HostValue::F32(t) => Ok(client.buffer_from_host_buffer(t.data(), t.shape(), None)?),
+        HostValue::I32(shape, data) => Ok(client.buffer_from_host_buffer(data, shape, None)?),
+    }
+}
+
+/// Download one (array) buffer to a host Tensor with an expected shape.
+pub fn buffer_to_tensor(buf: &xla::PjRtBuffer, shape: &[usize]) -> Result<Tensor> {
+    let t = literal_to_tensor(buf.to_literal_sync()?)?;
+    if t.shape() != shape {
+        bail!("buffer shape {:?} != expected {:?}", t.shape(), shape);
+    }
+    Ok(t)
+}
+
+/// Loads + compiles + caches artifacts for one artifacts/ directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        let path = self.manifest.dir.join(&spec.file);
+        let path_str = path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { spec: spec.clone(), exe })
+    }
+
+    /// Get (compile-once) a per-config artifact: kind in
+    /// {train, train_qa, eval, eval_qa, calib}.
+    pub fn executable(&self, config: &str, kind: &str) -> Result<Rc<Executable>> {
+        let key = format!("{config}/{kind}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.config(config)?;
+        let spec = entry
+            .artifacts
+            .get(kind)
+            .with_context(|| format!("config {config} has no artifact kind '{kind}'"))?;
+        let exe = Rc::new(self.compile(spec)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Get (compile-once) a shape artifact: e.g. "wanda_256x1024".
+    pub fn shape_executable(&self, key: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.shape_artifact(key)?;
+        let exe = Rc::new(self.compile(spec)?);
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn model(&self, config: &str) -> Result<&ModelHyper> {
+        Ok(&self.manifest.config(config)?.model)
+    }
+}
+
+/// Named device-resident buffers (parameters, optimizer state).
+pub struct DeviceStore {
+    bufs: BTreeMap<String, xla::PjRtBuffer>,
+}
+
+impl DeviceStore {
+    pub fn new() -> DeviceStore {
+        DeviceStore { bufs: BTreeMap::new() }
+    }
+
+    pub fn put(&mut self, name: &str, buf: xla::PjRtBuffer) {
+        self.bufs.insert(name.to_string(), buf);
+    }
+
+    pub fn put_host(&mut self, client: &xla::PjRtClient, name: &str, v: &HostValue) -> Result<()> {
+        self.bufs.insert(name.to_string(), host_to_buffer(client, v)?);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.bufs.get(name).with_context(|| format!("device store missing '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.bufs.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.bufs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Download one buffer to host with shape validation.
+    pub fn fetch(&self, name: &str, shape: &[usize]) -> Result<Tensor> {
+        buffer_to_tensor(self.get(name)?, shape)
+    }
+}
+
+impl Default for DeviceStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}

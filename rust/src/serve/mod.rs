@@ -1,0 +1,244 @@
+//! Serving loop: dynamic batching + greedy decoding over the eval artifact.
+//!
+//! The paper's §2.5 motivation: merged models (SparsePEFT/QA-SparsePEFT)
+//! serve faster and smaller than base+adapter pairs.  This module measures
+//! that on this testbed (Table 7 inference columns): a single-threaded
+//! engine owns the Runtime (PJRT handles are not Sync); request producers
+//! run on OS threads and talk to it over channels; the engine coalesces up
+//! to `batch` pending requests per forward pass.
+//!
+//! Greedy decoding is teacher-forcing-free: each generated token re-runs
+//! the batched forward with the answer-so-far appended (no KV cache in the
+//! artifact — acceptable at seq<=128, and identical work for merged vs
+//! unmerged, which is what the comparison needs).
+
+use crate::data::Tokenizer;
+use crate::model::ParamSet;
+use crate::nls::{Config, SearchSpace};
+use crate::runtime::{args::build_args, DeviceStore, HostValue, Runtime};
+use crate::util::{summarize, Summary};
+use anyhow::{bail, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// One inference request: a prompt; the reply is the decoded answer string.
+pub struct Request {
+    pub prompt: String,
+    pub reply: Sender<Result<String>>,
+    pub enqueued: Instant,
+}
+
+/// Engine state: device-resident weights + (optional) adapter host state.
+pub struct Engine<'a> {
+    rt: &'a Runtime,
+    config: String,
+    device: DeviceStore,
+    /// host-side eval inputs: adapters + rank params (empty set = merged)
+    host_sets: Vec<ParamSet>,
+    eval_kind: String,
+    tok: Tokenizer,
+    max_new_tokens: usize,
+}
+
+impl<'a> Engine<'a> {
+    /// Build an engine from frozen (device) params + host adapter state.
+    pub fn new(
+        rt: &'a Runtime,
+        config: &str,
+        frozen: &ParamSet,
+        adapters: Option<(&ParamSet, &SearchSpace, &Config)>,
+        eval_kind: &str,
+    ) -> Result<Engine<'a>> {
+        let hyper = rt.model(config)?.clone();
+        let mut device = DeviceStore::new();
+        for (n, t) in frozen.iter() {
+            device.put_host(&rt.client, n, &HostValue::F32(t.clone()))?;
+        }
+        let mut host_sets = Vec::new();
+        match adapters {
+            Some((ad, space, cfg)) => {
+                host_sets.push(ad.clone());
+                host_sets.push(space.realize(cfg)?);
+            }
+            None => {
+                // merged model: no-op adapters (B = 0)
+                let mut rng = crate::tensor::Rng::new(1);
+                host_sets.push(crate::model::init_adapters(&hyper, &mut rng, 1.0));
+                let space = SearchSpace::default_for(&hyper, 1.0);
+                host_sets.push(space.realize(&space.max_config())?);
+            }
+        }
+        Ok(Engine {
+            rt,
+            config: config.to_string(),
+            device,
+            host_sets,
+            eval_kind: eval_kind.to_string(),
+            tok: Tokenizer::new(),
+            max_new_tokens: 6,
+        })
+    }
+
+    /// Greedy-decode a batch of prompts (padded to the artifact batch).
+    pub fn generate_batch(&self, prompts: &[String]) -> Result<Vec<String>> {
+        let hyper = self.rt.model(&self.config)?.clone();
+        if prompts.is_empty() || prompts.len() > hyper.batch {
+            bail!("batch of {} prompts (max {})", prompts.len(), hyper.batch);
+        }
+        let exe = self.rt.executable(&self.config, &self.eval_kind)?;
+        let seq = hyper.seq_len;
+        // token rows + current lengths
+        let mut rows: Vec<Vec<i32>> = Vec::new();
+        let mut lens: Vec<usize> = Vec::new();
+        for p in prompts {
+            let ids = self.tok.encode(p)?;
+            if ids.len() + 1 + self.max_new_tokens > seq {
+                bail!("prompt too long for seq {seq}");
+            }
+            let mut row = vec![0i32; seq];
+            row[0] = Tokenizer::BOS;
+            for (i, &id) in ids.iter().enumerate() {
+                row[i + 1] = id;
+            }
+            lens.push(ids.len() + 1);
+            rows.push(row);
+        }
+        while rows.len() < hyper.batch {
+            rows.push(rows[0].clone());
+            lens.push(0); // padding row: never decoded
+        }
+        let mut done = vec![false; prompts.len()];
+        let mut answers: Vec<String> = vec![String::new(); prompts.len()];
+        for _ in 0..self.max_new_tokens {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let tokens: Vec<i32> = rows.iter().flatten().copied().collect();
+            let batch = crate::data::Batch {
+                tokens,
+                targets: vec![0; hyper.batch * seq],
+                loss_mask: vec![0.0; hyper.batch * seq],
+                batch: hyper.batch,
+                seq,
+                real: prompts.len(),
+            };
+            let args = build_args(
+                &exe.spec,
+                Some(&self.device),
+                &self.host_sets.iter().collect::<Vec<_>>(),
+                Some(&batch),
+                &[],
+            )?;
+            let outs = exe.run_mixed(&self.rt.client, &args)?;
+            let logits = &outs[0];
+            let v = hyper.vocab;
+            for (bi, len) in lens.iter_mut().enumerate().take(prompts.len()) {
+                if done[bi] || *len == 0 {
+                    continue;
+                }
+                let pos = *len - 1; // logits at last filled position
+                let row = &logits.data()[bi * seq * v + pos * v..bi * seq * v + (pos + 1) * v];
+                let mut best = 0usize;
+                for t in 1..v {
+                    if row[t] > row[best] {
+                        best = t;
+                    }
+                }
+                let ch = self.tok.decode_one(best as i32)?;
+                if ch == '.' || *len >= seq - 1 {
+                    done[bi] = true;
+                }
+                if ch != '.' {
+                    answers[bi].push(ch);
+                }
+                rows[bi][*len] = best as i32;
+                *len += 1;
+            }
+        }
+        Ok(answers)
+    }
+
+    /// Serve requests from a channel until it closes; coalesces up to
+    /// `batch` pending requests per forward pass (dynamic batching).
+    pub fn serve(&self, rx: Receiver<Request>) -> Result<ServeStats> {
+        let hyper = self.rt.model(&self.config)?.clone();
+        let mut latencies = Vec::new();
+        let mut served = 0usize;
+        let start = Instant::now();
+        loop {
+            // block for the first request
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let mut pending = vec![first];
+            // coalesce whatever else is already queued (up to batch)
+            while pending.len() < hyper.batch {
+                match rx.try_recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+            }
+            let prompts: Vec<String> =
+                pending.iter().map(|r| r.prompt.clone()).collect();
+            match self.generate_batch(&prompts) {
+                Ok(answers) => {
+                    for (req, ans) in pending.into_iter().zip(answers) {
+                        latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                        served += 1;
+                        let _ = req.reply.send(Ok(ans));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for req in pending {
+                        let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+        let wall = start.elapsed().as_secs_f64();
+        Ok(ServeStats {
+            served,
+            wall_secs: wall,
+            throughput: served as f64 / wall.max(1e-9),
+            latency_ms: if latencies.is_empty() {
+                None
+            } else {
+                Some(summarize(latencies))
+            },
+        })
+    }
+}
+
+#[derive(Debug)]
+pub struct ServeStats {
+    pub served: usize,
+    pub wall_secs: f64,
+    pub throughput: f64,
+    pub latency_ms: Option<Summary>,
+}
+
+/// Drive an engine with a synthetic open-loop workload from `n_clients`
+/// producer threads, `n_requests` total; returns the measured stats.
+pub fn benchmark_engine(engine: &Engine, prompts: Vec<String>,
+                        inter_arrival: Duration) -> Result<ServeStats> {
+    let (tx, rx) = channel::<Request>();
+    let producer = std::thread::spawn(move || {
+        let mut replies = Vec::new();
+        for p in prompts {
+            let (rtx, rrx) = channel();
+            let _ = tx.send(Request { prompt: p, reply: rtx, enqueued: Instant::now() });
+            replies.push(rrx);
+            std::thread::sleep(inter_arrival);
+        }
+        drop(tx);
+        // drain replies so the engine's sends don't error
+        for r in replies {
+            let _ = r.recv();
+        }
+    });
+    let stats = engine.serve(rx)?;
+    producer.join().ok();
+    Ok(stats)
+}

@@ -1,0 +1,297 @@
+//! Sparsification: activation calibration + Wanda scoring + mask management.
+//!
+//! Wanda (Sun et al. 2023), the paper's default Ψ: score(w_ij) =
+//! |w_ij| · ‖X_j‖₂ with per-output-row comparison groups; the least
+//! important (1−s) fraction per row is zeroed.  Calibration statistics come
+//! from the `calib` artifact, which captures the activations entering each
+//! linear site; the Wanda scores themselves run through the L1
+//! `wanda_{m}x{n}` kernels, and the top-k threshold is host-side.
+//! An N:M structured variant is included (paper mentions Wanda supports it).
+
+use crate::data::{Batch, Batcher, Sample, Tokenizer};
+use crate::model::{linear_keys, ParamSet};
+use crate::runtime::{args::build_args, DeviceStore, ModelHyper, Runtime};
+use crate::tensor::{Rng, Tensor};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Per-site calibration statistics, keyed by base weight name + layer:
+/// column L2 norms of the inputs to that linear layer, and (optionally)
+/// the Gram matrix X^T X for GPTQ.
+#[derive(Debug, Default)]
+pub struct CalibStats {
+    /// "wq/0" -> (in,) column norms
+    pub norms: BTreeMap<String, Tensor>,
+    /// "wq/0" -> (in, in) Gram (only when `with_gram`)
+    pub grams: BTreeMap<String, Tensor>,
+    pub tokens_seen: usize,
+}
+
+impl CalibStats {
+    pub fn norm(&self, wkey: &str, layer: usize) -> Result<&Tensor> {
+        self.norms
+            .get(&format!("{wkey}/{layer}"))
+            .ok_or_else(|| anyhow::anyhow!("no calib norms for {wkey}/{layer}"))
+    }
+
+    pub fn gram(&self, wkey: &str, layer: usize) -> Result<&Tensor> {
+        self.grams
+            .get(&format!("{wkey}/{layer}"))
+            .ok_or_else(|| anyhow::anyhow!("no calib gram for {wkey}/{layer}"))
+    }
+}
+
+/// Which activation-capture site feeds each linear weight.
+fn site_of(wkey: &str) -> (&'static str, usize) {
+    // (calib output name, output index in the calib artifact)
+    match wkey {
+        "wq" | "wk" | "wv" => ("xqkv", 1),
+        "wo" => ("xo", 2),
+        "wgate" | "wup" => ("xmlp", 3),
+        "wdown" => ("xdown", 4),
+        _ => panic!("not a linear key: {wkey}"),
+    }
+}
+
+/// Run the calib artifact over `n_batches` random batches and accumulate
+/// per-site column-square-sums (and Grams when `with_gram`).
+#[allow(clippy::too_many_arguments)]
+pub fn calibrate(
+    rt: &Runtime,
+    config: &str,
+    device: &DeviceStore,
+    adapters: &ParamSet,
+    samples: &[Sample],
+    tok: &Tokenizer,
+    n_batches: usize,
+    with_gram: bool,
+    rng: &mut Rng,
+) -> Result<CalibStats> {
+    let hyper = rt.model(config)?.clone();
+    let exe = rt.executable(config, "calib")?;
+    let batcher = Batcher::new(samples, tok, hyper.seq_len, hyper.batch);
+    let mut stats = CalibStats::default();
+    // square-sum accumulators per site/layer
+    let mut sq: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for _ in 0..n_batches {
+        let batch: Batch = batcher.random_batch(rng)?;
+        let args = build_args(&exe.spec, Some(device), &[adapters], Some(&batch), &[])?;
+        let outs = exe.run_mixed(&rt.client, &args)?;
+        stats.tokens_seen += batch.batch * batch.seq;
+        for site_idx in 1..=4 {
+            let acts = &outs[site_idx]; // (L, T, dim)
+            let (l_n, t_n, dim) =
+                (acts.shape()[0], acts.shape()[1], acts.shape()[2]);
+            let site_name = ["", "xqkv", "xo", "xmlp", "xdown"][site_idx];
+            for l in 0..l_n {
+                let key = format!("{site_name}/{l}");
+                let acc = sq.entry(key.clone()).or_insert_with(|| vec![0.0; dim]);
+                let base_off = l * t_n * dim;
+                for t in 0..t_n {
+                    let row = &acts.data()[base_off + t * dim..base_off + (t + 1) * dim];
+                    for j in 0..dim {
+                        acc[j] += (row[j] as f64) * (row[j] as f64);
+                    }
+                }
+                if with_gram {
+                    let gram = stats
+                        .grams
+                        .entry(key.clone())
+                        .or_insert_with(|| Tensor::zeros(&[dim, dim]));
+                    let layer_acts = Tensor::new(
+                        &[t_n, dim],
+                        acts.data()[base_off..base_off + t_n * dim].to_vec(),
+                    )?;
+                    layer_acts.accumulate_gram(gram);
+                }
+            }
+        }
+    }
+    // convert square sums to norms, fan the site stats out to weight keys
+    for wkey in linear_keys() {
+        let (site, _) = site_of(wkey);
+        for l in 0..hyper.n_layers {
+            let skey = format!("{site}/{l}");
+            let acc = &sq[&skey];
+            let norms = Tensor::new(
+                &[acc.len()],
+                acc.iter().map(|&s| (s.sqrt()) as f32).collect(),
+            )?;
+            stats.norms.insert(format!("{wkey}/{l}"), norms);
+            if with_gram {
+                let g = stats.grams[&skey].clone();
+                stats.grams.insert(format!("{wkey}/{l}"), g);
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Per-row unstructured top-k mask from a score matrix: keep the
+/// highest-scoring (1−s) fraction of each output row (Wanda's comparison
+/// group = output row).
+pub fn topk_row_mask(scores: &Tensor, sparsity: f64) -> Tensor {
+    let (m, n) = (scores.rows(), scores.cols());
+    let drop = ((sparsity * n as f64).round() as usize).min(n);
+    let keep = n - drop;
+    let mut mask = Tensor::zeros(&[m, n]);
+    let mut idx: Vec<usize> = Vec::with_capacity(n);
+    for i in 0..m {
+        idx.clear();
+        idx.extend(0..n);
+        let row = scores.row(i);
+        idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        for &j in idx.iter().take(keep) {
+            mask.set2(i, j, 1.0);
+        }
+    }
+    mask
+}
+
+/// N:M structured mask: in every group of `m_group` consecutive inputs keep
+/// the `n_keep` highest-scoring (e.g. 2:4).
+pub fn nm_mask(scores: &Tensor, n_keep: usize, m_group: usize) -> Result<Tensor> {
+    let (rows, cols) = (scores.rows(), scores.cols());
+    if cols % m_group != 0 {
+        bail!("N:M mask: {cols} cols not divisible by group {m_group}");
+    }
+    let mut mask = Tensor::zeros(&[rows, cols]);
+    let mut idx: Vec<usize> = Vec::with_capacity(m_group);
+    for i in 0..rows {
+        let row = scores.row(i);
+        for g in (0..cols).step_by(m_group) {
+            idx.clear();
+            idx.extend(0..m_group);
+            idx.sort_by(|&a, &b| row[g + b].partial_cmp(&row[g + a]).unwrap());
+            for &j in idx.iter().take(n_keep) {
+                mask.set2(i, g + j, 1.0);
+            }
+        }
+    }
+    Ok(mask)
+}
+
+/// Compute Wanda masks for every linear weight (stacked (L, out, in)),
+/// scoring through the L1 wanda kernels.  Returns a ParamSet with keys
+/// "mask_wq", ..., "mask_wdown".
+pub fn wanda_masks(
+    rt: &Runtime,
+    base: &ParamSet,
+    stats: &CalibStats,
+    sparsity: f64,
+    hyper: &ModelHyper,
+) -> Result<ParamSet> {
+    let mut masks = ParamSet::new();
+    for wkey in linear_keys() {
+        let w_stack = base.get(wkey)?;
+        let (out, inp) = (w_stack.shape()[1], w_stack.shape()[2]);
+        let exe = rt.shape_executable(&format!("wanda_{out}x{inp}"))?;
+        let mut layers = Vec::new();
+        for l in 0..hyper.n_layers {
+            let w = w_stack.index0(l);
+            let norms = stats.norm(wkey, l)?.clone();
+            let outs = exe.run(&rt.client, &[w.into(), norms.into()])?;
+            layers.push(topk_row_mask(&outs[0], sparsity));
+        }
+        masks.insert(&format!("mask_{wkey}"), Tensor::stack(&layers)?);
+    }
+    Ok(masks)
+}
+
+/// Host-only Wanda mask for one matrix (tests + fallback path).
+pub fn wanda_mask_host(w: &Tensor, norms: &Tensor, sparsity: f64) -> Tensor {
+    let (m, n) = (w.rows(), w.cols());
+    let mut scores = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            scores.set2(i, j, w.at2(i, j).abs() * norms.data()[j]);
+        }
+    }
+    topk_row_mask(&scores, sparsity)
+}
+
+/// Zero out the masked entries of every linear weight (in place).
+pub fn apply_masks(base: &mut ParamSet, masks: &ParamSet) -> Result<()> {
+    for wkey in linear_keys() {
+        let masked = base.get(wkey)?.mul(masks.get(&format!("mask_{wkey}"))?)?;
+        base.insert(wkey, masked);
+    }
+    Ok(())
+}
+
+/// Copy the base-weight masks of the *adapted* modules into adapter-mask
+/// keys ("mask_q" etc.) for SparsePEFT runs.
+pub fn adapter_masks_from(masks: &ParamSet, hyper: &ModelHyper) -> Result<ParamSet> {
+    let mut out = ParamSet::new();
+    for m in &hyper.mods {
+        let wkey = ModelHyper::weight_key(m);
+        out.insert(&format!("mask_{m}"), masks.get(&format!("mask_{wkey}"))?.clone());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_row_mask_exact_fraction() {
+        let mut rng = Rng::new(1);
+        let scores = Tensor::rand_uniform(&mut rng, &[8, 32], 0.0, 1.0);
+        let mask = topk_row_mask(&scores, 0.5);
+        for i in 0..8 {
+            let kept: f32 = mask.row(i).iter().sum();
+            assert_eq!(kept, 16.0);
+        }
+        // kept entries are the highest-scoring ones
+        for i in 0..8 {
+            let row_scores = scores.row(i);
+            let min_kept = (0..32)
+                .filter(|&j| mask.at2(i, j) == 1.0)
+                .map(|j| row_scores[j])
+                .fold(f32::INFINITY, f32::min);
+            let max_dropped = (0..32)
+                .filter(|&j| mask.at2(i, j) == 0.0)
+                .map(|j| row_scores[j])
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(min_kept >= max_dropped);
+        }
+    }
+
+    #[test]
+    fn topk_extremes() {
+        let mut rng = Rng::new(2);
+        let scores = Tensor::rand_uniform(&mut rng, &[2, 10], 0.0, 1.0);
+        assert_eq!(topk_row_mask(&scores, 0.0).sparsity(), 0.0);
+        assert_eq!(topk_row_mask(&scores, 1.0).sparsity(), 1.0);
+    }
+
+    #[test]
+    fn nm_mask_2_of_4() {
+        let mut rng = Rng::new(3);
+        let scores = Tensor::rand_uniform(&mut rng, &[4, 16], 0.0, 1.0);
+        let mask = nm_mask(&scores, 2, 4).unwrap();
+        assert_eq!(mask.sparsity(), 0.5);
+        for i in 0..4 {
+            for g in (0..16).step_by(4) {
+                let kept: f32 = (0..4).map(|j| mask.at2(i, g + j)).sum();
+                assert_eq!(kept, 2.0);
+            }
+        }
+        assert!(nm_mask(&scores, 2, 5).is_err());
+    }
+
+    #[test]
+    fn wanda_host_prefers_high_norm_columns() {
+        // |w| equal everywhere: mask decided purely by column norms
+        let w = Tensor::ones(&[2, 4]);
+        let norms = Tensor::new(&[4], vec![0.1, 5.0, 3.0, 0.2]).unwrap();
+        let mask = wanda_mask_host(&w, &norms, 0.5);
+        for i in 0..2 {
+            assert_eq!(mask.at2(i, 1), 1.0);
+            assert_eq!(mask.at2(i, 2), 1.0);
+            assert_eq!(mask.at2(i, 0), 0.0);
+            assert_eq!(mask.at2(i, 3), 0.0);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Dense linear algebra for the coordinator-side algorithms.
+//!
+//! GPTQ needs a damped Cholesky factorization + triangular inverse of the
+//! calibration Hessian (Frantar et al. 2022); the eval harness and tests
+//! need plain matmuls.  Hot loops are written cache-blocked over rows —
+//! good enough for the (<= 2560)^2 matrices that occur here; the model math
+//! itself always runs through XLA.
+
+use super::Tensor;
+use anyhow::{bail, Result};
+
+/// C = A @ B for 2-d tensors (m,k) x (k,n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape().len() != 2 || b.shape().len() != 2 || a.cols() != b.rows() {
+        bail!("matmul shape mismatch {:?} x {:?}", a.shape(), b.shape());
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for p in 0..k {
+            let av = arow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data()[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// C = A @ B^T for 2-d tensors (m,k) x (n,k) — the linear-layer convention.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape().len() != 2 || b.shape().len() != 2 || a.cols() != b.cols() {
+        bail!("matmul_bt shape mismatch {:?} x {:?}", a.shape(), b.shape());
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            orow[j] = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// In-place damped Cholesky decomposition H = L L^T (lower triangular
+/// returned).  `damp` is added to the diagonal (GPTQ's percdamp * mean diag).
+pub fn cholesky(h: &Tensor, damp: f32) -> Result<Tensor> {
+    if h.shape().len() != 2 || h.rows() != h.cols() {
+        bail!("cholesky wants square matrix, got {:?}", h.shape());
+    }
+    let n = h.rows();
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = h.at2(i, j) as f64 + if i == j { damp as f64 } else { 0.0 };
+            for p in 0..j {
+                sum -= l.at2(i, p) as f64 * l.at2(j, p) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky failed at {i}: non-PD matrix (sum={sum}); raise damping");
+                }
+                l.set2(i, j, sum.sqrt() as f32);
+            } else {
+                l.set2(i, j, (sum / l.at2(j, j) as f64) as f32);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Invert a lower-triangular matrix by forward substitution.
+pub fn tri_inverse_lower(l: &Tensor) -> Result<Tensor> {
+    let n = l.rows();
+    let mut inv = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        if l.at2(i, i) == 0.0 {
+            bail!("singular triangular matrix at {i}");
+        }
+        inv.set2(i, i, 1.0 / l.at2(i, i));
+        for j in 0..i {
+            let mut sum = 0.0f64;
+            for p in j..i {
+                sum += l.at2(i, p) as f64 * inv.at2(p, j) as f64;
+            }
+            inv.set2(i, j, (-sum / l.at2(i, i) as f64) as f32);
+        }
+    }
+    Ok(inv)
+}
+
+/// GPTQ's inverse-Hessian Cholesky: given H (n,n), compute
+/// `Hinv_chol = Cholesky(H^{-1})^T` (upper triangular), via
+/// H = L L^T  =>  H^{-1} = L^{-T} L^{-1}  =>  chol(H^{-1}) = L^{-T}.
+/// Returns the *upper* triangular factor U with H^{-1} = U^T U ... more
+/// precisely the GPTQ recursion needs U = chol(H^{-1}, upper=True), i.e.
+/// U upper-triangular with H^{-1} = U^T U?  The standard implementation uses
+/// H^{-1} = U U^T with U = L^{-T}; row `i`'s diagonal entry U[i,i] and the
+/// trailing row segment U[i, i:] drive the error feedback.
+pub fn gptq_hinv_factor(h: &Tensor, percdamp: f32) -> Result<Tensor> {
+    let n = h.rows();
+    let mut mean_diag = 0.0f64;
+    for i in 0..n {
+        mean_diag += h.at2(i, i) as f64;
+    }
+    let damp = (percdamp as f64 * mean_diag / n as f64).max(1e-8) as f32;
+    let l = cholesky(h, damp)?;
+    let linv = tri_inverse_lower(&l)?;
+    // U = L^{-T}: upper triangular, H^{-1} = U U^T? check: H^{-1} =
+    // (L L^T)^{-1} = L^{-T} L^{-1} = U (U^T)?  with U = L^{-T}:
+    // U U^T = L^{-T} L^{-1} = H^{-1}.  Cholesky-of-inverse in "upper" form.
+    Ok(linv.transpose2())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&mut rng, &[4, 6], 1.0);
+        let b = Tensor::randn(&mut rng, &[5, 6], 1.0);
+        let c1 = matmul_bt(&a, &b).unwrap();
+        let c2 = matmul(&a, &b.transpose2()).unwrap();
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(7);
+        let n = 8;
+        let x = Tensor::randn(&mut rng, &[16, n], 1.0);
+        let mut h = Tensor::zeros(&[n, n]);
+        x.accumulate_gram(&mut h);
+        let l = cholesky(&h, 0.01).unwrap();
+        let rec = matmul_bt(&l, &l).unwrap(); // L L^T
+        for i in 0..n {
+            for j in 0..n {
+                let want = h.at2(i, j) + if i == j { 0.01 } else { 0.0 };
+                assert!((rec.at2(i, j) - want).abs() < 1e-2,
+                    "({i},{j}): {} vs {want}", rec.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn tri_inverse_is_inverse() {
+        let mut rng = Rng::new(9);
+        let n = 6;
+        let x = Tensor::randn(&mut rng, &[12, n], 1.0);
+        let mut h = Tensor::zeros(&[n, n]);
+        x.accumulate_gram(&mut h);
+        let l = cholesky(&h, 0.05).unwrap();
+        let linv = tri_inverse_lower(&l).unwrap();
+        let id = matmul(&linv, &l).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.at2(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn hinv_factor_is_upper_and_reconstructs_inverse() {
+        let mut rng = Rng::new(11);
+        let n = 5;
+        let x = Tensor::randn(&mut rng, &[20, n], 1.0);
+        let mut h = Tensor::zeros(&[n, n]);
+        x.accumulate_gram(&mut h);
+        let u = gptq_hinv_factor(&h, 0.01).unwrap();
+        // upper triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u.at2(i, j), 0.0);
+            }
+        }
+        // U U^T ~= H^{-1}  =>  H (U U^T) ~= I  (with damping slack)
+        let uut = matmul_bt(&u, &u).unwrap();
+        let hu = matmul(&h, &uut).unwrap();
+        for i in 0..n {
+            assert!((hu.at2(i, i) - 1.0).abs() < 0.05, "diag {}", hu.at2(i, i));
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let h = Tensor::new(&[2, 2], vec![1., 2., 2., 1.]).unwrap(); // indefinite
+        assert!(cholesky(&h, 0.0).is_err());
+    }
+}

@@ -1,0 +1,348 @@
+//! Host tensor substrate: row-major f32 tensors with the operations the
+//! coordinator needs (weight manipulation, Wanda scoring, GPTQ linear
+//! algebra, metric reductions).  The *model math* never runs here — that is
+//! the AOT-compiled XLA artifacts' job — but sparsification, quantization
+//! and merging are coordinator-side transformations of host weights, so they
+//! need a small, well-tested tensor library.
+
+pub mod linalg;
+pub mod rng;
+
+pub use rng::Rng;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ------------------------------------------------------------------
+    // constructors
+    // ------------------------------------------------------------------
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    /// N(0, std^2) init.
+    pub fn randn(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal() * std).collect() }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn rand_uniform(rng: &mut Rng, shape: &[usize], lo: f32, hi: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| lo + rng.next_f32() * (hi - lo)).collect(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // accessors
+    // ------------------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-d element access (rows x cols).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        self.data[i * c + j] = v;
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.shape[1]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    // ------------------------------------------------------------------
+    // shape ops
+    // ------------------------------------------------------------------
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Slice index `i` off the leading axis (copy) — e.g. layer `l` of a
+    /// stacked (L, m, n) parameter.
+    pub fn index0(&self, i: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Write `t` into slot `i` of the leading axis.
+    pub fn set_index0(&mut self, i: usize, t: &Tensor) {
+        let inner: usize = self.shape[1..].iter().product();
+        assert_eq!(inner, t.len(), "set_index0 shape mismatch");
+        self.data[i * inner..(i + 1) * inner].copy_from_slice(&t.data);
+    }
+
+    /// Stack equal-shape tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        let inner = parts[0].shape.clone();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            if p.shape != inner {
+                bail!("stack shape mismatch: {:?} vs {:?}", p.shape, inner);
+            }
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&inner);
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // elementwise / reductions
+    // ------------------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("zip shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        })
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() { 0.0 } else { self.sum() / self.data.len() as f64 }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Fraction of exactly-zero entries — the sparsity metric used all over
+    /// the experiment harness.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Column-wise L2 norms of a (rows, cols) matrix (Wanda's ||X||_2).
+    pub fn col_norms(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut sums = vec![0.0f64; n];
+        for i in 0..m {
+            let row = self.row(i);
+            for j in 0..n {
+                sums[j] += (row[j] as f64) * (row[j] as f64);
+            }
+        }
+        Tensor { shape: vec![n], data: sums.into_iter().map(|s| s.sqrt() as f32).collect() }
+    }
+
+    /// Accumulate X^T X (Gram/Hessian) of a (rows, cols) activation matrix
+    /// into `h` ((cols, cols)) — the GPTQ calibration statistic.
+    pub fn accumulate_gram(&self, h: &mut Tensor) {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(h.shape(), &[n, n]);
+        for t in 0..m {
+            let row = self.row(t).to_vec();
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let hrow = &mut h.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    hrow[j] += ri * row[j];
+                }
+            }
+        }
+    }
+
+    /// Relative Frobenius distance ||a-b|| / (||b|| + eps).
+    pub fn rel_err(&self, other: &Tensor) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&a, &b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (b as f64).powi(2);
+        }
+        (num.sqrt()) / (den.sqrt() + 1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at2(1, 2), 6.0);
+        let r = t.clone().reshape(&[3, 2]).unwrap();
+        assert_eq!(r.at2(2, 1), 6.0);
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn stack_index_roundtrip() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        assert_eq!(s.index0(0), a);
+        assert_eq!(s.index0(1), b);
+        let mut s2 = s.clone();
+        s2.set_index0(0, &b);
+        assert_eq!(s2.index0(0), b);
+    }
+
+    #[test]
+    fn transpose() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let tt = t.transpose2();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+    }
+
+    #[test]
+    fn sparsity_metric() {
+        let t = Tensor::new(&[4], vec![0., 1., 0., 2.]).unwrap();
+        assert_eq!(t.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn col_norms_match_manual() {
+        let t = Tensor::new(&[2, 2], vec![3., 0., 4., 1.]).unwrap();
+        let n = t.col_norms();
+        assert!((n.data()[0] - 5.0).abs() < 1e-6);
+        assert!((n.data()[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_accumulation() {
+        let x = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let mut h = Tensor::zeros(&[2, 2]);
+        x.accumulate_gram(&mut h);
+        // X^T X = [[10, 14], [14, 20]]
+        assert_eq!(h.data(), &[10., 14., 14., 20.]);
+    }
+
+    #[test]
+    fn elementwise_errors_on_mismatch() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[4]);
+        assert!(a.add(&b).is_err());
+    }
+}

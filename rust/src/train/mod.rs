@@ -1,0 +1,251 @@
+//! Training drivers: full-weight pretraining and adapter fine-tuning.
+//!
+//! The loop is rust-owned; model math runs through the AOT train-step
+//! artifacts (Adam inside the graph).  Frozen inputs — base weights, masks,
+//! quant params — are uploaded to the device once and passed as buffers
+//! every step; the trainable adapter/optimizer state round-trips the host
+//! (PJRT's tuple output lands host-side anyway), which for adapters is a
+//! few MB.  Under NLS the trainer samples a random sub-adapter per step
+//! (weight sharing across the elastic space, paper §2.2).
+
+use crate::data::{Batch, Batcher, Sample, Tokenizer};
+use crate::model::ParamSet;
+use crate::nls::SearchSpace;
+use crate::peft::Method;
+use crate::runtime::{args::build_args, DeviceStore, HostValue, Runtime};
+use crate::tensor::{Rng, Tensor};
+use anyhow::Result;
+
+/// Per-run training hyperparameters (paper Table 8 analogue).
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f64,
+    pub log_every: usize,
+    pub seed: u64,
+    /// Table-5 ablation override: train the max-rank sub-adapter only
+    /// (vanilla LoRA) even for NLS-capable methods.
+    pub fixed_rank: bool,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts { steps: 300, lr: 3e-4, log_every: 50, seed: 7, fixed_rank: false }
+    }
+}
+
+/// Loss-curve record, written into EXPERIMENTS.md by the examples.
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub points: Vec<(usize, f64)>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: usize, loss: f64) {
+        self.points.push((step, loss));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, l)| l)
+    }
+
+    pub fn first(&self) -> Option<f64> {
+        self.points.first().map(|&(_, l)| l)
+    }
+
+    pub fn render(&self) -> String {
+        self.points
+            .iter()
+            .map(|(s, l)| format!("step {s:>5}  loss {l:.4}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Upload every tensor of a ParamSet as device-resident buffers.
+pub fn upload(rt: &Runtime, store: &mut DeviceStore, set: &ParamSet) -> Result<()> {
+    for (name, t) in set.iter() {
+        store.put_host(&rt.client, name, &HostValue::F32(t.clone()))?;
+    }
+    Ok(())
+}
+
+/// Full-weight pretraining on one task mixture (produces the "pretrained
+/// base model" the SQFT pipeline starts from; also the ~100M-scale loss-
+/// curve driver for EXPERIMENTS.md).
+pub struct Pretrainer<'a> {
+    rt: &'a Runtime,
+    config: String,
+    pub base: ParamSet,
+    opt: ParamSet,
+    step: usize,
+}
+
+impl<'a> Pretrainer<'a> {
+    pub fn new(rt: &'a Runtime, config: &str, base: ParamSet) -> Pretrainer<'a> {
+        let opt = crate::model::init_pretrain_opt(&base);
+        Pretrainer { rt, config: config.to_string(), base, opt, step: 0 }
+    }
+
+    pub fn step_batch(&mut self, batch: &Batch, lr: f64) -> Result<f64> {
+        let exe = self.rt.executable(&self.config, "pretrain")?;
+        self.step += 1;
+        let scalars = [("step", self.step as f32), ("lr", lr as f32)];
+        let args = build_args(&exe.spec, None, &[&self.base, &self.opt],
+                              Some(batch), &scalars)?;
+        let outs = exe.run_mixed(&self.rt.client, &args)?;
+        // outputs: base' | m' | v' | loss, in base-spec order
+        let names: Vec<String> = exe.spec.outputs.clone();
+        for (name, t) in names.iter().zip(outs.iter()) {
+            if name == "loss" {
+                continue;
+            }
+            if let Some(stripped) = name.strip_prefix("m_") {
+                self.opt.insert(&format!("m_{stripped}"), t.clone());
+            } else if let Some(stripped) = name.strip_prefix("v_") {
+                self.opt.insert(&format!("v_{stripped}"), t.clone());
+            } else {
+                self.base.insert(name, t.clone());
+            }
+        }
+        Ok(outs.last().unwrap().data()[0] as f64)
+    }
+
+    /// Train on random batches from `samples` for `opts.steps` steps.
+    pub fn train(&mut self, samples: &[Sample], tok: &Tokenizer,
+                 opts: &TrainOpts) -> Result<LossCurve> {
+        let hyper = self.rt.model(&self.config)?.clone();
+        let batcher = Batcher::new(samples, tok, hyper.seq_len, hyper.batch);
+        let mut rng = Rng::new(opts.seed);
+        let mut curve = LossCurve::default();
+        for s in 0..opts.steps {
+            let batch = batcher.random_batch(&mut rng)?;
+            let loss = self.step_batch(&batch, opts.lr)?;
+            if s % opts.log_every == 0 || s + 1 == opts.steps {
+                curve.push(s, loss);
+            }
+        }
+        Ok(curve)
+    }
+}
+
+/// Adapter fine-tuning driver for one Method.
+pub struct Trainer<'a> {
+    rt: &'a Runtime,
+    config: String,
+    pub method: Method,
+    /// device-resident frozen state: base weights (+ adapter masks + QA
+    /// params), uploaded once
+    pub device: DeviceStore,
+    /// host-held frozen adapter masks (only if not device-resident)
+    pub adapters: ParamSet,
+    pub opt: ParamSet,
+    pub space: SearchSpace,
+    step: usize,
+    rng: Rng,
+    /// when set, disables per-step NLS sampling (LoRA ablation)
+    pub fixed_rank: bool,
+}
+
+impl<'a> Trainer<'a> {
+    /// `frozen` must hold: base weights, adapter mask_ tensors, and (QA)
+    /// qscales_/qzeros_ stacks.  They are uploaded once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rt: &'a Runtime,
+        config: &str,
+        method: Method,
+        frozen: &ParamSet,
+        adapters: ParamSet,
+        space: SearchSpace,
+        seed: u64,
+    ) -> Result<Trainer<'a>> {
+        let hyper = rt.model(config)?.clone();
+        let mut device = DeviceStore::new();
+        upload(rt, &mut device, frozen)?;
+        let opt = crate::model::init_opt(&hyper);
+        Ok(Trainer {
+            rt,
+            config: config.to_string(),
+            method,
+            device,
+            adapters,
+            opt,
+            space,
+            step: 0,
+            rng: Rng::new(seed ^ 0x5157465421),
+            fixed_rank: false,
+        })
+    }
+
+    /// The rank configuration used for one training step: NLS samples the
+    /// elastic space; LoRA always trains the max sub-adapter.
+    fn step_config(&mut self) -> crate::nls::Config {
+        if self.method.uses_nls() && !self.fixed_rank {
+            self.space.sample(&mut self.rng)
+        } else {
+            self.space.max_config()
+        }
+    }
+
+    pub fn step_batch(&mut self, batch: &Batch, lr: f64) -> Result<f64> {
+        let exe = self.rt.executable(&self.config, self.method.train_kind())?;
+        self.step += 1;
+        let cfg = self.step_config();
+        let rank_params = self.space.realize(&cfg)?;
+        let scalars = [("step", self.step as f32), ("lr", lr as f32)];
+        let args = build_args(
+            &exe.spec,
+            Some(&self.device),
+            &[&self.adapters, &rank_params, &self.opt],
+            Some(batch),
+            &scalars,
+        )?;
+        let outs = exe.run_mixed(&self.rt.client, &args)?;
+        for (name, t) in exe.spec.outputs.iter().zip(outs.iter()) {
+            if name == "loss" {
+                continue;
+            }
+            if name.starts_with("m_") || name.starts_with("v_") {
+                self.opt.insert(name, t.clone());
+            } else {
+                self.adapters.insert(name, t.clone());
+            }
+        }
+        Ok(outs.last().unwrap().data()[0] as f64)
+    }
+
+    pub fn train(&mut self, samples: &[Sample], tok: &Tokenizer,
+                 opts: &TrainOpts) -> Result<LossCurve> {
+        let hyper = self.rt.model(&self.config)?.clone();
+        let batcher = Batcher::new(samples, tok, hyper.seq_len, hyper.batch);
+        let mut rng = Rng::new(opts.seed);
+        let mut curve = LossCurve::default();
+        for s in 0..opts.steps {
+            let batch = batcher.random_batch(&mut rng)?;
+            let loss = self.step_batch(&batch, opts.lr)?;
+            if s % opts.log_every == 0 || s + 1 == opts.steps {
+                curve.push(s, loss);
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Fine-tuning state size in bytes (Table 7 fine-tuning-memory proxy):
+    /// trainable params + Adam moments, f32.
+    pub fn trainable_bytes(&self) -> usize {
+        let trainable: usize = self
+            .adapters
+            .iter()
+            .filter(|(n, _)| n.starts_with("a_") || n.starts_with("b_"))
+            .map(|(_, t)| t.len())
+            .sum();
+        (trainable + self.opt.total_elems()) * 4
+    }
+}
+
+/// Convenience: a Tensor of ones shaped like the adapter masks (dense
+/// methods pass all-ones masks).
+pub fn ones_like(t: &Tensor) -> Tensor {
+    Tensor::ones(t.shape())
+}

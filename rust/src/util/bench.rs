@@ -1,0 +1,62 @@
+//! Minimal benchmark harness (criterion is unavailable offline; benches are
+//! `harness = false` binaries run by `cargo bench`).
+//!
+//! Prints one line per benchmark in a stable, grep-able format:
+//!   bench <name> ... mean 12.34ms  p50 12.10ms  min 11.80ms  max 13.20ms  (n=20)
+
+use super::{summarize, Summary};
+use std::time::Instant;
+
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub ms: Summary,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} mean {:>9.3}ms  p50 {:>9.3}ms  min {:>9.3}ms  max {:>9.3}ms  (n={})",
+            self.name, self.ms.mean, self.ms.p50, self.ms.min, self.ms.max, self.iters
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchReport {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let report = BenchReport { name: name.to_string(), iters, ms: summarize(samples) };
+    report.print();
+    report
+}
+
+/// Throughput variant: returns items/sec from the mean.
+pub fn bench_throughput<F: FnMut() -> usize>(name: &str, warmup: usize, iters: usize,
+                                             mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut items_total = 0usize;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        items_total += f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let s = summarize(samples.clone());
+    let total_secs: f64 = samples.iter().sum::<f64>() / 1e3;
+    let thr = items_total as f64 / total_secs.max(1e-12);
+    println!(
+        "bench {:<44} mean {:>9.3}ms  p50 {:>9.3}ms  throughput {:>10.1}/s  (n={})",
+        name, s.mean, s.p50, thr, iters
+    );
+    thr
+}

@@ -1,0 +1,60 @@
+//! Shared utilities: offline JSON, CLI arg parsing, timing helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod json;
+
+use std::time::Instant;
+
+/// Simple scoped timer for the perf logs (EXPERIMENTS.md §Perf).
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Mean/std/percentile summary for latency series.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(mut xs: Vec<f64>) -> Summary {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let pct = |p: f64| xs[((xs.len() as f64 - 1.0) * p).round() as usize];
+    Summary { mean, p50: pct(0.5), p95: pct(0.95), min: xs[0], max: xs[xs.len() - 1] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles() {
+        let s = summarize((1..=100).map(|x| x as f64).collect());
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p95 - 95.0).abs() <= 1.0);
+    }
+}

@@ -1,0 +1,78 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` over `cases` random inputs
+//! drawn by `gen`; on failure it reports the failing case index and the
+//! case's debug form, then re-runs a simple shrink loop when the generator
+//! supports it (numeric tuples shrink toward small values by re-drawing
+//! with a halved size hint).
+
+use crate::tensor::Rng;
+
+/// A size-hinted generator: draws a case given (rng, size).
+pub trait Gen<T> {
+    fn draw(&self, rng: &mut Rng, size: usize) -> T;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen<T> for F {
+    fn draw(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Run a property over `cases` random inputs.  Panics with a reproducible
+/// seed + shrunk case on violation.
+pub fn forall<T: std::fmt::Debug, G: Gen<T>>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: G,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let size = 2 + (i * 30) / cases.max(1); // grow sizes over the run
+        let case = gen.draw(&mut rng, size);
+        if let Err(msg) = check(&case) {
+            // shrink: re-draw at smaller sizes from the same stream until
+            // we find a smaller failing case (bounded effort)
+            let mut smallest: Option<(usize, T)> = None;
+            let mut srng = Rng::new(seed ^ 0xDEAD);
+            for s in (2..=size).rev() {
+                for _ in 0..20 {
+                    let c = gen.draw(&mut srng, s);
+                    if check(&c).is_err() {
+                        smallest = Some((s, c));
+                    }
+                }
+            }
+            match smallest {
+                Some((s, c)) => panic!(
+                    "property '{name}' failed at case {i} (seed {seed}): {msg}\n\
+                     shrunk (size {s}): {c:#?}"),
+                None => panic!(
+                    "property '{name}' failed at case {i} (seed {seed}): {msg}\n\
+                     case: {case:#?}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall("abs_nonneg", 1, 100,
+            |rng: &mut Rng, size| rng.normal() * size as f32,
+            |x| if x.abs() >= 0.0 { Ok(()) } else { Err("neg".into()) });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_small' failed")]
+    fn catches_violation() {
+        forall("always_small", 2, 200,
+            |rng: &mut Rng, size| rng.next_f32() * size as f32,
+            |x| if *x < 5.0 { Ok(()) } else { Err(format!("{x} >= 5")) });
+    }
+}

@@ -1,0 +1,156 @@
+//! Failure-injection tests: the coordinator must fail loudly and precisely
+//! on corrupted artifacts, mismatched shapes, and invalid states — not
+//! produce silently-wrong science.
+
+use sqft::data::{Sample, Tokenizer};
+use sqft::model::{checkpoint, ParamSet};
+use sqft::runtime::{args::build_args, DeviceStore, HostValue, Manifest, Runtime};
+use sqft::tensor::{Rng, Tensor};
+use sqft::util::json::Json;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() { Some(dir) } else { None }
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = std::env::temp_dir().join("sqft_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json !").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), r#"{"version":1}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err()); // missing keys
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wrong_input_shape_rejected_before_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.shape_executable("wanda_64x64").unwrap();
+    let mut rng = Rng::new(1);
+    let w_bad = Tensor::randn(&mut rng, &[32, 64], 1.0); // wrong rows
+    let norms = Tensor::randn(&mut rng, &[64], 1.0);
+    let err = exe.run(&rt.client, &[w_bad.into(), norms.into()]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("wants") && msg.contains("got"), "{msg}");
+}
+
+#[test]
+fn wrong_input_count_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.shape_executable("wanda_64x64").unwrap();
+    let mut rng = Rng::new(1);
+    let w = Tensor::randn(&mut rng, &[64, 64], 1.0);
+    let err = exe.run(&rt.client, &[w.into()]).unwrap_err();
+    assert!(format!("{err:#}").contains("expected 2 inputs"));
+}
+
+#[test]
+fn unknown_artifact_kinds_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    assert!(rt.executable("sqft-tiny", "nonexistent-kind").is_err());
+    assert!(rt.executable("not-a-config", "eval").is_err());
+    assert!(rt.shape_executable("wanda_1x1").is_err());
+}
+
+#[test]
+fn build_args_reports_missing_source() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.executable("sqft-tiny", "eval").unwrap();
+    let empty = ParamSet::new();
+    let dev = DeviceStore::new();
+    let err = match build_args(&exe.spec, Some(&dev), &[&empty], None, &[]) {
+        Err(e) => e,
+        Ok(_) => panic!("expected error"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no source for artifact input"), "{msg}");
+}
+
+#[test]
+fn build_args_rejects_mis_shaped_host_tensor() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.executable("sqft-tiny", "eval").unwrap();
+    let mut bad = ParamSet::new();
+    bad.insert("embed", Tensor::zeros(&[2, 2])); // wrong shape
+    let dev = DeviceStore::new();
+    let err = match build_args(&exe.spec, Some(&dev), &[&bad], None, &[]) {
+        Err(e) => e,
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(format!("{err:#}").contains("host tensor shape"));
+}
+
+#[test]
+fn truncated_checkpoint_rejected() {
+    let dir = std::env::temp_dir().join("sqft_trunc_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("x.ckpt");
+    let mut p = ParamSet::new();
+    p.insert("w", Tensor::ones(&[8, 8]));
+    checkpoint::save(&p, &path, Json::Null).unwrap();
+    // truncate the data section
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 17]).unwrap();
+    assert!(checkpoint::load(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn overlong_sample_rejected_not_truncated() {
+    let tok = Tokenizer::new();
+    let s = Sample {
+        prompt: "Q:".to_string() + &"9+9+".repeat(30),
+        answer: "1.".into(),
+    };
+    // silent truncation would corrupt training data; must be an error
+    assert!(sqft::data::encode_sample(&tok, &s, 48).is_err());
+}
+
+#[test]
+fn corrupt_hlo_text_fails_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir().join("sqft_bad_hlo");
+    std::fs::create_dir_all(&tmp).unwrap();
+    // copy the manifest but break one artifact file
+    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().map(|e| e == "txt").unwrap_or(false) {
+            let name = p.file_name().unwrap();
+            if name.to_string_lossy() == "wanda_64x64.hlo.txt" {
+                std::fs::write(tmp.join(name), "HloModule garbage !!!").unwrap();
+            } else {
+                std::fs::copy(&p, tmp.join(name)).unwrap();
+            }
+        }
+    }
+    let rt = Runtime::new(&tmp).unwrap();
+    assert!(rt.shape_executable("wanda_64x64").is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn device_store_missing_key_is_clear() {
+    let d = DeviceStore::new();
+    let err = match d.get("nope") {
+        Err(e) => e,
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(format!("{err:#}").contains("missing 'nope'"));
+    let _ = HostValue::F32(Tensor::zeros(&[1])); // exercise the type
+}

@@ -1,0 +1,204 @@
+//! Logit-level merge-equivalence tests (the paper's Figures 1/3 claims,
+//! checked as functional identities rather than accuracy coincidences).
+//!
+//! For random weights/adapters/masks, the *unmerged* eval (base + adapter
+//! path through the fused L1 kernels) and the *merged* eval (folded weights,
+//! no adapter) must produce logits equal up to f32 reassociation noise.
+
+use sqft::model::{init_adapters, init_base, ParamSet};
+use sqft::nls::SearchSpace;
+use sqft::peft::{adapter_delta, fake_quant_host};
+use sqft::pipeline::dense_adapter_masks;
+use sqft::runtime::{args::build_args, DeviceStore, ModelHyper, Runtime};
+use sqft::tensor::{Rng, Tensor};
+use sqft::train::upload;
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn random_masks(hyper: &ModelHyper, rng: &mut Rng, sparsity: f32) -> ParamSet {
+    let mut p = ParamSet::new();
+    for m in &hyper.mods {
+        let (out, inp) = hyper.mod_dims(m);
+        let data: Vec<f32> = (0..hyper.n_layers * out * inp)
+            .map(|_| (rng.next_f32() >= sparsity) as i32 as f32)
+            .collect();
+        p.insert(&format!("mask_{m}"), Tensor::new(&[hyper.n_layers, out, inp], data).unwrap());
+    }
+    p
+}
+
+fn random_tokens(hyper: &ModelHyper, rng: &mut Rng) -> sqft::data::Batch {
+    let n = hyper.batch * hyper.seq_len;
+    sqft::data::Batch {
+        tokens: (0..n).map(|_| rng.below(hyper.vocab) as i32).collect(),
+        targets: vec![0; n],
+        loss_mask: vec![0.0; n],
+        batch: hyper.batch,
+        seq: hyper.seq_len,
+        real: hyper.batch,
+    }
+}
+
+fn eval_logits(rt: &Runtime, config: &str, kind: &str, frozen: &ParamSet,
+               host: &[&ParamSet], batch: &sqft::data::Batch) -> Tensor {
+    let exe = rt.executable(config, kind).unwrap();
+    let mut dev = DeviceStore::new();
+    upload(rt, &mut dev, frozen).unwrap();
+    let args = build_args(&exe.spec, Some(&dev), host, Some(batch), &[]).unwrap();
+    exe.run_mixed(&rt.client, &args).unwrap().remove(0)
+}
+
+/// Fold adapters into base on the host (Eq. 2 / Eq. 3).
+fn fold(hyper: &ModelHyper, base: &ParamSet, adapters: &ParamSet,
+        masks: &ParamSet, rank: &ParamSet,
+        qa: Option<(&ParamSet, f32)>) -> ParamSet {
+    let mut merged = base.clone();
+    for m in &hyper.mods {
+        let wkey = ModelHyper::weight_key(m);
+        let mut w = merged.get(wkey).unwrap().clone();
+        for l in 0..hyper.n_layers {
+            let delta = adapter_delta(
+                &adapters.get(&format!("a_{m}")).unwrap().index0(l),
+                &adapters.get(&format!("b_{m}")).unwrap().index0(l),
+                Some(&masks.get(&format!("mask_{m}")).unwrap().index0(l)),
+                &rank.get(&format!("rankmask_{m}")).unwrap().index0(l),
+                rank.get(&format!("scale_{m}")).unwrap().data()[l]).unwrap();
+            let mut folded = w.index0(l).add(&delta).unwrap();
+            if let Some((qa, qmax)) = qa {
+                let (_, dq) = fake_quant_host(
+                    &folded,
+                    &qa.get(&format!("qscales_{m}")).unwrap().index0(l),
+                    &qa.get(&format!("qzeros_{m}")).unwrap().index0(l),
+                    qmax).unwrap();
+                folded = dq;
+            }
+            w.set_index0(l, &folded);
+        }
+        merged.insert(wkey, w);
+    }
+    merged
+}
+
+#[test]
+fn sparsepeft_logits_match_after_merge() {
+    let Some(rt) = runtime() else { return };
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let mut rng = Rng::new(21);
+    let base = init_base(&hyper, &mut rng);
+    let mut adapters = init_adapters(&hyper, &mut rng, 4.0);
+    // non-trivial B so the adapter actually does something
+    for m in &hyper.mods {
+        let b = adapters.get(&format!("b_{m}")).unwrap();
+        adapters.insert(&format!("b_{m}"), Tensor::randn(&mut rng, b.shape(), 0.05));
+    }
+    let masks = random_masks(&hyper, &mut rng, 0.5);
+    let space = SearchSpace::default_for(&hyper, 4.0);
+    let cfg = space.heuristic_config();
+    let rank = space.realize(&cfg).unwrap();
+    let batch = random_tokens(&hyper, &mut rng);
+
+    // unmerged: base + masked adapter path
+    let mut frozen = base.clone();
+    for (n, t) in masks.iter() {
+        frozen.insert(n, t.clone());
+    }
+    let unmerged = eval_logits(&rt, config, "eval", &frozen, &[&adapters, &rank], &batch);
+
+    // merged: folded weights, no-op adapter
+    let merged_base = fold(&hyper, &base, &adapters, &masks, &rank, None);
+    let mut frozen_m = merged_base.clone();
+    for (n, t) in dense_adapter_masks(&hyper).iter() {
+        frozen_m.insert(n, t.clone());
+    }
+    let mut noop = init_adapters(&hyper, &mut Rng::new(1), 1.0);
+    for m in &hyper.mods {
+        let b = noop.get(&format!("b_{m}")).unwrap();
+        noop.insert(&format!("b_{m}"), Tensor::zeros(b.shape()));
+    }
+    let merged = eval_logits(&rt, config, "eval", &frozen_m, &[&noop, &rank], &batch);
+
+    let mut max_abs = 0.0f32;
+    let mut scale = 0.0f32;
+    for (a, b) in unmerged.data().iter().zip(merged.data()) {
+        max_abs = max_abs.max((a - b).abs());
+        scale = scale.max(a.abs());
+    }
+    assert!(max_abs <= 1e-3 * scale.max(1.0),
+        "merged logits deviate: max_abs={max_abs} scale={scale}");
+}
+
+#[test]
+fn qa_sparsepeft_logits_match_after_merge() {
+    let Some(rt) = runtime() else { return };
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let mut rng = Rng::new(31);
+    let base = init_base(&hyper, &mut rng);
+    let mut adapters = init_adapters(&hyper, &mut rng, 4.0);
+    for m in &hyper.mods {
+        let b = adapters.get(&format!("b_{m}")).unwrap();
+        adapters.insert(&format!("b_{m}"), Tensor::randn(&mut rng, b.shape(), 0.05));
+    }
+    let masks = random_masks(&hyper, &mut rng, 0.5);
+    // shared quant params
+    let mut qa = ParamSet::new();
+    for m in &hyper.mods {
+        let (out, _) = hyper.mod_dims(m);
+        let g = hyper.mod_groups(m);
+        qa.insert(&format!("qscales_{m}"),
+                  Tensor::rand_uniform(&mut rng, &[hyper.n_layers, out, g], 0.01, 0.08));
+        qa.insert(&format!("qzeros_{m}"),
+                  Tensor::new(&[hyper.n_layers, out, g],
+                      (0..hyper.n_layers * out * g).map(|_| rng.below(16) as f32)
+                          .collect()).unwrap());
+    }
+    qa.insert("qmax", Tensor::scalar(15.0));
+    let space = SearchSpace::default_for(&hyper, 4.0);
+    let cfg = space.heuristic_config();
+    let rank = space.realize(&cfg).unwrap();
+    let batch = random_tokens(&hyper, &mut rng);
+
+    // unmerged through eval_qa (on-the-fly fake-quantized merge)
+    let mut frozen = base.clone();
+    for (n, t) in masks.iter() {
+        frozen.insert(n, t.clone());
+    }
+    for (n, t) in qa.iter() {
+        frozen.insert(n, t.clone());
+    }
+    let unmerged =
+        eval_logits(&rt, config, "eval_qa", &frozen, &[&adapters, &rank], &batch);
+
+    // merged via Eq. 3 on the host, then plain eval
+    let merged_base = fold(&hyper, &base, &adapters, &masks, &rank, Some((&qa, 15.0)));
+    let mut frozen_m = merged_base.clone();
+    for (n, t) in dense_adapter_masks(&hyper).iter() {
+        frozen_m.insert(n, t.clone());
+    }
+    let mut noop = init_adapters(&hyper, &mut Rng::new(1), 1.0);
+    for m in &hyper.mods {
+        let b = noop.get(&format!("b_{m}")).unwrap();
+        noop.insert(&format!("b_{m}"), Tensor::zeros(b.shape()));
+    }
+    let merged = eval_logits(&rt, config, "eval", &frozen_m, &[&noop, &rank], &batch);
+
+    let mut max_abs = 0.0f32;
+    let mut scale = 0.0f32;
+    for (a, b) in unmerged.data().iter().zip(merged.data()) {
+        max_abs = max_abs.max((a - b).abs());
+        scale = scale.max(a.abs());
+    }
+    // rounding boundaries can flip a code when host/XLA f32 orders differ;
+    // the tolerance reflects one quant step through the network
+    assert!(max_abs <= 5e-3 * scale.max(1.0),
+        "QA merged logits deviate: max_abs={max_abs} scale={scale}");
+}

@@ -1,0 +1,138 @@
+//! End-to-end integration: the full SQFT pipeline on sqft-tiny.
+//!
+//! Exercises every layer: pretraining through the plain-jnp artifact,
+//! Wanda calibration + masking through the calib/wanda artifacts, GPTQ on
+//! the host, adapter fine-tuning through the Pallas-kernel train artifacts,
+//! and the paper's central merge-equivalence claims.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::{init_base, linear_keys};
+use sqft::nls::SearchSpace;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::tensor::Rng;
+use sqft::train::{Pretrainer, TrainOpts};
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn full_sqft_pipeline_on_tiny() {
+    let Some(rt) = runtime() else { return };
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let ds = Dataset::generate(Task::SynBoolq, 800, 0, 120, 42);
+
+    // --- 1. pretrain a base model on the task --------------------------
+    let mut rng = Rng::new(7);
+    let base0 = init_base(&hyper, &mut rng);
+    let mut pre = Pretrainer::new(&rt, config, base0);
+    let opts = TrainOpts { steps: 120, lr: 2e-3, log_every: 30, seed: 7, fixed_rank: false };
+    let curve = pre.train(&ds.train, &tok, &opts).unwrap();
+    assert!(curve.last().unwrap() < curve.first().unwrap(),
+        "pretraining loss must fall: {:?}", curve.points);
+    let pretrained = pre.base.clone();
+
+    // --- 2. prepare: wanda 50% + gptq ----------------------------------
+    let mut rng = Rng::new(9);
+    let prepared = pipeline::prepare(
+        &rt, config, &pretrained, Method::QaSparsePeft, 0.5,
+        &ds.train, &tok, 2, &mut rng).unwrap();
+    let s = prepared.measured_sparsity();
+    assert!((s - 0.5).abs() < 0.02, "sparsity {s} != 0.5");
+    assert!(prepared.qa.is_some() && prepared.codes.is_some());
+
+    // dense baseline accuracy vs sparse+quant accuracy: compression hurts
+    let acc_sparse = pipeline::evaluate_base(&rt, config, &prepared, &ds.test, &tok)
+        .unwrap();
+    // (not asserted > because tiny models are noisy; just ensure it runs)
+    assert!(acc_sparse.total == 120);
+
+    // --- 3. fine-tune with QA-SparsePEFT -------------------------------
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha).unwrap();
+    let topts = TrainOpts { steps: 60, lr: 1e-3, log_every: 20, seed: 11, fixed_rank: false };
+    let (trainer, tcurve) =
+        pipeline::finetune(&rt, config, &prepared, space, &ds.train, &tok, &topts)
+            .unwrap();
+    assert!(tcurve.last().unwrap() < tcurve.first().unwrap(),
+        "fine-tuning loss must fall: {:?}", tcurve.points);
+
+    // --- 4. merge + the paper's equivalence claims ---------------------
+    let cfg = trainer.space.heuristic_config();
+    let unmerged = pipeline::evaluate_unmerged(
+        &rt, config, &prepared, &trainer, &cfg, &ds.test, &tok).unwrap();
+    let merged = pipeline::merged_state(&prepared, &trainer, &cfg).unwrap();
+    // sparsity is preserved exactly (Eq. 2 / Eq. 3 with shared z,s)
+    assert!(merged.sparsity_after >= merged.sparsity_before - 1e-9,
+        "merge lost sparsity: {} -> {}", merged.sparsity_before, merged.sparsity_after);
+    let macc = pipeline::evaluate_merged(
+        &rt, config, &prepared, &merged, &ds.test, &tok).unwrap();
+    // merged accuracy == unmerged accuracy (same function by construction)
+    assert!((macc.correct as i64 - unmerged.correct as i64).abs() <= 1,
+        "QA merge changed accuracy: {} vs {}", macc.accuracy(), unmerged.accuracy());
+
+    // --- 5. non-mergeable methods refuse to merge -----------------------
+    let prepared_lora = pipeline::prepare(
+        &rt, config, &pretrained, Method::Lora, 0.5, &ds.train, &tok, 2,
+        &mut Rng::new(13)).unwrap();
+    let space2 = SearchSpace::default_for(&prepared_lora.hyper, alpha);
+    let (trainer2, _) = pipeline::finetune(
+        &rt, config, &prepared_lora, space2, &ds.train, &tok,
+        &TrainOpts { steps: 2, lr: 1e-3, log_every: 1, seed: 1, fixed_rank: false }).unwrap();
+    let cfg2 = trainer2.space.max_config();
+    assert!(pipeline::merged_state(&prepared_lora, &trainer2, &cfg2).is_err());
+}
+
+#[test]
+fn sparsepeft_merge_is_exact() {
+    // SparsePEFT (no quant): merged forward must match unmerged bit-for-bit
+    // at the logits level (modulo f32 reassociation) — paper Eq. 2.
+    let Some(rt) = runtime() else { return };
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let ds = Dataset::generate(Task::SynArcE, 300, 0, 80, 5);
+    let mut rng = Rng::new(3);
+    let base0 = init_base(&hyper, &mut rng);
+    let mut pre = Pretrainer::new(&rt, config, base0);
+    pre.train(&ds.train, &tok,
+              &TrainOpts { steps: 30, lr: 2e-3, log_every: 10, seed: 3, fixed_rank: false }).unwrap();
+
+    let prepared = pipeline::prepare(
+        &rt, config, &pre.base, Method::SparsePeft, 0.5, &ds.train, &tok, 2,
+        &mut Rng::new(4)).unwrap();
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha).unwrap();
+    let (trainer, _) = pipeline::finetune(
+        &rt, config, &prepared, space, &ds.train, &tok,
+        &TrainOpts { steps: 25, lr: 1e-3, log_every: 10, seed: 5, fixed_rank: false }).unwrap();
+
+    let cfg = trainer.space.heuristic_config();
+    let unmerged = pipeline::evaluate_unmerged(
+        &rt, config, &prepared, &trainer, &cfg, &ds.test, &tok).unwrap();
+    let merged = pipeline::merged_state(&prepared, &trainer, &cfg).unwrap();
+    assert!(merged.sparsity_after >= merged.sparsity_before - 1e-9);
+    let macc = pipeline::evaluate_merged(
+        &rt, config, &prepared, &merged, &ds.test, &tok).unwrap();
+    assert!((macc.correct as i64 - unmerged.correct as i64).abs() <= 1);
+    // per-weight sparsity pattern is identical
+    for wkey in linear_keys() {
+        let before = prepared.base.get(wkey).unwrap();
+        let after = merged.base.get(wkey).unwrap();
+        for (b, a) in before.data().iter().zip(after.data()) {
+            if *b == 0.0 {
+                assert_eq!(*a, 0.0, "{wkey}: zero resurrected by merge");
+            }
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Property-based tests on the coordinator invariants (DESIGN.md §6).
+//!
+//! These are the claims the paper's correctness rests on, checked over
+//! randomized inputs: masks survive merging, GPTQ never loses to RTN and
+//! never resurrects zeros, INT4 packing round-trips, the NLS space/heuristic
+//! behave as specified, and the batcher preserves counts.
+
+use sqft::data::{Batcher, Dataset, Sample, Task, Tokenizer};
+use sqft::nls::SearchSpace;
+use sqft::peft::{adapter_delta, fake_quant_host};
+use sqft::quant::pack::{pack_int4, unpack_int4};
+use sqft::quant::{gptq_quantize, rtn_quantize};
+use sqft::runtime::ModelHyper;
+use sqft::sparsity::{topk_row_mask, wanda_mask_host};
+use sqft::tensor::{Rng, Tensor};
+use sqft::util::prop::forall;
+use std::collections::BTreeMap;
+
+fn hyper(l: usize, r: usize) -> ModelHyper {
+    let mods: Vec<String> =
+        ["q", "k", "v", "up", "down"].iter().map(|s| s.to_string()).collect();
+    let mut mod_dims = BTreeMap::new();
+    for m in &mods {
+        mod_dims.insert(m.clone(), (32usize, 32usize));
+    }
+    ModelHyper {
+        name: "prop".into(), vocab: 64, d_model: 32, n_heads: 2, d_ff: 64,
+        seq_len: 48, batch: 8, r_max: r, group_size: 16, param_count: 0,
+        n_layers: l, mods, mod_dims,
+    }
+}
+
+#[test]
+fn prop_merge_never_densifies() {
+    // S{W^p + (BA)⊙M} ⊆ S{W^p} for arbitrary adapters (paper Eq. 1-2)
+    forall("merge_never_densifies", 11, 60,
+        |rng: &mut Rng, size| {
+            let (out, inp, r) = (2 + size, 2 + size, 1 + size / 4);
+            let a = Tensor::randn(rng, &[r, inp], 1.0);
+            let b = Tensor::randn(rng, &[out, r], 1.0);
+            let mask_data: Vec<f32> =
+                (0..out * inp).map(|_| (rng.next_f32() > 0.5) as i32 as f32).collect();
+            let mask = Tensor::new(&[out, inp], mask_data).unwrap();
+            let rm_data: Vec<f32> =
+                (0..r).map(|i| (i < 1 + rng.below(r)) as i32 as f32).collect();
+            let rm = Tensor::new(&[r], rm_data).unwrap();
+            let w = Tensor::randn(rng, &[out, inp], 1.0).mul(&mask).unwrap();
+            (w, a, b, mask, rm)
+        },
+        |(w, a, b, mask, rm)| {
+            let delta = adapter_delta(a, b, Some(mask), rm, 1.3).map_err(|e| e.to_string())?;
+            let merged = w.add(&delta).map_err(|e| e.to_string())?;
+            for i in 0..w.rows() {
+                for j in 0..w.cols() {
+                    if mask.at2(i, j) == 0.0 && merged.at2(i, j) != 0.0 {
+                        return Err(format!("zero resurrected at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_gptq_beats_or_matches_rtn_and_preserves_zeros() {
+    forall("gptq_vs_rtn", 13, 25,
+        |rng: &mut Rng, size| {
+            let n = 8 + 2 * size; // even, >= group
+            let out = 4 + size;
+            let w0 = Tensor::randn(rng, &[out, n], 0.5);
+            let mask_data: Vec<f32> =
+                (0..out * n).map(|_| (rng.next_f32() > 0.4) as i32 as f32).collect();
+            let mask = Tensor::new(&[out, n], mask_data).unwrap();
+            let w = w0.mul(&mask).unwrap();
+            let x = Tensor::randn(rng, &[3 * n, n], 1.0);
+            let mut h = Tensor::zeros(&[n, n]);
+            x.accumulate_gram(&mut h);
+            (w, h, mask)
+        },
+        |(w, h, mask)| {
+            let gs = if w.cols() % 8 == 0 { 8 } else { w.cols() };
+            let g = gptq_quantize(w, h, gs, 4, Some(mask), 0.05)
+                .map_err(|e| e.to_string())?;
+            let r = rtn_quantize(w, gs, 4, Some(mask)).map_err(|e| e.to_string())?;
+            let (ge, re) = (g.weighted_err(w, h), r.weighted_err(w, h));
+            if ge > re * 1.05 + 1e-9 {
+                return Err(format!("gptq err {ge} > rtn err {re}"));
+            }
+            for i in 0..w.rows() {
+                for j in 0..w.cols() {
+                    if mask.at2(i, j) == 0.0 && g.dequant.at2(i, j) != 0.0 {
+                        return Err(format!("gptq resurrected zero at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_int4_pack_roundtrip() {
+    forall("int4_roundtrip", 17, 100,
+        |rng: &mut Rng, size| {
+            let (out, inp) = (1 + size, 2 * (1 + size));
+            Tensor::new(&[out, inp],
+                (0..out * inp).map(|_| rng.below(16) as f32).collect()).unwrap()
+        },
+        |codes| {
+            let bytes = pack_int4(codes).map_err(|e| e.to_string())?;
+            if bytes.len() != codes.len() / 2 {
+                return Err("wrong packed size".into());
+            }
+            let back = unpack_int4(&bytes, codes.rows(), codes.cols())
+                .map_err(|e| e.to_string())?;
+            if &back != codes {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_fake_quant_projection_and_range() {
+    // fq is idempotent and its codes stay in [0, qmax]
+    forall("fake_quant_projection", 19, 60,
+        |rng: &mut Rng, size| {
+            let (out, g, gs) = (1 + size, 1 + size / 8, 4);
+            let w = Tensor::randn(rng, &[out, g * gs], 1.0);
+            let scales = Tensor::rand_uniform(rng, &[out, g], 0.02, 0.3);
+            let zeros = Tensor::new(&[out, g],
+                (0..out * g).map(|_| rng.below(16) as f32).collect()).unwrap();
+            (w, scales, zeros)
+        },
+        |(w, scales, zeros)| {
+            let (codes, dq) =
+                fake_quant_host(w, scales, zeros, 15.0).map_err(|e| e.to_string())?;
+            if codes.data().iter().any(|&c| !(0.0..=15.0).contains(&c) || c != c.round()) {
+                return Err("code out of range/non-integral".into());
+            }
+            let (_, dq2) =
+                fake_quant_host(&dq, scales, zeros, 15.0).map_err(|e| e.to_string())?;
+            for (a, b) in dq.data().iter().zip(dq2.data()) {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("not idempotent: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_wanda_mask_fraction_and_monotone() {
+    forall("wanda_fraction", 23, 60,
+        |rng: &mut Rng, size| {
+            let (m, n) = (1 + size, 4 + 2 * size);
+            let w = Tensor::randn(rng, &[m, n], 1.0);
+            let norms = Tensor::rand_uniform(rng, &[n], 0.01, 2.0);
+            let sp = (rng.below(9) + 1) as f64 / 10.0;
+            (w, norms, sp)
+        },
+        |(w, norms, sp)| {
+            let mask = wanda_mask_host(w, norms, *sp);
+            let drop = ((*sp * w.cols() as f64).round()) as usize;
+            let keep = (w.cols() - drop) as f32;
+            for i in 0..w.rows() {
+                let kept: f32 = mask.row(i).iter().sum();
+                if kept != keep {
+                    return Err(format!("row {i}: kept {kept} != {keep}"));
+                }
+            }
+            // monotone: raising sparsity never keeps a dropped weight
+            let sp2 = (sp + 0.1).min(1.0);
+            let mask2 = topk_row_mask(
+                &{
+                    let mut s = Tensor::zeros(&[w.rows(), w.cols()]);
+                    for i in 0..w.rows() {
+                        for j in 0..w.cols() {
+                            s.set2(i, j, w.at2(i, j).abs() * norms.data()[j]);
+                        }
+                    }
+                    s
+                },
+                sp2,
+            );
+            for (a, b) in mask2.data().iter().zip(mask.data()) {
+                if *a == 1.0 && *b == 0.0 {
+                    return Err("higher sparsity kept a weight lower dropped".into());
+                }
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_search_space_realize_prefix_and_scale() {
+    forall("nls_realize", 29, 60,
+        |rng: &mut Rng, size| {
+            let l = 1 + size / 8;
+            let r = 4 + (size / 4) * 2;
+            let n_choices = 2 + rng.below(3);
+            let mut choices: Vec<usize> =
+                (0..n_choices).map(|_| 1 + rng.below(r)).collect();
+            choices.sort_unstable();
+            choices.dedup();
+            let h = hyper(l, r);
+            let space = SearchSpace::new(&h, choices, 2.0 * r as f32).unwrap();
+            let mut rng2 = rng.fork(1);
+            let cfg = space.sample(&mut rng2);
+            (space, cfg)
+        },
+        |(space, cfg)| {
+            let p = space.realize(cfg).map_err(|e| e.to_string())?;
+            for (mi, m) in space.mods.iter().enumerate() {
+                let rm = p.get(&format!("rankmask_{m}")).map_err(|e| e.to_string())?;
+                let sc = p.get(&format!("scale_{m}")).map_err(|e| e.to_string())?;
+                for l in 0..space.n_layers {
+                    let r = space.rank_of(cfg, space.instance(l, mi));
+                    let row = &rm.data()[l * space.r_max..(l + 1) * space.r_max];
+                    // prefix of ones, then zeros
+                    for (j, &v) in row.iter().enumerate() {
+                        let want = (j < r) as i32 as f32;
+                        if v != want {
+                            return Err(format!("{m}/{l}: rankmask[{j}]={v}, want {want}"));
+                        }
+                    }
+                    let want_scale = space.alpha / r as f32;
+                    if (sc.data()[l] - want_scale).abs() > 1e-6 {
+                        return Err(format!("{m}/{l}: scale {}", sc.data()[l]));
+                    }
+                }
+            }
+            // heuristic is the median choice everywhere
+            let h = space.heuristic_config();
+            if h.iter().any(|&i| i != space.choices.len() / 2) {
+                return Err("heuristic not median".into());
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_batcher_counts_and_masks() {
+    forall("batcher_counts", 31, 40,
+        |rng: &mut Rng, size| {
+            let task = *rng.choose(&Task::all());
+            let n = 1 + size * 3;
+            (task, n, rng.next_u64())
+        },
+        |(task, n, seed)| {
+            let tok = Tokenizer::new();
+            let ds = Dataset::generate(*task, *n, 0, 0, *seed);
+            let mut b = Batcher::new(&ds.train, &tok, 48, 8);
+            let mut total = 0;
+            let mut batches = 0;
+            while let Some(batch) = b.next_batch().map_err(|e| e.to_string())? {
+                total += batch.real;
+                batches += 1;
+                if batch.tokens.len() != 8 * 48 {
+                    return Err("bad batch shape".into());
+                }
+                // every row has at least one answer position, and masked
+                // targets are never PAD
+                for bi in 0..batch.real {
+                    let row_mask = &batch.loss_mask[bi * 48..(bi + 1) * 48];
+                    if !row_mask.iter().any(|&m| m == 1.0) {
+                        return Err("row without answer mask".into());
+                    }
+                    for (i, &m) in row_mask.iter().enumerate() {
+                        if m == 1.0 && batch.targets[bi * 48 + i] == 0 {
+                            return Err("masked target is PAD".into());
+                        }
+                    }
+                }
+            }
+            if total != *n || batches != n.div_ceil(8) {
+                return Err(format!("covered {total}/{n} in {batches} batches"));
+            }
+            Ok(())
+        });
+}
+
+#[test]
+fn prop_sample_answers_verifiable() {
+    // every generated MC sample's answer is one of the chars appearing in a
+    // small closed set, and math answers parse as integers
+    forall("answers_verifiable", 37, 100,
+        |rng: &mut Rng, _| {
+            let task = *rng.choose(&Task::all());
+            let mut r2 = rng.fork(2);
+            (task, task.gen_sample(&mut r2))
+        },
+        |(task, s): &(Task, Sample)| {
+            if !s.answer.ends_with('.') {
+                return Err("answer must end with '.'".into());
+            }
+            let body = &s.answer[..s.answer.len() - 1];
+            if task.is_multiple_choice() {
+                if body.len() != 1 {
+                    return Err(format!("MC answer '{body}' not single char"));
+                }
+            } else if body.parse::<i64>().is_err() {
+                return Err(format!("math answer '{body}' not an integer"));
+            }
+            Ok(())
+        });
+}

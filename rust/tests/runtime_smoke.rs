@@ -1,0 +1,65 @@
+//! Integration probe: load + execute the tiny-config artifacts end to end.
+//! Requires `make artifacts` (skips with a message if absent).
+
+use sqft::runtime::{HostValue, Runtime};
+use sqft::tensor::{Rng, Tensor};
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn wanda_artifact_matches_host_math() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let w = Tensor::randn(&mut rng, &[64, 64], 1.0);
+    let norms = Tensor::rand_uniform(&mut rng, &[64], 0.1, 2.0);
+    let exe = rt.shape_executable("wanda_64x64").unwrap();
+    let out = exe.run(&rt.client, &[w.clone().into(), norms.clone().into()]).unwrap();
+    assert_eq!(out.len(), 1);
+    for i in 0..64 {
+        for j in 0..64 {
+            let want = w.at2(i, j).abs() * norms.data()[j];
+            assert!((out[0].at2(i, j) - want).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn eval_artifact_runs_and_outputs_logits() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("sqft-tiny").unwrap().clone();
+    let exe = rt.executable("sqft-tiny", "eval").unwrap();
+    let mut rng = Rng::new(2);
+    let mut inputs = Vec::new();
+    for spec in &exe.spec.inputs {
+        match spec.dtype {
+            sqft::runtime::DType::F32 => {
+                let t = if spec.name.starts_with("mask") || spec.name.starts_with("rankmask") {
+                    Tensor::ones(&spec.shape)
+                } else if spec.name.starts_with("ln") || spec.name == "final_ln" {
+                    Tensor::ones(&spec.shape)
+                } else {
+                    Tensor::randn(&mut rng, &spec.shape, 0.05)
+                };
+                inputs.push(HostValue::F32(t));
+            }
+            sqft::runtime::DType::I32 => {
+                let n: usize = spec.shape.iter().product();
+                let data: Vec<i32> =
+                    (0..n).map(|_| (rng.below(m.vocab)) as i32).collect();
+                inputs.push(HostValue::I32(spec.shape.clone(), data));
+            }
+        }
+    }
+    let out = exe.run(&rt.client, &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[m.batch, m.seq_len, m.vocab]);
+    assert!(out[0].data().iter().all(|x| x.is_finite()));
+}
