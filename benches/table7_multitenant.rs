@@ -1,0 +1,109 @@
+//! Multi-tenant extension of the Table 7 serving bench: throughput vs
+//! tenant count over one device-resident frozen base (registry → scheduler
+//! → engine), plus the merged-vs-unmerged per-tenant serving cost the
+//! paper's §2.5 argument turns on.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::nls::SearchSpace;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::report::Table;
+use sqft::runtime::Runtime;
+use sqft::serve::{benchmark_router, AdapterRegistry, Engine, Router, SchedulerOpts};
+use sqft::tensor::Rng;
+use sqft::train::TrainOpts;
+use sqft::util::bench::bench_throughput;
+use std::path::Path;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 600, 0, 50, 7);
+    let base = init_base(&hyper, &mut Rng::new(7));
+
+    println!("# table7 multitenant bench: throughput vs tenant count");
+    let prepared = pipeline::prepare(&rt, config, &base, Method::SparsePeft, 0.5,
+                                     &ds.train, &tok, 2, &mut Rng::new(9))?;
+    let frozen = prepared.frozen_set()?;
+    let max_tenants = 4usize;
+    let entries = pipeline::tenant_adapters(&rt, config, &prepared, max_tenants,
+                                            &ds.train, &tok, 5, 77)?;
+
+    // --- throughput vs tenant count over one frozen base ---------------
+    let n_requests = 48usize;
+    let mut table = Table::new(
+        "Throughput vs tenant count (one device-resident base)",
+        &["tenants", "served", "req/s", "avg batch fill", "batches", "aged"],
+    );
+    for &k in &[1usize, 2, 4] {
+        let engine = Engine::new(&rt, config, &frozen, None, "eval", 4)?;
+        let mut registry = AdapterRegistry::new(max_tenants);
+        let ids: Vec<String> = entries[..k].iter().map(|e| e.id.clone()).collect();
+        for e in &entries[..k] {
+            registry.register(&hyper, e.clone())?;
+        }
+        let mut router = Router::new(engine, registry);
+        let mut grng = Rng::new(11 + k as u64);
+        let requests: Vec<(Option<String>, String)> = (0..n_requests)
+            .map(|i| (Some(ids[i % k].clone()), task.gen_sample(&mut grng).prompt))
+            .collect();
+        let opts = SchedulerOpts { max_batch: hyper.batch,
+                                   aging: Duration::from_millis(20) };
+        let stats = benchmark_router(&mut router, requests,
+                                     Duration::from_millis(1), opts)?;
+        table.row(vec![
+            k.to_string(),
+            stats.total.served.to_string(),
+            format!("{:.1}", stats.total.throughput),
+            format!("{:.2}", stats.scheduler.avg_fill()),
+            stats.scheduler.batches.to_string(),
+            stats.scheduler.aged_batches.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // --- merged vs unmerged per-tenant serving cost ---------------------
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+    let topts = TrainOpts { steps: 5, lr: 1e-3, log_every: 5, seed: 1,
+                            fixed_rank: false };
+    let (trainer, _) = pipeline::finetune(&rt, config, &prepared, space,
+                                          &ds.train, &tok, &topts)?;
+    let cfg = trainer.space.heuristic_config();
+    let merged = pipeline::merged_state(&prepared, &trainer, &cfg)?;
+    let mut frozen_m = sqft::model::ParamSet::new();
+    for (n, v) in merged.base.iter() {
+        frozen_m.insert(n, v.clone());
+    }
+    for (n, v) in pipeline::dense_adapter_masks(&hyper).iter() {
+        frozen_m.insert(n, v.clone());
+    }
+    let engine_un = Engine::new(&rt, config, &frozen,
+                                Some((&trainer.adapters, &trainer.space, &cfg)),
+                                "eval", 4)?;
+    let engine_m = Engine::new(&rt, config, &frozen_m, None, "eval", 4)?;
+    let mut grng = Rng::new(3);
+    let prompts: Vec<String> =
+        (0..8).map(|_| task.gen_sample(&mut grng).prompt).collect();
+    let t_un = bench_throughput("serve_unmerged_per_tenant", 1, 8, || {
+        engine_un.generate_batch(&prompts).unwrap();
+        prompts.len()
+    });
+    let t_m = bench_throughput("serve_merged_per_tenant", 1, 8, || {
+        engine_m.generate_batch(&prompts).unwrap();
+        prompts.len()
+    });
+    println!("merged/unmerged per-tenant speedup: {:.2}x (paper §2.5: merged serves cheaper)",
+             t_m / t_un);
+    Ok(())
+}

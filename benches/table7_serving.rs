@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     let frozen_un = prepared.frozen_set()?;
     let engine_un = Engine::new(&rt, config, &frozen_un,
                                 Some((&trainer.adapters, &trainer.space, &cfg)),
-                                "eval_qa")?;
+                                "eval_qa", 6)?;
     let mut frozen_m = sqft::model::ParamSet::new();
     for (n, v) in merged.base.iter() {
         frozen_m.insert(n, v.clone());
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     for (n, v) in pipeline::dense_adapter_masks(&hyper).iter() {
         frozen_m.insert(n, v.clone());
     }
-    let engine_m = Engine::new(&rt, config, &frozen_m, None, "eval")?;
+    let engine_m = Engine::new(&rt, config, &frozen_m, None, "eval", 6)?;
 
     let mut grng = Rng::new(11);
     let prompts: Vec<String> =

@@ -96,18 +96,27 @@ fn main() -> anyhow::Result<()> {
             for (n, v) in sqft::pipeline::dense_adapter_masks(&hyper).iter() {
                 frozen.insert(n, v.clone());
             }
-            Engine::new(&h.rt, &h.model, &frozen, None, "eval")?
+            Engine::new(&h.rt, &h.model, &frozen, None, "eval", 6)?
         } else {
             let frozen = prepared.frozen_set()?;
             Engine::new(&h.rt, &h.model, &frozen,
                         Some((&trainer.adapters, &trainer.space, &cfg)),
-                        method.eval_kind())?
+                        method.eval_kind(), 6)?
         };
         let mut grng = sqft::tensor::Rng::new(7);
-        let prompts: Vec<String> =
-            (0..48).map(|_| task.gen_sample(&mut grng).prompt).collect();
-        let stats = sqft::serve::benchmark_engine(
-            &engine, prompts, std::time::Duration::from_millis(1))?;
+        let requests: Vec<(Option<String>, String)> = (0..48)
+            .map(|_| (None, task.gen_sample(&mut grng).prompt))
+            .collect();
+        // single-tenant flow through the engine's default adapter state;
+        // coalesce up to the artifact batch like the old serve loop did
+        let opts = sqft::serve::SchedulerOpts {
+            max_batch: hyper.batch,
+            ..Default::default()
+        };
+        let mut router = sqft::serve::Router::new(
+            engine, sqft::serve::AdapterRegistry::new(1));
+        let stats = sqft::serve::benchmark_router(
+            &mut router, requests, std::time::Duration::from_millis(1), opts)?;
 
         let quant = method.quantized_base();
         let merged = method.mergeable();
@@ -119,7 +128,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", storage(quant, merged)),
             format!("{:.2}", steps_per_sec),
             format!("{:.1}", ft_state_mb),
-            format!("{:.1}", stats.throughput),
+            format!("{:.1}", stats.total.throughput),
             format!("{:.1}", storage(quant, true)),
         ]);
         eprintln!("[table7] {} done", method.name());

@@ -6,7 +6,10 @@
 //!   pipeline                     — one end-to-end SQFT run (prepare → tune
 //!                                  → merge → eval) for a chosen method
 //!   search                       — hill-climbing NLS search (Algorithm 1)
-//!   serve                        — batched serving demo + throughput stats
+//!   serve                        — multi-tenant serving (adapter registry
+//!                                  → same-adapter batch scheduler → one
+//!                                  device-resident engine) + per-tenant
+//!                                  throughput/latency stats
 //!
 //! Common flags: --artifacts DIR (default ./artifacts), --model NAME
 //! (default sqft-tiny), --task NAME, --seed N, --steps N, --lr F.
@@ -41,8 +44,20 @@ fn usage() -> &'static str {
      sqft pipeline  --model M --task T --method lora|shears|sparsepeft|\n\
                     gptq-lora|sqft|qa-sparsepeft --sparsity S [--steps N]\n\
                     [--ckpt CKPT] [--out CKPT]\n\
+                    [--export-adapter CKPT [--adapter-id ID]]\n\
      sqft search    --model M --task T --method M --sparsity S [--turns N]\n\
-     sqft serve     --model M [--ckpt CKPT] [--requests N]\n"
+     sqft serve     --model M [--ckpt CKPT] [--requests N]\n\
+                    [--adapters DIR | --tenants K [--tenant-steps N]]\n\
+                    [--max-new-tokens N] [--registry-cap K] [--aging-ms MS]\n\
+                    [--merged]\n\
+     \n\
+     serve: one engine holds the frozen base device-resident; requests are\n\
+     tagged with an adapter id and batched per adapter (registry -> batch\n\
+     scheduler -> engine).  --adapters loads per-tenant checkpoints written\n\
+     by `pipeline --export-adapter` and prepares the base with the method/\n\
+     sparsity recorded in their metadata (pass the same --ckpt/--task/--seed\n\
+     as the export run so the bases match); --tenants fine-tunes K synthetic\n\
+     tenants in-process; --merged adds no-adapter fast-path traffic.\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -199,6 +214,14 @@ fn cmd_pipeline(artifacts: &Path, args: &Args) -> Result<()> {
         if method.uses_nls() { "NLS heuristic" } else { "LoRA" },
         pct(acc.accuracy()), method.final_precision());
 
+    if let Some(out) = args.get("export-adapter") {
+        let default_id = format!("{}-{}", method.cli_name(), task.name());
+        let adapter_id = args.get_or("adapter-id", &default_id);
+        pipeline::export_adapter(&prepared, &trainer, &cfg, &config, adapter_id,
+                                 Path::new(out))?;
+        println!("exported adapter '{adapter_id}' to {out}");
+    }
+
     if method.mergeable() && !args.has_flag("no-merge") {
         let merged = pipeline::merged_state(&prepared, &trainer, &cfg)?;
         let macc = pipeline::evaluate_merged(&rt, &config, &prepared, &merged,
@@ -283,25 +306,94 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
     let config = args.get_or("model", "sqft-tiny").to_string();
     let task = parse_task(args)?;
     let n_requests = args.get_usize("requests", 64)?;
+    let max_new_tokens = args.get_usize("max-new-tokens", 6)?;
+    let n_tenants = args.get_usize("tenants", 3)?;
+    let tenant_steps = args.get_usize("tenant-steps", 30)?;
+    let registry_cap = args.get_usize("registry-cap", 8)?;
     let seed = args.get_u64("seed", 7)?;
     let tok = Tokenizer::new();
     let pretrained = load_or_pretrain(&rt, &config, task, args, seed)?;
-    let mut rng = Rng::new(seed ^ 2);
     let ds = pipeline::standard_datasets(task, seed);
-    let prepared = pipeline::prepare(&rt, &config, &pretrained, Method::Lora, 0.0,
-                                     &ds.train, &tok, 0, &mut rng)?;
+
+    // when serving exported adapters, the base must be prepared exactly
+    // like the export run prepared it (method + sparsity from the
+    // checkpoint metadata; same --ckpt/--task/--seed as the export)
+    let ckpts = match args.get("adapters") {
+        Some(dir) => sqft::serve::load_adapter_dir(Path::new(dir), &config)?,
+        None => Vec::new(),
+    };
+    let (method, sparsity) = match ckpts.first() {
+        Some(first) => {
+            let m = Method::from_name(&first.method).with_context(|| {
+                format!("adapter '{}' carries unknown method '{}'",
+                        first.adapter_id, first.method)
+            })?;
+            for ck in &ckpts {
+                if ck.method != first.method || ck.sparsity != first.sparsity {
+                    bail!("adapters disagree on base prep ('{}' is {}@{:.0}%, '{}' is {}@{:.0}%); serve them from separate dirs",
+                        first.adapter_id, first.method, first.sparsity * 100.0,
+                        ck.adapter_id, ck.method, ck.sparsity * 100.0);
+                }
+            }
+            (m, first.sparsity)
+        }
+        None => (Method::Lora, 0.0),
+    };
+    let mut rng = Rng::new(seed ^ 2);
+    let calib = if sparsity > 0.0 || method.quantized_base() { 4 } else { 0 };
+    let prepared = pipeline::prepare(&rt, &config, &pretrained, method, sparsity,
+                                     &ds.train, &tok, calib, &mut rng)?;
     let frozen = prepared.frozen_set()?;
-    let engine = sqft::serve::Engine::new(&rt, &config, &frozen, None, "eval")?;
-    let mut grng = Rng::new(seed ^ 9);
-    let prompts: Vec<String> =
-        (0..n_requests).map(|_| task.gen_sample(&mut grng).prompt).collect();
-    println!("serving {n_requests} requests (dynamic batching)...");
-    let stats = sqft::serve::benchmark_engine(
-        &engine, prompts, std::time::Duration::from_millis(2))?;
-    println!("served {} in {:.2}s -> {:.1} req/s", stats.served,
-        stats.wall_secs, stats.throughput);
-    if let Some(l) = stats.latency_ms {
-        println!("latency ms: mean {:.1} p50 {:.1} p95 {:.1}", l.mean, l.p50, l.p95);
+    let hyper = prepared.hyper.clone();
+    let engine = sqft::serve::Engine::new(&rt, &config, &frozen, None, "eval",
+                                          max_new_tokens)?;
+
+    // populate the registry: register the loaded checkpoints, or fine-tune
+    // synthetic tenants over the shared frozen base
+    let mut registry = sqft::serve::AdapterRegistry::new(registry_cap);
+    let mut tenant_ids: Vec<Option<String>> = Vec::new();
+    if !ckpts.is_empty() {
+        let mut entries = Vec::new();
+        for ck in ckpts {
+            if ck.eval_kind != method.eval_kind() {
+                bail!("adapter '{}' serves through '{}' but method {} uses '{}'",
+                    ck.adapter_id, ck.eval_kind, method.name(), method.eval_kind());
+            }
+            entries.push(sqft::serve::AdapterEntry::from_ckpt(ck, "adapter"));
+        }
+        let ids = registry.register_all(&hyper, entries)
+            .context("registering --adapters (see --registry-cap / --adapter-id)")?;
+        println!("loaded {} adapters ({}, sparsity {:.0}%)",
+            ids.len(), method.name(), sparsity * 100.0);
+        tenant_ids.extend(ids.into_iter().map(Some));
+    } else if n_tenants > 0 {
+        println!("fine-tuning {n_tenants} tenant adapters ({tenant_steps} steps each)...");
+        let entries = pipeline::tenant_adapters(&rt, &config, &prepared, n_tenants,
+                                                &ds.train, &tok, tenant_steps,
+                                                seed ^ 21)?;
+        let ids = registry.register_all(&hyper, entries)
+            .context("registering --tenants (raise --registry-cap or lower --tenants)")?;
+        tenant_ids.extend(ids.into_iter().map(Some));
     }
+    if tenant_ids.is_empty() || args.has_flag("merged") {
+        tenant_ids.push(None); // merged / no-adapter fast path
+    }
+
+    let mut grng = Rng::new(seed ^ 9);
+    let requests: Vec<(Option<String>, String)> = (0..n_requests)
+        .map(|i| (tenant_ids[i % tenant_ids.len()].clone(),
+                  task.gen_sample(&mut grng).prompt))
+        .collect();
+    let opts = sqft::serve::SchedulerOpts {
+        max_batch: hyper.batch,
+        aging: std::time::Duration::from_millis(args.get_u64("aging-ms", 50)?),
+    };
+    println!("serving {n_requests} requests over {} tenants (batch {}, aging {:?}, \
+max_new_tokens {max_new_tokens})...",
+        tenant_ids.len(), opts.max_batch, opts.aging);
+    let mut router = sqft::serve::Router::new(engine, registry);
+    let stats = sqft::serve::benchmark_router(
+        &mut router, requests, std::time::Duration::from_millis(2), opts)?;
+    print!("{}", stats.render());
     Ok(())
 }

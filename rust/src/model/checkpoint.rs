@@ -4,6 +4,11 @@
 //! The header maps each tensor name to {shape, offset} (offsets in f32
 //! elements into the data section, in header order).  Endianness: little
 //! (the only platform we target); the magic encodes the version.
+//!
+//! Two metadata flavors share the container: base/merged model checkpoints
+//! (free-form meta) and adapter checkpoints (`kind: "adapter"` plus the
+//! tuned NLS rank configuration), which the multi-tenant serving registry
+//! loads per tenant — see `save_adapter` / `load_adapter`.
 
 use super::ParamSet;
 use crate::tensor::Tensor;
@@ -13,6 +18,10 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SQFTCKP1";
+
+/// Upper bound on the JSON header; anything larger is a corrupt or hostile
+/// file, not a checkpoint (headers are a few KB in practice).
+const MAX_HEADER_BYTES: usize = 64 << 20;
 
 pub fn save(params: &ParamSet, path: &Path, meta: Json) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -50,6 +59,18 @@ pub fn save(params: &ParamSet, path: &Path, meta: Json) -> Result<()> {
     Ok(())
 }
 
+/// Parse one header number that must be a non-negative integer (tensor
+/// dimensions and offsets).  Malformed headers are an `Err`, never a panic.
+fn header_uint(name: &str, what: &str, x: &Json) -> Result<usize> {
+    let f = x
+        .as_f64()
+        .with_context(|| format!("corrupt checkpoint: tensor '{name}': non-numeric {what}"))?;
+    if !f.is_finite() || f < 0.0 || f.fract() != 0.0 || f > 2f64.powi(53) {
+        bail!("corrupt checkpoint: tensor '{name}': invalid {what} {f}");
+    }
+    Ok(f as usize)
+}
+
 pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
@@ -62,6 +83,9 @@ pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
     let mut lenb = [0u8; 8];
     f.read_exact(&mut lenb)?;
     let hlen = u64::from_le_bytes(lenb) as usize;
+    if hlen == 0 || hlen > MAX_HEADER_BYTES {
+        bail!("corrupt checkpoint: implausible header length {hlen}");
+    }
     let mut hbuf = vec![0u8; hlen];
     f.read_exact(&mut hbuf)?;
     let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
@@ -78,17 +102,137 @@ pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
         .collect();
 
     let mut params = ParamSet::new();
+    // (start, end, name) spans for the overlap check below
+    let mut spans: Vec<(usize, usize, String)> = Vec::new();
     for (name, desc) in header.req("tensors")?.as_obj()? {
-        let shape: Vec<usize> =
-            desc.req("shape")?.as_arr()?.iter().map(|x| x.as_usize().unwrap()).collect();
-        let offset = desc.req("offset")?.as_usize()?;
-        let n: usize = shape.iter().product();
-        if offset + n > floats.len() {
+        let shape: Vec<usize> = desc
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| header_uint(name, "shape dimension", x))
+            .collect::<Result<_>>()?;
+        let offset = header_uint(name, "offset", desc.req("offset")?)?;
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .with_context(|| format!("corrupt checkpoint: tensor '{name}' shape overflows"))?;
+        let end = offset
+            .checked_add(n)
+            .with_context(|| format!("corrupt checkpoint: tensor '{name}' offset overflows"))?;
+        if end > floats.len() {
             bail!("corrupt checkpoint: tensor '{name}' overruns data section");
         }
-        params.insert(name, Tensor::new(&shape, floats[offset..offset + n].to_vec())?);
+        if n > 0 {
+            spans.push((offset, end, name.clone()));
+        }
+        params.insert(name, Tensor::new(&shape, floats[offset..end].to_vec())?);
+    }
+    // tensors must not alias each other's data (duplicate or overlapping
+    // offsets mean a corrupt writer, not a recoverable layout)
+    spans.sort();
+    for w in spans.windows(2) {
+        if w[1].0 < w[0].1 {
+            bail!("corrupt checkpoint: tensors '{}' and '{}' overlap", w[0].2, w[1].2);
+        }
     }
     Ok((params, meta))
+}
+
+// ---------------------------------------------------------------------------
+// Adapter checkpoints (multi-tenant serving)
+// ---------------------------------------------------------------------------
+
+/// A loaded per-tenant adapter checkpoint: tuned adapter tensors
+/// (`a_`/`b_`/`mask_`), the realized NLS rank configuration
+/// (`rankmask_`/`scale_`), and the serving metadata.
+pub struct AdapterCkpt {
+    pub adapters: ParamSet,
+    pub rank_params: ParamSet,
+    /// model config the adapter was tuned against
+    pub config: String,
+    /// eval artifact kind this adapter serves through ("eval" / "eval_qa")
+    pub eval_kind: String,
+    pub adapter_id: String,
+    /// fine-tuning method (cli name) and base sparsity the adapter was
+    /// exported from — the serving side must prepare a matching base
+    pub method: String,
+    pub sparsity: f64,
+    pub meta: Json,
+}
+
+fn is_rank_param(name: &str) -> bool {
+    name.starts_with("rankmask_") || name.starts_with("scale_")
+}
+
+/// Save a tuned adapter + its NLS rank configuration with adapter-aware
+/// metadata (config, eval kind, method, base sparsity), so the serving
+/// registry can validate it and `sqft serve` can prepare a matching base.
+#[allow(clippy::too_many_arguments)]
+pub fn save_adapter(
+    path: &Path,
+    adapters: &ParamSet,
+    rank_params: &ParamSet,
+    config: &str,
+    eval_kind: &str,
+    adapter_id: &str,
+    method: &str,
+    sparsity: f64,
+) -> Result<()> {
+    let mut combined = ParamSet::new();
+    for (n, t) in adapters.iter() {
+        if is_rank_param(n) {
+            bail!("adapter set holds rank param '{n}'; pass it via rank_params");
+        }
+        combined.insert(n, t.clone());
+    }
+    for (n, t) in rank_params.iter() {
+        if !is_rank_param(n) {
+            bail!("rank param set holds non-rank tensor '{n}'");
+        }
+        combined.insert(n, t.clone());
+    }
+    let meta = Json::obj(vec![
+        ("kind", Json::Str("adapter".into())),
+        ("config", Json::Str(config.into())),
+        ("eval_kind", Json::Str(eval_kind.into())),
+        ("adapter_id", Json::Str(adapter_id.into())),
+        ("method", Json::Str(method.into())),
+        ("sparsity", Json::Num(sparsity)),
+    ]);
+    save(&combined, path, meta)
+}
+
+/// Load an adapter checkpoint written by `save_adapter`, splitting the
+/// tensor set back into adapter state and rank configuration.
+pub fn load_adapter(path: &Path) -> Result<AdapterCkpt> {
+    let (params, meta) = load(path)?;
+    let kind = meta.get("kind").and_then(|k| k.as_str().ok()).unwrap_or("");
+    if kind != "adapter" {
+        bail!("{path:?} is not an adapter checkpoint (kind '{kind}')");
+    }
+    let config = meta.req("config")?.as_str()?.to_string();
+    let eval_kind = meta.req("eval_kind")?.as_str()?.to_string();
+    let adapter_id = meta
+        .get("adapter_id")
+        .and_then(|x| x.as_str().ok())
+        .unwrap_or("")
+        .to_string();
+    let method = meta
+        .get("method")
+        .and_then(|x| x.as_str().ok())
+        .unwrap_or("")
+        .to_string();
+    let sparsity = meta.get("sparsity").and_then(|x| x.as_f64().ok()).unwrap_or(0.0);
+    let mut adapters = ParamSet::new();
+    let mut rank_params = ParamSet::new();
+    for (n, t) in params.iter() {
+        if is_rank_param(n) {
+            rank_params.insert(n, t.clone());
+        } else {
+            adapters.insert(n, t.clone());
+        }
+    }
+    Ok(AdapterCkpt { adapters, rank_params, config, eval_kind, adapter_id, method, sparsity, meta })
 }
 
 #[cfg(test)]
@@ -121,6 +265,102 @@ mod tests {
         let path = dir.join("junk.ckpt");
         std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Hand-write a checkpoint container around an arbitrary header.
+    fn write_raw(path: &Path, header: &str, floats: &[f32]) {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        for f in floats {
+            buf.extend_from_slice(&f.to_le_bytes());
+        }
+        std::fs::write(path, buf).unwrap();
+    }
+
+    #[test]
+    fn malformed_headers_error_instead_of_panicking() {
+        let dir = std::env::temp_dir().join("sqft_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        let cases = [
+            // non-numeric shape entry
+            r#"{"meta":{},"tensors":{"w":{"shape":[2,"x"],"offset":0}}}"#,
+            // negative dimension
+            r#"{"meta":{},"tensors":{"w":{"shape":[-1],"offset":0}}}"#,
+            // fractional dimension
+            r#"{"meta":{},"tensors":{"w":{"shape":[1.5],"offset":0}}}"#,
+            // fractional offset
+            r#"{"meta":{},"tensors":{"w":{"shape":[2],"offset":0.5}}}"#,
+            // missing offset
+            r#"{"meta":{},"tensors":{"w":{"shape":[2]}}}"#,
+            // overrun
+            r#"{"meta":{},"tensors":{"w":{"shape":[8],"offset":0}}}"#,
+        ];
+        for header in cases {
+            write_raw(&path, header, &[1.0, 2.0, 3.0, 4.0]);
+            assert!(load(&path).is_err(), "accepted malformed header: {header}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_overlapping_and_duplicate_tensor_offsets() {
+        let dir = std::env::temp_dir().join("sqft_ckpt_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("overlap.ckpt");
+        // u spans [0,2), v spans [1,3): overlap
+        write_raw(
+            &path,
+            r#"{"meta":{},"tensors":{"u":{"shape":[2],"offset":0},"v":{"shape":[2],"offset":1}}}"#,
+            &[1.0, 2.0, 3.0, 4.0],
+        );
+        let e = load(&path).unwrap_err();
+        assert!(format!("{e:#}").contains("overlap"), "{e:#}");
+        // duplicate offsets are also an overlap
+        write_raw(
+            &path,
+            r#"{"meta":{},"tensors":{"u":{"shape":[2],"offset":0},"v":{"shape":[2],"offset":0}}}"#,
+            &[1.0, 2.0, 3.0, 4.0],
+        );
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adapter_roundtrip_splits_rank_params() {
+        let mut rng = Rng::new(5);
+        let mut adapters = ParamSet::new();
+        adapters.insert("a_q", Tensor::randn(&mut rng, &[2, 4, 8], 0.02));
+        adapters.insert("b_q", Tensor::zeros(&[2, 8, 4]));
+        adapters.insert("mask_q", Tensor::ones(&[2, 8, 8]));
+        let mut rank = ParamSet::new();
+        rank.insert("rankmask_q", Tensor::ones(&[2, 4]));
+        rank.insert("scale_q", Tensor::full(&[2], 4.0));
+        let dir = std::env::temp_dir().join("sqft_ckpt_test5");
+        let path = dir.join("tenant0.ckpt");
+        save_adapter(&path, &adapters, &rank, "sqft-tiny", "eval", "tenant0",
+                     "sparsepeft", 0.5).unwrap();
+        let ck = load_adapter(&path).unwrap();
+        assert_eq!(ck.config, "sqft-tiny");
+        assert_eq!(ck.eval_kind, "eval");
+        assert_eq!(ck.adapter_id, "tenant0");
+        assert_eq!(ck.method, "sparsepeft");
+        assert!((ck.sparsity - 0.5).abs() < 1e-12);
+        assert_eq!(ck.adapters.len(), 3);
+        assert_eq!(ck.rank_params.len(), 2);
+        assert_eq!(ck.adapters.get("a_q").unwrap(), adapters.get("a_q").unwrap());
+        assert_eq!(ck.rank_params.get("scale_q").unwrap(), rank.get("scale_q").unwrap());
+        // a base checkpoint is not an adapter checkpoint
+        let base_path = dir.join("base.ckpt");
+        save(&adapters, &base_path, Json::obj(vec![("config", Json::Str("x".into()))])).unwrap();
+        assert!(load_adapter(&base_path).is_err());
+        // rank params in the adapter set are rejected at save time
+        let mut bad = ParamSet::new();
+        bad.insert("rankmask_q", Tensor::ones(&[2, 4]));
+        assert!(save_adapter(&path, &bad, &rank, "c", "eval", "t", "lora", 0.0).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

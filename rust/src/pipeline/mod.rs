@@ -10,15 +10,17 @@
 
 use crate::data::{Sample, Task, Tokenizer};
 use crate::evalharness::{evaluate, EvalResult};
-use crate::model::{init_adapters, linear_keys, ParamSet};
+use crate::model::{checkpoint, init_adapters, linear_keys, ParamSet};
 use crate::nls::{Config, SearchSpace};
 use crate::peft::{merge_qa, merge_sparsepeft, Method};
 use crate::quant::{quantize_model, qmax, BITS};
 use crate::runtime::{DeviceStore, ModelHyper, Runtime};
+use crate::serve::AdapterEntry;
 use crate::sparsity::{adapter_masks_from, apply_masks, calibrate, wanda_masks, CalibStats};
 use crate::tensor::{Rng, Tensor};
 use crate::train::{upload, LossCurve, TrainOpts, Trainer};
 use anyhow::{bail, Result};
+use std::path::Path;
 
 /// Frozen model state one Method fine-tunes against.
 pub struct Prepared {
@@ -181,6 +183,86 @@ pub fn finetune<'a>(
     trainer.fixed_rank = opts.fixed_rank;
     let curve = trainer.train(samples, tok, opts)?;
     Ok((trainer, curve))
+}
+
+/// The tuned adapter state one tenant serves with: just `a_`/`b_`.  The
+/// adapter masks are a property of the shared frozen base (frozen_set
+/// uploads them device-resident, and build_args resolves device buffers
+/// first), so shipping them per tenant would be dead weight — the whole
+/// point of base+adapter serving is that the per-tenant payload is small.
+fn servable_adapters(trainer: &Trainer) -> ParamSet {
+    let mut adapters = ParamSet::new();
+    for (n, t) in trainer.adapters.iter() {
+        if n.starts_with("a_") || n.starts_with("b_") {
+            adapters.insert(n, t.clone());
+        }
+    }
+    adapters
+}
+
+/// Export a tuned adapter (+ NLS rank configuration at `cfg`) as a
+/// servable checkpoint for the multi-tenant registry (`sqft serve
+/// --adapters DIR`).
+pub fn export_adapter(
+    prepared: &Prepared,
+    trainer: &Trainer,
+    cfg: &Config,
+    config_name: &str,
+    adapter_id: &str,
+    path: &Path,
+) -> Result<()> {
+    let rank_params = trainer.space.realize(cfg)?;
+    checkpoint::save_adapter(
+        path,
+        &servable_adapters(trainer),
+        &rank_params,
+        config_name,
+        prepared.method.eval_kind(),
+        adapter_id,
+        prepared.method.cli_name(),
+        prepared.sparsity,
+    )
+}
+
+/// Fine-tune `n` tenant adapters over one prepared base (distinct seeds,
+/// so each tenant converges to different adapter weights) and return
+/// registry entries ready to serve.  Deployed rank config follows the
+/// paper's convention: heuristic for NLS methods, max for LoRA.
+#[allow(clippy::too_many_arguments)]
+pub fn tenant_adapters(
+    rt: &Runtime,
+    config: &str,
+    prepared: &Prepared,
+    n: usize,
+    samples: &[Sample],
+    tok: &Tokenizer,
+    steps: usize,
+    base_seed: u64,
+) -> Result<Vec<AdapterEntry>> {
+    let mut out = Vec::new();
+    for i in 0..n {
+        let (choices, alpha) = default_space_for(&prepared.hyper);
+        let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
+        let opts = TrainOpts {
+            steps,
+            lr: 1e-3,
+            log_every: steps.max(1),
+            seed: base_seed.wrapping_add(i as u64),
+            fixed_rank: false,
+        };
+        let (trainer, _) = finetune(rt, config, prepared, space, samples, tok, &opts)?;
+        let cfg = if prepared.method.uses_nls() {
+            trainer.space.heuristic_config()
+        } else {
+            trainer.space.max_config()
+        };
+        out.push(AdapterEntry {
+            id: format!("tenant{i}"),
+            eval_kind: prepared.method.eval_kind().to_string(),
+            host_sets: vec![servable_adapters(&trainer), trainer.space.realize(&cfg)?],
+        });
+    }
+    Ok(out)
 }
 
 /// Evaluate (base + adapters at `cfg`) — the *unmerged* accuracy.

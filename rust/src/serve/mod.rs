@@ -1,91 +1,142 @@
-//! Serving loop: dynamic batching + greedy decoding over the eval artifact.
+//! Multi-tenant serving: registry → scheduler → engine.
 //!
-//! The paper's §2.5 motivation: merged models (SparsePEFT/QA-SparsePEFT)
-//! serve faster and smaller than base+adapter pairs.  This module measures
-//! that on this testbed (Table 7 inference columns): a single-threaded
-//! engine owns the Runtime (PJRT handles are not Sync); request producers
-//! run on OS threads and talk to it over channels; the engine coalesces up
-//! to `batch` pending requests per forward pass.
+//! The paper's §2.5 motivation is serving economics: merged models
+//! (SparsePEFT/QA-SparsePEFT) serve faster and smaller than base+adapter
+//! pairs, while unmerged pairs keep precision flexibility.  This module
+//! serves *many* fine-tuned tenants over one device-resident frozen base —
+//! the deployment pattern LoRA-style adapters were designed for:
+//!
+//!   - [`registry::AdapterRegistry`] holds validated per-tenant adapter
+//!     state (hot registration/eviction, LRU-bounded);
+//!   - [`scheduler::Scheduler`] groups pending requests into same-adapter
+//!     batches (adapters are per-forward host inputs, so a batch must share
+//!     one adapter) with an aging policy so low-traffic tenants don't
+//!     starve;
+//!   - [`Engine`] owns the Runtime handles (PJRT is not Sync) and executes
+//!     batches for any registered adapter — or the merged no-adapter fast
+//!     path; [`Router`] ties the three together on one serving thread,
+//!     with request producers talking to it over channels.
 //!
 //! Greedy decoding is teacher-forcing-free: each generated token re-runs
 //! the batched forward with the answer-so-far appended (no KV cache in the
 //! artifact — acceptable at seq<=128, and identical work for merged vs
-//! unmerged, which is what the comparison needs).
+//! unmerged, which is what the Table 7 comparison needs).
+
+pub mod registry;
+pub mod scheduler;
+
+pub use registry::{load_adapter_dir, AdapterEntry, AdapterRegistry};
+pub use scheduler::{Request, Scheduler, SchedulerMetrics, SchedulerOpts};
 
 use crate::data::Tokenizer;
 use crate::model::ParamSet;
 use crate::nls::{Config, SearchSpace};
+use crate::report::Table;
 use crate::runtime::{args::build_args, DeviceStore, HostValue, Runtime};
 use crate::util::{summarize, Summary};
-use anyhow::{bail, Result};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::time::{Duration, Instant};
 
-/// One inference request: a prompt; the reply is the decoded answer string.
-pub struct Request {
-    pub prompt: String,
-    pub reply: Sender<Result<String>>,
-    pub enqueued: Instant,
-}
+/// Stats label for the merged / no-adapter fast path.
+pub const MERGED_ID: &str = "merged";
 
-/// Engine state: device-resident weights + (optional) adapter host state.
+/// Engine state: device-resident frozen weights + default host inputs for
+/// the merged / single-adapter compatibility path.
 pub struct Engine<'a> {
     rt: &'a Runtime,
     config: String,
     device: DeviceStore,
-    /// host-side eval inputs: adapters + rank params (empty set = merged)
-    host_sets: Vec<ParamSet>,
-    eval_kind: String,
+    /// host-side eval inputs used when a request names no adapter
+    /// (no-op adapters = the merged fast path)
+    default_sets: Vec<ParamSet>,
+    default_kind: String,
     tok: Tokenizer,
     max_new_tokens: usize,
 }
 
 impl<'a> Engine<'a> {
-    /// Build an engine from frozen (device) params + host adapter state.
+    /// Build an engine from frozen (device) params.  `adapters` optionally
+    /// installs a default adapter for the no-id path; `None` means the
+    /// merged fast path (no-op adapters, B = 0).  `max_new_tokens` bounds
+    /// greedy decoding per request and must fit the artifact sequence.
     pub fn new(
         rt: &'a Runtime,
         config: &str,
         frozen: &ParamSet,
         adapters: Option<(&ParamSet, &SearchSpace, &Config)>,
         eval_kind: &str,
+        max_new_tokens: usize,
     ) -> Result<Engine<'a>> {
         let hyper = rt.model(config)?.clone();
+        if max_new_tokens == 0 || max_new_tokens > hyper.seq_len.saturating_sub(2) {
+            bail!(
+                "max_new_tokens {max_new_tokens} does not fit seq_len {} (need 1..={})",
+                hyper.seq_len,
+                hyper.seq_len.saturating_sub(2)
+            );
+        }
         let mut device = DeviceStore::new();
         for (n, t) in frozen.iter() {
             device.put_host(&rt.client, n, &HostValue::F32(t.clone()))?;
         }
-        let mut host_sets = Vec::new();
+        let mut default_sets = Vec::new();
         match adapters {
             Some((ad, space, cfg)) => {
-                host_sets.push(ad.clone());
-                host_sets.push(space.realize(cfg)?);
+                default_sets.push(ad.clone());
+                default_sets.push(space.realize(cfg)?);
             }
             None => {
                 // merged model: no-op adapters (B = 0)
                 let mut rng = crate::tensor::Rng::new(1);
-                host_sets.push(crate::model::init_adapters(&hyper, &mut rng, 1.0));
+                default_sets.push(crate::model::init_adapters(&hyper, &mut rng, 1.0));
                 let space = SearchSpace::default_for(&hyper, 1.0);
-                host_sets.push(space.realize(&space.max_config())?);
+                default_sets.push(space.realize(&space.max_config())?);
             }
         }
         Ok(Engine {
             rt,
             config: config.to_string(),
             device,
-            host_sets,
-            eval_kind: eval_kind.to_string(),
+            default_sets,
+            default_kind: eval_kind.to_string(),
             tok: Tokenizer::new(),
-            max_new_tokens: 6,
+            max_new_tokens,
         })
     }
 
-    /// Greedy-decode a batch of prompts (padded to the artifact batch).
+    pub fn max_new_tokens(&self) -> usize {
+        self.max_new_tokens
+    }
+
+    /// The artifact's fixed batch dimension (upper bound on batch size).
+    pub fn artifact_batch(&self) -> Result<usize> {
+        Ok(self.rt.model(&self.config)?.batch)
+    }
+
+    /// Greedy-decode a batch of prompts with the engine's default adapter
+    /// state (merged fast path when built with `adapters: None`).
     pub fn generate_batch(&self, prompts: &[String]) -> Result<Vec<String>> {
+        let sets: Vec<&ParamSet> = self.default_sets.iter().collect();
+        self.generate_batch_for(&sets, &self.default_kind, prompts)
+    }
+
+    /// Greedy-decode a batch of prompts against explicit per-forward host
+    /// inputs (one tenant's adapter + rank params) — the multi-tenant hot
+    /// path.  All prompts in the batch share `host_sets`.
+    pub fn generate_batch_for(
+        &self,
+        host_sets: &[&ParamSet],
+        eval_kind: &str,
+        prompts: &[String],
+    ) -> Result<Vec<String>> {
         let hyper = self.rt.model(&self.config)?.clone();
         if prompts.is_empty() || prompts.len() > hyper.batch {
             bail!("batch of {} prompts (max {})", prompts.len(), hyper.batch);
         }
-        let exe = self.rt.executable(&self.config, &self.eval_kind)?;
+        let exe = self.rt.executable(&self.config, eval_kind)?;
         let seq = hyper.seq_len;
         // token rows + current lengths
         let mut rows: Vec<Vec<i32>> = Vec::new();
@@ -122,13 +173,7 @@ impl<'a> Engine<'a> {
                 seq,
                 real: prompts.len(),
             };
-            let args = build_args(
-                &exe.spec,
-                Some(&self.device),
-                &self.host_sets.iter().collect::<Vec<_>>(),
-                Some(&batch),
-                &[],
-            )?;
+            let args = build_args(&exe.spec, Some(&self.device), host_sets, Some(&batch), &[])?;
             let outs = exe.run_mixed(&self.rt.client, &args)?;
             let logits = &outs[0];
             let v = hyper.vocab;
@@ -157,88 +202,231 @@ impl<'a> Engine<'a> {
         }
         Ok(answers)
     }
-
-    /// Serve requests from a channel until it closes; coalesces up to
-    /// `batch` pending requests per forward pass (dynamic batching).
-    pub fn serve(&self, rx: Receiver<Request>) -> Result<ServeStats> {
-        let hyper = self.rt.model(&self.config)?.clone();
-        let mut latencies = Vec::new();
-        let mut served = 0usize;
-        let start = Instant::now();
-        loop {
-            // block for the first request
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => break,
-            };
-            let mut pending = vec![first];
-            // coalesce whatever else is already queued (up to batch)
-            while pending.len() < hyper.batch {
-                match rx.try_recv() {
-                    Ok(r) => pending.push(r),
-                    Err(_) => break,
-                }
-            }
-            let prompts: Vec<String> =
-                pending.iter().map(|r| r.prompt.clone()).collect();
-            match self.generate_batch(&prompts) {
-                Ok(answers) => {
-                    for (req, ans) in pending.into_iter().zip(answers) {
-                        latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
-                        served += 1;
-                        let _ = req.reply.send(Ok(ans));
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    for req in pending {
-                        let _ = req.reply.send(Err(anyhow::anyhow!(msg.clone())));
-                    }
-                }
-            }
-        }
-        let wall = start.elapsed().as_secs_f64();
-        Ok(ServeStats {
-            served,
-            wall_secs: wall,
-            throughput: served as f64 / wall.max(1e-9),
-            latency_ms: if latencies.is_empty() {
-                None
-            } else {
-                Some(summarize(latencies))
-            },
-        })
-    }
 }
 
-#[derive(Debug)]
+/// Serving outcome for one tenant (or the whole run).
+#[derive(Clone, Debug)]
 pub struct ServeStats {
     pub served: usize,
+    pub errors: usize,
     pub wall_secs: f64,
     pub throughput: f64,
     pub latency_ms: Option<Summary>,
 }
 
-/// Drive an engine with a synthetic open-loop workload from `n_clients`
-/// producer threads, `n_requests` total; returns the measured stats.
-pub fn benchmark_engine(engine: &Engine, prompts: Vec<String>,
-                        inter_arrival: Duration) -> Result<ServeStats> {
+/// Per-run serving report: totals, per-tenant breakdown, and the
+/// scheduler's queue-depth / batch-fill counters.
+#[derive(Debug)]
+pub struct MultiServeStats {
+    pub total: ServeStats,
+    /// keyed by adapter id (the merged path reports as [`MERGED_ID`])
+    pub per_tenant: Vec<(String, ServeStats)>,
+    pub scheduler: SchedulerMetrics,
+}
+
+impl MultiServeStats {
+    pub fn tenant(&self, id: &str) -> Option<&ServeStats> {
+        self.per_tenant.iter().find(|(k, _)| k == id).map(|(_, s)| s)
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Multi-tenant serving",
+            &["tenant", "served", "errors", "req/s", "mean ms", "p50 ms", "p95 ms"],
+        );
+        let lat = |s: &ServeStats, f: fn(&Summary) -> f64| match &s.latency_ms {
+            Some(l) => format!("{:.1}", f(l)),
+            None => "-".to_string(),
+        };
+        let row = |name: &str, s: &ServeStats| {
+            vec![
+                name.to_string(),
+                s.served.to_string(),
+                s.errors.to_string(),
+                format!("{:.1}", s.throughput),
+                lat(s, |l| l.mean),
+                lat(s, |l| l.p50),
+                lat(s, |l| l.p95),
+            ]
+        };
+        for (id, s) in &self.per_tenant {
+            t.row(row(id.as_str(), s));
+        }
+        t.row(row("TOTAL", &self.total));
+        let mut out = t.render();
+        let _ = writeln!(
+            out,
+            "scheduler: {} batches, avg fill {:.2}, {} aged, max queue depth {}",
+            self.scheduler.batches,
+            self.scheduler.avg_fill(),
+            self.scheduler.aged_batches,
+            self.scheduler.max_queue_depth
+        );
+        out
+    }
+}
+
+#[derive(Default)]
+struct Tally {
+    served: usize,
+    errors: usize,
+    latencies: Vec<f64>,
+}
+
+impl Tally {
+    fn finish(self, wall: f64) -> ServeStats {
+        ServeStats {
+            served: self.served,
+            errors: self.errors,
+            wall_secs: wall,
+            throughput: self.served as f64 / wall.max(1e-9),
+            latency_ms: if self.latencies.is_empty() {
+                None
+            } else {
+                Some(summarize(self.latencies))
+            },
+        }
+    }
+}
+
+/// One engine + one registry = a multi-tenant serving endpoint.
+pub struct Router<'a> {
+    engine: Engine<'a>,
+    registry: AdapterRegistry,
+}
+
+impl<'a> Router<'a> {
+    pub fn new(engine: Engine<'a>, registry: AdapterRegistry) -> Router<'a> {
+        Router { engine, registry }
+    }
+
+    pub fn engine(&self) -> &Engine<'a> {
+        &self.engine
+    }
+
+    pub fn registry_mut(&mut self) -> &mut AdapterRegistry {
+        &mut self.registry
+    }
+
+    /// Serve requests from a channel until it closes and all queues drain.
+    /// Replaces the old FIFO coalescing loop: pending requests are grouped
+    /// into same-adapter batches by the [`Scheduler`]'s fill+aging policy.
+    pub fn serve(&mut self, rx: Receiver<Request>, opts: SchedulerOpts) -> Result<MultiServeStats> {
+        let cap = self.engine.artifact_batch()?;
+        let opts = SchedulerOpts { max_batch: opts.max_batch.min(cap).max(1), ..opts };
+        let mut sched = Scheduler::new(opts);
+        let mut tallies: BTreeMap<String, Tally> = BTreeMap::new();
+        let start = Instant::now();
+        let mut open = true;
+        while open || !sched.is_empty() {
+            if sched.is_empty() {
+                // block for the first pending request
+                match rx.recv() {
+                    Ok(r) => sched.push(r),
+                    Err(_) => {
+                        open = false;
+                        continue;
+                    }
+                }
+            }
+            // drain whatever else is already queued
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => sched.push(r),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            let Some((id, reqs)) = sched.next_batch(Instant::now()) else {
+                continue;
+            };
+            self.dispatch(id, reqs, &mut tallies);
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let mut total = Tally::default();
+        let mut per_tenant = Vec::new();
+        for (id, tally) in tallies {
+            total.served += tally.served;
+            total.errors += tally.errors;
+            total.latencies.extend_from_slice(&tally.latencies);
+            per_tenant.push((id, tally.finish(wall)));
+        }
+        Ok(MultiServeStats {
+            total: total.finish(wall),
+            per_tenant,
+            scheduler: sched.metrics().clone(),
+        })
+    }
+
+    /// Execute one same-adapter batch and reply to every request in it.
+    fn dispatch(
+        &mut self,
+        id: Option<String>,
+        reqs: Vec<Request>,
+        tallies: &mut BTreeMap<String, Tally>,
+    ) {
+        let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
+        let result = match &id {
+            None => self.engine.generate_batch(&prompts),
+            Some(tid) => match self.registry.get(tid) {
+                Some(entry) => {
+                    let sets: Vec<&ParamSet> = entry.host_sets.iter().collect();
+                    self.engine.generate_batch_for(&sets, &entry.eval_kind, &prompts)
+                }
+                None => Err(anyhow!("adapter '{tid}' is not registered")),
+            },
+        };
+        let key = id.as_deref().unwrap_or(MERGED_ID).to_string();
+        let tally = tallies.entry(key).or_default();
+        match result {
+            Ok(answers) => {
+                for (req, ans) in reqs.into_iter().zip(answers) {
+                    tally.latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                    tally.served += 1;
+                    let _ = req.reply.send(Ok(ans));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in reqs {
+                    tally.errors += 1;
+                    let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+}
+
+/// Drive a router with a synthetic open-loop workload: one producer thread
+/// sends `(adapter_id, prompt)` requests at `inter_arrival` spacing, the
+/// router serves on the calling thread; returns the measured stats.
+pub fn benchmark_router(
+    router: &mut Router,
+    requests: Vec<(Option<String>, String)>,
+    inter_arrival: Duration,
+    opts: SchedulerOpts,
+) -> Result<MultiServeStats> {
     let (tx, rx) = channel::<Request>();
     let producer = std::thread::spawn(move || {
         let mut replies = Vec::new();
-        for p in prompts {
+        for (adapter_id, prompt) in requests {
             let (rtx, rrx) = channel();
-            let _ = tx.send(Request { prompt: p, reply: rtx, enqueued: Instant::now() });
+            let _ = tx.send(Request { adapter_id, prompt, reply: rtx, enqueued: Instant::now() });
             replies.push(rrx);
-            std::thread::sleep(inter_arrival);
+            if !inter_arrival.is_zero() {
+                std::thread::sleep(inter_arrival);
+            }
         }
         drop(tx);
-        // drain replies so the engine's sends don't error
+        // drain replies so the router's sends don't error
         for r in replies {
             let _ = r.recv();
         }
     });
-    let stats = engine.serve(rx)?;
+    let stats = router.serve(rx, opts)?;
     producer.join().ok();
     Ok(stats)
 }

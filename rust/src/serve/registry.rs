@@ -1,0 +1,435 @@
+//! Per-tenant adapter registry for multi-tenant serving.
+//!
+//! One `Engine` owns the device-resident frozen base; every tenant's tuned
+//! adapter (LoRA/NLS tensors + realized rank configuration) stays host-side
+//! and is passed per forward.  The registry validates entries against the
+//! model hyperparameters at registration (shape bugs surface at load time,
+//! not mid-serve), supports hot registration/eviction, and bounds resident
+//! host state with an LRU policy: serving an adapter touches it, and
+//! registering past capacity evicts the least-recently-used tenant.
+
+use crate::model::checkpoint::{self, AdapterCkpt};
+use crate::model::ParamSet;
+use crate::runtime::ModelHyper;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One registered tenant: id, eval artifact kind, and the host-side
+/// per-forward input sets (`[adapters (a_/b_), rank params]`, resolved in
+/// order by `build_args` — same contract as `evaluate_unmerged`; the
+/// adapter masks stay device-resident with the shared frozen base).
+#[derive(Clone, Debug)]
+pub struct AdapterEntry {
+    pub id: String,
+    /// "eval" (FP16 base) or "eval_qa" (shared-scale fake-quant base)
+    pub eval_kind: String,
+    pub host_sets: Vec<ParamSet>,
+}
+
+impl AdapterEntry {
+    /// Build a registry entry from a loaded adapter checkpoint (the id
+    /// falls back to `fallback_id` when the metadata carries none).
+    pub fn from_ckpt(ck: AdapterCkpt, fallback_id: &str) -> AdapterEntry {
+        let id = if ck.adapter_id.is_empty() { fallback_id.to_string() } else { ck.adapter_id };
+        AdapterEntry {
+            id,
+            eval_kind: ck.eval_kind,
+            host_sets: vec![ck.adapters, ck.rank_params],
+        }
+    }
+}
+
+/// Load every `*.ckpt` adapter checkpoint in `dir` (sorted by file name)
+/// without registering anything, so the caller can inspect the metadata
+/// (method, sparsity) and prepare a matching base first.  Checkpoints
+/// tuned for a different model config are an error.
+pub fn load_adapter_dir(dir: &Path, config: &str) -> Result<Vec<AdapterCkpt>> {
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading adapter dir {dir:?}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "ckpt").unwrap_or(false))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        bail!("no *.ckpt adapter checkpoints in {dir:?}");
+    }
+    let mut out = Vec::new();
+    for path in files {
+        let mut ck = checkpoint::load_adapter(&path)
+            .with_context(|| format!("loading adapter {path:?}"))?;
+        if ck.config != config {
+            bail!(
+                "adapter {path:?} was tuned for config '{}', engine runs '{config}'",
+                ck.config
+            );
+        }
+        if ck.adapter_id.is_empty() {
+            ck.adapter_id = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("adapter")
+                .to_string();
+        }
+        out.push(ck);
+    }
+    Ok(out)
+}
+
+/// LRU-bounded map from adapter id to validated host state.
+pub struct AdapterRegistry {
+    capacity: usize,
+    clock: u64,
+    entries: BTreeMap<String, (u64, AdapterEntry)>,
+    evictions: Vec<String>,
+}
+
+fn find<'s>(sets: &'s [ParamSet], name: &str) -> Option<&'s Tensor> {
+    sets.iter().find_map(|s| if s.contains(name) { s.get(name).ok() } else { None })
+}
+
+fn expect_shape(id: &str, name: &str, t: &Tensor, want: &[usize]) -> Result<()> {
+    if t.shape() != want {
+        bail!("adapter '{id}': tensor '{name}' has shape {:?}, want {want:?}", t.shape());
+    }
+    Ok(())
+}
+
+impl AdapterRegistry {
+    /// `capacity` is the maximum number of resident tenants (min 1).
+    pub fn new(capacity: usize) -> AdapterRegistry {
+        AdapterRegistry {
+            capacity: capacity.max(1),
+            clock: 0,
+            entries: BTreeMap::new(),
+            evictions: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.contains_key(id)
+    }
+
+    pub fn ids(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Tenants evicted by the LRU bound, oldest first.
+    pub fn evictions(&self) -> &[String] {
+        &self.evictions
+    }
+
+    /// Check an entry against the model: every adapted module needs
+    /// `a_`/`b_` at the artifact shapes plus a realized rank configuration
+    /// (prefix 0/1 `rankmask_` rows and per-layer `scale_`).
+    pub fn validate(hyper: &ModelHyper, entry: &AdapterEntry) -> Result<()> {
+        if entry.id.is_empty() {
+            bail!("adapter id must be non-empty");
+        }
+        if entry.eval_kind != "eval" && entry.eval_kind != "eval_qa" {
+            bail!("adapter '{}': unknown eval kind '{}'", entry.id, entry.eval_kind);
+        }
+        let (l, r) = (hyper.n_layers, hyper.r_max);
+        for m in &hyper.mods {
+            let (out, inp) = hyper.mod_dims(m);
+            let a = find(&entry.host_sets, &format!("a_{m}"))
+                .with_context(|| format!("adapter '{}': missing tensor 'a_{m}'", entry.id))?;
+            expect_shape(&entry.id, &format!("a_{m}"), a, &[l, r, inp])?;
+            let b = find(&entry.host_sets, &format!("b_{m}"))
+                .with_context(|| format!("adapter '{}': missing tensor 'b_{m}'", entry.id))?;
+            expect_shape(&entry.id, &format!("b_{m}"), b, &[l, out, r])?;
+            if let Some(mask) = find(&entry.host_sets, &format!("mask_{m}")) {
+                expect_shape(&entry.id, &format!("mask_{m}"), mask, &[l, out, inp])?;
+            }
+            let rm = find(&entry.host_sets, &format!("rankmask_{m}")).with_context(|| {
+                format!("adapter '{}': missing rank configuration 'rankmask_{m}'", entry.id)
+            })?;
+            expect_shape(&entry.id, &format!("rankmask_{m}"), rm, &[l, r])?;
+            for layer in 0..l {
+                let row = &rm.data()[layer * r..(layer + 1) * r];
+                let mut seen_zero = false;
+                for &x in row {
+                    if x != 0.0 && x != 1.0 {
+                        bail!("adapter '{}': rankmask_{m} has non-binary value {x}", entry.id);
+                    }
+                    if x == 0.0 {
+                        seen_zero = true;
+                    } else if seen_zero {
+                        bail!(
+                            "adapter '{}': rankmask_{m} layer {layer} is not a prefix mask",
+                            entry.id
+                        );
+                    }
+                }
+            }
+            let sc = find(&entry.host_sets, &format!("scale_{m}"))
+                .with_context(|| format!("adapter '{}': missing 'scale_{m}'", entry.id))?;
+            expect_shape(&entry.id, &format!("scale_{m}"), sc, &[l])?;
+        }
+        Ok(())
+    }
+
+    /// Validate + insert (replacing any same-id entry); returns the id
+    /// evicted by the LRU bound, if any.
+    pub fn register(&mut self, hyper: &ModelHyper, entry: AdapterEntry) -> Result<Option<String>> {
+        Self::validate(hyper, &entry)?;
+        self.clock += 1;
+        let id = entry.id.clone();
+        self.entries.insert(id.clone(), (self.clock, entry));
+        if self.entries.len() <= self.capacity {
+            return Ok(None);
+        }
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(k, _)| **k != id)
+            .min_by_key(|(_, (used, _))| *used)
+            .map(|(k, _)| k.clone());
+        if let Some(v) = victim {
+            self.entries.remove(&v);
+            self.evictions.push(v.clone());
+            return Ok(Some(v));
+        }
+        Ok(None)
+    }
+
+    /// Look up an adapter for serving; touches its LRU stamp.
+    pub fn get(&mut self, id: &str) -> Option<&AdapterEntry> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.entries.get_mut(id) {
+            Some((used, entry)) => {
+                *used = clock;
+                Some(entry)
+            }
+            None => None,
+        }
+    }
+
+    /// Drop a tenant explicitly; true if it was resident.
+    pub fn evict(&mut self, id: &str) -> bool {
+        self.entries.remove(id).is_some()
+    }
+
+    /// Register a batch of tenants the caller is about to route traffic
+    /// to.  All-or-nothing: duplicate ids (a silent replace would serve
+    /// one tenant's traffic with another tenant's weights), validation
+    /// failures, and capacity overflow are checked *before* anything is
+    /// inserted, so a failed batch leaves resident tenants untouched and
+    /// never LRU-evicts one.  Returns the registered ids in order.
+    pub fn register_all(
+        &mut self,
+        hyper: &ModelHyper,
+        entries: Vec<AdapterEntry>,
+    ) -> Result<Vec<String>> {
+        let mut ids: Vec<String> = Vec::new();
+        for entry in &entries {
+            if self.contains(&entry.id) || ids.iter().any(|i| i == &entry.id) {
+                bail!(
+                    "duplicate adapter id '{}'; export with distinct --adapter-id values",
+                    entry.id
+                );
+            }
+            Self::validate(hyper, entry)?;
+            ids.push(entry.id.clone());
+        }
+        if self.entries.len() + entries.len() > self.capacity {
+            bail!(
+                "batch of {} adapters exceeds registry capacity {} ({} already resident); raise the capacity",
+                entries.len(),
+                self.capacity,
+                self.entries.len()
+            );
+        }
+        for entry in entries {
+            // pre-validated and within capacity: no error, no eviction
+            self.register(hyper, entry)?;
+        }
+        Ok(ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_adapters;
+    use crate::nls::SearchSpace;
+    use crate::tensor::Rng;
+
+    fn hyper() -> ModelHyper {
+        let mods: Vec<String> =
+            ["q", "k", "v", "up", "down"].iter().map(|s| s.to_string()).collect();
+        let mut mod_dims = BTreeMap::new();
+        mod_dims.insert("q".into(), (64, 64));
+        mod_dims.insert("k".into(), (64, 64));
+        mod_dims.insert("v".into(), (64, 64));
+        mod_dims.insert("up".into(), (128, 64));
+        mod_dims.insert("down".into(), (64, 128));
+        ModelHyper {
+            name: "test".into(),
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 128,
+            seq_len: 48,
+            batch: 8,
+            r_max: 8,
+            group_size: 32,
+            param_count: 0,
+            mods,
+            mod_dims,
+        }
+    }
+
+    fn entry(h: &ModelHyper, id: &str, seed: u64) -> AdapterEntry {
+        let mut rng = Rng::new(seed);
+        let adapters = init_adapters(h, &mut rng, 16.0);
+        let space = SearchSpace::default_for(h, 16.0);
+        let rank = space.realize(&space.heuristic_config()).unwrap();
+        AdapterEntry {
+            id: id.to_string(),
+            eval_kind: "eval".to_string(),
+            host_sets: vec![adapters, rank],
+        }
+    }
+
+    #[test]
+    fn register_get_and_explicit_evict() {
+        let h = hyper();
+        let mut reg = AdapterRegistry::new(4);
+        assert!(reg.register(&h, entry(&h, "t0", 1)).unwrap().is_none());
+        assert!(reg.contains("t0"));
+        assert_eq!(reg.get("t0").unwrap().eval_kind, "eval");
+        assert!(reg.get("missing").is_none());
+        assert!(reg.evict("t0"));
+        assert!(!reg.evict("t0"));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn lru_bound_evicts_least_recently_used() {
+        let h = hyper();
+        let mut reg = AdapterRegistry::new(2);
+        reg.register(&h, entry(&h, "a", 1)).unwrap();
+        reg.register(&h, entry(&h, "b", 2)).unwrap();
+        // touch a, so b is the LRU victim
+        assert!(reg.get("a").is_some());
+        let evicted = reg.register(&h, entry(&h, "c", 3)).unwrap();
+        assert_eq!(evicted.as_deref(), Some("b"));
+        assert!(reg.contains("a") && reg.contains("c") && !reg.contains("b"));
+        assert_eq!(reg.evictions(), &["b".to_string()]);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_entries() {
+        let h = hyper();
+        // wrong a_ shape
+        let mut e = entry(&h, "bad", 1);
+        e.host_sets[0].insert("a_q", Tensor::zeros(&[2, 8, 32]));
+        assert!(AdapterRegistry::validate(&h, &e).is_err());
+        // unknown eval kind
+        let mut e = entry(&h, "bad", 1);
+        e.eval_kind = "train".into();
+        assert!(AdapterRegistry::validate(&h, &e).is_err());
+        // missing rank configuration
+        let mut e = entry(&h, "bad", 1);
+        e.host_sets.truncate(1);
+        assert!(AdapterRegistry::validate(&h, &e).is_err());
+        // non-prefix rank mask
+        let mut e = entry(&h, "bad", 1);
+        let mut rm = Tensor::zeros(&[2, 8]);
+        rm.data_mut()[1] = 1.0; // 0 then 1: not a prefix
+        e.host_sets[1].insert("rankmask_q", rm);
+        assert!(AdapterRegistry::validate(&h, &e).is_err());
+        // empty id
+        let mut e = entry(&h, "x", 1);
+        e.id.clear();
+        let mut reg = AdapterRegistry::new(2);
+        assert!(reg.register(&h, e).is_err());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn register_all_rejects_duplicate_ids_and_overflow() {
+        let h = hyper();
+        // duplicate ids in one batch: second would silently shadow the
+        // first tenant's weights, so the batch is rejected
+        let mut reg = AdapterRegistry::new(4);
+        let e = reg
+            .register_all(&h, vec![entry(&h, "dup", 1), entry(&h, "dup", 2)])
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate"), "{e:#}");
+        assert!(reg.is_empty(), "failed batch must not partially register");
+        // a batch larger than the capacity is rejected, not LRU-evicted,
+        // and resident tenants survive the failed call untouched
+        let mut reg = AdapterRegistry::new(2);
+        reg.register(&h, entry(&h, "resident", 9)).unwrap();
+        let batch = vec![entry(&h, "a", 1), entry(&h, "b", 2)];
+        let e = reg.register_all(&h, batch).unwrap_err();
+        assert!(format!("{e:#}").contains("capacity"), "{e:#}");
+        assert!(reg.contains("resident") && reg.len() == 1);
+        // a batch that fits registers everything in order
+        let mut reg = AdapterRegistry::new(2);
+        let ids = reg
+            .register_all(&h, vec![entry(&h, "a", 1), entry(&h, "b", 2)])
+            .unwrap();
+        assert_eq!(ids, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn adapter_dir_roundtrips_into_registry() {
+        let h = hyper();
+        let dir = std::env::temp_dir().join("sqft_registry_test");
+        std::fs::remove_dir_all(&dir).ok();
+        for (i, id) in ["alpha", "beta"].iter().enumerate() {
+            let e = entry(&h, id, i as u64 + 1);
+            checkpoint::save_adapter(
+                &dir.join(format!("{id}.ckpt")),
+                &e.host_sets[0],
+                &e.host_sets[1],
+                "test",
+                &e.eval_kind,
+                id,
+                "lora",
+                0.0,
+            )
+            .unwrap();
+        }
+        // metadata is inspectable before any registration (cmd_serve
+        // derives base prep from it)
+        let cks = load_adapter_dir(&dir, "test").unwrap();
+        assert_eq!(cks.len(), 2);
+        assert!(cks.iter().all(|c| c.method == "lora" && c.sparsity == 0.0));
+        // the production path: from_ckpt + register_all
+        let entries: Vec<AdapterEntry> = load_adapter_dir(&dir, "test")
+            .unwrap()
+            .into_iter()
+            .map(|c| AdapterEntry::from_ckpt(c, "adapter"))
+            .collect();
+        let mut reg = AdapterRegistry::new(4);
+        let loaded = reg.register_all(&h, entries).unwrap();
+        assert_eq!(loaded, vec!["alpha".to_string(), "beta".to_string()]);
+        assert!(reg.contains("alpha") && reg.contains("beta"));
+        let a = reg.get("alpha").unwrap();
+        assert_eq!(a.host_sets.len(), 2);
+        assert!(a.host_sets[0].contains("a_q") && a.host_sets[1].contains("scale_q"));
+        // config mismatch is an error at load time
+        assert!(load_adapter_dir(&dir, "other-config").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,268 @@
+//! Adapter-aware batch scheduler — replaces the FIFO coalescing loop.
+//!
+//! Adapters are per-forward host inputs, so one forward pass can serve only
+//! requests that share an adapter.  The scheduler keeps a FIFO queue per
+//! adapter id and, each dispatch, picks the queue with the best
+//! `fill + wait/aging` score:
+//!
+//!   - `fill` (0..=1) favors full batches — maximum device utilization;
+//!   - `wait/aging` grows without bound for a waiting queue, so a
+//!     low-traffic tenant whose oldest request has waited longer than
+//!     `aging` outranks even a completely full queue from a hot tenant
+//!     (no starvation).
+//!
+//! The scheduler is pure bookkeeping (no runtime handles), so the policy is
+//! unit-testable without artifacts; `now` is passed in rather than sampled.
+
+use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+/// One inference request: a prompt routed to a registered adapter
+/// (`adapter_id: None` selects the merged / no-adapter fast path).
+pub struct Request {
+    pub adapter_id: Option<String>,
+    pub prompt: String,
+    pub reply: Sender<Result<String>>,
+    pub enqueued: Instant,
+}
+
+/// Scheduling policy knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerOpts {
+    /// Upper bound on requests per dispatched batch (clamped to the
+    /// artifact batch by the router).
+    pub max_batch: usize,
+    /// A queue whose oldest request has waited this long outranks a full
+    /// batch from another tenant.
+    pub aging: Duration,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> Self {
+        SchedulerOpts { max_batch: 8, aging: Duration::from_millis(50) }
+    }
+}
+
+/// Queue-depth and batch-fill counters (reported with `ServeStats`).
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerMetrics {
+    /// batches dispatched
+    pub batches: usize,
+    /// requests dispatched across all batches
+    pub scheduled: usize,
+    /// sum of per-batch fill ratios (len / max_batch)
+    pub fill_sum: f64,
+    /// highest total pending count observed across all queues
+    pub max_queue_depth: usize,
+    /// batches where the aging term overrode the fill preference
+    pub aged_batches: usize,
+}
+
+impl SchedulerMetrics {
+    pub fn avg_fill(&self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.fill_sum / self.batches as f64 }
+    }
+}
+
+/// Per-adapter FIFO queues + the dispatch policy.
+pub struct Scheduler {
+    opts: SchedulerOpts,
+    queues: BTreeMap<Option<String>, VecDeque<Request>>,
+    pending: usize,
+    metrics: SchedulerMetrics,
+}
+
+impl Scheduler {
+    pub fn new(opts: SchedulerOpts) -> Scheduler {
+        let opts = SchedulerOpts { max_batch: opts.max_batch.max(1), ..opts };
+        Scheduler {
+            opts,
+            queues: BTreeMap::new(),
+            pending: 0,
+            metrics: SchedulerMetrics::default(),
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.pending += 1;
+        self.metrics.max_queue_depth = self.metrics.max_queue_depth.max(self.pending);
+        self.queues.entry(req.adapter_id.clone()).or_default().push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending == 0
+    }
+
+    pub fn metrics(&self) -> &SchedulerMetrics {
+        &self.metrics
+    }
+
+    /// Pop the next same-adapter batch under the fill+aging policy, FIFO
+    /// within the chosen tenant.  None iff nothing is pending.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(Option<String>, Vec<Request>)> {
+        if self.queues.is_empty() {
+            return None;
+        }
+        let aging = self.opts.aging.as_secs_f64().max(1e-9);
+        // (score, fill, wait) of the winner + the best fill seen anywhere
+        let mut chosen: Option<(Option<String>, f64, f64, f64)> = None;
+        let mut max_fill = 0.0f64;
+        for (id, q) in &self.queues {
+            let fill = q.len().min(self.opts.max_batch) as f64 / self.opts.max_batch as f64;
+            let wait = q
+                .front()
+                .map(|r| now.saturating_duration_since(r.enqueued).as_secs_f64())
+                .unwrap_or(0.0);
+            let score = fill + wait / aging;
+            if chosen.as_ref().map(|(_, s, _, _)| score > *s).unwrap_or(true) {
+                chosen = Some((id.clone(), score, fill, wait));
+            }
+            max_fill = max_fill.max(fill);
+        }
+        let (id, _, fill, wait) = chosen?;
+        // a genuine aging override: a less-full queue won because its
+        // oldest request exceeded the aging bound (microsecond wait
+        // differences between equally-full queues don't count)
+        if fill < max_fill && wait >= aging {
+            self.metrics.aged_batches += 1;
+        }
+        let q = self.queues.get_mut(&id)?;
+        let n = q.len().min(self.opts.max_batch);
+        let reqs: Vec<Request> = q.drain(..n).collect();
+        if q.is_empty() {
+            self.queues.remove(&id);
+        }
+        self.pending -= reqs.len();
+        self.metrics.batches += 1;
+        self.metrics.scheduled += reqs.len();
+        self.metrics.fill_sum += reqs.len() as f64 / self.opts.max_batch as f64;
+        Some((id, reqs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: Option<&str>, prompt: &str, age: Duration) -> (Request, std::sync::mpsc::Receiver<Result<String>>) {
+        let (tx, rx) = channel();
+        let enqueued = Instant::now().checked_sub(age).unwrap_or_else(Instant::now);
+        (
+            Request {
+                adapter_id: id.map(|s| s.to_string()),
+                prompt: prompt.to_string(),
+                reply: tx,
+                enqueued,
+            },
+            rx,
+        )
+    }
+
+    fn opts(max_batch: usize, aging_ms: u64) -> SchedulerOpts {
+        SchedulerOpts { max_batch, aging: Duration::from_millis(aging_ms) }
+    }
+
+    #[test]
+    fn batches_share_one_adapter_and_keep_fifo_order() {
+        let mut s = Scheduler::new(opts(8, 50));
+        let mut keep = Vec::new();
+        for (id, p) in [("a", "a0"), ("b", "b0"), ("a", "a1"), ("b", "b1"), ("a", "a2")] {
+            let (r, rx) = req(Some(id), p, Duration::ZERO);
+            s.push(r);
+            keep.push(rx);
+        }
+        assert_eq!(s.pending(), 5);
+        let (id1, batch1) = s.next_batch(Instant::now()).unwrap();
+        // a is fuller, so it goes first; FIFO inside the tenant
+        assert_eq!(id1.as_deref(), Some("a"));
+        let prompts: Vec<&str> = batch1.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["a0", "a1", "a2"]);
+        let (id2, batch2) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(id2.as_deref(), Some("b"));
+        assert_eq!(batch2.len(), 2);
+        assert!(s.next_batch(Instant::now()).is_none());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut s = Scheduler::new(opts(2, 50));
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(Some("a"), &format!("p{i}"), Duration::ZERO);
+            s.push(r);
+            keep.push(rx);
+        }
+        let sizes: Vec<usize> = std::iter::from_fn(|| s.next_batch(Instant::now()))
+            .map(|(_, b)| b.len())
+            .collect();
+        assert_eq!(sizes, vec![2, 2, 1]);
+        let m = s.metrics();
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.scheduled, 5);
+        assert_eq!(m.max_queue_depth, 5);
+        assert!((m.avg_fill() - (1.0 + 1.0 + 0.5) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aging_prevents_starvation_of_low_traffic_tenant() {
+        let mut s = Scheduler::new(opts(8, 50));
+        let mut keep = Vec::new();
+        // hot tenant: a full, fresh batch
+        for i in 0..8 {
+            let (r, rx) = req(Some("hot"), &format!("h{i}"), Duration::ZERO);
+            s.push(r);
+            keep.push(rx);
+        }
+        // cold tenant: one request that has waited 10x the aging window
+        let (r, rx) = req(Some("cold"), "c0", Duration::from_millis(500));
+        s.push(r);
+        keep.push(rx);
+        let (id, batch) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(id.as_deref(), Some("cold"), "aged request must not starve");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(s.metrics().aged_batches, 1);
+        let (id2, _) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(id2.as_deref(), Some("hot"));
+    }
+
+    #[test]
+    fn prefers_fuller_queue_at_equal_age() {
+        let mut s = Scheduler::new(opts(8, 50));
+        let mut keep = Vec::new();
+        for i in 0..4 {
+            let (r, rx) = req(Some("big"), &format!("b{i}"), Duration::ZERO);
+            s.push(r);
+            keep.push(rx);
+        }
+        let (r, rx) = req(Some("small"), "s0", Duration::ZERO);
+        s.push(r);
+        keep.push(rx);
+        let (id, _) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(id.as_deref(), Some("big"));
+        assert_eq!(s.metrics().aged_batches, 0);
+    }
+
+    #[test]
+    fn merged_path_is_its_own_queue() {
+        let mut s = Scheduler::new(opts(4, 50));
+        let (r1, _k1) = req(None, "m0", Duration::ZERO);
+        let (r2, _k2) = req(Some("a"), "a0", Duration::ZERO);
+        let (r3, _k3) = req(None, "m1", Duration::ZERO);
+        s.push(r1);
+        s.push(r2);
+        s.push(r3);
+        let (id, batch) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(id, None);
+        assert_eq!(batch.len(), 2);
+        let (id2, _) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(id2.as_deref(), Some("a"));
+    }
+}
