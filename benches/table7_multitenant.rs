@@ -1,21 +1,27 @@
 //! Multi-tenant extension of the Table 7 serving bench: throughput vs
 //! tenant count over one device-resident frozen base (registry → scheduler
-//! → engine), plus the merged-vs-unmerged per-tenant serving cost the
-//! paper's §2.5 argument turns on.
+//! → engine), the merged-vs-unmerged per-tenant serving cost the paper's
+//! §2.5 argument turns on, and — new with ISSUE 2 — the decode hot path:
+//! device-cached tenant adapters vs per-step host upload, with PJRT
+//! upload-byte accounting.  Writes `BENCH_decode.json` so the decode perf
+//! trajectory is tracked PR over PR.
+//!
+//! `SQFT_BENCH_SMOKE=1` shrinks every iteration count to 1 (CI smoke).
 
 use sqft::data::{Dataset, Task, Tokenizer};
-use sqft::model::init_base;
+use sqft::model::{init_base, ParamSet};
 use sqft::nls::SearchSpace;
 use sqft::peft::Method;
 use sqft::pipeline;
 use sqft::report::Table;
-use sqft::runtime::Runtime;
+use sqft::runtime::{host_upload_bytes, DeviceStore, Runtime};
 use sqft::serve::{benchmark_router, AdapterRegistry, Engine, Router, SchedulerOpts};
 use sqft::tensor::Rng;
 use sqft::train::TrainOpts;
-use sqft::util::bench::bench_throughput;
+use sqft::util::bench::{bench_throughput, smoke_iters};
+use sqft::util::json::Json;
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -32,15 +38,18 @@ fn main() -> anyhow::Result<()> {
     let base = init_base(&hyper, &mut Rng::new(7));
 
     println!("# table7 multitenant bench: throughput vs tenant count");
+    let tenant_steps = smoke_iters(5);
     let prepared = pipeline::prepare(&rt, config, &base, Method::SparsePeft, 0.5,
                                      &ds.train, &tok, 2, &mut Rng::new(9))?;
     let frozen = prepared.frozen_set()?;
     let max_tenants = 4usize;
     let entries = pipeline::tenant_adapters(&rt, config, &prepared, max_tenants,
-                                            &ds.train, &tok, 5, 77)?;
+                                            &ds.train, &tok, tenant_steps, 77)?;
 
     // --- throughput vs tenant count over one frozen base ---------------
-    let n_requests = 48usize;
+    // tenants are registered device-resident: serving batches take the
+    // cached path (adapter buffers already on device)
+    let n_requests = if sqft::util::bench::smoke() { 12usize } else { 48 };
     let mut table = Table::new(
         "Throughput vs tenant count (one device-resident base)",
         &["tenants", "served", "req/s", "avg batch fill", "batches", "aged"],
@@ -50,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         let mut registry = AdapterRegistry::new(max_tenants);
         let ids: Vec<String> = entries[..k].iter().map(|e| e.id.clone()).collect();
         for e in &entries[..k] {
-            registry.register(&hyper, e.clone())?;
+            registry.register_resident(&rt, &hyper, e.clone())?;
         }
         let mut router = Router::new(engine, registry);
         let mut grng = Rng::new(11 + k as u64);
@@ -72,11 +81,98 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", table.render());
 
+    // --- decode hot path: cached device-resident adapters vs host upload
+    // Steady-state criterion: a registered tenant's decode step ships only
+    // the token batch across the PJRT boundary (asserted below, exactly).
+    let max_new = 4usize;
+    let engine = Engine::new(&rt, config, &frozen, None, "eval", max_new)?;
+    let mut registry = AdapterRegistry::new(max_tenants);
+    registry.register_resident(&rt, &hyper, entries[0].clone())?;
+    let tenant = &entries[0];
+    let sets: Vec<&ParamSet> = tenant.host_sets.iter().collect();
+    let mut grng = Rng::new(23);
+    let prompts: Vec<String> =
+        (0..hyper.batch).map(|_| task.gen_sample(&mut grng).prompt).collect();
+
+    // equivalence gate: the cached path must answer byte-identically
+    let host_ans = engine.generate_batch_for(&sets, &tenant.eval_kind, &prompts)?;
+    let dev = registry.device_set(&tenant.id).expect("tenant is device-resident");
+    let cached_ans =
+        engine.generate_batch_cached(Some(dev), &[], &tenant.eval_kind, &prompts)?;
+    assert_eq!(host_ans, cached_ans, "cached decode path diverged from host path");
+
+    let gen_tokens = |ans: &[String]| -> usize { ans.iter().map(|a| a.len() + 1).sum() };
+    let iters = smoke_iters(8);
+    let run = |dev: Option<&DeviceStore>,
+               hs: &[&ParamSet]|
+     -> anyhow::Result<(f64, u64, usize)> {
+        engine.generate_batch_cached(dev, hs, &tenant.eval_kind, &prompts)?; // warmup
+        let b0 = host_upload_bytes();
+        let t0 = Instant::now();
+        let (mut toks, mut steps) = (0usize, 0usize);
+        for _ in 0..iters {
+            let ans = engine.generate_batch_cached(dev, hs, &tenant.eval_kind, &prompts)?;
+            toks += gen_tokens(&ans);
+            steps += engine.last_decode_steps();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        Ok((toks as f64 / secs.max(1e-12), host_upload_bytes() - b0, steps))
+    };
+    let (host_tps, host_bytes, host_steps) = run(None, &sets)?;
+    let (cached_tps, cached_bytes, cached_steps) = run(Some(dev), &[])?;
+    let token_batch_bytes = (hyper.batch * hyper.seq_len * 4) as u64;
+    let host_per_step = host_bytes / host_steps.max(1) as u64;
+    let cached_per_step = cached_bytes / cached_steps.max(1) as u64;
+    // hard invariants, independent of timing noise
+    assert_eq!(
+        cached_bytes,
+        cached_steps as u64 * token_batch_bytes,
+        "cached decode uploaded more than the token batch per step"
+    );
+    assert!(host_per_step > cached_per_step,
+        "host path should upload strictly more per step");
+    let adapter_bytes: usize = tenant.host_sets.iter().map(|s| s.total_bytes()).sum();
+    println!(
+        "bench decode_host_upload   {host_tps:>10.1} tok/s  {host_per_step:>8} B/step"
+    );
+    println!(
+        "bench decode_cached        {cached_tps:>10.1} tok/s  {cached_per_step:>8} B/step"
+    );
+    println!(
+        "decode speedup {:.2}x; per-step upload cut {} -> {} bytes (token batch = {} B, \
+tenant adapter payload = {} B)",
+        cached_tps / host_tps.max(1e-12),
+        host_per_step, cached_per_step, token_batch_bytes, adapter_bytes
+    );
+    let report = Json::obj(vec![
+        ("bench", Json::Str("decode_hot_path".into())),
+        ("config", Json::Str(config.into())),
+        ("batch", Json::Num(hyper.batch as f64)),
+        ("seq_len", Json::Num(hyper.seq_len as f64)),
+        ("max_new_tokens", Json::Num(max_new as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("token_batch_bytes", Json::Num(token_batch_bytes as f64)),
+        ("tenant_adapter_bytes", Json::Num(adapter_bytes as f64)),
+        ("host_upload", Json::obj(vec![
+            ("tokens_per_s", Json::Num(host_tps)),
+            ("upload_bytes_total", Json::Num(host_bytes as f64)),
+            ("upload_bytes_per_step", Json::Num(host_per_step as f64)),
+        ])),
+        ("cached", Json::obj(vec![
+            ("tokens_per_s", Json::Num(cached_tps)),
+            ("upload_bytes_total", Json::Num(cached_bytes as f64)),
+            ("upload_bytes_per_step", Json::Num(cached_per_step as f64)),
+        ])),
+        ("speedup_tokens_per_s", Json::Num(cached_tps / host_tps.max(1e-12))),
+    ]);
+    std::fs::write("BENCH_decode.json", report.to_string_pretty())?;
+    println!("wrote BENCH_decode.json");
+
     // --- merged vs unmerged per-tenant serving cost ---------------------
     let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
     let space = SearchSpace::new(&prepared.hyper, choices, alpha)?;
-    let topts = TrainOpts { steps: 5, lr: 1e-3, log_every: 5, seed: 1,
-                            fixed_rank: false };
+    let topts = TrainOpts { steps: tenant_steps, lr: 1e-3, log_every: tenant_steps.max(1),
+                            seed: 1, fixed_rank: false };
     let (trainer, _) = pipeline::finetune(&rt, config, &prepared, space,
                                           &ds.train, &tok, &topts)?;
     let cfg = trainer.space.heuristic_config();
@@ -95,11 +191,12 @@ fn main() -> anyhow::Result<()> {
     let mut grng = Rng::new(3);
     let prompts: Vec<String> =
         (0..8).map(|_| task.gen_sample(&mut grng).prompt).collect();
-    let t_un = bench_throughput("serve_unmerged_per_tenant", 1, 8, || {
+    let bench_iters = smoke_iters(8);
+    let t_un = bench_throughput("serve_unmerged_per_tenant", 1, bench_iters, || {
         engine_un.generate_batch(&prompts).unwrap();
         prompts.len()
     });
-    let t_m = bench_throughput("serve_merged_per_tenant", 1, 8, || {
+    let t_m = bench_throughput("serve_merged_per_tenant", 1, bench_iters, || {
         engine_m.generate_batch(&prompts).unwrap();
         prompts.len()
     });

@@ -47,7 +47,7 @@ pub fn evaluate(
     let mut loss_sum = 0.0f64;
     let mut loss_n = 0usize;
     while let Some(batch) = batcher.next_batch()? {
-        let args = build_args(&exe.spec, Some(device), host_sets, Some(&batch), &[])?;
+        let args = build_args(&exe.spec, &[device], host_sets, Some(&batch), &[])?;
         let outs = exe.run_mixed(&rt.client, &args)?;
         let logits = &outs[0]; // (B, S, V)
         let (b_n, s_n, v_n) = (batch.batch, batch.seq, hyper.vocab);

@@ -361,9 +361,9 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
             }
             entries.push(sqft::serve::AdapterEntry::from_ckpt(ck, "adapter"));
         }
-        let ids = registry.register_all(&hyper, entries)
+        let ids = registry.register_all_resident(&rt, &hyper, entries)
             .context("registering --adapters (see --registry-cap / --adapter-id)")?;
-        println!("loaded {} adapters ({}, sparsity {:.0}%)",
+        println!("loaded {} adapters device-resident ({}, sparsity {:.0}%)",
             ids.len(), method.name(), sparsity * 100.0);
         tenant_ids.extend(ids.into_iter().map(Some));
     } else if n_tenants > 0 {
@@ -371,7 +371,7 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
         let entries = pipeline::tenant_adapters(&rt, &config, &prepared, n_tenants,
                                                 &ds.train, &tok, tenant_steps,
                                                 seed ^ 21)?;
-        let ids = registry.register_all(&hyper, entries)
+        let ids = registry.register_all_resident(&rt, &hyper, entries)
             .context("registering --tenants (raise --registry-cap or lower --tenants)")?;
         tenant_ids.extend(ids.into_iter().map(Some));
     }

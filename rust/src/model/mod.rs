@@ -59,6 +59,12 @@ impl ParamSet {
         self.map.values().map(|t| t.len()).sum()
     }
 
+    /// Total f32 payload in bytes — what this set costs to ship across the
+    /// PJRT boundary (upload accounting in serve benches).
+    pub fn total_bytes(&self) -> usize {
+        self.total_elems() * std::mem::size_of::<f32>()
+    }
+
     /// Global fraction of exact zeros across a subset of tensors.
     pub fn sparsity_of(&self, names: &[&str]) -> f64 {
         let (mut zeros, mut total) = (0usize, 0usize);

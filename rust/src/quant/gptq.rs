@@ -22,7 +22,62 @@ use crate::tensor::linalg::gptq_hinv_factor;
 use crate::tensor::Tensor;
 use anyhow::Result;
 
+/// Quantize one output row: left-to-right column quantization with error
+/// feedback into the row's unquantized tail.  Rows never exchange state
+/// (the Hessian factor is shared read-only), which is what makes the
+/// row-parallel driver below exact — identical arithmetic order per row
+/// means byte-identical results at any thread count.
+#[allow(clippy::too_many_arguments)]
+fn quantize_row(
+    wrow_in: &[f32],
+    srow: &[f32],
+    zrow: &[f32],
+    mrow: Option<&[f32]>,
+    u: &Tensor,
+    group_size: usize,
+    qm: f32,
+    crow: &mut [f32],
+    drow: &mut [f32],
+) {
+    let inp = wrow_in.len();
+    // per-row working copy with error feedback applied
+    let mut work = wrow_in.to_vec();
+    for j in 0..inp {
+        let s = srow[j / group_size];
+        let z = zrow[j / group_size];
+        let masked = mrow.map(|m| m[j] == 0.0).unwrap_or(false);
+        let wv = work[j];
+        let q = if masked { z } else { ((wv / s).round() + z).clamp(0.0, qm) };
+        let dq = (q - z) * s;
+        crow[j] = q;
+        drow[j] = dq;
+        // error feedback into the unquantized tail of this row
+        let d = u.at2(j, j);
+        if d != 0.0 {
+            let err = (wv - dq) / d;
+            if err != 0.0 {
+                let urow = &u.data()[j * inp..(j + 1) * inp];
+                for t in (j + 1)..inp {
+                    work[t] -= err * urow[t];
+                }
+                // re-project: masked tail entries stay structurally zero
+                if let Some(m) = mrow {
+                    for t in (j + 1)..inp {
+                        if m[t] == 0.0 {
+                            work[t] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Quantize `w` (out, in) given the calibration Gram/Hessian `h` (in, in).
+///
+/// Output rows are independent (each owns its error-feedback working
+/// copy), so they are fanned out across `std::thread::scope` row chunks;
+/// results are byte-identical to the sequential order.
 pub fn gptq_quantize(
     w: &Tensor,
     h: &Tensor,
@@ -40,41 +95,42 @@ pub fn gptq_quantize(
 
     let mut codes = Tensor::zeros(&[out, inp]);
     let mut dequant = Tensor::zeros(&[out, inp]);
-    // per-row working copy with error feedback applied
-    let mut work = w.clone();
-    for i in 0..out {
-        for j in 0..inp {
-            let s = scales.at2(i, j / group_size);
-            let z = zeros.at2(i, j / group_size);
-            let masked = mask.map(|m| m.at2(i, j) == 0.0).unwrap_or(false);
-            let wv = work.at2(i, j);
-            let q = if masked { z } else { ((wv / s).round() + z).clamp(0.0, qm) };
-            let dq = (q - z) * s;
-            codes.set2(i, j, q);
-            dequant.set2(i, j, dq);
-            // error feedback into the unquantized tail of this row
-            let d = u.at2(j, j);
-            if d != 0.0 {
-                let err = (wv - dq) / d;
-                if err != 0.0 {
-                    let urow = &u.data()[j * inp..(j + 1) * inp];
-                    let wrow = work.row_mut(i);
-                    for t in (j + 1)..inp {
-                        wrow[t] -= err * urow[t];
+    if out > 0 && inp > 0 {
+        let n_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(out)
+            .max(1);
+        let rows_per = (out + n_threads - 1) / n_threads;
+        let (scales_ref, zeros_ref, u_ref) = (&scales, &zeros, &u);
+        std::thread::scope(|s| {
+            for (ci, (crows, drows)) in codes
+                .data_mut()
+                .chunks_mut(rows_per * inp)
+                .zip(dequant.data_mut().chunks_mut(rows_per * inp))
+                .enumerate()
+            {
+                let row0 = ci * rows_per;
+                s.spawn(move || {
+                    for (k, (crow, drow)) in
+                        crows.chunks_mut(inp).zip(drows.chunks_mut(inp)).enumerate()
+                    {
+                        let i = row0 + k;
+                        quantize_row(
+                            w.row(i),
+                            scales_ref.row(i),
+                            zeros_ref.row(i),
+                            mask.map(|m| m.row(i)),
+                            u_ref,
+                            group_size,
+                            qm,
+                            crow,
+                            drow,
+                        );
                     }
-                    // re-project: masked tail entries stay structurally zero
-                    if let Some(m) = mask {
-                        let mrow = m.row(i);
-                        let wrow = work.row_mut(i);
-                        for t in (j + 1)..inp {
-                            if mrow[t] == 0.0 {
-                                wrow[t] = 0.0;
-                            }
-                        }
-                    }
-                }
+                });
             }
-        }
+        });
     }
     Ok(QuantResult { codes, scales, zeros, dequant })
 }

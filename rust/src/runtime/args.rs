@@ -1,10 +1,20 @@
 //! Positional-argument assembly: maps an artifact's manifest input list to
-//! concrete values drawn from device-resident buffers (frozen base weights),
-//! host ParamSets (adapter/opt/quant state), the current data batch, and
-//! scalar knobs (step, lr, qmax).
+//! concrete values drawn from device-resident buffer sets (frozen base
+//! weights, cached tenant adapters, the decode loop's token buffer), host
+//! ParamSets (adapter/opt/quant state), the current data batch, and scalar
+//! knobs (step, lr, qmax).
 //!
 //! Every artifact call in the coordinator goes through here, so input-order
 //! bugs are impossible by construction: the manifest order *is* the order.
+//!
+//! Resolution order per input name:
+//!   1. `devices`, earlier stores first — anything already resident on the
+//!      device crosses the PJRT boundary as a borrowed handle (zero bytes);
+//!   2. `host_sets`, first hit wins — uploaded per call without cloning;
+//!   3. batch fields (`tokens`/`targets`/`loss_mask`) — borrowed slices,
+//!      uploaded per call without cloning (the train loop calls this every
+//!      step);
+//!   4. scalar knobs.
 
 use super::{Arg, ArtifactSpec, DeviceStore, DType, HostValue};
 use crate::data::Batch;
@@ -14,16 +24,16 @@ use anyhow::{bail, Result};
 
 pub fn build_args<'a>(
     spec: &ArtifactSpec,
-    device: Option<&'a DeviceStore>,
+    devices: &[&'a DeviceStore],
     host_sets: &[&'a ParamSet],
-    batch: Option<&Batch>,
+    batch: Option<&'a Batch>,
     scalars: &[(&str, f32)],
 ) -> Result<Vec<Arg<'a>>> {
     let mut out = Vec::with_capacity(spec.inputs.len());
     'next: for input in &spec.inputs {
         let name = input.name.as_str();
-        // 1. device-resident buffers win (frozen base weights)
-        if let Some(d) = device {
+        // 1. device-resident buffers win, earlier stores first
+        for d in devices {
             if d.contains(name) {
                 out.push(Arg::Buf(d.get(name)?));
                 continue 'next;
@@ -41,22 +51,19 @@ pub fn build_args<'a>(
                 continue 'next;
             }
         }
-        // 3. batch fields
+        // 3. batch fields — borrowed, never cloned per call
         if let Some(b) = batch {
             match name {
                 "tokens" => {
-                    out.push(Arg::Host(HostValue::I32(
-                        vec![b.batch, b.seq], b.tokens.clone())));
+                    out.push(Arg::I32Ref(vec![b.batch, b.seq], &b.tokens));
                     continue 'next;
                 }
                 "targets" => {
-                    out.push(Arg::Host(HostValue::I32(
-                        vec![b.batch, b.seq], b.targets.clone())));
+                    out.push(Arg::I32Ref(vec![b.batch, b.seq], &b.targets));
                     continue 'next;
                 }
                 "loss_mask" => {
-                    out.push(Arg::Host(HostValue::F32(
-                        Tensor::new(&[b.batch, b.seq], b.loss_mask.clone())?)));
+                    out.push(Arg::F32Ref(vec![b.batch, b.seq], &b.loss_mask));
                     continue 'next;
                 }
                 _ => {}

@@ -21,6 +21,23 @@ use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of host→device bytes crossing the PJRT boundary.
+/// Every upload path (`host_to_buffer`, borrowed-slice args, DeviceStore
+/// puts) feeds it, so benches and tests can read deltas around a hot path
+/// and prove e.g. that a steady-state decode step ships only the token
+/// batch.  Relaxed ordering: this is a metric, not a synchronization point.
+static HOST_UPLOAD_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Total host→device bytes uploaded so far (monotonic; read deltas).
+pub fn host_upload_bytes() -> u64 {
+    HOST_UPLOAD_BYTES.load(Ordering::Relaxed)
+}
+
+fn note_upload(bytes: usize) {
+    HOST_UPLOAD_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+}
 
 /// A host-side value crossing the PJRT boundary.
 #[derive(Clone, Debug)]
@@ -96,6 +113,20 @@ impl Executable {
             .map(|a| match a {
                 Arg::Host(v) => Ok((v.shape().to_vec(), v.dtype())),
                 Arg::HostRef(t) => Ok((t.shape().to_vec(), DType::F32)),
+                Arg::I32Ref(s, d) => {
+                    if s.iter().product::<usize>() != d.len() {
+                        bail!("i32 arg: shape {:?} wants {} elems, got {}",
+                            s, s.iter().product::<usize>(), d.len());
+                    }
+                    Ok((s.clone(), DType::I32))
+                }
+                Arg::F32Ref(s, d) => {
+                    if s.iter().product::<usize>() != d.len() {
+                        bail!("f32 arg: shape {:?} wants {} elems, got {}",
+                            s, s.iter().product::<usize>(), d.len());
+                    }
+                    Ok((s.clone(), DType::F32))
+                }
                 Arg::Buf(b) => {
                     let s = b.on_device_shape()?;
                     match &s {
@@ -125,7 +156,18 @@ impl Executable {
                     order.push(owned.len() - 1);
                 }
                 Arg::HostRef(t) => {
+                    note_upload(t.len() * 4);
                     owned.push(client.buffer_from_host_buffer(t.data(), t.shape(), None)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::I32Ref(s, d) => {
+                    note_upload(d.len() * 4);
+                    owned.push(client.buffer_from_host_buffer(d, s, None)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::F32Ref(s, d) => {
+                    note_upload(d.len() * 4);
+                    owned.push(client.buffer_from_host_buffer(d, s, None)?);
                     order.push(owned.len() - 1);
                 }
                 Arg::Buf(_) => order.push(usize::MAX),
@@ -134,8 +176,8 @@ impl Executable {
         let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
         for (a, &o) in inputs.iter().zip(&order) {
             match a {
-                Arg::Host(_) | Arg::HostRef(_) => refs.push(&owned[o]),
                 Arg::Buf(b) => refs.push(b),
+                _ => refs.push(&owned[o]),
             }
         }
         let out = self.exe.execute_b(&refs)?;
@@ -153,11 +195,16 @@ impl Executable {
 
 /// One positional artifact argument.
 pub enum Arg<'a> {
-    /// owned host value (batch tensors, scalars)
+    /// owned host value (scalars, one-off tensors)
     Host(HostValue),
     /// borrowed host tensor (adapter/opt state) — uploaded without cloning
     /// the host buffer first (perf: saves one memcpy per tensor per step)
     HostRef(&'a Tensor),
+    /// borrowed i32 slice + owned (tiny) shape — the batch token/target
+    /// rows, uploaded straight from the caller's buffer every step
+    I32Ref(Vec<usize>, &'a [i32]),
+    /// borrowed f32 slice + owned shape (batch loss masks)
+    F32Ref(Vec<usize>, &'a [f32]),
     Buf(&'a xla::PjRtBuffer),
 }
 
@@ -170,8 +217,14 @@ fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
 
 pub fn host_to_buffer(client: &xla::PjRtClient, v: &HostValue) -> Result<xla::PjRtBuffer> {
     match v {
-        HostValue::F32(t) => Ok(client.buffer_from_host_buffer(t.data(), t.shape(), None)?),
-        HostValue::I32(shape, data) => Ok(client.buffer_from_host_buffer(data, shape, None)?),
+        HostValue::F32(t) => {
+            note_upload(t.len() * 4);
+            Ok(client.buffer_from_host_buffer(t.data(), t.shape(), None)?)
+        }
+        HostValue::I32(shape, data) => {
+            note_upload(data.len() * 4);
+            Ok(client.buffer_from_host_buffer(data, shape, None)?)
+        }
     }
 }
 
@@ -258,6 +311,46 @@ impl DeviceStore {
     pub fn put_host(&mut self, client: &xla::PjRtClient, name: &str, v: &HostValue) -> Result<()> {
         self.bufs.insert(name.to_string(), host_to_buffer(client, v)?);
         Ok(())
+    }
+
+    /// Upload a borrowed f32 tensor without cloning its host buffer first
+    /// (the registration/startup bulk-upload path).
+    pub fn put_tensor(&mut self, client: &xla::PjRtClient, name: &str, t: &Tensor) -> Result<()> {
+        note_upload(t.len() * 4);
+        self.bufs
+            .insert(name.to_string(), client.buffer_from_host_buffer(t.data(), t.shape(), None)?);
+        Ok(())
+    }
+
+    /// Upload a borrowed i32 slice (the decode loop's token batch).
+    /// Replacing an existing buffer drops the old device allocation.
+    pub fn put_i32(
+        &mut self,
+        client: &xla::PjRtClient,
+        name: &str,
+        shape: &[usize],
+        data: &[i32],
+    ) -> Result<()> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("'{name}': shape {:?} wants {} elems, got {}",
+                shape, shape.iter().product::<usize>(), data.len());
+        }
+        note_upload(data.len() * 4);
+        self.bufs.insert(name.to_string(), client.buffer_from_host_buffer(data, shape, None)?);
+        Ok(())
+    }
+
+    /// Drop one buffer (freeing its device allocation); true if present.
+    pub fn remove(&mut self, name: &str) -> bool {
+        self.bufs.remove(name).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
     }
 
     pub fn get(&self, name: &str) -> Result<&xla::PjRtBuffer> {

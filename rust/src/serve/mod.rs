@@ -7,11 +7,13 @@
 //! the deployment pattern LoRA-style adapters were designed for:
 //!
 //!   - [`registry::AdapterRegistry`] holds validated per-tenant adapter
-//!     state (hot registration/eviction, LRU-bounded);
+//!     state (hot registration/eviction, LRU-bounded); `register_resident`
+//!     uploads a tenant's adapters to the device once, so steady-state
+//!     decoding ships only the token batch across the PJRT boundary;
 //!   - [`scheduler::Scheduler`] groups pending requests into same-adapter
-//!     batches (adapters are per-forward host inputs, so a batch must share
-//!     one adapter) with an aging policy so low-traffic tenants don't
-//!     starve;
+//!     batches (one forward serves one adapter, cached or host-side, so a
+//!     batch must share one adapter) with an aging policy so low-traffic
+//!     tenants don't starve;
 //!   - [`Engine`] owns the Runtime handles (PJRT is not Sync) and executes
 //!     batches for any registered adapter — or the merged no-adapter fast
 //!     path; [`Router`] ties the three together on one serving thread,
@@ -32,9 +34,10 @@ use crate::data::Tokenizer;
 use crate::model::ParamSet;
 use crate::nls::{Config, SearchSpace};
 use crate::report::Table;
-use crate::runtime::{args::build_args, DeviceStore, HostValue, Runtime};
+use crate::runtime::{args::build_args, DeviceStore, Runtime};
 use crate::util::{summarize, Summary};
 use anyhow::{anyhow, bail, Result};
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
@@ -55,6 +58,9 @@ pub struct Engine<'a> {
     default_kind: String,
     tok: Tokenizer,
     max_new_tokens: usize,
+    /// forwards executed by the most recent generate call (benches/tests
+    /// divide upload-byte deltas by this to get per-step cost)
+    last_decode_steps: Cell<usize>,
 }
 
 impl<'a> Engine<'a> {
@@ -80,7 +86,7 @@ impl<'a> Engine<'a> {
         }
         let mut device = DeviceStore::new();
         for (n, t) in frozen.iter() {
-            device.put_host(&rt.client, n, &HostValue::F32(t.clone()))?;
+            device.put_tensor(&rt.client, n, t)?;
         }
         let mut default_sets = Vec::new();
         match adapters {
@@ -104,6 +110,7 @@ impl<'a> Engine<'a> {
             default_kind: eval_kind.to_string(),
             tok: Tokenizer::new(),
             max_new_tokens,
+            last_decode_steps: Cell::new(0),
         })
     }
 
@@ -116,67 +123,108 @@ impl<'a> Engine<'a> {
         Ok(self.rt.model(&self.config)?.batch)
     }
 
+    /// Forwards executed by the most recent generate call on this engine.
+    pub fn last_decode_steps(&self) -> usize {
+        self.last_decode_steps.get()
+    }
+
     /// Greedy-decode a batch of prompts with the engine's default adapter
     /// state (merged fast path when built with `adapters: None`).
-    pub fn generate_batch(&self, prompts: &[String]) -> Result<Vec<String>> {
+    pub fn generate_batch<S: AsRef<str>>(&self, prompts: &[S]) -> Result<Vec<String>> {
         let sets: Vec<&ParamSet> = self.default_sets.iter().collect();
-        self.generate_batch_for(&sets, &self.default_kind, prompts)
+        self.generate_batch_cached(None, &sets, &self.default_kind, prompts)
     }
 
     /// Greedy-decode a batch of prompts against explicit per-forward host
-    /// inputs (one tenant's adapter + rank params) — the multi-tenant hot
-    /// path.  All prompts in the batch share `host_sets`.
-    pub fn generate_batch_for(
+    /// inputs (one tenant's adapter + rank params) — the fallback for
+    /// unregistered one-off calls: the adapter host set is re-uploaded
+    /// every decode step.  All prompts in the batch share `host_sets`.
+    pub fn generate_batch_for<S: AsRef<str>>(
         &self,
         host_sets: &[&ParamSet],
         eval_kind: &str,
-        prompts: &[String],
+        prompts: &[S],
+    ) -> Result<Vec<String>> {
+        self.generate_batch_cached(None, host_sets, eval_kind, prompts)
+    }
+
+    /// The multi-tenant hot path.  With `tenant_device` (a registered
+    /// tenant's cached buffer set) every adapter input resolves to a
+    /// borrowed device handle and a steady-state decode step uploads
+    /// *only* the token batch; `host_sets` then only backfill names the
+    /// device sets don't carry.  Without it, this is the host-upload
+    /// fallback path.
+    ///
+    /// Decode-loop mechanics: one flattened `(batch, seq)` token buffer is
+    /// reused across steps (no per-token re-flatten) and re-uploaded once
+    /// per forward, guarded by a dirty flag so an unchanged buffer is
+    /// never re-shipped (today every executed forward appends at least one
+    /// token, so the guard is a structural invariant rather than a
+    /// measured saving); the loop stops paying forwards the moment every
+    /// real row is done.
+    pub fn generate_batch_cached<S: AsRef<str>>(
+        &self,
+        tenant_device: Option<&DeviceStore>,
+        host_sets: &[&ParamSet],
+        eval_kind: &str,
+        prompts: &[S],
     ) -> Result<Vec<String>> {
         let hyper = self.rt.model(&self.config)?.clone();
         if prompts.is_empty() || prompts.len() > hyper.batch {
             bail!("batch of {} prompts (max {})", prompts.len(), hyper.batch);
         }
         let exe = self.rt.executable(&self.config, eval_kind)?;
-        let seq = hyper.seq_len;
-        // token rows + current lengths
-        let mut rows: Vec<Vec<i32>> = Vec::new();
-        let mut lens: Vec<usize> = Vec::new();
-        for p in prompts {
-            let ids = self.tok.encode(p)?;
+        let (b, seq, v) = (hyper.batch, hyper.seq_len, hyper.vocab);
+        // one flattened token buffer + current row lengths
+        let mut flat = vec![0i32; b * seq];
+        let mut lens: Vec<usize> = Vec::with_capacity(b);
+        for (bi, p) in prompts.iter().enumerate() {
+            let ids = self.tok.encode(p.as_ref())?;
             if ids.len() + 1 + self.max_new_tokens > seq {
                 bail!("prompt too long for seq {seq}");
             }
-            let mut row = vec![0i32; seq];
+            let row = &mut flat[bi * seq..(bi + 1) * seq];
             row[0] = Tokenizer::BOS;
             for (i, &id) in ids.iter().enumerate() {
                 row[i + 1] = id;
             }
             lens.push(ids.len() + 1);
-            rows.push(row);
         }
-        while rows.len() < hyper.batch {
-            rows.push(rows[0].clone());
+        for bi in prompts.len()..b {
+            flat.copy_within(0..seq, bi * seq);
             lens.push(0); // padding row: never decoded
         }
         let mut done = vec![false; prompts.len()];
         let mut answers: Vec<String> = vec![String::new(); prompts.len()];
+        let mut active = prompts.len();
+        let mut steps = 0usize;
+        // the token batch rides in a device store behind a dirty flag: an
+        // unchanged buffer is never re-shipped (every forward currently
+        // dirties it — at least one active row appends a token — so this
+        // is one upload per forward, kept explicit rather than incidental)
+        let mut step_store = DeviceStore::new();
+        let mut dirty = true;
         for _ in 0..self.max_new_tokens {
-            if done.iter().all(|&d| d) {
-                break;
+            if active == 0 {
+                break; // fully-done batch: stop paying forwards
             }
-            let tokens: Vec<i32> = rows.iter().flatten().copied().collect();
-            let batch = crate::data::Batch {
-                tokens,
-                targets: vec![0; hyper.batch * seq],
-                loss_mask: vec![0.0; hyper.batch * seq],
-                batch: hyper.batch,
-                seq,
-                real: prompts.len(),
-            };
-            let args = build_args(&exe.spec, Some(&self.device), host_sets, Some(&batch), &[])?;
+            if dirty {
+                step_store.put_i32(&self.rt.client, "tokens", &[b, seq], &flat)?;
+                dirty = false;
+            }
+            // precedence mirrors the host-upload path exactly (frozen
+            // device store beats per-tenant state), so cached and host
+            // answers are byte-identical by construction
+            let mut devices: Vec<&DeviceStore> = Vec::with_capacity(3);
+            devices.push(&step_store);
+            devices.push(&self.device);
+            if let Some(d) = tenant_device {
+                devices.push(d);
+            }
+            let args = build_args(&exe.spec, &devices, host_sets, None, &[])?;
             let outs = exe.run_mixed(&self.rt.client, &args)?;
+            steps += 1;
             let logits = &outs[0];
-            let v = hyper.vocab;
             for (bi, len) in lens.iter_mut().enumerate().take(prompts.len()) {
                 if done[bi] || *len == 0 {
                     continue;
@@ -192,14 +240,17 @@ impl<'a> Engine<'a> {
                 let ch = self.tok.decode_one(best as i32)?;
                 if ch == '.' || *len >= seq - 1 {
                     done[bi] = true;
+                    active -= 1;
                 }
                 if ch != '.' {
                     answers[bi].push(ch);
                 }
-                rows[bi][*len] = best as i32;
+                flat[bi * seq + *len] = best as i32;
                 *len += 1;
+                dirty = true;
             }
         }
+        self.last_decode_steps.set(steps);
         Ok(answers)
     }
 }
@@ -362,19 +413,22 @@ impl<'a> Router<'a> {
     }
 
     /// Execute one same-adapter batch and reply to every request in it.
+    /// Registered-resident tenants take the device-cached path (adapter
+    /// buffers already on device); host-only registrations fall back to
+    /// per-forward upload.  Prompts are borrowed, not cloned.
     fn dispatch(
         &mut self,
         id: Option<String>,
         reqs: Vec<Request>,
         tallies: &mut BTreeMap<String, Tally>,
     ) {
-        let prompts: Vec<String> = reqs.iter().map(|r| r.prompt.clone()).collect();
+        let prompts: Vec<&str> = reqs.iter().map(|r| r.prompt.as_str()).collect();
         let result = match &id {
             None => self.engine.generate_batch(&prompts),
-            Some(tid) => match self.registry.get(tid) {
-                Some(entry) => {
+            Some(tid) => match self.registry.get_for_serving(tid) {
+                Some((entry, dev)) => {
                     let sets: Vec<&ParamSet> = entry.host_sets.iter().collect();
-                    self.engine.generate_batch_for(&sets, &entry.eval_kind, &prompts)
+                    self.engine.generate_batch_cached(dev, &sets, &entry.eval_kind, &prompts)
                 }
                 None => Err(anyhow!("adapter '{tid}' is not registered")),
             },

@@ -1,16 +1,21 @@
 //! Per-tenant adapter registry for multi-tenant serving.
 //!
 //! One `Engine` owns the device-resident frozen base; every tenant's tuned
-//! adapter (LoRA/NLS tensors + realized rank configuration) stays host-side
-//! and is passed per forward.  The registry validates entries against the
-//! model hyperparameters at registration (shape bugs surface at load time,
-//! not mid-serve), supports hot registration/eviction, and bounds resident
-//! host state with an LRU policy: serving an adapter touches it, and
-//! registering past capacity evicts the least-recently-used tenant.
+//! adapter (LoRA/NLS tensors + realized rank configuration) is uploaded to
+//! the device **once, at registration** (`register_resident`), so the
+//! steady-state decode loop ships only the token batch across the PJRT
+//! boundary.  The registry validates entries against the model
+//! hyperparameters at registration (shape bugs surface at load time, not
+//! mid-serve), supports hot registration/eviction, and bounds resident
+//! state with an LRU policy: serving an adapter touches it, and
+//! registering past capacity evicts the least-recently-used tenant —
+//! dropping its device buffers along with the host entry.  The host-only
+//! `register` path is kept for callers without a runtime handle; those
+//! tenants serve through the per-forward host-upload fallback.
 
 use crate::model::checkpoint::{self, AdapterCkpt};
 use crate::model::ParamSet;
-use crate::runtime::ModelHyper;
+use crate::runtime::{DeviceStore, ModelHyper, Runtime};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -77,11 +82,15 @@ pub fn load_adapter_dir(dir: &Path, config: &str) -> Result<Vec<AdapterCkpt>> {
     Ok(out)
 }
 
-/// LRU-bounded map from adapter id to validated host state.
+/// LRU-bounded map from adapter id to validated host state, plus (for
+/// tenants registered through `register_resident`) the device-resident
+/// copy of that state keyed by the same id.  Dropping a `DeviceStore`
+/// drops its `PjRtBuffer`s, so eviction releases device memory.
 pub struct AdapterRegistry {
     capacity: usize,
     clock: u64,
     entries: BTreeMap<String, (u64, AdapterEntry)>,
+    device_sets: BTreeMap<String, DeviceStore>,
     evictions: Vec<String>,
 }
 
@@ -103,6 +112,7 @@ impl AdapterRegistry {
             capacity: capacity.max(1),
             clock: 0,
             entries: BTreeMap::new(),
+            device_sets: BTreeMap::new(),
             evictions: Vec::new(),
         }
     }
@@ -182,15 +192,25 @@ impl AdapterRegistry {
         Ok(())
     }
 
-    /// Validate + insert (replacing any same-id entry); returns the id
-    /// evicted by the LRU bound, if any.
+    /// Validate + insert host-side only (replacing any same-id entry);
+    /// returns the id evicted by the LRU bound, if any.  A replaced or
+    /// evicted tenant's device buffers are dropped — a stale device set
+    /// must never shadow freshly registered weights.
     pub fn register(&mut self, hyper: &ModelHyper, entry: AdapterEntry) -> Result<Option<String>> {
         Self::validate(hyper, &entry)?;
+        Ok(self.insert_validated(entry))
+    }
+
+    /// Insert an already-validated entry: bump the clock, drop any stale
+    /// same-id device set, apply the LRU bound.  Every registration path
+    /// funnels through here so validation runs exactly once per entry.
+    fn insert_validated(&mut self, entry: AdapterEntry) -> Option<String> {
         self.clock += 1;
         let id = entry.id.clone();
+        self.device_sets.remove(&id);
         self.entries.insert(id.clone(), (self.clock, entry));
         if self.entries.len() <= self.capacity {
-            return Ok(None);
+            return None;
         }
         let victim = self
             .entries
@@ -200,10 +220,50 @@ impl AdapterRegistry {
             .map(|(k, _)| k.clone());
         if let Some(v) = victim {
             self.entries.remove(&v);
+            self.device_sets.remove(&v);
             self.evictions.push(v.clone());
-            return Ok(Some(v));
+            return Some(v);
         }
-        Ok(None)
+        None
+    }
+
+    /// Upload a validated entry's host sets as one device buffer set
+    /// (earlier sets win on duplicate names, matching `build_args` host
+    /// precedence).
+    fn upload_entry(rt: &Runtime, entry: &AdapterEntry) -> Result<DeviceStore> {
+        let mut dev = DeviceStore::new();
+        for set in &entry.host_sets {
+            for (n, t) in set.iter() {
+                if !dev.contains(n) {
+                    dev.put_tensor(&rt.client, n, t)
+                        .with_context(|| format!("uploading '{}' for '{}'", n, entry.id))?;
+                }
+            }
+        }
+        Ok(dev)
+    }
+
+    /// Validate + upload to the device + insert.  Serving this tenant then
+    /// passes borrowed device handles per forward instead of re-uploading
+    /// the adapter host set every decode step (the Table 7 hot path).
+    pub fn register_resident(
+        &mut self,
+        rt: &Runtime,
+        hyper: &ModelHyper,
+        entry: AdapterEntry,
+    ) -> Result<Option<String>> {
+        Self::validate(hyper, &entry)?;
+        let dev = Self::upload_entry(rt, &entry)?;
+        let id = entry.id.clone();
+        let evicted = self.insert_validated(entry);
+        self.device_sets.insert(id, dev);
+        Ok(evicted)
+    }
+
+    /// The tenant's device-resident buffer set, if registered through
+    /// `register_resident` and not since evicted/replaced.
+    pub fn device_set(&self, id: &str) -> Option<&DeviceStore> {
+        self.device_sets.get(id)
     }
 
     /// Look up an adapter for serving; touches its LRU stamp.
@@ -219,8 +279,25 @@ impl AdapterRegistry {
         }
     }
 
-    /// Drop a tenant explicitly; true if it was resident.
+    /// Serving lookup: entry + (when resident) its device buffer set in
+    /// one call, touching the LRU stamp once.
+    pub fn get_for_serving(&mut self, id: &str) -> Option<(&AdapterEntry, Option<&DeviceStore>)> {
+        self.clock += 1;
+        let clock = self.clock;
+        let entry = match self.entries.get_mut(id) {
+            Some((used, entry)) => {
+                *used = clock;
+                &*entry
+            }
+            None => return None,
+        };
+        Some((entry, self.device_sets.get(id)))
+    }
+
+    /// Drop a tenant explicitly (host entry + any device buffers); true if
+    /// it was resident.
     pub fn evict(&mut self, id: &str) -> bool {
+        self.device_sets.remove(id);
         self.entries.remove(id).is_some()
     }
 
@@ -235,8 +312,61 @@ impl AdapterRegistry {
         hyper: &ModelHyper,
         entries: Vec<AdapterEntry>,
     ) -> Result<Vec<String>> {
+        let ids = self.precheck_batch(hyper, &entries)?;
+        for entry in entries {
+            // pre-validated and within capacity: no eviction possible
+            self.insert_validated(entry);
+        }
+        Ok(ids)
+    }
+
+    /// `register_all` with device-resident uploads.  Same all-or-nothing
+    /// contract: validation/duplicate/capacity failures happen before any
+    /// insert, and if an *upload* fails partway (device OOM, client error)
+    /// the already-registered prefix is rolled back — entries removed and
+    /// their device buffers freed — so a failed batch leaves the registry
+    /// exactly as it was.
+    pub fn register_all_resident(
+        &mut self,
+        rt: &Runtime,
+        hyper: &ModelHyper,
+        entries: Vec<AdapterEntry>,
+    ) -> Result<Vec<String>> {
+        let ids = self.precheck_batch(hyper, &entries)?;
+        let mut inserted: Vec<String> = Vec::new();
+        for entry in entries {
+            // pre-validated; only the device upload can still fail
+            match Self::upload_entry(rt, &entry) {
+                Ok(dev) => {
+                    let id = entry.id.clone();
+                    self.insert_validated(entry);
+                    self.device_sets.insert(id.clone(), dev);
+                    inserted.push(id);
+                }
+                Err(e) => {
+                    for done in &inserted {
+                        self.entries.remove(done);
+                        self.device_sets.remove(done);
+                    }
+                    return Err(e.context(
+                        "register_all rollback: no tenants from this batch remain resident",
+                    ));
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    /// Shared all-or-nothing pre-checks for batch registration: duplicate
+    /// ids (in the batch or already resident), per-entry validation, and
+    /// the capacity bound.  Nothing is mutated.
+    fn precheck_batch(
+        &self,
+        hyper: &ModelHyper,
+        entries: &[AdapterEntry],
+    ) -> Result<Vec<String>> {
         let mut ids: Vec<String> = Vec::new();
-        for entry in &entries {
+        for entry in entries {
             if self.contains(&entry.id) || ids.iter().any(|i| i == &entry.id) {
                 bail!(
                     "duplicate adapter id '{}'; export with distinct --adapter-id values",
@@ -253,10 +383,6 @@ impl AdapterRegistry {
                 self.capacity,
                 self.entries.len()
             );
-        }
-        for entry in entries {
-            // pre-validated and within capacity: no error, no eviction
-            self.register(hyper, entry)?;
         }
         Ok(ids)
     }

@@ -75,7 +75,7 @@ pub fn calibrate(
     let mut sq: BTreeMap<String, Vec<f64>> = BTreeMap::new();
     for _ in 0..n_batches {
         let batch: Batch = batcher.random_batch(rng)?;
-        let args = build_args(&exe.spec, Some(device), &[adapters], Some(&batch), &[])?;
+        let args = build_args(&exe.spec, &[device], &[adapters], Some(&batch), &[])?;
         let outs = exe.run_mixed(&rt.client, &args)?;
         stats.tokens_seen += batch.batch * batch.seq;
         for site_idx in 1..=4 {

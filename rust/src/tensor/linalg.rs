@@ -34,23 +34,50 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 }
 
 /// C = A @ B^T for 2-d tensors (m,k) x (n,k) — the linear-layer convention.
+///
+/// Tiled over (rows of A) x (rows of B) so a block of B rows stays cache-
+/// resident while several A rows stream against it, with a 4-accumulator
+/// unrolled dot product (breaks the serial FP dependence chain; changes
+/// summation order, which is fine at the tolerances the callers use).
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     if a.shape().len() != 2 || b.shape().len() != 2 || a.cols() != b.cols() {
         bail!("matmul_bt shape mismatch {:?} x {:?}", a.shape(), b.shape());
     }
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
     let mut out = Tensor::zeros(&[m, n]);
-    for i in 0..m {
-        let arow = a.row(i);
-        let orow = out.row_mut(i);
-        for j in 0..n {
-            let brow = b.row(j);
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
+    const BI: usize = 8; // A rows per tile
+    const BJ: usize = 64; // B rows per tile (~BJ*k floats hot)
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + BI).min(m);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + BJ).min(n);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = out.row_mut(i);
+                for j in j0..j1 {
+                    let brow = b.row(j);
+                    let mut acc = [0.0f32; 4];
+                    let k4 = k - k % 4;
+                    let mut p = 0;
+                    while p < k4 {
+                        acc[0] += arow[p] * brow[p];
+                        acc[1] += arow[p + 1] * brow[p + 1];
+                        acc[2] += arow[p + 2] * brow[p + 2];
+                        acc[3] += arow[p + 3] * brow[p + 3];
+                        p += 4;
+                    }
+                    let mut sum = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                    for p in k4..k {
+                        sum += arow[p] * brow[p];
+                    }
+                    orow[j] = sum;
+                }
             }
-            orow[j] = acc;
+            j0 = j1;
         }
+        i0 = i1;
     }
     Ok(out)
 }

@@ -12,7 +12,7 @@ use crate::data::{Batch, Batcher, Sample, Tokenizer};
 use crate::model::ParamSet;
 use crate::nls::SearchSpace;
 use crate::peft::Method;
-use crate::runtime::{args::build_args, DeviceStore, HostValue, Runtime};
+use crate::runtime::{args::build_args, DeviceStore, Runtime};
 use crate::tensor::{Rng, Tensor};
 use anyhow::Result;
 
@@ -62,10 +62,11 @@ impl LossCurve {
     }
 }
 
-/// Upload every tensor of a ParamSet as device-resident buffers.
+/// Upload every tensor of a ParamSet as device-resident buffers
+/// (borrowed upload: no intermediate host clone per tensor).
 pub fn upload(rt: &Runtime, store: &mut DeviceStore, set: &ParamSet) -> Result<()> {
     for (name, t) in set.iter() {
-        store.put_host(&rt.client, name, &HostValue::F32(t.clone()))?;
+        store.put_tensor(&rt.client, name, t)?;
     }
     Ok(())
 }
@@ -91,7 +92,7 @@ impl<'a> Pretrainer<'a> {
         let exe = self.rt.executable(&self.config, "pretrain")?;
         self.step += 1;
         let scalars = [("step", self.step as f32), ("lr", lr as f32)];
-        let args = build_args(&exe.spec, None, &[&self.base, &self.opt],
+        let args = build_args(&exe.spec, &[], &[&self.base, &self.opt],
                               Some(batch), &scalars)?;
         let outs = exe.run_mixed(&self.rt.client, &args)?;
         // outputs: base' | m' | v' | loss, in base-spec order
@@ -196,7 +197,7 @@ impl<'a> Trainer<'a> {
         let scalars = [("step", self.step as f32), ("lr", lr as f32)];
         let args = build_args(
             &exe.spec,
-            Some(&self.device),
+            &[&self.device],
             &[&self.adapters, &rank_params, &self.opt],
             Some(batch),
             &scalars,

@@ -7,6 +7,18 @@
 use super::{summarize, Summary};
 use std::time::Instant;
 
+/// Bench smoke mode (`SQFT_BENCH_SMOKE=1`): CI runs every bench with tiny
+/// iteration counts so regressions in bench *code* are caught without
+/// paying for (or trusting) timing numbers from shared runners.
+pub fn smoke() -> bool {
+    std::env::var("SQFT_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// `full` normally, 1 in smoke mode.
+pub fn smoke_iters(full: usize) -> usize {
+    if smoke() { 1 } else { full }
+}
+
 pub struct BenchReport {
     pub name: String,
     pub iters: usize,

@@ -72,7 +72,7 @@ fn build_args_reports_missing_source() {
     let exe = rt.executable("sqft-tiny", "eval").unwrap();
     let empty = ParamSet::new();
     let dev = DeviceStore::new();
-    let err = match build_args(&exe.spec, Some(&dev), &[&empty], None, &[]) {
+    let err = match build_args(&exe.spec, &[&dev], &[&empty], None, &[]) {
         Err(e) => e,
         Ok(_) => panic!("expected error"),
     };
@@ -88,7 +88,7 @@ fn build_args_rejects_mis_shaped_host_tensor() {
     let mut bad = ParamSet::new();
     bad.insert("embed", Tensor::zeros(&[2, 2])); // wrong shape
     let dev = DeviceStore::new();
-    let err = match build_args(&exe.spec, Some(&dev), &[&bad], None, &[]) {
+    let err = match build_args(&exe.spec, &[&dev], &[&bad], None, &[]) {
         Err(e) => e,
         Ok(_) => panic!("expected error"),
     };

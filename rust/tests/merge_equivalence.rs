@@ -52,7 +52,7 @@ fn eval_logits(rt: &Runtime, config: &str, kind: &str, frozen: &ParamSet,
     let exe = rt.executable(config, kind).unwrap();
     let mut dev = DeviceStore::new();
     upload(rt, &mut dev, frozen).unwrap();
-    let args = build_args(&exe.spec, Some(&dev), host, Some(batch), &[]).unwrap();
+    let args = build_args(&exe.spec, &[&dev], host, Some(batch), &[]).unwrap();
     exe.run_mixed(&rt.client, &args).unwrap().remove(0)
 }
 

@@ -1,0 +1,123 @@
+//! Device-cached decode path: equivalence + upload accounting + buffer
+//! lifecycle.
+//!
+//! One test binary with a single test on purpose: the assertions read the
+//! process-wide PJRT upload-byte counter, and a sibling test uploading
+//! concurrently would pollute the deltas.
+//!
+//! What must hold (ISSUE 2 acceptance):
+//!   - the cached path answers byte-identically to the host-upload path;
+//!   - a steady-state decode step for a registered tenant uploads *only*
+//!     the token batch (delta == steps * batch * seq * 4, exactly);
+//!   - eviction (explicit, LRU, and same-id replacement) releases the
+//!     tenant's device buffers.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::{init_base, ParamSet};
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::{host_upload_bytes, Runtime};
+use sqft::serve::{AdapterRegistry, Engine};
+use sqft::tensor::Rng;
+use std::path::Path;
+
+#[test]
+fn cached_decode_is_byte_identical_uploads_only_tokens_and_eviction_frees() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 41);
+    let base = init_base(&hyper, &mut Rng::new(15));
+    let prepared = pipeline::prepare(&rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(16)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let mut entries = pipeline::tenant_adapters(&rt, config, &prepared, 2,
+                                                &ds.train, &tok, 3, 500).unwrap();
+    // inject large per-tenant deltas so the adapters visibly matter
+    for (i, e) in entries.iter_mut().enumerate() {
+        let mut rng = Rng::new(700 + i as u64);
+        let a_shape = e.host_sets[0].get("a_q").unwrap().shape().to_vec();
+        let b_shape = e.host_sets[0].get("b_q").unwrap().shape().to_vec();
+        e.host_sets[0].insert("a_q", sqft::tensor::Tensor::randn(&mut rng, &a_shape, 1.0));
+        e.host_sets[0].insert("b_q", sqft::tensor::Tensor::randn(&mut rng, &b_shape, 1.0));
+    }
+    let engine = Engine::new(&rt, config, &frozen, None, "eval", 4).unwrap();
+    let mut registry = AdapterRegistry::new(2);
+    for e in &entries {
+        registry.register_resident(&rt, &hyper, e.clone()).unwrap();
+    }
+    // the cached set carries the full per-forward adapter state
+    let dev0 = registry.device_set(&entries[0].id).expect("device set");
+    assert!(dev0.contains("a_q") && dev0.contains("b_q"));
+    assert!(dev0.contains("rankmask_q") && dev0.contains("scale_q"));
+
+    let mut grng = Rng::new(43);
+    let prompts: Vec<String> =
+        (0..5).map(|_| task.gen_sample(&mut grng).prompt).collect();
+
+    // byte-identical equivalence, per tenant, with NO host fallback sets:
+    // every adapter input must resolve on-device
+    for e in &entries {
+        let sets: Vec<&ParamSet> = e.host_sets.iter().collect();
+        let host = engine.generate_batch_for(&sets, &e.eval_kind, &prompts).unwrap();
+        let dev = registry.device_set(&e.id).unwrap();
+        let cached = engine
+            .generate_batch_cached(Some(dev), &[], &e.eval_kind, &prompts)
+            .unwrap();
+        assert_eq!(host, cached, "cached path diverged for tenant {}", e.id);
+    }
+
+    // steady-state decode uploads only the token batch
+    let tok_bytes = (hyper.batch * hyper.seq_len * 4) as u64;
+    let dev = registry.device_set(&entries[0].id).unwrap();
+    let before = host_upload_bytes();
+    let _ = engine
+        .generate_batch_cached(Some(dev), &[], &entries[0].eval_kind, &prompts)
+        .unwrap();
+    let cached_delta = host_upload_bytes() - before;
+    let steps = engine.last_decode_steps() as u64;
+    assert!(steps >= 1);
+    assert_eq!(cached_delta, steps * tok_bytes,
+        "decode step uploaded more than the token batch");
+
+    // ... while the host-upload fallback ships the adapter set every step
+    let sets: Vec<&ParamSet> = entries[0].host_sets.iter().collect();
+    let before = host_upload_bytes();
+    let _ = engine.generate_batch_for(&sets, &entries[0].eval_kind, &prompts).unwrap();
+    let host_delta = host_upload_bytes() - before;
+    let adapter_bytes: u64 =
+        entries[0].host_sets.iter().map(|s| s.total_bytes() as u64).sum();
+    assert_eq!(host_delta, steps * (tok_bytes + adapter_bytes),
+        "host fallback upload accounting is off");
+    assert!(host_delta > cached_delta);
+
+    // explicit eviction frees the device buffers
+    let id0 = entries[0].id.clone();
+    assert!(registry.evict(&id0));
+    assert!(registry.device_set(&id0).is_none(), "evicted tenant still resident");
+
+    // same-id host-only re-registration must drop the stale device set
+    // (serving stale cached weights would be a correctness bug, not a perf
+    // one)
+    let id1 = entries[1].id.clone();
+    registry.register(&hyper, entries[1].clone()).unwrap();
+    assert!(registry.device_set(&id1).is_none(), "stale device set survived replace");
+
+    // LRU eviction past capacity frees the victim's buffers too
+    let mut extra = entries[0].clone();
+    extra.id = "extra".to_string();
+    registry.register_resident(&rt, &hyper, extra).unwrap(); // len 2 = cap
+    let mut extra2 = entries[0].clone();
+    extra2.id = "extra2".to_string();
+    let evicted = registry.register_resident(&rt, &hyper, extra2).unwrap();
+    let victim = evicted.expect("LRU eviction past capacity");
+    assert!(registry.device_set(&victim).is_none(), "LRU victim still resident");
+    assert!(registry.device_set("extra2").is_some());
+}

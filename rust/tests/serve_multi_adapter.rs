@@ -72,9 +72,15 @@ fn multi_adapter_answers_match_single_adapter_generation() {
     );
 
     let ids: Vec<String> = entries.iter().map(|e| e.id.clone()).collect();
+    // device-resident registration: the router serves these tenants through
+    // the cached path, so matching the host-upload references below is the
+    // byte-identical equivalence check for the cached decode loop
     let mut registry = AdapterRegistry::new(4);
     for e in entries {
-        registry.register(&hyper, e).unwrap();
+        registry.register_resident(&rt, &hyper, e).unwrap();
+    }
+    for id in &ids {
+        assert!(registry.device_set(id).is_some(), "tenant {id} not device-resident");
     }
     let mut router = Router::new(engine, registry);
 
