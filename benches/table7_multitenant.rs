@@ -144,6 +144,100 @@ tenant adapter payload = {} B)",
         cached_tps / host_tps.max(1e-12),
         host_per_step, cached_per_step, token_batch_bytes, adapter_bytes
     );
+    // --- continuous batching vs run-to-completion, mixed short/long -----
+    // One long request (min == max pins its decode length) per three
+    // one-token requests: run-to-completion pays the long row for every
+    // slot in its batch, continuous batching retires short slots and
+    // re-fills them between forwards.  Per-forward cost is identical
+    // (same artifact, full batch), so occupancy and tokens/s gains are
+    // structural, and per-request answers must stay byte-identical.
+    let b = hyper.batch;
+    let n_mixed = if sqft::util::bench::smoke() { 2 * b } else { 4 * b };
+    let mut grng = Rng::new(29);
+    let specs: Vec<(String, Option<usize>, usize)> = (0..n_mixed)
+        .map(|i| {
+            let prompt = task.gen_sample(&mut grng).prompt;
+            if i % 4 == 0 {
+                (prompt, Some(max_new), max_new) // long: exactly max_new tokens
+            } else {
+                (prompt, Some(1), 0) // short: one token
+            }
+        })
+        .collect();
+    // run-to-completion reference over the host-upload path
+    let run_rtc = |dev: Option<&DeviceStore>,
+                   hs: &[&ParamSet]|
+     -> anyhow::Result<(Vec<String>, usize, usize, f64)> {
+        let mut answers = vec![String::new(); specs.len()];
+        let (mut steps, mut slot_steps) = (0usize, 0usize);
+        let t0 = Instant::now();
+        for (ci, chunk) in specs.chunks(b).enumerate() {
+            let mut s = engine.begin_decode()?;
+            for (prompt, mx, mn) in chunk {
+                engine.admit(&mut s, prompt, *mx, *mn)?;
+            }
+            while s.active_slots() > 0 {
+                for (slot, ans) in engine.decode_step(&mut s, dev, hs, &tenant.eval_kind)? {
+                    answers[ci * b + slot] = ans;
+                }
+            }
+            steps += s.steps();
+            slot_steps += s.slot_steps();
+        }
+        Ok((answers, steps, slot_steps, t0.elapsed().as_secs_f64()))
+    };
+    // continuous: one session, freed slots re-filled between forwards
+    let run_continuous = |dev: Option<&DeviceStore>,
+                          hs: &[&ParamSet]|
+     -> anyhow::Result<(Vec<String>, usize, usize, f64)> {
+        let mut s = engine.begin_decode()?;
+        let mut answers = vec![String::new(); specs.len()];
+        let mut slot_req = vec![0usize; b];
+        let mut next = 0usize;
+        let t0 = Instant::now();
+        loop {
+            while s.free_slots() > 0 && next < specs.len() {
+                let (prompt, mx, mn) = &specs[next];
+                let slot = engine.admit(&mut s, prompt, *mx, *mn)?;
+                slot_req[slot] = next;
+                next += 1;
+            }
+            if s.active_slots() == 0 {
+                break;
+            }
+            for (slot, ans) in engine.decode_step(&mut s, dev, hs, &tenant.eval_kind)? {
+                answers[slot_req[slot]] = ans;
+            }
+        }
+        Ok((answers, s.steps(), s.slot_steps(), t0.elapsed().as_secs_f64()))
+    };
+    let (rtc_ans, rtc_steps, rtc_tokens, rtc_secs) = run_rtc(None, &sets)?;
+    let (cont_ans, cont_steps, cont_tokens, cont_secs) = run_continuous(Some(dev), &[])?;
+    assert_eq!(cont_ans, rtc_ans,
+        "continuous-batching answers diverged from the run-to-completion host reference");
+    assert_eq!(cont_tokens, rtc_tokens, "paths generated different token counts");
+    assert!(cont_steps < rtc_steps,
+        "continuous batching must need fewer forwards ({cont_steps} vs {rtc_steps})");
+    let rtc_occ = rtc_tokens as f64 / (rtc_steps * b) as f64;
+    let cont_occ = cont_tokens as f64 / (cont_steps * b) as f64;
+    let rtc_tps = rtc_tokens as f64 / rtc_secs.max(1e-12);
+    let cont_tps = cont_tokens as f64 / cont_secs.max(1e-12);
+    assert!(cont_occ > rtc_occ, "occupancy must improve: {cont_occ:.3} vs {rtc_occ:.3}");
+    assert!(cont_tps > rtc_tps, "tokens/s must improve: {cont_tps:.1} vs {rtc_tps:.1}");
+    println!(
+        "bench decode_run_to_completion {rtc_tps:>10.1} tok/s  occupancy {rtc_occ:.2}  \
+({rtc_steps} forwards)"
+    );
+    println!(
+        "bench decode_continuous        {cont_tps:>10.1} tok/s  occupancy {cont_occ:.2}  \
+({cont_steps} forwards)"
+    );
+    println!(
+        "continuous batching speedup {:.2}x on {} mixed requests",
+        cont_tps / rtc_tps.max(1e-12),
+        n_mixed
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::Str("decode_hot_path".into())),
         ("config", Json::Str(config.into())),
@@ -164,6 +258,20 @@ tenant adapter payload = {} B)",
             ("upload_bytes_per_step", Json::Num(cached_per_step as f64)),
         ])),
         ("speedup_tokens_per_s", Json::Num(cached_tps / host_tps.max(1e-12))),
+        ("mixed_workload_requests", Json::Num(n_mixed as f64)),
+        ("run_to_completion", Json::obj(vec![
+            ("forwards", Json::Num(rtc_steps as f64)),
+            ("generated_tokens", Json::Num(rtc_tokens as f64)),
+            ("slot_occupancy", Json::Num(rtc_occ)),
+            ("tokens_per_s", Json::Num(rtc_tps)),
+        ])),
+        ("continuous", Json::obj(vec![
+            ("forwards", Json::Num(cont_steps as f64)),
+            ("generated_tokens", Json::Num(cont_tokens as f64)),
+            ("slot_occupancy", Json::Num(cont_occ)),
+            ("tokens_per_s", Json::Num(cont_tps)),
+        ])),
+        ("continuous_speedup_tokens_per_s", Json::Num(cont_tps / rtc_tps.max(1e-12))),
     ]);
     std::fs::write("BENCH_decode.json", report.to_string_pretty())?;
     println!("wrote BENCH_decode.json");

@@ -17,7 +17,7 @@ use crate::model::ParamSet;
 use crate::runtime::ModelHyper;
 use crate::tensor::linalg::matmul;
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Fine-tuning method selector (drives pipeline + table harness).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -163,10 +163,21 @@ pub fn merge_sparsepeft(base: &mut ParamSet, adapters: &ParamSet,
 }
 
 /// Host fake quantizer (paper Eq. 3 then Eq. 4), group-wise along in-dim.
+///
+/// The in-dim must divide evenly into the scales' group count: with a
+/// remainder, `gs = inp / g` truncates and `scales.at2(i, j / gs)` reads
+/// out of bounds for the trailing columns — rejected here instead.
 pub fn fake_quant_host(w: &Tensor, scales: &Tensor, zeros: &Tensor,
                        qmax: f32) -> Result<(Tensor, Tensor)> {
     let (out, inp) = (w.rows(), w.cols());
     let g = scales.cols();
+    if g == 0 || inp % g != 0 {
+        bail!("fake_quant_host: in-dim {inp} does not divide into {g} groups");
+    }
+    if zeros.shape() != scales.shape() || scales.rows() != out {
+        bail!("fake_quant_host: scales {:?} / zeros {:?} mismatch weight {:?}",
+              scales.shape(), zeros.shape(), w.shape());
+    }
     let gs = inp / g;
     let mut codes = Tensor::zeros(&[out, inp]);
     let mut dq = Tensor::zeros(&[out, inp]);
@@ -275,5 +286,24 @@ mod tests {
         for (x, y) in dq.data().iter().zip(dq2.data()) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn fake_quant_host_rejects_indivisible_groups() {
+        // regression: 3 groups over in-dim 8 used to truncate gs to 2 and
+        // read scales out of bounds at j >= 6
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[4, 8], 0.5);
+        let scales = Tensor::full(&[4, 3], 0.1);
+        let zeros = Tensor::full(&[4, 3], 8.0);
+        assert!(fake_quant_host(&w, &scales, &zeros, 15.0).is_err());
+        // zeros shaped unlike scales is a mismatch, not UB
+        let scales = Tensor::full(&[4, 2], 0.1);
+        let zeros = Tensor::full(&[4, 4], 8.0);
+        assert!(fake_quant_host(&w, &scales, &zeros, 15.0).is_err());
+        // row-count mismatch is rejected too
+        let scales = Tensor::full(&[2, 2], 0.1);
+        let zeros = Tensor::full(&[2, 2], 8.0);
+        assert!(fake_quant_host(&w, &scales, &zeros, 15.0).is_err());
     }
 }

@@ -89,8 +89,9 @@ pub fn gptq_quantize(
     let (out, inp) = (w.rows(), w.cols());
     let qm = qmax(bits);
     // group params are computed from the original weights (act-order off),
-    // masked-aware so the zero-point lands on the grid
-    let (scales, zeros) = group_params(w, group_size, bits, mask);
+    // masked-aware so the zero-point lands on the grid; rejects group
+    // sizes that don't divide the in-dim (OOB reads downstream otherwise)
+    let (scales, zeros) = group_params(w, group_size, bits, mask)?;
     let u = gptq_hinv_factor(h, percdamp)?; // upper triangular (in, in)
 
     let mut codes = Tensor::zeros(&[out, inp]);
@@ -101,7 +102,7 @@ pub fn gptq_quantize(
             .unwrap_or(1)
             .min(out)
             .max(1);
-        let rows_per = (out + n_threads - 1) / n_threads;
+        let rows_per = out.div_ceil(n_threads);
         let (scales_ref, zeros_ref, u_ref) = (&scales, &zeros, &u);
         std::thread::scope(|s| {
             for (ci, (crows, drows)) in codes

@@ -15,7 +15,7 @@ pub use rtn::rtn_quantize;
 use crate::model::ParamSet;
 use crate::runtime::ModelHyper;
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 pub const BITS: u32 = 4;
 
@@ -71,9 +71,16 @@ impl QuantResult {
 /// restricted to unmasked entries when a mask is given (masked entries are
 /// structurally zero and must dequantize to exactly 0, so zero-point must
 /// be on the grid — we round z to an integer as GPTQ does).
+///
+/// The in-dimension must divide evenly into groups: a trailing partial
+/// group would otherwise be silently dropped here and then indexed out of
+/// bounds by every `scales.at2(i, j / group_size)` consumer downstream.
 pub fn group_params(w: &Tensor, group_size: usize, bits: u32,
-                    mask: Option<&Tensor>) -> (Tensor, Tensor) {
+                    mask: Option<&Tensor>) -> Result<(Tensor, Tensor)> {
     let (out, inp) = (w.rows(), w.cols());
+    if group_size == 0 || inp % group_size != 0 {
+        bail!("group size {group_size} does not divide in-dim {inp} evenly");
+    }
     let g = inp / group_size;
     let qm = qmax(bits);
     let mut scales = Tensor::zeros(&[out, g]);
@@ -99,7 +106,7 @@ pub fn group_params(w: &Tensor, group_size: usize, bits: u32,
             zeros.set2(i, gi, zero);
         }
     }
-    (scales, zeros)
+    Ok((scales, zeros))
 }
 
 /// Quantize every adapted-module base weight of a model with GPTQ, writing
@@ -170,7 +177,7 @@ mod tests {
     fn group_params_cover_range() {
         let mut rng = Rng::new(1);
         let w = Tensor::randn(&mut rng, &[4, 32], 0.5);
-        let (scales, zeros) = group_params(&w, 16, 4, None);
+        let (scales, zeros) = group_params(&w, 16, 4, None).unwrap();
         assert_eq!(scales.shape(), &[4, 2]);
         // every weight quantizes within [0, 15] by construction
         for i in 0..4 {
@@ -184,11 +191,25 @@ mod tests {
     }
 
     #[test]
+    fn indivisible_group_size_is_an_error_not_oob() {
+        // regression: gs = inp / g used to truncate, and every
+        // `scales.at2(i, j / gs)` consumer then read out of bounds
+        let mut rng = Rng::new(7);
+        let w = Tensor::randn(&mut rng, &[4, 10], 0.5);
+        assert!(group_params(&w, 4, 4, None).is_err());
+        assert!(group_params(&w, 0, 4, None).is_err());
+        assert!(group_params(&w, 10, 4, None).is_ok());
+        assert!(crate::quant::rtn_quantize(&w, 3, 4, None).is_err());
+        let h = Tensor::ones(&[10, 10]);
+        assert!(crate::quant::gptq_quantize(&w, &h, 4, 4, None, 0.01).is_err());
+    }
+
+    #[test]
     fn zero_dequantizes_to_zero() {
         // masked (structurally zero) entries must map to code z exactly
         let mut rng = Rng::new(2);
         let w = Tensor::randn(&mut rng, &[2, 16], 0.5);
-        let (scales, zeros) = group_params(&w, 8, 4, None);
+        let (scales, zeros) = group_params(&w, 8, 4, None).unwrap();
         for i in 0..2 {
             for g in 0..2 {
                 let s = scales.at2(i, g);

@@ -10,7 +10,7 @@ use anyhow::Result;
 pub fn rtn_quantize(w: &Tensor, group_size: usize, bits: u32,
                     mask: Option<&Tensor>) -> Result<QuantResult> {
     let (out, inp) = (w.rows(), w.cols());
-    let (scales, zeros) = group_params(w, group_size, bits, mask);
+    let (scales, zeros) = group_params(w, group_size, bits, mask)?;
     let qm = qmax(bits);
     let mut codes = Tensor::zeros(&[out, inp]);
     let mut dequant = Tensor::zeros(&[out, inp]);

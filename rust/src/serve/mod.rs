@@ -23,6 +23,18 @@
 //! the batched forward with the answer-so-far appended (no KV cache in the
 //! artifact — acceptable at seq<=128, and identical work for merged vs
 //! unmerged, which is what the Table 7 comparison needs).
+//!
+//! Decoding is **continuous-batched** (slot-based): the engine owns a
+//! persistent [`DecodeSession`] sized `(artifact batch) × seq` whose slots
+//! hold independent in-flight requests.  A slot is retired the forward its
+//! row emits the stop token (or hits its per-request cap) and can be
+//! re-filled with a waiting same-tenant request *between forwards* — short
+//! requests no longer pay for the longest row in their batch, and the
+//! device stays busy as long as the tenant's queue is non-empty.  The old
+//! run-to-completion path ([`Engine::generate_batch_cached`]) is a thin
+//! wrapper over the same session (admit everything up front, never
+//! re-fill), so the two paths are byte-identical per request by
+//! construction.
 
 pub mod registry;
 pub mod scheduler;
@@ -38,7 +50,7 @@ use crate::runtime::{args::build_args, DeviceStore, Runtime};
 use crate::util::{summarize, Summary};
 use anyhow::{anyhow, bail, Result};
 use std::cell::Cell;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt::Write as _;
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::time::{Duration, Instant};
@@ -58,9 +70,15 @@ pub struct Engine<'a> {
     default_kind: String,
     tok: Tokenizer,
     max_new_tokens: usize,
+    /// token id that terminates an answer ('.')
+    stop_id: i32,
     /// forwards executed by the most recent generate call (benches/tests
     /// divide upload-byte deltas by this to get per-step cost)
     last_decode_steps: Cell<usize>,
+    /// token-batch uploads performed by the most recent generate call;
+    /// `uploads <= steps` always, and a forward is only preceded by an
+    /// upload when a live slot actually changed since the previous one
+    last_decode_uploads: Cell<usize>,
 }
 
 impl<'a> Engine<'a> {
@@ -102,15 +120,19 @@ impl<'a> Engine<'a> {
                 default_sets.push(space.realize(&space.max_config())?);
             }
         }
+        let tok = Tokenizer::new();
+        let stop_id = tok.encode(".")?[0];
         Ok(Engine {
             rt,
             config: config.to_string(),
             device,
             default_sets,
             default_kind: eval_kind.to_string(),
-            tok: Tokenizer::new(),
+            tok,
             max_new_tokens,
+            stop_id,
             last_decode_steps: Cell::new(0),
+            last_decode_uploads: Cell::new(0),
         })
     }
 
@@ -126,6 +148,11 @@ impl<'a> Engine<'a> {
     /// Forwards executed by the most recent generate call on this engine.
     pub fn last_decode_steps(&self) -> usize {
         self.last_decode_steps.get()
+    }
+
+    /// Token-batch uploads performed by the most recent generate call.
+    pub fn last_decode_uploads(&self) -> usize {
+        self.last_decode_uploads.get()
     }
 
     /// Greedy-decode a batch of prompts with the engine's default adapter
@@ -148,20 +175,162 @@ impl<'a> Engine<'a> {
         self.generate_batch_cached(None, host_sets, eval_kind, prompts)
     }
 
-    /// The multi-tenant hot path.  With `tenant_device` (a registered
-    /// tenant's cached buffer set) every adapter input resolves to a
-    /// borrowed device handle and a steady-state decode step uploads
-    /// *only* the token batch; `host_sets` then only backfill names the
-    /// device sets don't carry.  Without it, this is the host-upload
-    /// fallback path.
+    /// Allocate a fresh decode session sized to the artifact batch.  All
+    /// slots start free; admit prompts with [`Engine::admit`] and run
+    /// forwards with [`Engine::decode_step`].
+    pub fn begin_decode(&self) -> Result<DecodeSession> {
+        let hyper = self.rt.model(&self.config)?;
+        let (b, seq, v) = (hyper.batch, hyper.seq_len, hyper.vocab);
+        Ok(DecodeSession {
+            capacity: b,
+            seq,
+            vocab: v,
+            flat: vec![0i32; b * seq],
+            len: vec![0; b],
+            limit: vec![0; b],
+            min_len: vec![0; b],
+            occupied: vec![false; b],
+            answer: vec![String::new(); b],
+            step_store: DeviceStore::new(),
+            dirty: false,
+            steps: 0,
+            uploads: 0,
+            slot_steps: 0,
+        })
+    }
+
+    /// Admit one prompt into the first free slot of `s`; returns the slot
+    /// index.  `max_new` caps this request's generated tokens (clamped to
+    /// the engine bound, `None` = engine default); `min_new` masks the
+    /// stop token out of the argmax until that many tokens exist.  The
+    /// slot's row is rewritten from scratch (BOS + prompt, zero tail), so
+    /// a retired occupant leaves no residue.
+    pub fn admit(
+        &self,
+        s: &mut DecodeSession,
+        prompt: &str,
+        max_new: Option<usize>,
+        min_new: usize,
+    ) -> Result<usize> {
+        let cap = max_new.unwrap_or(self.max_new_tokens).min(self.max_new_tokens);
+        if cap == 0 {
+            bail!("per-request max_new_tokens must be >= 1");
+        }
+        let slot = s
+            .occupied
+            .iter()
+            .position(|&o| !o)
+            .ok_or_else(|| anyhow!("no free decode slot (capacity {})", s.capacity))?;
+        let ids = self.tok.encode(prompt)?;
+        if ids.len() + 1 + cap > s.seq {
+            bail!("prompt too long for seq {}", s.seq);
+        }
+        let row = &mut s.flat[slot * s.seq..(slot + 1) * s.seq];
+        row.fill(0);
+        row[0] = Tokenizer::BOS;
+        for (i, &id) in ids.iter().enumerate() {
+            row[i + 1] = id;
+        }
+        let start = ids.len() + 1;
+        s.len[slot] = start;
+        s.limit[slot] = start + cap;
+        s.min_len[slot] = start + min_new.min(cap);
+        s.answer[slot].clear();
+        s.occupied[slot] = true;
+        s.dirty = true;
+        Ok(slot)
+    }
+
+    /// One batched forward over every occupied slot: upload the token
+    /// batch iff a live slot changed since the last upload, run the
+    /// artifact, append one greedy token per live row, and **retire** each
+    /// slot whose row emitted the stop token or hit its cap — returning
+    /// `(slot, answer)` for every retirement so the caller can reply and
+    /// re-fill the slot before the next forward.
     ///
-    /// Decode-loop mechanics: one flattened `(batch, seq)` token buffer is
-    /// reused across steps (no per-token re-flatten) and re-uploaded once
-    /// per forward, guarded by a dirty flag so an unchanged buffer is
-    /// never re-shipped (today every executed forward appends at least one
-    /// token, so the guard is a structural invariant rather than a
-    /// measured saving); the loop stops paying forwards the moment every
-    /// real row is done.
+    /// A retiring row's stop token is *not* written back into the token
+    /// buffer and does not mark it dirty: retired rows never feed another
+    /// forward, so writing them would only force spurious token-batch
+    /// re-uploads on steps where nothing live changed.
+    ///
+    /// With `tenant_device` (a registered tenant's cached buffer set)
+    /// every adapter input resolves to a borrowed device handle and a
+    /// steady-state forward uploads *only* the token batch; without it,
+    /// `host_sets` are re-uploaded per forward (the fallback path).
+    /// Device-store precedence mirrors the host path exactly, so cached
+    /// and host answers are byte-identical by construction.
+    pub fn decode_step(
+        &self,
+        s: &mut DecodeSession,
+        tenant_device: Option<&DeviceStore>,
+        host_sets: &[&ParamSet],
+        eval_kind: &str,
+    ) -> Result<Vec<(usize, String)>> {
+        let active = s.active_slots();
+        if active == 0 {
+            bail!("decode_step on a session with no occupied slots");
+        }
+        let exe = self.rt.executable(&self.config, eval_kind)?;
+        if s.dirty {
+            s.step_store
+                .put_i32(&self.rt.client, "tokens", &[s.capacity, s.seq], &s.flat)?;
+            s.dirty = false;
+            s.uploads += 1;
+        }
+        let mut devices: Vec<&DeviceStore> = Vec::with_capacity(3);
+        devices.push(&s.step_store);
+        devices.push(&self.device);
+        if let Some(d) = tenant_device {
+            devices.push(d);
+        }
+        let args = build_args(&exe.spec, &devices, host_sets, None, &[])?;
+        let outs = exe.run_mixed(&self.rt.client, &args)?;
+        s.steps += 1;
+        s.slot_steps += active;
+        let logits = &outs[0];
+        let (seq, v) = (s.seq, s.vocab);
+        let stop = self.stop_id as usize;
+        let mut retired = Vec::new();
+        for slot in 0..s.capacity {
+            if !s.occupied[slot] {
+                continue;
+            }
+            let pos = s.len[slot] - 1; // logits at last filled position
+            let row = &logits.data()[slot * seq * v + pos * v..slot * seq * v + (pos + 1) * v];
+            // greedy argmax; the stop token is masked out while the slot
+            // is under its min_new floor
+            let mask_stop = s.len[slot] < s.min_len[slot];
+            let mut best = if mask_stop && stop == 0 { 1 } else { 0 };
+            for t in (best + 1)..v {
+                if mask_stop && t == stop {
+                    continue;
+                }
+                if row[t] > row[best] {
+                    best = t;
+                }
+            }
+            let hit_stop = best == stop;
+            if !hit_stop {
+                s.answer[slot].push(self.tok.decode_one(best as i32)?);
+            }
+            if hit_stop || s.len[slot] + 1 >= s.limit[slot] || s.len[slot] >= seq - 1 {
+                // retire: free the slot, don't touch flat / dirty
+                s.occupied[slot] = false;
+                s.len[slot] = 0;
+                retired.push((slot, std::mem::take(&mut s.answer[slot])));
+            } else {
+                s.flat[slot * seq + s.len[slot]] = best as i32;
+                s.len[slot] += 1;
+                s.dirty = true;
+            }
+        }
+        Ok(retired)
+    }
+
+    /// Run-to-completion decode of one batch: admit every prompt up front,
+    /// never re-fill, stop when the last row retires.  A thin wrapper over
+    /// the slot-based session, kept as the reference path (and for callers
+    /// without a request queue).
     pub fn generate_batch_cached<S: AsRef<str>>(
         &self,
         tenant_device: Option<&DeviceStore>,
@@ -169,89 +338,90 @@ impl<'a> Engine<'a> {
         eval_kind: &str,
         prompts: &[S],
     ) -> Result<Vec<String>> {
-        let hyper = self.rt.model(&self.config)?.clone();
-        if prompts.is_empty() || prompts.len() > hyper.batch {
-            bail!("batch of {} prompts (max {})", prompts.len(), hyper.batch);
+        let mut s = self.begin_decode()?;
+        if prompts.is_empty() || prompts.len() > s.capacity() {
+            bail!("batch of {} prompts (max {})", prompts.len(), s.capacity());
         }
-        let exe = self.rt.executable(&self.config, eval_kind)?;
-        let (b, seq, v) = (hyper.batch, hyper.seq_len, hyper.vocab);
-        // one flattened token buffer + current row lengths
-        let mut flat = vec![0i32; b * seq];
-        let mut lens: Vec<usize> = Vec::with_capacity(b);
-        for (bi, p) in prompts.iter().enumerate() {
-            let ids = self.tok.encode(p.as_ref())?;
-            if ids.len() + 1 + self.max_new_tokens > seq {
-                bail!("prompt too long for seq {seq}");
-            }
-            let row = &mut flat[bi * seq..(bi + 1) * seq];
-            row[0] = Tokenizer::BOS;
-            for (i, &id) in ids.iter().enumerate() {
-                row[i + 1] = id;
-            }
-            lens.push(ids.len() + 1);
-        }
-        for bi in prompts.len()..b {
-            flat.copy_within(0..seq, bi * seq);
-            lens.push(0); // padding row: never decoded
-        }
-        let mut done = vec![false; prompts.len()];
         let mut answers: Vec<String> = vec![String::new(); prompts.len()];
-        let mut active = prompts.len();
-        let mut steps = 0usize;
-        // the token batch rides in a device store behind a dirty flag: an
-        // unchanged buffer is never re-shipped (every forward currently
-        // dirties it — at least one active row appends a token — so this
-        // is one upload per forward, kept explicit rather than incidental)
-        let mut step_store = DeviceStore::new();
-        let mut dirty = true;
-        for _ in 0..self.max_new_tokens {
-            if active == 0 {
-                break; // fully-done batch: stop paying forwards
-            }
-            if dirty {
-                step_store.put_i32(&self.rt.client, "tokens", &[b, seq], &flat)?;
-                dirty = false;
-            }
-            // precedence mirrors the host-upload path exactly (frozen
-            // device store beats per-tenant state), so cached and host
-            // answers are byte-identical by construction
-            let mut devices: Vec<&DeviceStore> = Vec::with_capacity(3);
-            devices.push(&step_store);
-            devices.push(&self.device);
-            if let Some(d) = tenant_device {
-                devices.push(d);
-            }
-            let args = build_args(&exe.spec, &devices, host_sets, None, &[])?;
-            let outs = exe.run_mixed(&self.rt.client, &args)?;
-            steps += 1;
-            let logits = &outs[0];
-            for (bi, len) in lens.iter_mut().enumerate().take(prompts.len()) {
-                if done[bi] || *len == 0 {
-                    continue;
-                }
-                let pos = *len - 1; // logits at last filled position
-                let row = &logits.data()[bi * seq * v + pos * v..bi * seq * v + (pos + 1) * v];
-                let mut best = 0usize;
-                for t in 1..v {
-                    if row[t] > row[best] {
-                        best = t;
-                    }
-                }
-                let ch = self.tok.decode_one(best as i32)?;
-                if ch == '.' || *len >= seq - 1 {
-                    done[bi] = true;
-                    active -= 1;
-                }
-                if ch != '.' {
-                    answers[bi].push(ch);
-                }
-                flat[bi * seq + *len] = best as i32;
-                *len += 1;
-                dirty = true;
+        for p in prompts {
+            // slots fill in admission order, so slot index == prompt index
+            self.admit(&mut s, p.as_ref(), None, 0)?;
+        }
+        while s.active_slots() > 0 {
+            for (slot, ans) in self.decode_step(&mut s, tenant_device, host_sets, eval_kind)? {
+                answers[slot] = ans;
             }
         }
-        self.last_decode_steps.set(steps);
+        self.last_decode_steps.set(s.steps());
+        self.last_decode_uploads.set(s.uploads());
         Ok(answers)
+    }
+}
+
+/// Persistent slot-based decode state for one same-tenant continuous
+/// batch: a flattened `(batch, seq)` token buffer plus per-slot
+/// `len`/`limit`/`answer` bookkeeping, the device-side token buffer behind
+/// a dirty flag, and occupancy counters.  Created by
+/// [`Engine::begin_decode`]; slots cycle admit → decode → retire →
+/// re-fill without ever restarting the batch.
+pub struct DecodeSession {
+    capacity: usize,
+    seq: usize,
+    vocab: usize,
+    /// flattened `(capacity, seq)` token rows, mutated in place
+    flat: Vec<i32>,
+    /// per-slot filled row length (prompt + generated); 0 while free
+    len: Vec<usize>,
+    /// per-slot row length at which the slot is force-retired
+    limit: Vec<usize>,
+    /// per-slot row length below which the stop token is masked out
+    min_len: Vec<usize>,
+    occupied: Vec<bool>,
+    answer: Vec<String>,
+    step_store: DeviceStore,
+    dirty: bool,
+    steps: usize,
+    uploads: usize,
+    /// sum over forwards of occupied slots — the occupancy numerator (and
+    /// exactly the number of generated tokens: one per live slot per step)
+    slot_steps: usize,
+}
+
+impl DecodeSession {
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.occupied.iter().filter(|&&o| o).count()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.capacity - self.active_slots()
+    }
+
+    /// Forwards executed so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Token-batch uploads so far (`<= steps`).
+    pub fn uploads(&self) -> usize {
+        self.uploads
+    }
+
+    /// Occupied-slot-forwards so far == generated tokens so far.
+    pub fn slot_steps(&self) -> usize {
+        self.slot_steps
+    }
+
+    /// Mean fraction of slots doing useful work per forward.
+    pub fn occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.slot_steps as f64 / (self.steps * self.capacity) as f64
+        }
     }
 }
 
@@ -262,17 +432,28 @@ pub struct ServeStats {
     pub errors: usize,
     pub wall_secs: f64,
     pub throughput: f64,
+    /// end-to-end latency (enqueue → full answer)
     pub latency_ms: Option<Summary>,
+    /// time to first token (enqueue → first forward that computed this
+    /// request's row)
+    pub ttft_ms: Option<Summary>,
+    /// queue wait (enqueue → admission into a decode slot)
+    pub queue_ms: Option<Summary>,
 }
 
-/// Per-run serving report: totals, per-tenant breakdown, and the
-/// scheduler's queue-depth / batch-fill counters.
+/// Per-run serving report: totals, per-tenant breakdown, the scheduler's
+/// queue-depth / batch-fill / admission counters, and decode-loop slot
+/// occupancy.
 #[derive(Debug)]
 pub struct MultiServeStats {
     pub total: ServeStats,
     /// keyed by adapter id (the merged path reports as [`MERGED_ID`])
     pub per_tenant: Vec<(String, ServeStats)>,
     pub scheduler: SchedulerMetrics,
+    /// decode forwards executed across all sessions
+    pub decode_steps: usize,
+    /// mean fraction of decode slots doing useful work per forward
+    pub occupancy: f64,
 }
 
 impl MultiServeStats {
@@ -283,9 +464,12 @@ impl MultiServeStats {
     pub fn render(&self) -> String {
         let mut t = Table::new(
             "Multi-tenant serving",
-            &["tenant", "served", "errors", "req/s", "mean ms", "p50 ms", "p95 ms"],
+            &[
+                "tenant", "served", "errors", "req/s", "mean ms", "p50 ms", "p95 ms",
+                "ttft ms", "queue ms",
+            ],
         );
-        let lat = |s: &ServeStats, f: fn(&Summary) -> f64| match &s.latency_ms {
+        let summ = |o: &Option<Summary>, f: fn(&Summary) -> f64| match o {
             Some(l) => format!("{:.1}", f(l)),
             None => "-".to_string(),
         };
@@ -295,9 +479,11 @@ impl MultiServeStats {
                 s.served.to_string(),
                 s.errors.to_string(),
                 format!("{:.1}", s.throughput),
-                lat(s, |l| l.mean),
-                lat(s, |l| l.p50),
-                lat(s, |l| l.p95),
+                summ(&s.latency_ms, |l| l.mean),
+                summ(&s.latency_ms, |l| l.p50),
+                summ(&s.latency_ms, |l| l.p95),
+                summ(&s.ttft_ms, |l| l.mean),
+                summ(&s.queue_ms, |l| l.mean),
             ]
         };
         for (id, s) in &self.per_tenant {
@@ -307,11 +493,19 @@ impl MultiServeStats {
         let mut out = t.render();
         let _ = writeln!(
             out,
-            "scheduler: {} batches, avg fill {:.2}, {} aged, max queue depth {}",
+            "scheduler: {} batches, avg fill {:.2}, {} admitted mid-batch, {} aged, \
+{} aging holds, max queue depth {}",
             self.scheduler.batches,
             self.scheduler.avg_fill(),
+            self.scheduler.admitted,
             self.scheduler.aged_batches,
+            self.scheduler.aging_holds,
             self.scheduler.max_queue_depth
+        );
+        let _ = writeln!(
+            out,
+            "decode: {} forwards, slot occupancy {:.2}",
+            self.decode_steps, self.occupancy
         );
         out
     }
@@ -322,20 +516,21 @@ struct Tally {
     served: usize,
     errors: usize,
     latencies: Vec<f64>,
+    ttfts: Vec<f64>,
+    queue_waits: Vec<f64>,
 }
 
 impl Tally {
     fn finish(self, wall: f64) -> ServeStats {
+        let summ = |xs: Vec<f64>| if xs.is_empty() { None } else { Some(summarize(xs)) };
         ServeStats {
             served: self.served,
             errors: self.errors,
             wall_secs: wall,
             throughput: self.served as f64 / wall.max(1e-9),
-            latency_ms: if self.latencies.is_empty() {
-                None
-            } else {
-                Some(summarize(self.latencies))
-            },
+            latency_ms: summ(self.latencies),
+            ttft_ms: summ(self.ttfts),
+            queue_ms: summ(self.queue_waits),
         }
     }
 }
@@ -360,8 +555,14 @@ impl<'a> Router<'a> {
     }
 
     /// Serve requests from a channel until it closes and all queues drain.
-    /// Replaces the old FIFO coalescing loop: pending requests are grouped
-    /// into same-adapter batches by the [`Scheduler`]'s fill+aging policy.
+    ///
+    /// Continuous-batching loop: the [`Scheduler`]'s fill+aging policy
+    /// picks which tenant *starts* a decode session; while the session
+    /// runs, freed slots are re-filled with waiting same-tenant requests
+    /// between forwards ([`Scheduler::admit`]) instead of blocking until
+    /// the whole batch completes.  The session ends — and the device can
+    /// switch tenants — only when the tenant's queue is dry or an aging
+    /// override holds further admission.
     pub fn serve(&mut self, rx: Receiver<Request>, opts: SchedulerOpts) -> Result<MultiServeStats> {
         let cap = self.engine.artifact_batch()?;
         let opts = SchedulerOpts { max_batch: opts.max_batch.min(cap).max(1), ..opts };
@@ -369,6 +570,8 @@ impl<'a> Router<'a> {
         let mut tallies: BTreeMap<String, Tally> = BTreeMap::new();
         let start = Instant::now();
         let mut open = true;
+        let mut decode_steps = 0usize;
+        let mut slot_steps = 0usize;
         while open || !sched.is_empty() {
             if sched.is_empty() {
                 // block for the first pending request
@@ -380,21 +583,20 @@ impl<'a> Router<'a> {
                     }
                 }
             }
-            // drain whatever else is already queued
-            loop {
-                match rx.try_recv() {
-                    Ok(r) => sched.push(r),
-                    Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => {
-                        open = false;
-                        break;
-                    }
-                }
-            }
+            drain_channel(&rx, &mut sched, &mut open);
             let Some((id, reqs)) = sched.next_batch(Instant::now()) else {
                 continue;
             };
-            self.dispatch(id, reqs, &mut tallies);
+            self.run_session(
+                id,
+                reqs,
+                &mut sched,
+                &rx,
+                &mut open,
+                &mut tallies,
+                &mut decode_steps,
+                &mut slot_steps,
+            );
         }
         let wall = start.elapsed().as_secs_f64();
         let mut total = Tally::default();
@@ -403,52 +605,168 @@ impl<'a> Router<'a> {
             total.served += tally.served;
             total.errors += tally.errors;
             total.latencies.extend_from_slice(&tally.latencies);
+            total.ttfts.extend_from_slice(&tally.ttfts);
+            total.queue_waits.extend_from_slice(&tally.queue_waits);
             per_tenant.push((id, tally.finish(wall)));
         }
+        let capacity = self.engine.artifact_batch()?;
         Ok(MultiServeStats {
             total: total.finish(wall),
             per_tenant,
             scheduler: sched.metrics().clone(),
+            decode_steps,
+            occupancy: if decode_steps == 0 {
+                0.0
+            } else {
+                slot_steps as f64 / (decode_steps * capacity) as f64
+            },
         })
     }
 
-    /// Execute one same-adapter batch and reply to every request in it.
-    /// Registered-resident tenants take the device-cached path (adapter
-    /// buffers already on device); host-only registrations fall back to
-    /// per-forward upload.  Prompts are borrowed, not cloned.
-    fn dispatch(
+    /// One same-tenant decode session: admit the handed-over batch, then
+    /// loop forward → retire/reply → re-fill from the channel + the
+    /// tenant's queue, until the slots drain and no same-tenant work is
+    /// waiting.  Registered-resident tenants take the device-cached path;
+    /// host-only registrations fall back to per-forward upload.
+    #[allow(clippy::too_many_arguments)]
+    fn run_session(
         &mut self,
         id: Option<String>,
         reqs: Vec<Request>,
+        sched: &mut Scheduler,
+        rx: &Receiver<Request>,
+        open: &mut bool,
         tallies: &mut BTreeMap<String, Tally>,
+        decode_steps: &mut usize,
+        slot_steps: &mut usize,
     ) {
-        let prompts: Vec<&str> = reqs.iter().map(|r| r.prompt.as_str()).collect();
-        let result = match &id {
-            None => self.engine.generate_batch(&prompts),
-            Some(tid) => match self.registry.get_for_serving(tid) {
-                Some((entry, dev)) => {
-                    let sets: Vec<&ParamSet> = entry.host_sets.iter().collect();
-                    self.engine.generate_batch_cached(dev, &sets, &entry.eval_kind, &prompts)
-                }
-                None => Err(anyhow!("adapter '{tid}' is not registered")),
-            },
-        };
         let key = id.as_deref().unwrap_or(MERGED_ID).to_string();
         let tally = tallies.entry(key).or_default();
-        match result {
-            Ok(answers) => {
-                for (req, ans) in reqs.into_iter().zip(answers) {
-                    tally.latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
-                    tally.served += 1;
-                    let _ = req.reply.send(Ok(ans));
-                }
-            }
+        // resolve the tenant's serving state once for the whole session
+        let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) =
+            match &id {
+                None => (
+                    self.engine.default_sets.iter().collect(),
+                    self.engine.default_kind.as_str(),
+                    None,
+                ),
+                Some(tid) => match self.registry.get_for_serving(tid) {
+                    Some((entry, dev)) => {
+                        (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
+                    }
+                    None => {
+                        let msg = format!("adapter '{tid}' is not registered");
+                        for req in reqs {
+                            tally.errors += 1;
+                            let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                        }
+                        return;
+                    }
+                },
+            };
+        let mut session = match self.engine.begin_decode() {
+            Ok(s) => s,
             Err(e) => {
                 let msg = format!("{e:#}");
                 for req in reqs {
                     tally.errors += 1;
                     let _ = req.reply.send(Err(anyhow!(msg.clone())));
                 }
+                return;
+            }
+        };
+        // in-flight request per slot; true = its row hasn't been through a
+        // forward yet (time-to-first-token pending)
+        let mut slots: Vec<Option<(Request, bool)>> =
+            (0..session.capacity()).map(|_| None).collect();
+        let mut waiting: VecDeque<Request> = reqs.into();
+        let mut failure: Option<String> = None;
+        loop {
+            // fill free slots from the hand-off, then from the queue
+            while session.free_slots() > 0 {
+                let Some(req) = waiting.pop_front() else { break };
+                match self.engine.admit(
+                    &mut session,
+                    &req.prompt,
+                    req.max_new_tokens,
+                    req.min_new_tokens,
+                ) {
+                    Ok(slot) => {
+                        tally.queue_waits.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                        slots[slot] = Some((req, true));
+                    }
+                    Err(e) => {
+                        tally.errors += 1;
+                        let _ = req.reply.send(Err(e));
+                    }
+                }
+            }
+            if session.active_slots() == 0 {
+                break; // nothing admitted and nothing same-tenant waiting
+            }
+            let retired =
+                match self.engine.decode_step(&mut session, dev, &host_sets, eval_kind) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        failure = Some(format!("{e:#}"));
+                        break;
+                    }
+                };
+            // every occupied row went through that forward: first tokens
+            let now = Instant::now();
+            for entry in slots.iter_mut().flatten() {
+                if entry.1 {
+                    entry.1 = false;
+                    let waited = now.saturating_duration_since(entry.0.enqueued);
+                    tally.ttfts.push(waited.as_secs_f64() * 1e3);
+                }
+            }
+            for (slot, answer) in retired {
+                if let Some((req, _)) = slots[slot].take() {
+                    tally.latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                    tally.served += 1;
+                    let _ = req.reply.send(Ok(answer));
+                }
+            }
+            // top the freed slots up between forwards: first whatever has
+            // arrived on the channel, then the tenant's own queue
+            drain_channel(rx, sched, open);
+            let free = session.free_slots();
+            if free > 0 && waiting.is_empty() {
+                waiting.extend(sched.admit(&id, Instant::now(), free));
+            }
+            if session.active_slots() == 0 && waiting.is_empty() {
+                break;
+            }
+        }
+        *decode_steps += session.steps();
+        *slot_steps += session.slot_steps();
+        if let Some(msg) = failure {
+            // a failed forward poisons everything still in flight
+            for entry in slots.iter_mut() {
+                if let Some((req, _)) = entry.take() {
+                    tally.errors += 1;
+                    let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+            for req in waiting {
+                tally.errors += 1;
+                let _ = req.reply.send(Err(anyhow!(msg.clone())));
+            }
+        }
+    }
+}
+
+/// Pull everything currently buffered on the request channel into the
+/// scheduler without blocking; flips `open` off when the channel closes.
+fn drain_channel(rx: &Receiver<Request>, sched: &mut Scheduler, open: &mut bool) {
+    loop {
+        match rx.try_recv() {
+            Ok(r) => sched.push(r),
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => {
+                *open = false;
+                break;
             }
         }
     }
@@ -468,7 +786,7 @@ pub fn benchmark_router(
         let mut replies = Vec::new();
         for (adapter_id, prompt) in requests {
             let (rtx, rrx) = channel();
-            let _ = tx.send(Request { adapter_id, prompt, reply: rtx, enqueued: Instant::now() });
+            let _ = tx.send(Request::new(adapter_id, prompt, rtx));
             replies.push(rrx);
             if !inter_arrival.is_zero() {
                 std::thread::sleep(inter_arrival);

@@ -11,6 +11,19 @@
 //!     `aging` outranks even a completely full queue from a hot tenant
 //!     (no starvation).
 //!
+//! Two dispatch granularities share those queues:
+//!
+//!   - [`Scheduler::next_batch`] starts a batch: it picks the winning
+//!     tenant under the fill+aging score and hands over up to `max_batch`
+//!     of its requests;
+//!   - [`Scheduler::admit`] runs *between decode forwards* of an already
+//!     running batch: it tops freed slots up with more requests from the
+//!     **same** tenant (one forward serves one adapter, so cross-tenant
+//!     admission is impossible), unless another tenant's oldest request
+//!     has aged out — then admission is held so the running batch drains
+//!     and `next_batch` can hand the device over (no starvation, same
+//!     aging bound as before).
+//!
 //! The scheduler is pure bookkeeping (no runtime handles), so the policy is
 //! unit-testable without artifacts; `now` is passed in rather than sampled.
 
@@ -26,6 +39,32 @@ pub struct Request {
     pub prompt: String,
     pub reply: Sender<Result<String>>,
     pub enqueued: Instant,
+    /// Per-request cap on generated tokens (`None` = the engine default).
+    /// Clamped to the engine's `max_new_tokens` at admission.
+    pub max_new_tokens: Option<usize>,
+    /// Per-request floor on generated tokens: the stop token is masked out
+    /// of the argmax until this many tokens exist (0 = stop immediately
+    /// allowed — the default).  Length control for benchmarking and for
+    /// clients that want a minimum completion length.
+    pub min_new_tokens: usize,
+}
+
+impl Request {
+    /// A request with default decode limits (engine cap, no floor).
+    pub fn new(
+        adapter_id: Option<String>,
+        prompt: String,
+        reply: Sender<Result<String>>,
+    ) -> Request {
+        Request {
+            adapter_id,
+            prompt,
+            reply,
+            enqueued: Instant::now(),
+            max_new_tokens: None,
+            min_new_tokens: 0,
+        }
+    }
 }
 
 /// Scheduling policy knobs.
@@ -58,6 +97,12 @@ pub struct SchedulerMetrics {
     pub max_queue_depth: usize,
     /// batches where the aging term overrode the fill preference
     pub aged_batches: usize,
+    /// requests admitted into an already-running batch (freed slots
+    /// re-filled between forwards, the continuous-batching win)
+    pub admitted: usize,
+    /// admissions refused because another tenant's oldest request aged
+    /// out (the running batch drains so the device can switch tenants)
+    pub aging_holds: usize,
 }
 
 impl SchedulerMetrics {
@@ -72,6 +117,9 @@ pub struct Scheduler {
     queues: BTreeMap<Option<String>, VecDeque<Request>>,
     pending: usize,
     metrics: SchedulerMetrics,
+    /// an aging hold is in effect (dedupes `aging_holds`: the router polls
+    /// `admit` after every forward, but one sustained hold is one event)
+    holding: bool,
 }
 
 impl Scheduler {
@@ -82,6 +130,7 @@ impl Scheduler {
             queues: BTreeMap::new(),
             pending: 0,
             metrics: SchedulerMetrics::default(),
+            holding: false,
         }
     }
 
@@ -106,6 +155,7 @@ impl Scheduler {
     /// Pop the next same-adapter batch under the fill+aging policy, FIFO
     /// within the chosen tenant.  None iff nothing is pending.
     pub fn next_batch(&mut self, now: Instant) -> Option<(Option<String>, Vec<Request>)> {
+        self.holding = false; // a new batch starts a new hold episode
         if self.queues.is_empty() {
             return None;
         }
@@ -144,6 +194,58 @@ impl Scheduler {
         self.metrics.fill_sum += reqs.len() as f64 / self.opts.max_batch as f64;
         Some((id, reqs))
     }
+
+    /// Step-level admission for a *running* batch: pop up to `free_slots`
+    /// more requests from `current`'s queue (FIFO), so freed decode slots
+    /// re-fill between forwards instead of idling until the batch drains.
+    ///
+    /// Returns an empty vec when the current tenant's queue is dry — or
+    /// when another tenant's oldest request has waited past the aging
+    /// bound, in which case admission is *held*: the running batch drains
+    /// naturally and the next `next_batch` call hands the device to the
+    /// aged tenant.  This is the same starvation bound `next_batch`
+    /// enforces, applied at step granularity.
+    pub fn admit(
+        &mut self,
+        current: &Option<String>,
+        now: Instant,
+        free_slots: usize,
+    ) -> Vec<Request> {
+        if free_slots == 0 {
+            return Vec::new();
+        }
+        let has_current =
+            self.queues.get(current).map(|q| !q.is_empty()).unwrap_or(false);
+        if !has_current {
+            return Vec::new();
+        }
+        let aging = self.opts.aging;
+        let aged_elsewhere = self.queues.iter().any(|(id, q)| {
+            id != current
+                && q.front()
+                    .map(|r| now.saturating_duration_since(r.enqueued) >= aging)
+                    .unwrap_or(false)
+        });
+        if aged_elsewhere {
+            // count the hold once per episode, not once per forward polled
+            if !self.holding {
+                self.metrics.aging_holds += 1;
+                self.holding = true;
+            }
+            return Vec::new();
+        }
+        self.holding = false;
+        let q = self.queues.get_mut(current).expect("checked non-empty above");
+        let n = q.len().min(free_slots);
+        let reqs: Vec<Request> = q.drain(..n).collect();
+        if q.is_empty() {
+            self.queues.remove(current);
+        }
+        self.pending -= reqs.len();
+        self.metrics.admitted += reqs.len();
+        self.metrics.scheduled += reqs.len();
+        reqs
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +262,8 @@ mod tests {
                 prompt: prompt.to_string(),
                 reply: tx,
                 enqueued,
+                max_new_tokens: None,
+                min_new_tokens: 0,
             },
             rx,
         )
@@ -248,6 +352,67 @@ mod tests {
         let (id, _) = s.next_batch(Instant::now()).unwrap();
         assert_eq!(id.as_deref(), Some("big"));
         assert_eq!(s.metrics().aged_batches, 0);
+    }
+
+    #[test]
+    fn admit_refills_from_current_tenant_fifo() {
+        let mut s = Scheduler::new(opts(8, 50));
+        let mut keep = Vec::new();
+        for p in ["a0", "a1", "a2"] {
+            let (r, rx) = req(Some("a"), p, Duration::ZERO);
+            s.push(r);
+            keep.push(rx);
+        }
+        let current = Some("a".to_string());
+        // zero free slots admits nothing
+        assert!(s.admit(&current, Instant::now(), 0).is_empty());
+        let got = s.admit(&current, Instant::now(), 2);
+        let prompts: Vec<&str> = got.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["a0", "a1"]);
+        assert_eq!(s.pending(), 1);
+        // draining the queue removes it
+        let got = s.admit(&current, Instant::now(), 4);
+        assert_eq!(got.len(), 1);
+        assert!(s.is_empty());
+        assert!(s.admit(&current, Instant::now(), 4).is_empty());
+        let m = s.metrics();
+        assert_eq!(m.admitted, 3);
+        assert_eq!(m.scheduled, 3);
+        assert_eq!(m.batches, 0, "admit must not count as a new batch");
+    }
+
+    #[test]
+    fn admit_never_crosses_tenants_and_holds_for_aged_queues() {
+        let mut s = Scheduler::new(opts(8, 50));
+        let mut keep = Vec::new();
+        let (r, rx) = req(Some("other"), "o0", Duration::ZERO);
+        s.push(r);
+        keep.push(rx);
+        // current tenant has no queue: nothing is admitted (and the other
+        // tenant's request is NOT leaked into the running batch)
+        let current = Some("a".to_string());
+        assert!(s.admit(&current, Instant::now(), 8).is_empty());
+        assert_eq!(s.pending(), 1);
+        // current tenant queued, but another tenant aged out: admission is
+        // held so the running batch drains and the device switches
+        for p in ["a0", "a1"] {
+            let (r, rx) = req(Some("a"), p, Duration::ZERO);
+            s.push(r);
+            keep.push(rx);
+        }
+        let (r, rx) = req(Some("cold"), "c0", Duration::from_millis(500));
+        s.push(r);
+        keep.push(rx);
+        assert!(s.admit(&current, Instant::now(), 8).is_empty());
+        // polled every forward while the hold persists: still one event
+        assert!(s.admit(&current, Instant::now(), 8).is_empty());
+        assert!(s.admit(&current, Instant::now(), 8).is_empty());
+        assert_eq!(s.metrics().aging_holds, 1, "one sustained hold is one event");
+        // the aged tenant wins the next batch
+        let (id, _) = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(id.as_deref(), Some("cold"));
+        // with the aged request served, admission flows again
+        assert_eq!(s.admit(&current, Instant::now(), 8).len(), 2);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Continuous-batching integration: short and long requests share a batch.
+//!
+//! What must hold (ISSUE 3 acceptance):
+//!   - short requests complete and their freed slots are re-filled with
+//!     waiting same-tenant requests while the long request is still
+//!     decoding (scheduler `admitted` > 0, fewer forwards than the
+//!     run-to-completion path);
+//!   - every per-request answer is byte-identical to the run-to-completion
+//!     host-upload reference path;
+//!   - slot occupancy is strictly higher than run-to-completion on the
+//!     mixed workload.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::{init_base, ParamSet};
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::serve::{AdapterRegistry, Engine, Request, Router, SchedulerOpts};
+use sqft::tensor::Rng;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+/// (prompt, per-request max_new, per-request min_new)
+type Spec = (String, Option<usize>, usize);
+
+/// Reference path: fixed batches admitted up front, never re-filled, each
+/// run until its slowest row retires — the pre-continuous-batching engine
+/// behavior, driven through the same slot session so answers are
+/// comparable per request.  Returns (answers, forwards, slot_steps).
+fn run_to_completion(
+    engine: &Engine,
+    sets: &[&ParamSet],
+    eval_kind: &str,
+    reqs: &[Spec],
+) -> anyhow::Result<(Vec<String>, usize, usize)> {
+    let cap = engine.artifact_batch()?;
+    let mut answers = vec![String::new(); reqs.len()];
+    let (mut steps, mut slot_steps) = (0usize, 0usize);
+    for (ci, chunk) in reqs.chunks(cap).enumerate() {
+        let mut s = engine.begin_decode()?;
+        for (prompt, max_new, min_new) in chunk {
+            engine.admit(&mut s, prompt, *max_new, *min_new)?;
+        }
+        while s.active_slots() > 0 {
+            for (slot, ans) in engine.decode_step(&mut s, None, sets, eval_kind)? {
+                answers[ci * cap + slot] = ans;
+            }
+        }
+        steps += s.steps();
+        slot_steps += s.slot_steps();
+    }
+    Ok((answers, steps, slot_steps))
+}
+
+#[test]
+fn short_requests_refill_slots_while_long_request_decodes() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 51);
+    let base = init_base(&hyper, &mut Rng::new(25));
+    let prepared = pipeline::prepare(&rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(26)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let entries = pipeline::tenant_adapters(&rt, config, &prepared, 1,
+                                            &ds.train, &tok, 2, 900).unwrap();
+    let tenant = &entries[0];
+
+    let long_new = 6usize;
+    let engine = Engine::new(&rt, config, &frozen, None, "eval", long_new).unwrap();
+    let b = engine.artifact_batch().unwrap();
+    assert!(b >= 2, "need at least two slots to mix short and long");
+
+    // mixed workload: one long request (min == max forces exactly
+    // `long_new` forwards) plus 2b-2 one-token requests, so the second
+    // wave can only be served by re-filling slots the first wave frees
+    let mut grng = Rng::new(61);
+    let mut specs: Vec<Spec> = Vec::new();
+    specs.push((task.gen_sample(&mut grng).prompt, Some(long_new), long_new));
+    for _ in 0..(2 * b - 2) {
+        specs.push((task.gen_sample(&mut grng).prompt, Some(1), 0));
+    }
+
+    // reference: run-to-completion over the host-upload path
+    let sets: Vec<&ParamSet> = tenant.host_sets.iter().collect();
+    let (expected, rtc_steps, rtc_slot_steps) =
+        run_to_completion(&engine, &sets, &tenant.eval_kind, &specs).unwrap();
+    // chunk 1 pays the long row for every short slot; chunk 2 is shorts only
+    assert_eq!(rtc_steps, long_new + 1, "workload lost its mixed shape");
+    let rtc_occupancy = rtc_slot_steps as f64 / (rtc_steps * b) as f64;
+
+    // continuous: same requests through the router, device-cached tenant
+    let mut registry = AdapterRegistry::new(2);
+    registry.register_resident(&rt, &hyper, tenant.clone()).unwrap();
+    let mut router = Router::new(engine, registry);
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    for (prompt, max_new, min_new) in &specs {
+        let (rtx, rrx) = channel();
+        let mut req = Request::new(Some(tenant.id.clone()), prompt.clone(), rtx);
+        req.max_new_tokens = *max_new;
+        req.min_new_tokens = *min_new;
+        tx.send(req).unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let opts = SchedulerOpts { max_batch: b, aging: Duration::from_millis(20) };
+    let stats = router.serve(rx, opts).unwrap();
+
+    // per-request answers byte-identical to the host-upload reference
+    for (i, rrx) in replies.into_iter().enumerate() {
+        let ans = rrx.recv().unwrap().unwrap();
+        assert_eq!(ans, expected[i], "request {i} diverged from the reference");
+    }
+    assert_eq!(stats.total.served, specs.len());
+    assert_eq!(stats.total.errors, 0);
+
+    // the second wave rode freed slots while the long request still decoded
+    assert_eq!(stats.scheduler.admitted, specs.len() - b,
+        "waiting requests must be admitted into the running batch");
+    assert!(stats.decode_steps < rtc_steps,
+        "continuous batching must need fewer forwards ({} vs {rtc_steps})",
+        stats.decode_steps);
+    assert!(stats.occupancy > rtc_occupancy,
+        "continuous occupancy {:.3} must beat run-to-completion {rtc_occupancy:.3}",
+        stats.occupancy);
+    // same generated tokens, fewer forwards
+    assert_eq!(stats.decode_steps, long_new,
+        "the long request alone should bound the session length");
+    assert!(stats.total.ttft_ms.is_some() && stats.total.queue_ms.is_some());
+}

@@ -74,7 +74,10 @@ fn cached_decode_is_byte_identical_uploads_only_tokens_and_eviction_frees() {
         assert_eq!(host, cached, "cached path diverged for tenant {}", e.id);
     }
 
-    // steady-state decode uploads only the token batch
+    // steady-state decode uploads only the token batch — and only on
+    // forwards where a *live* slot changed: retired rows no longer write
+    // their stop token back into the buffer, so the upload counter is
+    // exact, not merely an upper bound
     let tok_bytes = (hyper.batch * hyper.seq_len * 4) as u64;
     let dev = registry.device_set(&entries[0].id).unwrap();
     let before = host_upload_bytes();
@@ -83,9 +86,15 @@ fn cached_decode_is_byte_identical_uploads_only_tokens_and_eviction_frees() {
         .unwrap();
     let cached_delta = host_upload_bytes() - before;
     let steps = engine.last_decode_steps() as u64;
+    let uploads = engine.last_decode_uploads() as u64;
     assert!(steps >= 1);
-    assert_eq!(cached_delta, steps * tok_bytes,
-        "decode step uploaded more than the token batch");
+    assert!(uploads <= steps, "more uploads ({uploads}) than forwards ({steps})");
+    assert_eq!(cached_delta, uploads * tok_bytes,
+        "upload-byte delta disagrees with the engine's upload count");
+    // in a run-to-completion batch every forward is preceded by a live
+    // append (or the initial admission), so the counts coincide exactly
+    assert_eq!(uploads, steps,
+        "run-to-completion decode must upload exactly once per forward");
 
     // ... while the host-upload fallback ships the adapter set every step
     let sets: Vec<&ParamSet> = entries[0].host_sets.iter().collect();

@@ -13,7 +13,7 @@ use sqft::serve::{AdapterRegistry, Engine, Request, Router, SchedulerOpts, MERGE
 use sqft::tensor::Rng;
 use std::path::Path;
 use std::sync::mpsc::channel;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn runtime() -> Option<Runtime> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -90,13 +90,7 @@ fn multi_adapter_answers_match_single_adapter_generation() {
     for (pi, p) in prompts.iter().enumerate() {
         for (ti, id) in ids.iter().enumerate() {
             let (rtx, rrx) = channel();
-            tx.send(Request {
-                adapter_id: Some(id.clone()),
-                prompt: p.clone(),
-                reply: rtx,
-                enqueued: Instant::now(),
-            })
-            .unwrap();
+            tx.send(Request::new(Some(id.clone()), p.clone(), rtx)).unwrap();
             replies.push((ti, pi, rrx));
         }
     }
@@ -121,6 +115,16 @@ fn multi_adapter_answers_match_single_adapter_generation() {
     assert!(stats.scheduler.batches >= ids.len());
     assert_eq!(stats.scheduler.scheduled, stats.total.served);
     assert!(stats.scheduler.avg_fill() > 0.0);
+    // continuous-batching bookkeeping: forwards happened, occupancy is a
+    // sane ratio, and the new per-request timing summaries are populated
+    assert!(stats.decode_steps > 0);
+    assert!(stats.occupancy > 0.0 && stats.occupancy <= 1.0 + 1e-9);
+    assert!(stats.total.ttft_ms.is_some() && stats.total.queue_ms.is_some());
+    for id in &ids {
+        let s = stats.tenant(id).unwrap();
+        assert!(s.ttft_ms.is_some(), "tenant {id} missing ttft");
+        assert!(s.queue_ms.is_some(), "tenant {id} missing queue wait");
+    }
 }
 
 #[test]
@@ -147,24 +151,12 @@ fn merged_fast_path_and_unknown_adapter() {
     let mut replies = Vec::new();
     for p in &prompts {
         let (rtx, rrx) = channel();
-        tx.send(Request {
-            adapter_id: None,
-            prompt: p.clone(),
-            reply: rtx,
-            enqueued: Instant::now(),
-        })
-        .unwrap();
+        tx.send(Request::new(None, p.clone(), rtx)).unwrap();
         replies.push(rrx);
     }
     // one request for a tenant nobody registered
     let (rtx, unknown_rx) = channel();
-    tx.send(Request {
-        adapter_id: Some("nope".to_string()),
-        prompt: prompts[0].clone(),
-        reply: rtx,
-        enqueued: Instant::now(),
-    })
-    .unwrap();
+    tx.send(Request::new(Some("nope".to_string()), prompts[0].clone(), rtx)).unwrap();
     drop(tx);
 
     let opts = SchedulerOpts { max_batch: hyper.batch, aging: Duration::from_millis(20) };
