@@ -1,12 +1,17 @@
 //! Multi-tenant extension of the Table 7 serving bench: throughput vs
 //! tenant count over one device-resident frozen base (registry → scheduler
 //! → engine), the merged-vs-unmerged per-tenant serving cost the paper's
-//! §2.5 argument turns on, and — new with ISSUE 2 — the decode hot path:
-//! device-cached tenant adapters vs per-step host upload, with PJRT
-//! upload-byte accounting.  Writes `BENCH_decode.json` so the decode perf
-//! trajectory is tracked PR over PR.
+//! §2.5 argument turns on, the decode hot path (device-cached tenant
+//! adapters vs per-step host upload, with thread-scoped PJRT upload-byte
+//! accounting → `BENCH_decode.json`), and the worker-pool scaling sweep
+//! (1/2/4/8 per-thread engine replicas over the sharded work-stealing
+//! scheduler → `BENCH_serve_scaling.json`; answers asserted
+//! byte-identical to 1 worker, and full runs assert >1.5x aggregate
+//! tokens/s at 4 workers).
 //!
-//! `SQFT_BENCH_SMOKE=1` shrinks every iteration count to 1 (CI smoke).
+//! `SQFT_BENCH_SMOKE=1` shrinks every iteration count to 1 and the
+//! worker sweep to `[1, 2]` (CI smoke); `-- --workers N` pins the sweep
+//! to `[1, N]`.
 
 use sqft::data::{Dataset, Task, Tokenizer};
 use sqft::model::{init_base, ParamSet};
@@ -14,14 +19,30 @@ use sqft::nls::SearchSpace;
 use sqft::peft::Method;
 use sqft::pipeline;
 use sqft::report::Table;
-use sqft::runtime::{host_upload_bytes, DeviceStore, Runtime};
-use sqft::serve::{benchmark_router, AdapterRegistry, Engine, Router, SchedulerOpts};
+use sqft::runtime::{DeviceStore, Runtime, UploadScope};
+use sqft::serve::{
+    benchmark_router, serve_pool, AdapterRegistry, Engine, EngineSpec, PoolOpts, Request,
+    Router, SchedulerOpts, SharedAdapterSource,
+};
 use sqft::tensor::Rng;
 use sqft::train::TrainOpts;
 use sqft::util::bench::{bench_throughput, smoke_iters};
 use sqft::util::json::Json;
 use std::path::Path;
+use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
+
+/// `--workers N` (passed through `cargo bench --bench table7_multitenant
+/// -- --workers N`) pins the sweep to `[1, N]` — CI smoke uses 2 so the
+/// multi-worker path is exercised on every PR without paying for the
+/// full 1/2/4/8 sweep.
+fn cli_workers() -> Option<usize> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == "--workers")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+}
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -81,6 +102,127 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", table.render());
 
+    // --- worker-pool scaling: per-thread engine replicas, sharded
+    // work-stealing scheduler; answers must be byte-identical to the
+    // 1-worker run and aggregate tokens/s must scale with workers -------
+    let sweep: Vec<usize> = match cli_workers() {
+        Some(w) if w > 1 => vec![1, w],
+        Some(_) => vec![1],
+        None if sqft::util::bench::smoke() => vec![1, 2],
+        None => vec![1, 2, 4, 8],
+    };
+    println!("# serve scaling: worker sweep {sweep:?}");
+    let source = SharedAdapterSource::new(hyper.clone(), max_tenants);
+    source.register_all(entries.clone())?;
+    let spec = EngineSpec {
+        artifacts: dir.clone(),
+        config: config.to_string(),
+        frozen: frozen.clone(),
+        eval_kind: "eval".to_string(),
+        max_new_tokens: 4,
+        registry_capacity: max_tenants,
+    };
+    let n_scale = if sqft::util::bench::smoke() { 16usize } else { 96 };
+    let mut grng = Rng::new(31);
+    let scale_reqs: Vec<(Option<String>, String)> = (0..n_scale)
+        .map(|i| {
+            (Some(entries[i % entries.len()].id.clone()), task.gen_sample(&mut grng).prompt)
+        })
+        .collect();
+    // closed loop (everything enqueued up front): measures capacity, and
+    // keeps every worker busy so stealing and sharding both matter
+    let run_pool = |workers: usize| -> anyhow::Result<(Vec<String>, sqft::serve::PoolServeStats)> {
+        let (tx, rx) = channel::<Request>();
+        let mut replies = Vec::new();
+        for (id, p) in &scale_reqs {
+            let (rtx, rrx) = channel();
+            let _ = tx.send(Request::new(id.clone(), p.clone(), rtx));
+            replies.push(rrx);
+        }
+        drop(tx);
+        let popts = PoolOpts {
+            workers,
+            sched: SchedulerOpts { max_batch: hyper.batch, aging: Duration::from_millis(20) },
+        };
+        let stats = serve_pool(&spec, &source, rx, popts)?;
+        let answers: Vec<String> =
+            replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        Ok((answers, stats))
+    };
+    let mut scale_table = Table::new(
+        "Worker-pool scaling (one base, 4 tenants, closed loop)",
+        &["workers", "served", "tok/s", "occupancy", "steals", "wall s"],
+    );
+    let mut sweep_json: Vec<Json> = Vec::new();
+    let mut ref_answers: Vec<String> = Vec::new();
+    let mut tps_by_workers: Vec<(usize, f64)> = Vec::new();
+    for &w in &sweep {
+        let (answers, stats) = run_pool(w)?;
+        if w == 1 {
+            ref_answers = answers;
+        } else {
+            assert_eq!(answers, ref_answers,
+                "{w}-worker answers diverged from the single-worker reference");
+        }
+        assert_eq!(stats.serve.total.errors, 0, "pool run had errors at {w} workers");
+        // steady-state window: replica setup (per-worker compile) is a
+        // constant cost, not a serving cost, and must not dilute scaling
+        let wall = stats.serving_wall_secs;
+        let tps = stats.serve.generated_tokens as f64 / wall.max(1e-12);
+        tps_by_workers.push((w, tps));
+        scale_table.row(vec![
+            w.to_string(),
+            stats.serve.total.served.to_string(),
+            format!("{tps:.1}"),
+            format!("{:.2}", stats.serve.occupancy),
+            stats.steals.to_string(),
+            format!("{wall:.3}"),
+        ]);
+        sweep_json.push(Json::obj(vec![
+            ("workers", Json::Num(w as f64)),
+            ("served", Json::Num(stats.serve.total.served as f64)),
+            ("generated_tokens", Json::Num(stats.serve.generated_tokens as f64)),
+            ("tokens_per_s", Json::Num(tps)),
+            ("occupancy", Json::Num(stats.serve.occupancy)),
+            ("steals", Json::Num(stats.steals as f64)),
+            ("decode_steps", Json::Num(stats.serve.decode_steps as f64)),
+            ("avg_fill", Json::Num(stats.serve.scheduler.avg_fill())),
+            ("serving_wall_secs", Json::Num(wall)),
+            ("total_wall_secs", Json::Num(stats.serve.total.wall_secs)),
+        ]));
+    }
+    print!("{}", scale_table.render());
+    let tps_at = |w: usize| tps_by_workers.iter().find(|(k, _)| *k == w).map(|(_, t)| *t);
+    let speedup_4v1 = match (tps_at(1), tps_at(4)) {
+        (Some(t1), Some(t4)) => {
+            let s = t4 / t1.max(1e-12);
+            println!("worker scaling speedup 4v1: {s:.2}x");
+            // the whole point of the pool: >1.5x aggregate throughput at 4
+            // workers (timing assert, so full runs only — smoke runs on
+            // shared CI boxes where wall-clock means nothing)
+            if !sqft::util::bench::smoke() {
+                assert!(s > 1.5,
+                    "4-worker aggregate tokens/s must beat 1 worker by >1.5x, got {s:.2}x");
+            }
+            Some(s)
+        }
+        _ => None,
+    };
+    let mut scaling_report = vec![
+        ("bench", Json::Str("serve_scaling".into())),
+        ("config", Json::Str(config.into())),
+        ("batch", Json::Num(hyper.batch as f64)),
+        ("requests", Json::Num(n_scale as f64)),
+        ("tenants", Json::Num(entries.len() as f64)),
+        ("smoke", Json::Num(sqft::util::bench::smoke() as u8 as f64)),
+        ("sweep", Json::Arr(sweep_json)),
+    ];
+    if let Some(s) = speedup_4v1 {
+        scaling_report.push(("speedup_4_workers_vs_1", Json::Num(s)));
+    }
+    std::fs::write("BENCH_serve_scaling.json", Json::obj(scaling_report).to_string_pretty())?;
+    println!("wrote BENCH_serve_scaling.json");
+
     // --- decode hot path: cached device-resident adapters vs host upload
     // Steady-state criterion: a registered tenant's decode step ships only
     // the token batch across the PJRT boundary (asserted below, exactly).
@@ -107,7 +249,8 @@ fn main() -> anyhow::Result<()> {
                hs: &[&ParamSet]|
      -> anyhow::Result<(f64, u64, usize)> {
         engine.generate_batch_cached(dev, hs, &tenant.eval_kind, &prompts)?; // warmup
-        let b0 = host_upload_bytes();
+        let scope = UploadScope::begin(); // thread-scoped: exact even if
+                                          // other threads upload
         let t0 = Instant::now();
         let (mut toks, mut steps) = (0usize, 0usize);
         for _ in 0..iters {
@@ -116,7 +259,7 @@ fn main() -> anyhow::Result<()> {
             steps += engine.last_decode_steps();
         }
         let secs = t0.elapsed().as_secs_f64();
-        Ok((toks as f64 / secs.max(1e-12), host_upload_bytes() - b0, steps))
+        Ok((toks as f64 / secs.max(1e-12), scope.bytes(), steps))
     };
     let (host_tps, host_bytes, host_steps) = run(None, &sets)?;
     let (cached_tps, cached_bytes, cached_steps) = run(Some(dev), &[])?;

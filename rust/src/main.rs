@@ -46,7 +46,7 @@ fn usage() -> &'static str {
                     [--ckpt CKPT] [--out CKPT]\n\
                     [--export-adapter CKPT [--adapter-id ID]]\n\
      sqft search    --model M --task T --method M --sparsity S [--turns N]\n\
-     sqft serve     --model M [--ckpt CKPT] [--requests N]\n\
+     sqft serve     --model M [--ckpt CKPT] [--requests N] [--workers N]\n\
                     [--adapters DIR | --tenants K [--tenant-steps N]]\n\
                     [--max-new-tokens N] [--registry-cap K] [--aging-ms MS]\n\
                     [--merged]\n\
@@ -57,7 +57,10 @@ fn usage() -> &'static str {
      by `pipeline --export-adapter` and prepares the base with the method/\n\
      sparsity recorded in their metadata (pass the same --ckpt/--task/--seed\n\
      as the export run so the bases match); --tenants fine-tunes K synthetic\n\
-     tenants in-process; --merged adds no-adapter fast-path traffic.\n"
+     tenants in-process; --merged adds no-adapter fast-path traffic.\n\
+     --workers N > 1 serves through the worker pool: N per-thread engine\n\
+     replicas fed by a sharded work-stealing scheduler (answers stay\n\
+     byte-identical to --workers 1; throughput scales with cores).\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -345,15 +348,12 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
                                      &ds.train, &tok, calib, &mut rng)?;
     let frozen = prepared.frozen_set()?;
     let hyper = prepared.hyper.clone();
-    let engine = sqft::serve::Engine::new(&rt, &config, &frozen, None, "eval",
-                                          max_new_tokens)?;
+    let workers = args.get_usize("workers", 1)?;
 
-    // populate the registry: register the loaded checkpoints, or fine-tune
-    // synthetic tenants over the shared frozen base
-    let mut registry = sqft::serve::AdapterRegistry::new(registry_cap);
-    let mut tenant_ids: Vec<Option<String>> = Vec::new();
+    // collect tenant entries: the loaded checkpoints, or synthetic tenants
+    // fine-tuned over the shared frozen base
+    let mut entries: Vec<sqft::serve::AdapterEntry> = Vec::new();
     if !ckpts.is_empty() {
-        let mut entries = Vec::new();
         for ck in ckpts {
             if ck.eval_kind != method.eval_kind() {
                 bail!("adapter '{}' serves through '{}' but method {} uses '{}'",
@@ -361,20 +361,16 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
             }
             entries.push(sqft::serve::AdapterEntry::from_ckpt(ck, "adapter"));
         }
-        let ids = registry.register_all_resident(&rt, &hyper, entries)
-            .context("registering --adapters (see --registry-cap / --adapter-id)")?;
-        println!("loaded {} adapters device-resident ({}, sparsity {:.0}%)",
-            ids.len(), method.name(), sparsity * 100.0);
-        tenant_ids.extend(ids.into_iter().map(Some));
+        println!("loaded {} adapters ({}, sparsity {:.0}%)",
+            entries.len(), method.name(), sparsity * 100.0);
     } else if n_tenants > 0 {
         println!("fine-tuning {n_tenants} tenant adapters ({tenant_steps} steps each)...");
-        let entries = pipeline::tenant_adapters(&rt, &config, &prepared, n_tenants,
-                                                &ds.train, &tok, tenant_steps,
-                                                seed ^ 21)?;
-        let ids = registry.register_all_resident(&rt, &hyper, entries)
-            .context("registering --tenants (raise --registry-cap or lower --tenants)")?;
-        tenant_ids.extend(ids.into_iter().map(Some));
+        entries = pipeline::tenant_adapters(&rt, &config, &prepared, n_tenants,
+                                            &ds.train, &tok, tenant_steps,
+                                            seed ^ 21)?;
     }
+    let mut tenant_ids: Vec<Option<String>> =
+        entries.iter().map(|e| Some(e.id.clone())).collect();
     if tenant_ids.is_empty() || args.has_flag("merged") {
         tenant_ids.push(None); // merged / no-adapter fast path
     }
@@ -388,12 +384,46 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
         max_batch: hyper.batch,
         aging: std::time::Duration::from_millis(args.get_u64("aging-ms", 50)?),
     };
-    println!("serving {n_requests} requests over {} tenants (batch {}, aging {:?}, \
-max_new_tokens {max_new_tokens})...",
+    println!("serving {n_requests} requests over {} tenants with {workers} worker(s) \
+(batch {}, aging {:?}, max_new_tokens {max_new_tokens})...",
         tenant_ids.len(), opts.max_batch, opts.aging);
-    let mut router = sqft::serve::Router::new(engine, registry);
-    let stats = sqft::serve::benchmark_router(
-        &mut router, requests, std::time::Duration::from_millis(2), opts)?;
-    print!("{}", stats.render());
+    if workers > 1 {
+        // worker pool: per-thread engine replicas; each worker compiles
+        // its own executables and replicates the tenants device-resident
+        let source = sqft::serve::SharedAdapterSource::new(hyper.clone(), registry_cap);
+        source.register_all(entries)
+            .context("registering tenants (see --registry-cap / --adapter-id)")?;
+        let spec = sqft::serve::EngineSpec {
+            artifacts: artifacts.to_path_buf(),
+            config: config.clone(),
+            frozen,
+            eval_kind: "eval".to_string(),
+            max_new_tokens,
+            registry_capacity: registry_cap,
+        };
+        let popts = sqft::serve::PoolOpts { workers, sched: opts };
+        let stats = sqft::serve::benchmark_pool(
+            &spec, &source, requests, std::time::Duration::from_millis(2), popts)?;
+        print!("{}", stats.serve.render());
+        println!("pool: {} workers, {} stolen batches", stats.workers, stats.steals);
+        for w in &stats.per_worker {
+            println!("  worker {}: {} served, {} errors, {} sessions ({} stolen), \
+{} forwards, setup {:.0}ms{}",
+                w.worker, w.served, w.errors, w.sessions, w.stolen_sessions, w.decode_steps,
+                w.setup_secs * 1e3,
+                w.setup_error.as_deref().map(|e| format!("  [SETUP FAILED: {e}]"))
+                    .unwrap_or_default());
+        }
+    } else {
+        let engine = sqft::serve::Engine::new(&rt, &config, &frozen, None, "eval",
+                                              max_new_tokens)?;
+        let mut registry = sqft::serve::AdapterRegistry::new(registry_cap);
+        registry.register_all_resident(&rt, &hyper, entries)
+            .context("registering tenants (see --registry-cap / --adapter-id)")?;
+        let mut router = sqft::serve::Router::new(engine, registry);
+        let stats = sqft::serve::benchmark_router(
+            &mut router, requests, std::time::Duration::from_millis(2), opts)?;
+        print!("{}", stats.render());
+    }
     Ok(())
 }

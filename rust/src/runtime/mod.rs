@@ -17,7 +17,7 @@ pub use manifest::{ArtifactSpec, ConfigEntry, DType, IoSpec, Manifest, ModelHype
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
@@ -30,13 +30,53 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// batch.  Relaxed ordering: this is a metric, not a synchronization point.
 static HOST_UPLOAD_BYTES: AtomicU64 = AtomicU64::new(0);
 
+thread_local! {
+    /// Per-thread count of the same bytes.  Uploads happen on the thread
+    /// that calls into PJRT, so with one engine replica per worker thread
+    /// this counter is exact per worker even while siblings upload
+    /// concurrently — the process-wide counter is only an aggregate then.
+    static THREAD_UPLOAD_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
 /// Total host→device bytes uploaded so far (monotonic; read deltas).
+/// Process-wide: under multi-worker serving this sums all threads — use
+/// [`UploadScope`] / [`thread_upload_bytes`] for exact per-path asserts.
 pub fn host_upload_bytes() -> u64 {
     HOST_UPLOAD_BYTES.load(Ordering::Relaxed)
 }
 
+/// Host→device bytes uploaded *by the calling thread* so far (monotonic).
+pub fn thread_upload_bytes() -> u64 {
+    THREAD_UPLOAD_BYTES.with(|c| c.get())
+}
+
+/// Scoped delta of the calling thread's upload bytes: create before the
+/// code under measurement, read `bytes()` after.  Exact under parallel
+/// workers and parallel tests — other threads' uploads never leak in —
+/// which is what lets upload-accounting tests share a test binary.
+///
+/// The scope is `!Send` (the counter is thread-local, so a scope begun
+/// on one thread is meaningless on another — the type makes that misuse
+/// impossible rather than silently underflowing).
+pub struct UploadScope {
+    start: u64,
+    _not_send: std::marker::PhantomData<*mut ()>,
+}
+
+impl UploadScope {
+    pub fn begin() -> UploadScope {
+        UploadScope { start: thread_upload_bytes(), _not_send: std::marker::PhantomData }
+    }
+
+    /// Bytes uploaded by this thread since `begin`.
+    pub fn bytes(&self) -> u64 {
+        thread_upload_bytes().saturating_sub(self.start)
+    }
+}
+
 fn note_upload(bytes: usize) {
     HOST_UPLOAD_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    THREAD_UPLOAD_BYTES.with(|c| c.set(c.get() + bytes as u64));
 }
 
 /// A host-side value crossing the PJRT boundary.
@@ -238,6 +278,14 @@ pub fn buffer_to_tensor(buf: &xla::PjRtBuffer, shape: &[usize]) -> Result<Tensor
 }
 
 /// Loads + compiles + caches artifacts for one artifacts/ directory.
+///
+/// Thread-safety contract: a `Runtime` (and everything holding its
+/// buffers — `DeviceStore`, `Engine`) is deliberately `!Send`/`!Sync`:
+/// the executable cache is `Rc`/`RefCell` and PJRT handles are not
+/// `Sync`.  Multi-threaded serving therefore never shares a `Runtime`;
+/// each worker thread constructs its own replica from the same artifact
+/// dir (see `serve::pool`), which compiles per worker and keeps every
+/// PJRT call thread-local by construction.
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,

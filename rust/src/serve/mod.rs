@@ -35,12 +35,24 @@
 //! wrapper over the same session (admit everything up front, never
 //! re-fill), so the two paths are byte-identical per request by
 //! construction.
+//!
+//! Serving scales past one core with the **worker pool** ([`pool`]): N
+//! worker threads, each owning a full engine replica (its own `Runtime`,
+//! compiled executables, device stores, and registry replica synced from
+//! a [`SharedAdapterSource`]), fed by a [`ShardedScheduler`] that keeps
+//! each tenant's traffic on a home worker and lets idle workers steal
+//! waiting batches.  Replicas run identical artifacts and rows decode
+//! independently, so per-request answers are byte-identical to the
+//! single-worker [`Router`] reference regardless of worker count or
+//! batch composition.
 
+pub mod pool;
 pub mod registry;
 pub mod scheduler;
 
-pub use registry::{load_adapter_dir, AdapterEntry, AdapterRegistry};
-pub use scheduler::{Request, Scheduler, SchedulerMetrics, SchedulerOpts};
+pub use pool::{benchmark_pool, serve_pool, EngineSpec, PoolOpts, PoolServeStats, WorkerStats};
+pub use registry::{load_adapter_dir, AdapterEntry, AdapterRegistry, SharedAdapterSource};
+pub use scheduler::{Request, Scheduler, SchedulerMetrics, SchedulerOpts, ShardedScheduler};
 
 use crate::data::Tokenizer;
 use crate::model::ParamSet;
@@ -450,10 +462,13 @@ pub struct MultiServeStats {
     /// keyed by adapter id (the merged path reports as [`MERGED_ID`])
     pub per_tenant: Vec<(String, ServeStats)>,
     pub scheduler: SchedulerMetrics,
-    /// decode forwards executed across all sessions
+    /// decode forwards executed across all sessions (all workers)
     pub decode_steps: usize,
     /// mean fraction of decode slots doing useful work per forward
     pub occupancy: f64,
+    /// tokens generated across all sessions (== occupied-slot-forwards);
+    /// divide by `total.wall_secs` for aggregate tokens/s
+    pub generated_tokens: usize,
 }
 
 impl MultiServeStats {
@@ -504,23 +519,35 @@ impl MultiServeStats {
         );
         let _ = writeln!(
             out,
-            "decode: {} forwards, slot occupancy {:.2}",
-            self.decode_steps, self.occupancy
+            "decode: {} forwards, slot occupancy {:.2}, {} tokens ({:.1} tok/s)",
+            self.decode_steps,
+            self.occupancy,
+            self.generated_tokens,
+            self.generated_tokens as f64 / self.total.wall_secs.max(1e-9)
         );
         out
     }
 }
 
 #[derive(Default)]
-struct Tally {
-    served: usize,
-    errors: usize,
-    latencies: Vec<f64>,
-    ttfts: Vec<f64>,
-    queue_waits: Vec<f64>,
+pub(crate) struct Tally {
+    pub(crate) served: usize,
+    pub(crate) errors: usize,
+    pub(crate) latencies: Vec<f64>,
+    pub(crate) ttfts: Vec<f64>,
+    pub(crate) queue_waits: Vec<f64>,
 }
 
 impl Tally {
+    /// Fold another worker's tally for the same tenant into this one.
+    pub(crate) fn merge(&mut self, other: Tally) {
+        self.served += other.served;
+        self.errors += other.errors;
+        self.latencies.extend(other.latencies);
+        self.ttfts.extend(other.ttfts);
+        self.queue_waits.extend(other.queue_waits);
+    }
+
     fn finish(self, wall: f64) -> ServeStats {
         let summ = |xs: Vec<f64>| if xs.is_empty() { None } else { Some(summarize(xs)) };
         ServeStats {
@@ -533,6 +560,142 @@ impl Tally {
             queue_ms: summ(self.queue_waits),
         }
     }
+}
+
+/// Assemble the per-run report from merged tenant tallies (shared by the
+/// single-worker router and the worker pool).
+pub(crate) fn finish_multi(
+    tallies: BTreeMap<String, Tally>,
+    wall: f64,
+    scheduler: SchedulerMetrics,
+    decode_steps: usize,
+    slot_steps: usize,
+    capacity: usize,
+) -> MultiServeStats {
+    let mut total = Tally::default();
+    let mut per_tenant = Vec::new();
+    for (id, tally) in tallies {
+        total.served += tally.served;
+        total.errors += tally.errors;
+        total.latencies.extend_from_slice(&tally.latencies);
+        total.ttfts.extend_from_slice(&tally.ttfts);
+        total.queue_waits.extend_from_slice(&tally.queue_waits);
+        per_tenant.push((id, tally.finish(wall)));
+    }
+    MultiServeStats {
+        total: total.finish(wall),
+        per_tenant,
+        scheduler,
+        decode_steps,
+        occupancy: if decode_steps == 0 {
+            0.0
+        } else {
+            slot_steps as f64 / (decode_steps * capacity.max(1)) as f64
+        },
+        generated_tokens: slot_steps,
+    }
+}
+
+/// Drive one same-tenant continuous decode session to completion: admit
+/// the handed-over batch, then loop forward → retire/reply → re-fill,
+/// until the slots drain and no same-tenant work is waiting.  `refill` is
+/// called between forwards whenever the hand-over queue is dry, with the
+/// current free-slot count — the single-worker router drains its request
+/// channel and asks its scheduler there; pool workers ask the sharded
+/// scheduler (which applies the home shard's aging hold).  A failed
+/// forward poisons everything still in flight or waiting.  Returns
+/// `(forwards, occupied-slot-forwards)` for occupancy accounting.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_decode_session(
+    engine: &Engine,
+    id: &Option<String>,
+    reqs: Vec<Request>,
+    dev: Option<&DeviceStore>,
+    host_sets: &[&ParamSet],
+    eval_kind: &str,
+    refill: &mut dyn FnMut(&Option<String>, usize) -> Vec<Request>,
+    tally: &mut Tally,
+) -> (usize, usize) {
+    let mut session = match engine.begin_decode() {
+        Ok(s) => s,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in reqs {
+                tally.errors += 1;
+                let _ = req.reply.send(Err(anyhow!(msg.clone())));
+            }
+            return (0, 0);
+        }
+    };
+    // in-flight request per slot; true = its row hasn't been through a
+    // forward yet (time-to-first-token pending)
+    let mut slots: Vec<Option<(Request, bool)>> = (0..session.capacity()).map(|_| None).collect();
+    let mut waiting: VecDeque<Request> = reqs.into();
+    let mut failure: Option<String> = None;
+    loop {
+        // fill free slots from the hand-off / refill queue
+        while session.free_slots() > 0 {
+            let Some(req) = waiting.pop_front() else { break };
+            match engine.admit(&mut session, &req.prompt, req.max_new_tokens, req.min_new_tokens)
+            {
+                Ok(slot) => {
+                    tally.queue_waits.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                    slots[slot] = Some((req, true));
+                }
+                Err(e) => {
+                    tally.errors += 1;
+                    let _ = req.reply.send(Err(e));
+                }
+            }
+        }
+        if session.active_slots() == 0 {
+            break; // nothing admitted and nothing same-tenant waiting
+        }
+        let retired = match engine.decode_step(&mut session, dev, host_sets, eval_kind) {
+            Ok(r) => r,
+            Err(e) => {
+                failure = Some(format!("{e:#}"));
+                break;
+            }
+        };
+        // every occupied row went through that forward: first tokens
+        let now = Instant::now();
+        for entry in slots.iter_mut().flatten() {
+            if entry.1 {
+                entry.1 = false;
+                let waited = now.saturating_duration_since(entry.0.enqueued);
+                tally.ttfts.push(waited.as_secs_f64() * 1e3);
+            }
+        }
+        for (slot, answer) in retired {
+            if let Some((req, _)) = slots[slot].take() {
+                tally.latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
+                tally.served += 1;
+                let _ = req.reply.send(Ok(answer));
+            }
+        }
+        // top the freed slots up between forwards
+        let free = session.free_slots();
+        if free > 0 && waiting.is_empty() {
+            waiting.extend(refill(id, free));
+        }
+        if session.active_slots() == 0 && waiting.is_empty() {
+            break;
+        }
+    }
+    if let Some(msg) = failure {
+        for entry in slots.iter_mut() {
+            if let Some((req, _)) = entry.take() {
+                tally.errors += 1;
+                let _ = req.reply.send(Err(anyhow!(msg.clone())));
+            }
+        }
+        for req in waiting {
+            tally.errors += 1;
+            let _ = req.reply.send(Err(anyhow!(msg.clone())));
+        }
+    }
+    (session.steps(), session.slot_steps())
 }
 
 /// One engine + one registry = a multi-tenant serving endpoint.
@@ -599,28 +762,15 @@ impl<'a> Router<'a> {
             );
         }
         let wall = start.elapsed().as_secs_f64();
-        let mut total = Tally::default();
-        let mut per_tenant = Vec::new();
-        for (id, tally) in tallies {
-            total.served += tally.served;
-            total.errors += tally.errors;
-            total.latencies.extend_from_slice(&tally.latencies);
-            total.ttfts.extend_from_slice(&tally.ttfts);
-            total.queue_waits.extend_from_slice(&tally.queue_waits);
-            per_tenant.push((id, tally.finish(wall)));
-        }
         let capacity = self.engine.artifact_batch()?;
-        Ok(MultiServeStats {
-            total: total.finish(wall),
-            per_tenant,
-            scheduler: sched.metrics().clone(),
+        Ok(finish_multi(
+            tallies,
+            wall,
+            sched.metrics().clone(),
             decode_steps,
-            occupancy: if decode_steps == 0 {
-                0.0
-            } else {
-                slot_steps as f64 / (decode_steps * capacity) as f64
-            },
-        })
+            slot_steps,
+            capacity,
+        ))
     }
 
     /// One same-tenant decode session: admit the handed-over batch, then
@@ -664,96 +814,17 @@ impl<'a> Router<'a> {
                     }
                 },
             };
-        let mut session = match self.engine.begin_decode() {
-            Ok(s) => s,
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for req in reqs {
-                    tally.errors += 1;
-                    let _ = req.reply.send(Err(anyhow!(msg.clone())));
-                }
-                return;
-            }
-        };
-        // in-flight request per slot; true = its row hasn't been through a
-        // forward yet (time-to-first-token pending)
-        let mut slots: Vec<Option<(Request, bool)>> =
-            (0..session.capacity()).map(|_| None).collect();
-        let mut waiting: VecDeque<Request> = reqs.into();
-        let mut failure: Option<String> = None;
-        loop {
-            // fill free slots from the hand-off, then from the queue
-            while session.free_slots() > 0 {
-                let Some(req) = waiting.pop_front() else { break };
-                match self.engine.admit(
-                    &mut session,
-                    &req.prompt,
-                    req.max_new_tokens,
-                    req.min_new_tokens,
-                ) {
-                    Ok(slot) => {
-                        tally.queue_waits.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
-                        slots[slot] = Some((req, true));
-                    }
-                    Err(e) => {
-                        tally.errors += 1;
-                        let _ = req.reply.send(Err(e));
-                    }
-                }
-            }
-            if session.active_slots() == 0 {
-                break; // nothing admitted and nothing same-tenant waiting
-            }
-            let retired =
-                match self.engine.decode_step(&mut session, dev, &host_sets, eval_kind) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        failure = Some(format!("{e:#}"));
-                        break;
-                    }
-                };
-            // every occupied row went through that forward: first tokens
-            let now = Instant::now();
-            for entry in slots.iter_mut().flatten() {
-                if entry.1 {
-                    entry.1 = false;
-                    let waited = now.saturating_duration_since(entry.0.enqueued);
-                    tally.ttfts.push(waited.as_secs_f64() * 1e3);
-                }
-            }
-            for (slot, answer) in retired {
-                if let Some((req, _)) = slots[slot].take() {
-                    tally.latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
-                    tally.served += 1;
-                    let _ = req.reply.send(Ok(answer));
-                }
-            }
-            // top the freed slots up between forwards: first whatever has
-            // arrived on the channel, then the tenant's own queue
+        // between forwards: pick up new channel arrivals, then top freed
+        // slots up from the tenant's own queue under the aging hold
+        let engine = &self.engine;
+        let mut refill = |current: &Option<String>, free: usize| {
             drain_channel(rx, sched, open);
-            let free = session.free_slots();
-            if free > 0 && waiting.is_empty() {
-                waiting.extend(sched.admit(&id, Instant::now(), free));
-            }
-            if session.active_slots() == 0 && waiting.is_empty() {
-                break;
-            }
-        }
-        *decode_steps += session.steps();
-        *slot_steps += session.slot_steps();
-        if let Some(msg) = failure {
-            // a failed forward poisons everything still in flight
-            for entry in slots.iter_mut() {
-                if let Some((req, _)) = entry.take() {
-                    tally.errors += 1;
-                    let _ = req.reply.send(Err(anyhow!(msg.clone())));
-                }
-            }
-            for req in waiting {
-                tally.errors += 1;
-                let _ = req.reply.send(Err(anyhow!(msg.clone())));
-            }
-        }
+            sched.admit(current, Instant::now(), free)
+        };
+        let (steps, slots) =
+            run_decode_session(engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, tally);
+        *decode_steps += steps;
+        *slot_steps += slots;
     }
 }
 

@@ -1,0 +1,388 @@
+//! Multi-worker serving: per-thread engine replicas over a sharded
+//! work-stealing scheduler.
+//!
+//! The single-worker [`Router`](super::Router) decodes one session at a
+//! time on one OS thread, so an N-core box serves at 1-core throughput.
+//! Per-tenant serving state is small and independent (the LoRA-style
+//! multi-adapter pattern), which makes tenant-sharded data parallelism
+//! the cheap scaling axis:
+//!
+//!   - **N workers**, each owning a thread-local `Runtime` + [`Engine`]
+//!     replica built from the same artifact dir (executables compile per
+//!     worker; `Runtime` is `!Send` by design and never crosses threads)
+//!     plus a private [`AdapterRegistry`] whose device-resident tenants
+//!     are replayed from a [`SharedAdapterSource`] — the host-side source
+//!     of truth that also coordinates eviction across replicas;
+//!   - a [`ShardedScheduler`] assigns each tenant a home worker (keeps
+//!     one tenant's traffic forming full batches on one replica) and lets
+//!     idle workers steal whole same-tenant batches from overloaded
+//!     shards, preserving the per-shard fill+aging fairness policy;
+//!   - a **dispatcher** on the calling thread feeds the shards from the
+//!     public request channel, so producers see the same API as
+//!     [`Router::serve`](super::Router::serve).
+//!
+//! Replicas run identical artifacts and decode rows independently, so
+//! per-request answers are byte-identical to the single-worker reference
+//! regardless of worker count, batch composition, or steal schedule —
+//! only throughput changes.  Workers go live together (a barrier after
+//! setup), so tenants see uniform capacity and the scaling bench's
+//! steady-state window is exact.  A worker whose replica fails to build
+//! does not strand its shard: it steps aside and healthy siblings absorb
+//! its queue through stealing; only when *every* replica fails does the
+//! last one drain the queues with errors, so nothing ever hangs and no
+//! request is failed while a healthy replica could have served it.
+
+use super::registry::{AdapterRegistry, SharedAdapterSource};
+use super::scheduler::{Request, SchedulerOpts, ShardedScheduler};
+use super::{finish_multi, run_decode_session, Engine, MultiServeStats, Tally, MERGED_ID};
+use crate::model::ParamSet;
+use crate::runtime::{DeviceStore, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+/// Everything a worker thread needs to build its own engine replica.
+/// Host-side and `Sync`, so one spec (borrowed) serves every worker.
+pub struct EngineSpec {
+    /// artifact directory each worker compiles its executables from
+    pub artifacts: PathBuf,
+    pub config: String,
+    /// frozen base weights, uploaded per worker at startup
+    pub frozen: ParamSet,
+    /// eval artifact kind for the merged / no-adapter path
+    pub eval_kind: String,
+    pub max_new_tokens: usize,
+    /// per-worker registry capacity; must be ≥ the shared source's
+    /// capacity so replica LRU never fires on its own (eviction stays
+    /// coordinated through the source)
+    pub registry_capacity: usize,
+}
+
+/// Worker-pool serving knobs.
+#[derive(Clone, Debug)]
+pub struct PoolOpts {
+    /// engine replicas (and scheduler shards); 1 degenerates to
+    /// single-worker behavior over the pool plumbing
+    pub workers: usize,
+    pub sched: SchedulerOpts,
+}
+
+impl Default for PoolOpts {
+    fn default() -> Self {
+        PoolOpts { workers: 1, sched: SchedulerOpts::default() }
+    }
+}
+
+/// One worker's contribution to the run (summed/merged into the
+/// aggregate [`MultiServeStats`]).
+#[derive(Clone, Debug)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub served: usize,
+    pub errors: usize,
+    /// decode sessions this worker ran
+    pub sessions: usize,
+    /// sessions whose batch was stolen from another worker's shard
+    pub stolen_sessions: usize,
+    pub decode_steps: usize,
+    /// replica setup time (runtime load + executable-compile-on-first-use
+    /// happens lazily, so this covers runtime/engine build + tenant
+    /// replication), measured from pool start
+    pub setup_secs: f64,
+    /// setup error, if the replica failed to build; the worker then
+    /// stepped aside (healthy siblings steal its shard) — or, when every
+    /// replica failed, the last one drained all requests with errors
+    pub setup_error: Option<String>,
+}
+
+/// Aggregate + per-worker serving report for one pool run.
+#[derive(Debug)]
+pub struct PoolServeStats {
+    /// merged per-tenant/total stats; `scheduler` is the cross-shard
+    /// aggregate and `occupancy`/`generated_tokens` span all workers
+    pub serve: MultiServeStats,
+    pub workers: usize,
+    /// batches executed by a non-home worker (work stealing)
+    pub steals: usize,
+    /// total wall minus the slowest healthy replica's setup — the
+    /// steady-state window scaling benches should divide tokens by, so
+    /// per-worker compile time doesn't masquerade as serving cost
+    pub serving_wall_secs: f64,
+    pub per_worker: Vec<WorkerStats>,
+}
+
+/// What a worker thread hands back at join time.
+struct WorkerOutcome {
+    worker: usize,
+    tallies: BTreeMap<String, Tally>,
+    sessions: usize,
+    stolen_sessions: usize,
+    decode_steps: usize,
+    slot_steps: usize,
+    capacity: usize,
+    setup_secs: f64,
+    setup_error: Option<String>,
+}
+
+/// Serve `rx` with `opts.workers` engine replicas until the channel
+/// closes and every queue drains.  Tenants come from `source` (replayed
+/// into each replica's registry, device-resident).  The calling thread
+/// becomes the dispatcher.  `opts.sched.max_batch` is clamped to the
+/// artifact batch during worker setup (same rule as `Router::serve`), so
+/// a dispatched batch never outsizes the decode slots.
+pub fn serve_pool(
+    spec: &EngineSpec,
+    source: &SharedAdapterSource,
+    rx: Receiver<Request>,
+    opts: PoolOpts,
+) -> Result<PoolServeStats> {
+    let workers = opts.workers.max(1);
+    let sched = ShardedScheduler::new(workers, opts.sched.clone());
+    let start = Instant::now();
+    // replicas go live together: every worker (healthy or failed) checks
+    // in here after setup, so no request is served while a sibling is
+    // still compiling — tenants see uniform capacity from the first
+    // token, and the steady-state serving window is exactly
+    // `wall - slowest setup` (what the scaling bench divides by)
+    let ready = Barrier::new(workers);
+    let failed = AtomicUsize::new(0);
+    let outcomes: Vec<WorkerOutcome> = std::thread::scope(|scope| {
+        let (sched, ready, failed) = (&sched, &ready, &failed);
+        let handles: Vec<_> = (0..workers)
+            .map(|wid| {
+                scope.spawn(move || worker_main(wid, spec, source, sched, start, ready, failed))
+            })
+            .collect();
+        // dispatcher: feed the shards until the producer side closes
+        for req in rx.iter() {
+            sched.push(req);
+        }
+        sched.close();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let capacity = outcomes.iter().map(|o| o.capacity).max().unwrap_or(0);
+    let mut tallies: BTreeMap<String, Tally> = BTreeMap::new();
+    let mut decode_steps = 0usize;
+    let mut slot_steps = 0usize;
+    let mut per_worker = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        let (mut served, mut errors) = (0usize, 0usize);
+        for (id, tally) in o.tallies {
+            served += tally.served;
+            errors += tally.errors;
+            tallies.entry(id).or_default().merge(tally);
+        }
+        decode_steps += o.decode_steps;
+        slot_steps += o.slot_steps;
+        per_worker.push(WorkerStats {
+            worker: o.worker,
+            served,
+            errors,
+            sessions: o.sessions,
+            stolen_sessions: o.stolen_sessions,
+            decode_steps: o.decode_steps,
+            setup_secs: o.setup_secs,
+            setup_error: o.setup_error,
+        });
+    }
+    // the barrier releases serving at the slowest worker's check-in, so
+    // this is the exact start of the serving window (failed workers
+    // check in too — their time-to-fail gates the barrier the same way)
+    let slowest_setup = per_worker.iter().map(|w| w.setup_secs).fold(0.0f64, f64::max);
+    let serving_wall = wall - slowest_setup;
+    Ok(PoolServeStats {
+        serve: finish_multi(tallies, wall, sched.metrics(), decode_steps, slot_steps, capacity),
+        workers,
+        steals: sched.steals(),
+        serving_wall_secs: if serving_wall > 0.0 { serving_wall } else { wall },
+        per_worker,
+    })
+}
+
+/// Worker entry point: build the replica, check in at the go-live
+/// barrier, then serve.  On setup failure the worker steps aside —
+/// healthy siblings absorb its shard through stealing — and only when
+/// *every* replica failed does the last one drain the queues with
+/// errors, so no request ever hangs and none is failed while a healthy
+/// replica could have served it.
+fn worker_main(
+    wid: usize,
+    spec: &EngineSpec,
+    source: &SharedAdapterSource,
+    sched: &ShardedScheduler,
+    epoch: Instant,
+    ready: &Barrier,
+    failed: &AtomicUsize,
+) -> WorkerOutcome {
+    let mut out = WorkerOutcome {
+        worker: wid,
+        tallies: BTreeMap::new(),
+        sessions: 0,
+        stolen_sessions: 0,
+        decode_steps: 0,
+        slot_steps: 0,
+        capacity: 0,
+        setup_secs: 0.0,
+        setup_error: None,
+    };
+    match worker_serve(wid, spec, source, sched, epoch, ready, &mut out) {
+        Ok(()) => {}
+        Err(e) => {
+            let msg = format!("worker {wid} replica setup failed: {e:#}");
+            out.setup_error = Some(format!("{e:#}"));
+            out.setup_secs = epoch.elapsed().as_secs_f64();
+            let all_failed =
+                failed.fetch_add(1, Ordering::SeqCst) + 1 == sched.shards();
+            ready.wait();
+            if !all_failed {
+                return out; // a healthy sibling serves (and steals) instead
+            }
+            while let Some((id, reqs, _stolen)) = sched.next_work(wid, Instant::now()) {
+                let key = id.as_deref().unwrap_or(MERGED_ID).to_string();
+                let tally = out.tallies.entry(key).or_default();
+                for req in reqs {
+                    tally.errors += 1;
+                    let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_serve(
+    wid: usize,
+    spec: &EngineSpec,
+    source: &SharedAdapterSource,
+    sched: &ShardedScheduler,
+    epoch: Instant,
+    ready: &Barrier,
+    out: &mut WorkerOutcome,
+) -> Result<()> {
+    // the replica: everything below is thread-local, including the PJRT
+    // client and every device buffer
+    let rt = Runtime::new(&spec.artifacts)
+        .with_context(|| format!("worker {wid}: loading artifacts {:?}", spec.artifacts))?;
+    let engine = Engine::new(
+        &rt,
+        &spec.config,
+        &spec.frozen,
+        None,
+        &spec.eval_kind,
+        spec.max_new_tokens,
+    )
+    .with_context(|| format!("worker {wid}: building engine replica"))?;
+    out.capacity = engine.artifact_batch()?;
+    // dispatched batches must fit the decode slots (idempotent across
+    // workers; runs before the barrier, so before any dispatch)
+    sched.clamp_max_batch(out.capacity);
+    // compile the serving executable now, not on the first request:
+    // setup_secs should cover it, and first-token latency shouldn't
+    // (tenants on a different eval kind still compile lazily, once)
+    rt.executable(&spec.config, &spec.eval_kind)
+        .with_context(|| format!("worker {wid}: compiling '{}'", spec.eval_kind))?;
+    let mut registry = AdapterRegistry::new(spec.registry_capacity.max(source.capacity()));
+    let mut cursor = 0u64;
+    source
+        .sync(&mut registry, Some(&rt), &mut cursor)
+        .with_context(|| format!("worker {wid}: replicating resident tenants"))?;
+    out.setup_secs = epoch.elapsed().as_secs_f64();
+    ready.wait(); // go live together (see serve_pool)
+    while let Some((id, reqs, stolen)) = sched.next_work(wid, Instant::now()) {
+        let key = id.as_deref().unwrap_or(MERGED_ID).to_string();
+        let tally = out.tallies.entry(key).or_default();
+        // pick up registrations/evictions before resolving the tenant; a
+        // failed sync fails this batch but keeps the worker serving (the
+        // unchanged cursor retries the same changes next session)
+        if let Err(e) = source.sync(&mut registry, Some(&rt), &mut cursor) {
+            let msg = format!("worker {wid}: syncing tenant changes: {e:#}");
+            for req in reqs {
+                tally.errors += 1;
+                let _ = req.reply.send(Err(anyhow!(msg.clone())));
+            }
+            continue;
+        }
+        out.sessions += 1;
+        if stolen {
+            out.stolen_sessions += 1;
+        }
+        let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) = match &id
+        {
+            None => (
+                engine.default_sets.iter().collect(),
+                engine.default_kind.as_str(),
+                None,
+            ),
+            Some(tid) => match registry.get_for_serving(tid) {
+                Some((entry, dev)) => {
+                    (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
+                }
+                None => {
+                    let msg = format!("adapter '{tid}' is not registered");
+                    for req in reqs {
+                        tally.errors += 1;
+                        let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                    }
+                    continue;
+                }
+            },
+        };
+        let mut refill =
+            |current: &Option<String>, free: usize| sched.admit(current, Instant::now(), free);
+        let (steps, slots) = run_decode_session(
+            &engine,
+            &id,
+            reqs,
+            dev,
+            &host_sets,
+            eval_kind,
+            &mut refill,
+            tally,
+        );
+        out.decode_steps += steps;
+        out.slot_steps += slots;
+    }
+    Ok(())
+}
+
+/// Drive a worker pool with a synthetic open-loop workload (the pool
+/// analog of [`benchmark_router`](super::benchmark_router)): one producer
+/// thread sends `(adapter_id, prompt)` requests at `inter_arrival`
+/// spacing, the pool serves them, and the measured stats come back.
+pub fn benchmark_pool(
+    spec: &EngineSpec,
+    source: &SharedAdapterSource,
+    requests: Vec<(Option<String>, String)>,
+    inter_arrival: Duration,
+    opts: PoolOpts,
+) -> Result<PoolServeStats> {
+    let (tx, rx) = channel::<Request>();
+    let producer = std::thread::spawn(move || {
+        let mut replies = Vec::new();
+        for (adapter_id, prompt) in requests {
+            let (rtx, rrx) = channel();
+            let _ = tx.send(Request::new(adapter_id, prompt, rtx));
+            replies.push(rrx);
+            if !inter_arrival.is_zero() {
+                std::thread::sleep(inter_arrival);
+            }
+        }
+        drop(tx);
+        // drain replies so worker sends don't error
+        for r in replies {
+            let _ = r.recv();
+        }
+    });
+    let stats = serve_pool(spec, source, rx, opts);
+    producer.join().ok();
+    stats
+}

@@ -20,6 +20,7 @@ use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 /// One registered tenant: id, eval artifact kind, and the host-side
 /// per-forward input sets (`[adapters (a_/b_), rank params]`, resolved in
@@ -388,6 +389,223 @@ impl AdapterRegistry {
     }
 }
 
+/// Host-side source of truth for multi-worker serving: validated tenant
+/// entries plus a monotonically versioned change log, shared (behind a
+/// mutex) by every worker thread.  Each worker keeps a private
+/// [`AdapterRegistry`] replica — device buffers belong to that worker's
+/// PJRT client and cannot be shared — and calls [`SharedAdapterSource::sync`]
+/// to replay registrations and evictions it hasn't seen yet, in version
+/// order, so all replicas converge on the same resident set.
+///
+/// Coordinated eviction: the source enforces the capacity bound itself
+/// (registration past capacity is an error, never a silent LRU kick), so
+/// the only way a tenant leaves is an explicit [`SharedAdapterSource::evict`]
+/// — which every worker applies at its next sync, freeing that worker's
+/// device buffers.  Worker registries must be created with at least this
+/// capacity so their local LRU never fires on its own.
+///
+/// Memory is bounded: entries are stored once (latest version wins on
+/// same-id re-registration, count capped by `capacity`), and the
+/// eviction log is compacted once it exceeds [`EVICTION_LOG_CAP`] — a
+/// worker whose cursor predates the compaction `floor` takes a snapshot
+/// resync instead of a log replay (drop every replica id the source no
+/// longer has, then apply registrations as usual), so long-lived
+/// serving with tenant churn never accumulates dead history.
+pub struct SharedAdapterSource {
+    inner: Mutex<SourceInner>,
+}
+
+/// Evictions retained for incremental replay; beyond this the oldest
+/// half is compacted away and stale workers snapshot-resync.
+const EVICTION_LOG_CAP: usize = 64;
+
+struct SourceInner {
+    hyper: ModelHyper,
+    capacity: usize,
+    version: u64,
+    /// id → (version registered, entry); same-id re-registration replaces
+    entries: BTreeMap<String, (u64, AdapterEntry)>,
+    /// (version, id) of retained evictions, in order (compacted — see
+    /// `floor`)
+    evictions: Vec<(u64, String)>,
+    /// evictions at or below this version have been compacted away;
+    /// cursors below it cannot replay the log and snapshot-resync instead
+    floor: u64,
+}
+
+impl SharedAdapterSource {
+    pub fn new(hyper: ModelHyper, capacity: usize) -> SharedAdapterSource {
+        SharedAdapterSource {
+            inner: Mutex::new(SourceInner {
+                hyper,
+                capacity: capacity.max(1),
+                version: 0,
+                entries: BTreeMap::new(),
+                evictions: Vec::new(),
+                floor: 0,
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Monotonic change counter; bumps on every register/evict.
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.inner.lock().unwrap().entries.keys().cloned().collect()
+    }
+
+    /// Validate + record one tenant.  Same-id registration replaces the
+    /// previous weights (workers pick the new ones up at next sync); a
+    /// *new* id past capacity is an error — eviction is always explicit.
+    pub fn register(&self, entry: AdapterEntry) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        AdapterRegistry::validate(&inner.hyper, &entry)?;
+        if !inner.entries.contains_key(&entry.id) && inner.entries.len() >= inner.capacity {
+            bail!(
+                "adapter '{}' would exceed shared-source capacity {}; evict a tenant first",
+                entry.id,
+                inner.capacity
+            );
+        }
+        inner.version += 1;
+        let v = inner.version;
+        inner.entries.insert(entry.id.clone(), (v, entry));
+        Ok(())
+    }
+
+    /// All-or-nothing batch registration (mirrors
+    /// [`AdapterRegistry::register_all`]): duplicate ids, validation
+    /// failures, and capacity overflow are checked before anything is
+    /// recorded.  Returns the registered ids in order.
+    pub fn register_all(&self, entries: Vec<AdapterEntry>) -> Result<Vec<String>> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut ids: Vec<String> = Vec::new();
+        for entry in &entries {
+            if inner.entries.contains_key(&entry.id) || ids.iter().any(|i| i == &entry.id) {
+                bail!(
+                    "duplicate adapter id '{}'; export with distinct --adapter-id values",
+                    entry.id
+                );
+            }
+            AdapterRegistry::validate(&inner.hyper, entry)?;
+            ids.push(entry.id.clone());
+        }
+        if inner.entries.len() + entries.len() > inner.capacity {
+            bail!(
+                "batch of {} adapters exceeds shared-source capacity {} ({} already registered)",
+                entries.len(),
+                inner.capacity,
+                inner.entries.len()
+            );
+        }
+        for entry in entries {
+            inner.version += 1;
+            let v = inner.version;
+            inner.entries.insert(entry.id.clone(), (v, entry));
+        }
+        Ok(ids)
+    }
+
+    /// Remove a tenant from the source of truth; every worker drops its
+    /// replica (host entry + device buffers) at its next sync.  True if
+    /// the tenant was registered.
+    pub fn evict(&self, id: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.entries.remove(id).is_none() {
+            return false;
+        }
+        inner.version += 1;
+        let v = inner.version;
+        inner.evictions.push((v, id.to_string()));
+        if inner.evictions.len() > EVICTION_LOG_CAP {
+            // compact the oldest half; workers behind the new floor take
+            // the snapshot-resync path in `sync`
+            let drop_n = inner.evictions.len() / 2;
+            inner.floor = inner.evictions[drop_n - 1].0;
+            inner.evictions.drain(..drop_n);
+        }
+        true
+    }
+
+    /// Replay every change after `cursor` into a worker's registry
+    /// replica, in version order, and advance the cursor.  With `rt` the
+    /// registrations go device-resident (the serving path); without it
+    /// they stay host-only (tests, dry runs).  Entry payloads are cloned
+    /// and uploads run *outside* the source lock, so a slow worker sync
+    /// never blocks registration or its siblings.  Returns the number of
+    /// changes applied.
+    pub fn sync(
+        &self,
+        registry: &mut AdapterRegistry,
+        rt: Option<&Runtime>,
+        cursor: &mut u64,
+    ) -> Result<usize> {
+        enum Change {
+            Register(AdapterEntry),
+            Evict(String),
+        }
+        let (hyper, mut changes, head) = {
+            let inner = self.inner.lock().unwrap();
+            // steady-state fast path: one u64 compare under the lock —
+            // per-session worker syncs must not pay a full log scan
+            if inner.version == *cursor {
+                return Ok(0);
+            }
+            let mut changes: Vec<(u64, Change)> = Vec::new();
+            if *cursor < inner.floor {
+                // the eviction log was compacted past this cursor:
+                // snapshot resync — drop every replica id the source no
+                // longer has (version 0 sorts these before all
+                // registrations), then apply registrations as usual
+                for id in registry.ids() {
+                    if !inner.entries.contains_key(id) {
+                        changes.push((0, Change::Evict(id.to_string())));
+                    }
+                }
+            } else {
+                for (v, id) in inner.evictions.iter().filter(|(v, _)| *v > *cursor) {
+                    changes.push((*v, Change::Evict(id.clone())));
+                }
+            }
+            for (v, entry) in inner.entries.values().filter(|(v, _)| *v > *cursor) {
+                changes.push((*v, Change::Register(entry.clone())));
+            }
+            (inner.hyper.clone(), changes, inner.version)
+        };
+        changes.sort_by_key(|(v, _)| *v);
+        let applied = changes.len();
+        for (_, change) in changes.drain(..) {
+            match change {
+                Change::Register(entry) => {
+                    match rt {
+                        Some(rt) => registry.register_resident(rt, &hyper, entry)?,
+                        None => registry.register(&hyper, entry)?,
+                    };
+                }
+                Change::Evict(id) => {
+                    registry.evict(&id);
+                }
+            }
+        }
+        *cursor = head;
+        Ok(applied)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -515,6 +733,102 @@ mod tests {
             .register_all(&h, vec![entry(&h, "a", 1), entry(&h, "b", 2)])
             .unwrap();
         assert_eq!(ids, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn shared_source_replicates_into_worker_registries() {
+        let h = hyper();
+        let source = SharedAdapterSource::new(h.clone(), 4);
+        source.register_all(vec![entry(&h, "a", 1), entry(&h, "b", 2)]).unwrap();
+        // two workers replicate independently (host-only sync: no runtime)
+        let mut reg0 = AdapterRegistry::new(4);
+        let mut reg1 = AdapterRegistry::new(4);
+        let (mut c0, mut c1) = (0u64, 0u64);
+        assert_eq!(source.sync(&mut reg0, None, &mut c0).unwrap(), 2);
+        assert_eq!(source.sync(&mut reg1, None, &mut c1).unwrap(), 2);
+        assert!(reg0.contains("a") && reg0.contains("b"));
+        assert!(reg1.contains("a") && reg1.contains("b"));
+        // a second sync with nothing new is a no-op
+        assert_eq!(source.sync(&mut reg0, None, &mut c0).unwrap(), 0);
+        // coordinated eviction: both replicas drop the tenant at next sync
+        assert!(source.evict("a"));
+        assert!(!source.evict("a"), "double evict must report absence");
+        assert_eq!(source.sync(&mut reg0, None, &mut c0).unwrap(), 1);
+        assert_eq!(source.sync(&mut reg1, None, &mut c1).unwrap(), 1);
+        assert!(!reg0.contains("a") && !reg1.contains("a"));
+        assert!(reg0.contains("b") && reg1.contains("b"));
+        // a late-joining worker replays history to the same end state
+        let mut late = AdapterRegistry::new(4);
+        let mut cl = 0u64;
+        source.sync(&mut late, None, &mut cl).unwrap();
+        assert!(!late.contains("a") && late.contains("b"));
+        assert_eq!(late.len(), 1);
+    }
+
+    #[test]
+    fn shared_source_enforces_capacity_and_rejects_duplicates() {
+        let h = hyper();
+        let source = SharedAdapterSource::new(h.clone(), 2);
+        source.register(entry(&h, "a", 1)).unwrap();
+        source.register(entry(&h, "b", 2)).unwrap();
+        // eviction is explicit: a new id past capacity errors, never LRUs
+        let e = source.register(entry(&h, "c", 3)).unwrap_err();
+        assert!(format!("{e:#}").contains("capacity"), "{e:#}");
+        assert_eq!(source.len(), 2);
+        // same-id re-registration replaces (no capacity change) and
+        // reaches an already-synced worker as one more change
+        let mut reg = AdapterRegistry::new(2);
+        let mut cursor = 0u64;
+        source.sync(&mut reg, None, &mut cursor).unwrap();
+        source.register(entry(&h, "a", 9)).unwrap();
+        assert_eq!(source.sync(&mut reg, None, &mut cursor).unwrap(), 1);
+        assert_eq!(source.len(), 2);
+        // batch with a duplicate of a registered id is rejected whole
+        let e = source.register_all(vec![entry(&h, "b", 4)]).unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate"), "{e:#}");
+        // validation failures are caught at the source
+        let mut bad = entry(&h, "bad", 5);
+        bad.host_sets.truncate(1);
+        assert!(source.register(bad).is_err());
+    }
+
+    #[test]
+    fn shared_source_compacts_eviction_log_and_stale_workers_snapshot_resync() {
+        let h = hyper();
+        let source = SharedAdapterSource::new(h.clone(), 4);
+        // a worker syncs early, then goes quiet while tenants churn
+        source.register(entry(&h, "keep", 1)).unwrap();
+        source.register(entry(&h, "stale", 2)).unwrap();
+        let mut quiet = AdapterRegistry::new(8);
+        let mut qc = 0u64;
+        source.sync(&mut quiet, None, &mut qc).unwrap();
+        assert!(quiet.contains("keep") && quiet.contains("stale"));
+        // churn far past the log cap: register+evict cycles
+        source.evict("stale");
+        for i in 0..(2 * EVICTION_LOG_CAP) {
+            let id = format!("churn{i}");
+            source.register(entry(&h, &id, 100 + i as u64)).unwrap();
+            assert!(source.evict(&id));
+        }
+        // one survivor registered after the churn
+        source.register(entry(&h, "late", 9)).unwrap();
+        // the quiet worker's cursor predates the compaction floor; its
+        // snapshot resync must drop 'stale' (and no churn ghosts), keep
+        // 'keep', and pick up 'late'
+        let n = source.sync(&mut quiet, None, &mut qc).unwrap();
+        assert!(n >= 2, "resync must evict 'stale' and register 'late', got {n}");
+        assert!(quiet.contains("keep"), "unchanged tenant must survive resync");
+        assert!(!quiet.contains("stale"), "compacted eviction must still apply");
+        assert!(quiet.contains("late"));
+        assert_eq!(quiet.len(), 2);
+        // and the worker is now current: next sync is a no-op
+        assert_eq!(source.sync(&mut quiet, None, &mut qc).unwrap(), 0);
+        // a brand-new worker converges to the same set
+        let mut fresh = AdapterRegistry::new(8);
+        let mut fc = 0u64;
+        source.sync(&mut fresh, None, &mut fc).unwrap();
+        assert!(fresh.contains("keep") && fresh.contains("late"));
+        assert_eq!(fresh.len(), 2);
     }
 
     #[test]

@@ -29,7 +29,9 @@
 
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One inference request: a prompt routed to a registered adapter
@@ -109,6 +111,20 @@ impl SchedulerMetrics {
     pub fn avg_fill(&self) -> f64 {
         if self.batches == 0 { 0.0 } else { self.fill_sum / self.batches as f64 }
     }
+
+    /// Fold another scheduler's counters into this one (used to aggregate
+    /// per-shard metrics into the pool-wide report).  Counters sum;
+    /// `max_queue_depth` takes the max — i.e. the deepest any single
+    /// shard got, a lower bound on the instantaneous global peak.
+    pub fn merge(&mut self, other: &SchedulerMetrics) {
+        self.batches += other.batches;
+        self.scheduled += other.scheduled;
+        self.fill_sum += other.fill_sum;
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.aged_batches += other.aged_batches;
+        self.admitted += other.admitted;
+        self.aging_holds += other.aging_holds;
+    }
 }
 
 /// Per-adapter FIFO queues + the dispatch policy.
@@ -150,6 +166,15 @@ impl Scheduler {
 
     pub fn metrics(&self) -> &SchedulerMetrics {
         &self.metrics
+    }
+
+    /// Tighten `max_batch` to `cap` (idempotent; never below 1).  The
+    /// worker pool calls this once the artifact batch is known, so a
+    /// dispatched batch can never exceed the decode slots — oversized
+    /// hand-offs would sit out the aging policy in a session's private
+    /// queue (the single-worker router clamps the same way up front).
+    pub fn clamp_max_batch(&mut self, cap: usize) {
+        self.opts.max_batch = self.opts.max_batch.min(cap).max(1);
     }
 
     /// Pop the next same-adapter batch under the fill+aging policy, FIFO
@@ -245,6 +270,174 @@ impl Scheduler {
         self.metrics.admitted += reqs.len();
         self.metrics.scheduled += reqs.len();
         reqs
+    }
+}
+
+/// Stable tenant → shard assignment (FNV-1a over the adapter id; the
+/// merged / no-adapter queue hashes like the empty string).  Every thread
+/// must agree on this mapping, so it is a pure function of the id.
+fn shard_of(id: &Option<String>, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    if let Some(s) = id {
+        for &b in s.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    (h % shards as u64) as usize
+}
+
+/// Thread-safe front-end for the worker pool: one [`Scheduler`] shard per
+/// worker, tenants assigned to shards by stable hash, so each worker has
+/// a *home* set of tenants (keeps one tenant's traffic on one worker —
+/// full batches — instead of splitting it across replicas).
+///
+/// Work stealing: a worker whose home shard is dry scans the other
+/// shards, home-first order, and takes a whole same-tenant batch from
+/// the fullest-scoring queue there (`steals` counts those).  Stealing is
+/// what bounds cross-shard starvation: the per-shard fill+aging policy
+/// only sees its own tenants, so an aged tenant on a busy worker's shard
+/// is picked up by whichever worker idles first.
+///
+/// Step-level admission ([`ShardedScheduler::admit`]) locks the running
+/// tenant's home shard, so the same-shard aging hold fires exactly as in
+/// single-worker serving regardless of which worker runs the session.
+pub struct ShardedScheduler {
+    shards: Vec<Mutex<Scheduler>>,
+    /// queued requests across all shards (fast idle check without locks)
+    pending: AtomicUsize,
+    /// batches handed to a worker whose home shard didn't own them
+    steals: AtomicUsize,
+    /// open flag guarded for the condvar; false once the producer closes
+    gate: Mutex<bool>,
+    work_ready: Condvar,
+}
+
+impl ShardedScheduler {
+    pub fn new(shards: usize, opts: SchedulerOpts) -> ShardedScheduler {
+        let shards = shards.max(1);
+        ShardedScheduler {
+            shards: (0..shards).map(|_| Mutex::new(Scheduler::new(opts.clone()))).collect(),
+            pending: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
+            gate: Mutex::new(true),
+            work_ready: Condvar::new(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard that owns `id`'s queue (exposed for tests and metrics).
+    pub fn shard_of(&self, id: &Option<String>) -> usize {
+        shard_of(id, self.shards.len())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
+    }
+
+    /// Batches taken by non-home workers so far.
+    pub fn steals(&self) -> usize {
+        self.steals.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue a request on its tenant's home shard and wake a worker.
+    pub fn push(&self, req: Request) {
+        let shard = shard_of(&req.adapter_id, self.shards.len());
+        self.shards[shard].lock().unwrap().push(req);
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.work_ready.notify_one();
+    }
+
+    /// Producer side is done: once the queues drain, `next_work` returns
+    /// `None` and workers exit.
+    pub fn close(&self) {
+        *self.gate.lock().unwrap() = false;
+        self.work_ready.notify_all();
+    }
+
+    /// Blocking dispatch for worker `home`: pop the next same-tenant batch
+    /// under each shard's fill+aging policy, scanning the home shard
+    /// first, then stealing from siblings.  Blocks while every queue is
+    /// empty but the producer is still open; `None` means shutdown (closed
+    /// and drained).  `stolen` in the return is true when the batch came
+    /// from a non-home shard.
+    pub fn next_work(
+        &self,
+        home: usize,
+        now: Instant,
+    ) -> Option<(Option<String>, Vec<Request>, bool)> {
+        let n = self.shards.len();
+        let home = home % n;
+        // `now` seeds the first scan (testability); it is resampled after
+        // every blocking wait so aging scores never use a stale clock
+        let mut now = now;
+        loop {
+            if self.pending.load(Ordering::SeqCst) > 0 {
+                for k in 0..n {
+                    let s = (home + k) % n;
+                    let got = self.shards[s].lock().unwrap().next_batch(now);
+                    if let Some((id, reqs)) = got {
+                        self.pending.fetch_sub(reqs.len(), Ordering::SeqCst);
+                        if k > 0 {
+                            self.steals.fetch_add(1, Ordering::SeqCst);
+                        }
+                        return Some((id, reqs, k > 0));
+                    }
+                }
+                // raced with another worker's pop; rescan
+                continue;
+            }
+            let open = self.gate.lock().unwrap();
+            if self.pending.load(Ordering::SeqCst) > 0 {
+                continue; // a push landed between the check and the lock
+            }
+            if !*open {
+                return None;
+            }
+            // the timeout is a safety net against lost wakeups; pushes
+            // notify under normal operation
+            let (_guard, _timed_out) = self
+                .work_ready
+                .wait_timeout(open, Duration::from_millis(20))
+                .unwrap();
+            now = Instant::now();
+        }
+    }
+
+    /// Step-level admission for a running session: top up `free_slots`
+    /// from `current`'s home shard, FIFO, under that shard's aging hold
+    /// (see [`Scheduler::admit`]).  Safe to call from any worker — the
+    /// shard is chosen by tenant, not by caller.
+    pub fn admit(&self, current: &Option<String>, now: Instant, free_slots: usize) -> Vec<Request> {
+        let shard = shard_of(current, self.shards.len());
+        let got = self.shards[shard].lock().unwrap().admit(current, now, free_slots);
+        if !got.is_empty() {
+            self.pending.fetch_sub(got.len(), Ordering::SeqCst);
+        }
+        got
+    }
+
+    /// Tighten every shard's `max_batch` to the artifact batch (see
+    /// [`Scheduler::clamp_max_batch`]).  Workers call this during setup,
+    /// before the go-live barrier, so no dispatch ever sees the
+    /// unclamped value.
+    pub fn clamp_max_batch(&self, cap: usize) {
+        for shard in &self.shards {
+            shard.lock().unwrap().clamp_max_batch(cap);
+        }
+    }
+
+    /// Aggregate scheduler counters across shards (see
+    /// [`SchedulerMetrics::merge`]).
+    pub fn metrics(&self) -> SchedulerMetrics {
+        let mut out = SchedulerMetrics::default();
+        for shard in &self.shards {
+            out.merge(shard.lock().unwrap().metrics());
+        }
+        out
     }
 }
 
@@ -413,6 +606,150 @@ mod tests {
         assert_eq!(id.as_deref(), Some("cold"));
         // with the aged request served, admission flows again
         assert_eq!(s.admit(&current, Instant::now(), 8).len(), 2);
+    }
+
+    #[test]
+    fn sharded_affinity_is_stable_and_push_routes_to_home_shard() {
+        let s = ShardedScheduler::new(4, opts(8, 50));
+        assert_eq!(s.shards(), 4);
+        let a = Some("tenant-a".to_string());
+        let home = s.shard_of(&a);
+        assert_eq!(home, s.shard_of(&a), "assignment must be deterministic");
+        let (r, _k) = req(Some("tenant-a"), "p0", Duration::ZERO);
+        s.push(r);
+        assert_eq!(s.pending(), 1);
+        // the home worker pops it without stealing
+        let (id, batch, stolen) = s.next_work(home, Instant::now()).unwrap();
+        assert_eq!(id, a);
+        assert_eq!(batch.len(), 1);
+        assert!(!stolen);
+        assert_eq!(s.steals(), 0);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn idle_worker_steals_from_sibling_shard() {
+        let s = ShardedScheduler::new(4, opts(8, 50));
+        let a = Some("tenant-a".to_string());
+        let home = s.shard_of(&a);
+        let thief = (home + 1) % s.shards();
+        let mut keep = Vec::new();
+        for p in ["p0", "p1"] {
+            let (r, k) = req(Some("tenant-a"), p, Duration::ZERO);
+            s.push(r);
+            keep.push(k);
+        }
+        // a non-home worker finds the batch by scanning past its own shard
+        let (id, batch, stolen) = s.next_work(thief, Instant::now()).unwrap();
+        assert_eq!(id, a);
+        assert_eq!(batch.len(), 2, "steals take the whole same-tenant batch");
+        assert!(stolen);
+        assert_eq!(s.steals(), 1);
+    }
+
+    #[test]
+    fn sharded_admit_targets_home_shard_and_holds_for_aged_tenants() {
+        // regardless of which worker runs the session, admit() must hit
+        // the tenant's home shard and respect its aging hold
+        let s = ShardedScheduler::new(2, opts(8, 50));
+        let current = Some("tenant-a".to_string());
+        let mut keep = Vec::new();
+        for p in ["a0", "a1"] {
+            let (r, k) = req(Some("tenant-a"), p, Duration::ZERO);
+            s.push(r);
+            keep.push(k);
+        }
+        assert_eq!(s.admit(&current, Instant::now(), 1).len(), 1);
+        // an aged tenant on the SAME shard halts further admission; use a
+        // same-shard sibling so the hold is observable
+        let sibling = (0..1000)
+            .map(|i| format!("cold{i}"))
+            .find(|c| shard_of(&Some(c.clone()), 2) == s.shard_of(&current))
+            .expect("some id lands on the same shard");
+        let (r, k) = req(Some(sibling.as_str()), "c0", Duration::from_millis(500));
+        s.push(r);
+        keep.push(k);
+        assert!(s.admit(&current, Instant::now(), 8).is_empty());
+        assert_eq!(s.metrics().aging_holds, 1);
+        // the aged tenant wins the next dispatch on that shard
+        let (id, _, _) = s.next_work(s.shard_of(&current), Instant::now()).unwrap();
+        assert_eq!(id.as_deref(), Some(sibling.as_str()));
+    }
+
+    #[test]
+    fn concurrent_push_and_pop_drains_every_request_exactly_once() {
+        // fairness under concurrent admission: producers push interleaved
+        // tenants (one pre-aged, low-traffic) while consumer threads pop;
+        // every request must be served exactly once and the aged tenant
+        // must not starve behind the hot ones.
+        let workers = 4usize;
+        let per_tenant = 25usize;
+        let s = std::sync::Arc::new(ShardedScheduler::new(workers, opts(4, 10)));
+        let served = std::sync::Arc::new(Mutex::new(Vec::<String>::new()));
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                let s = s.clone();
+                let served = served.clone();
+                scope.spawn(move || {
+                    while let Some((_, batch, _)) = s.next_work(w, Instant::now()) {
+                        let mut got = served.lock().unwrap();
+                        for r in batch {
+                            got.push(r.prompt.clone());
+                            // replies are dropped; senders ignore the error
+                            let _ = r.reply.send(Ok(String::new()));
+                        }
+                    }
+                });
+            }
+            let mut keep = Vec::new();
+            for i in 0..per_tenant {
+                for t in ["hot-a", "hot-b", "hot-c"] {
+                    let (r, k) = req(Some(t), &format!("{t}/{i}"), Duration::ZERO);
+                    s.push(r);
+                    keep.push(k);
+                }
+                if i % 8 == 0 {
+                    let (r, k) =
+                        req(Some("cold"), &format!("cold/{i}"), Duration::from_millis(100));
+                    s.push(r);
+                    keep.push(k);
+                }
+            }
+            s.close();
+            drop(keep);
+        });
+        let got = served.lock().unwrap();
+        let total = per_tenant * 3 + per_tenant.div_ceil(8);
+        assert_eq!(got.len(), total, "every request served exactly once");
+        let mut sorted = got.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), total, "a request was dispatched twice");
+        assert!(got.iter().any(|p| p.starts_with("cold/")), "cold tenant starved");
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn sharded_metrics_aggregate_across_shards() {
+        let s = ShardedScheduler::new(3, opts(2, 50));
+        let mut keep = Vec::new();
+        for t in ["a", "b", "c", "d", "e"] {
+            for i in 0..2 {
+                let (r, k) = req(Some(t), &format!("{t}{i}"), Duration::ZERO);
+                s.push(r);
+                keep.push(k);
+            }
+        }
+        // close before draining so next_work never blocks
+        s.close();
+        let mut batches = 0;
+        while s.next_work(0, Instant::now()).is_some() {
+            batches += 1;
+        }
+        let m = s.metrics();
+        assert_eq!(m.batches, batches);
+        assert_eq!(m.scheduled, 10);
+        assert!(m.avg_fill() > 0.0);
     }
 
     #[test]

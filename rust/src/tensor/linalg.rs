@@ -10,25 +10,68 @@ use super::Tensor;
 use anyhow::{bail, Result};
 
 /// C = A @ B for 2-d tensors (m,k) x (k,n).
+///
+/// Tiled like [`matmul_bt`]: blocked over (rows of A) x (rows of B) so a
+/// block of B rows stays cache-resident while several A rows stream
+/// against it.  Within a tile each A row first gathers its *nonzero*
+/// coefficients (the zero-skip fast path — adapter/rank-masked and
+/// pruned matrices are the common inputs here), then applies them four B
+/// rows per pass, so the output row is traversed once per four rank-1
+/// updates instead of once each.  Grouping changes FP summation order,
+/// which is fine at the tolerances the callers use.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     if a.shape().len() != 2 || b.shape().len() != 2 || a.cols() != b.rows() {
         bail!("matmul shape mismatch {:?} x {:?}", a.shape(), b.shape());
     }
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut out = Tensor::zeros(&[m, n]);
-    for i in 0..m {
-        let arow = a.row(i);
-        let orow = out.row_mut(i);
-        for p in 0..k {
-            let av = arow[p];
-            if av == 0.0 {
-                continue;
+    const BI: usize = 8; // A rows per tile
+    const BP: usize = 64; // B rows per tile (~BP*n floats hot)
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + BI).min(m);
+        let mut p0 = 0;
+        while p0 < k {
+            let p1 = (p0 + BP).min(k);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                // zero-skip: collect the tile's contributing terms once
+                let mut nz = [0usize; BP];
+                let mut cnt = 0;
+                for p in p0..p1 {
+                    if arow[p] != 0.0 {
+                        nz[cnt] = p;
+                        cnt += 1;
+                    }
+                }
+                let orow = out.row_mut(i);
+                let mut t = 0;
+                while t + 4 <= cnt {
+                    let (pa, pb, pc, pd) = (nz[t], nz[t + 1], nz[t + 2], nz[t + 3]);
+                    let (a0, a1, a2, a3) = (arow[pa], arow[pb], arow[pc], arow[pd]);
+                    let b0 = &b.data()[pa * n..(pa + 1) * n];
+                    let b1 = &b.data()[pb * n..(pb + 1) * n];
+                    let b2 = &b.data()[pc * n..(pc + 1) * n];
+                    let b3 = &b.data()[pd * n..(pd + 1) * n];
+                    for j in 0..n {
+                        orow[j] +=
+                            (a0 * b0[j] + a1 * b1[j]) + (a2 * b2[j] + a3 * b3[j]);
+                    }
+                    t += 4;
+                }
+                while t < cnt {
+                    let p = nz[t];
+                    let av = arow[p];
+                    let brow = &b.data()[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                    t += 1;
+                }
             }
-            let brow = &b.data()[p * n..(p + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
+            p0 = p1;
         }
+        i0 = i1;
     }
     Ok(out)
 }
@@ -163,6 +206,40 @@ mod tests {
         let b = Tensor::new(&[3, 2], vec![7., 8., 9., 10., 11., 12.]).unwrap();
         let c = matmul(&a, &b).unwrap();
         assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_odd_shapes_and_sparse_inputs() {
+        // shapes straddle the BI/BP tile edges and the 4-term remainder;
+        // half the A entries are zeroed so the gather fast path is hit
+        let naive = |a: &Tensor, b: &Tensor| {
+            let (m, k, n) = (a.rows(), a.cols(), b.cols());
+            let mut out = Tensor::zeros(&[m, n]);
+            for i in 0..m {
+                for p in 0..k {
+                    for j in 0..n {
+                        let v = out.at2(i, j) + a.at2(i, p) * b.at2(p, j);
+                        out.set2(i, j, v);
+                    }
+                }
+            }
+            out
+        };
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (9, 67, 7), (17, 130, 3)] {
+            let mut a = Tensor::randn(&mut rng, &[m, k], 1.0);
+            for (i, x) in a.data_mut().iter_mut().enumerate() {
+                if i % 2 == 0 {
+                    *x = 0.0;
+                }
+            }
+            let b = Tensor::randn(&mut rng, &[k, n], 1.0);
+            let got = matmul(&a, &b).unwrap();
+            let want = naive(&a, &b);
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Device-cached decode path: equivalence + upload accounting + buffer
 //! lifecycle.
 //!
-//! One test binary with a single test on purpose: the assertions read the
-//! process-wide PJRT upload-byte counter, and a sibling test uploading
-//! concurrently would pollute the deltas.
+//! Upload asserts use [`UploadScope`] — the *thread-scoped* delta of the
+//! upload-byte counter — so they are exact even while sibling tests (or
+//! pool workers) upload concurrently.  That is what lets this binary
+//! hold several tests: the old process-wide-counter version had to be a
+//! single test to keep its deltas unpolluted.
 //!
 //! What must hold (ISSUE 2 acceptance):
 //!   - the cached path answers byte-identically to the host-upload path;
@@ -16,17 +18,25 @@ use sqft::data::{Dataset, Task, Tokenizer};
 use sqft::model::{init_base, ParamSet};
 use sqft::peft::Method;
 use sqft::pipeline;
-use sqft::runtime::{host_upload_bytes, Runtime};
-use sqft::serve::{AdapterRegistry, Engine};
+use sqft::runtime::{Runtime, UploadScope};
+use sqft::serve::{AdapterEntry, AdapterRegistry, Engine};
 use sqft::tensor::Rng;
 use std::path::Path;
 
-#[test]
-fn cached_decode_is_byte_identical_uploads_only_tokens_and_eviction_frees() {
+struct Fixture {
+    rt: Runtime,
+    hyper: sqft::runtime::ModelHyper,
+    frozen: ParamSet,
+    entries: Vec<AdapterEntry>,
+    prompts: Vec<String>,
+}
+
+/// Build the shared scenario; None when artifacts are absent (CI).
+fn fixture() -> Option<Fixture> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
-        return;
+        return None;
     }
     let rt = Runtime::new(&dir).expect("runtime");
     let config = "sqft-tiny";
@@ -48,28 +58,33 @@ fn cached_decode_is_byte_identical_uploads_only_tokens_and_eviction_frees() {
         e.host_sets[0].insert("a_q", sqft::tensor::Tensor::randn(&mut rng, &a_shape, 1.0));
         e.host_sets[0].insert("b_q", sqft::tensor::Tensor::randn(&mut rng, &b_shape, 1.0));
     }
-    let engine = Engine::new(&rt, config, &frozen, None, "eval", 4).unwrap();
-    let mut registry = AdapterRegistry::new(2);
-    for e in &entries {
-        registry.register_resident(&rt, &hyper, e.clone()).unwrap();
-    }
-    // the cached set carries the full per-forward adapter state
-    let dev0 = registry.device_set(&entries[0].id).expect("device set");
-    assert!(dev0.contains("a_q") && dev0.contains("b_q"));
-    assert!(dev0.contains("rankmask_q") && dev0.contains("scale_q"));
-
     let mut grng = Rng::new(43);
     let prompts: Vec<String> =
         (0..5).map(|_| task.gen_sample(&mut grng).prompt).collect();
+    Some(Fixture { rt, hyper, frozen, entries, prompts })
+}
+
+#[test]
+fn cached_decode_is_byte_identical_and_uploads_only_tokens() {
+    let Some(f) = fixture() else { return };
+    let engine = Engine::new(&f.rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+    let mut registry = AdapterRegistry::new(2);
+    for e in &f.entries {
+        registry.register_resident(&f.rt, &f.hyper, e.clone()).unwrap();
+    }
+    // the cached set carries the full per-forward adapter state
+    let dev0 = registry.device_set(&f.entries[0].id).expect("device set");
+    assert!(dev0.contains("a_q") && dev0.contains("b_q"));
+    assert!(dev0.contains("rankmask_q") && dev0.contains("scale_q"));
 
     // byte-identical equivalence, per tenant, with NO host fallback sets:
     // every adapter input must resolve on-device
-    for e in &entries {
+    for e in &f.entries {
         let sets: Vec<&ParamSet> = e.host_sets.iter().collect();
-        let host = engine.generate_batch_for(&sets, &e.eval_kind, &prompts).unwrap();
+        let host = engine.generate_batch_for(&sets, &e.eval_kind, &f.prompts).unwrap();
         let dev = registry.device_set(&e.id).unwrap();
         let cached = engine
-            .generate_batch_cached(Some(dev), &[], &e.eval_kind, &prompts)
+            .generate_batch_cached(Some(dev), &[], &e.eval_kind, &f.prompts)
             .unwrap();
         assert_eq!(host, cached, "cached path diverged for tenant {}", e.id);
     }
@@ -78,13 +93,13 @@ fn cached_decode_is_byte_identical_uploads_only_tokens_and_eviction_frees() {
     // forwards where a *live* slot changed: retired rows no longer write
     // their stop token back into the buffer, so the upload counter is
     // exact, not merely an upper bound
-    let tok_bytes = (hyper.batch * hyper.seq_len * 4) as u64;
-    let dev = registry.device_set(&entries[0].id).unwrap();
-    let before = host_upload_bytes();
+    let tok_bytes = (f.hyper.batch * f.hyper.seq_len * 4) as u64;
+    let dev = registry.device_set(&f.entries[0].id).unwrap();
+    let scope = UploadScope::begin();
     let _ = engine
-        .generate_batch_cached(Some(dev), &[], &entries[0].eval_kind, &prompts)
+        .generate_batch_cached(Some(dev), &[], &f.entries[0].eval_kind, &f.prompts)
         .unwrap();
-    let cached_delta = host_upload_bytes() - before;
+    let cached_delta = scope.bytes();
     let steps = engine.last_decode_steps() as u64;
     let uploads = engine.last_decode_uploads() as u64;
     assert!(steps >= 1);
@@ -97,35 +112,44 @@ fn cached_decode_is_byte_identical_uploads_only_tokens_and_eviction_frees() {
         "run-to-completion decode must upload exactly once per forward");
 
     // ... while the host-upload fallback ships the adapter set every step
-    let sets: Vec<&ParamSet> = entries[0].host_sets.iter().collect();
-    let before = host_upload_bytes();
-    let _ = engine.generate_batch_for(&sets, &entries[0].eval_kind, &prompts).unwrap();
-    let host_delta = host_upload_bytes() - before;
+    let sets: Vec<&ParamSet> = f.entries[0].host_sets.iter().collect();
+    let scope = UploadScope::begin();
+    let _ = engine.generate_batch_for(&sets, &f.entries[0].eval_kind, &f.prompts).unwrap();
+    let host_delta = scope.bytes();
     let adapter_bytes: u64 =
-        entries[0].host_sets.iter().map(|s| s.total_bytes() as u64).sum();
+        f.entries[0].host_sets.iter().map(|s| s.total_bytes() as u64).sum();
     assert_eq!(host_delta, steps * (tok_bytes + adapter_bytes),
         "host fallback upload accounting is off");
     assert!(host_delta > cached_delta);
+}
+
+#[test]
+fn eviction_and_replacement_free_device_buffers() {
+    let Some(f) = fixture() else { return };
+    let mut registry = AdapterRegistry::new(2);
+    for e in &f.entries {
+        registry.register_resident(&f.rt, &f.hyper, e.clone()).unwrap();
+    }
 
     // explicit eviction frees the device buffers
-    let id0 = entries[0].id.clone();
+    let id0 = f.entries[0].id.clone();
     assert!(registry.evict(&id0));
     assert!(registry.device_set(&id0).is_none(), "evicted tenant still resident");
 
     // same-id host-only re-registration must drop the stale device set
     // (serving stale cached weights would be a correctness bug, not a perf
     // one)
-    let id1 = entries[1].id.clone();
-    registry.register(&hyper, entries[1].clone()).unwrap();
+    let id1 = f.entries[1].id.clone();
+    registry.register(&f.hyper, f.entries[1].clone()).unwrap();
     assert!(registry.device_set(&id1).is_none(), "stale device set survived replace");
 
     // LRU eviction past capacity frees the victim's buffers too
-    let mut extra = entries[0].clone();
+    let mut extra = f.entries[0].clone();
     extra.id = "extra".to_string();
-    registry.register_resident(&rt, &hyper, extra).unwrap(); // len 2 = cap
-    let mut extra2 = entries[0].clone();
+    registry.register_resident(&f.rt, &f.hyper, extra).unwrap(); // len 2 = cap
+    let mut extra2 = f.entries[0].clone();
     extra2.id = "extra2".to_string();
-    let evicted = registry.register_resident(&rt, &hyper, extra2).unwrap();
+    let evicted = registry.register_resident(&f.rt, &f.hyper, extra2).unwrap();
     let victim = evicted.expect("LRU eviction past capacity");
     assert!(registry.device_set(&victim).is_none(), "LRU victim still resident");
     assert!(registry.device_set("extra2").is_some());

@@ -1,0 +1,251 @@
+//! Worker-pool serving: determinism and fairness (ISSUE 4 acceptance).
+//!
+//!   - N-worker `serve_pool` answers must be byte-identical per request
+//!     to the single-worker `Router::serve` reference: replicas compile
+//!     the same artifacts and rows decode independently, so worker
+//!     count, batch composition, and steal schedule may change only the
+//!     timing, never the bytes;
+//!   - no tenant starves under concurrent admission, and the per-shard
+//!     aging policy still holds admission for aged same-shard tenants
+//!     (`aging_holds` fires when one tenant's long decode would
+//!     otherwise monopolize its home worker);
+//!   - the merged / no-adapter path and unknown-tenant errors behave as
+//!     in single-worker serving.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::serve::{
+    benchmark_pool, AdapterEntry, AdapterRegistry, Engine, EngineSpec, PoolOpts, Request,
+    Router, SchedulerOpts, SharedAdapterSource,
+};
+use sqft::tensor::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+struct Fixture {
+    dir: PathBuf,
+    hyper: sqft::runtime::ModelHyper,
+    frozen: sqft::model::ParamSet,
+    entries: Vec<AdapterEntry>,
+}
+
+fn fixture(rt: &Runtime) -> Fixture {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 71);
+    let base = init_base(&hyper, &mut Rng::new(33));
+    let prepared = pipeline::prepare(rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(34)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let mut entries = pipeline::tenant_adapters(rt, config, &prepared, 3,
+                                                &ds.train, &tok, 2, 800).unwrap();
+    // inject large per-tenant deltas so answers depend on which adapter
+    // (and which replica's copy of it) served the request
+    for (i, e) in entries.iter_mut().enumerate() {
+        let mut rng = Rng::new(900 + i as u64);
+        let a_shape = e.host_sets[0].get("a_q").unwrap().shape().to_vec();
+        let b_shape = e.host_sets[0].get("b_q").unwrap().shape().to_vec();
+        e.host_sets[0].insert("a_q", sqft::tensor::Tensor::randn(&mut rng, &a_shape, 1.0));
+        e.host_sets[0].insert("b_q", sqft::tensor::Tensor::randn(&mut rng, &b_shape, 1.0));
+    }
+    Fixture { dir, hyper, frozen, entries }
+}
+
+fn spec(f: &Fixture) -> EngineSpec {
+    EngineSpec {
+        artifacts: f.dir.clone(),
+        config: "sqft-tiny".to_string(),
+        frozen: f.frozen.clone(),
+        eval_kind: "eval".to_string(),
+        max_new_tokens: 4,
+        registry_capacity: 8,
+    }
+}
+
+#[test]
+fn pool_answers_are_byte_identical_to_single_worker_reference() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt);
+    let task = Task::SynBoolq;
+
+    // interleaved multi-tenant workload, including merged-path traffic
+    let mut grng = Rng::new(55);
+    let mut requests: Vec<(Option<String>, String)> = Vec::new();
+    for i in 0..18 {
+        let id = if i % 4 == 3 {
+            None // merged / no-adapter fast path
+        } else {
+            Some(f.entries[i % f.entries.len()].id.clone())
+        };
+        requests.push((id, task.gen_sample(&mut grng).prompt));
+    }
+    let opts = SchedulerOpts { max_batch: f.hyper.batch, aging: Duration::from_millis(20) };
+
+    // single-worker reference through the Router
+    let engine = Engine::new(&rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+    let mut registry = AdapterRegistry::new(8);
+    registry
+        .register_all_resident(&rt, &f.hyper, f.entries.clone())
+        .unwrap();
+    let mut router = Router::new(engine, registry);
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    for (id, p) in &requests {
+        let (rtx, rrx) = channel();
+        tx.send(Request::new(id.clone(), p.clone(), rtx)).unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let ref_stats = router.serve(rx, opts.clone()).unwrap();
+    assert_eq!(ref_stats.total.errors, 0);
+    let expected: Vec<String> =
+        replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+
+    // the same workload through 1/2/3-worker pools: bytes must not move
+    let source = SharedAdapterSource::new(f.hyper.clone(), 8);
+    source.register_all(f.entries.clone()).unwrap();
+    let spec = spec(&f);
+    for workers in [1usize, 2, 3] {
+        let (tx, rx) = channel::<Request>();
+        let mut replies = Vec::new();
+        for (id, p) in &requests {
+            let (rtx, rrx) = channel();
+            tx.send(Request::new(id.clone(), p.clone(), rtx)).unwrap();
+            replies.push(rrx);
+        }
+        drop(tx);
+        let stats = sqft::serve::serve_pool(
+            &spec,
+            &source,
+            rx,
+            PoolOpts { workers, sched: opts.clone() },
+        )
+        .unwrap();
+        for (i, rrx) in replies.into_iter().enumerate() {
+            let ans = rrx.recv().unwrap().unwrap();
+            assert_eq!(ans, expected[i],
+                "request {i} diverged from the single-worker reference at {workers} workers");
+        }
+        assert_eq!(stats.serve.total.served, requests.len());
+        assert_eq!(stats.serve.total.errors, 0);
+        assert_eq!(stats.workers, workers);
+        assert_eq!(stats.per_worker.len(), workers);
+        assert!(stats.per_worker.iter().all(|w| w.setup_error.is_none()));
+        let served: usize = stats.per_worker.iter().map(|w| w.served).sum();
+        assert_eq!(served, requests.len());
+        assert_eq!(stats.serve.generated_tokens,
+            ref_stats.generated_tokens,
+            "token counts must match the reference at {workers} workers");
+        assert!(stats.serve.total.ttft_ms.is_some() && stats.serve.total.queue_ms.is_some());
+        // every tenant that sent traffic is reported
+        assert_eq!(stats.serve.per_tenant.len(), ref_stats.per_tenant.len());
+    }
+}
+
+#[test]
+fn pool_serves_every_tenant_and_errors_unknown_ids() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt);
+    let task = Task::SynBoolq;
+    let source = SharedAdapterSource::new(f.hyper.clone(), 8);
+    source.register_all(f.entries.clone()).unwrap();
+    let spec = spec(&f);
+
+    // fairness smoke under concurrent admission: a hot tenant floods, two
+    // cold tenants trickle, plus one unknown id; nobody may starve
+    let mut grng = Rng::new(77);
+    let mut requests: Vec<(Option<String>, String)> = Vec::new();
+    for i in 0..24 {
+        // tenant 0 floods (half the traffic); tenants 1 and 2 trickle
+        let idx = match i % 4 {
+            0 => 1,
+            1 => 2,
+            _ => 0,
+        };
+        requests.push((Some(f.entries[idx].id.clone()), task.gen_sample(&mut grng).prompt));
+    }
+    requests.push((Some("nope".to_string()), task.gen_sample(&mut grng).prompt));
+    let opts = SchedulerOpts { max_batch: f.hyper.batch, aging: Duration::from_millis(5) };
+    let stats = benchmark_pool(
+        &spec,
+        &source,
+        requests.clone(),
+        Duration::from_millis(1),
+        PoolOpts { workers: 2, sched: opts },
+    )
+    .unwrap();
+    assert_eq!(stats.serve.total.served + stats.serve.total.errors, requests.len());
+    assert_eq!(stats.serve.total.errors, 1, "exactly the unknown tenant errors");
+    let nope = stats.serve.per_tenant.iter().find(|(id, _)| id == "nope").unwrap();
+    assert_eq!(nope.1.errors, 1);
+    for e in &f.entries {
+        let served = stats
+            .serve
+            .per_tenant
+            .iter()
+            .find(|(id, _)| id == &e.id)
+            .map(|(_, s)| s.served)
+            .unwrap_or(0);
+        let sent = requests.iter().filter(|(id, _)| id.as_deref() == Some(e.id.as_str())).count();
+        assert_eq!(served, sent, "tenant {} starved or over-served", e.id);
+    }
+    // scheduler accounting spans all shards
+    assert_eq!(stats.serve.scheduler.scheduled, requests.len());
+    assert!(stats.serve.occupancy > 0.0 && stats.serve.occupancy <= 1.0 + 1e-9);
+}
+
+/// Coordinated eviction reaches every replica: evict between two pool
+/// runs over the same source; the evicted tenant then errors on all
+/// workers while the survivors keep serving.
+#[test]
+fn coordinated_eviction_applies_across_pool_runs() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt);
+    let task = Task::SynBoolq;
+    let source = SharedAdapterSource::new(f.hyper.clone(), 8);
+    source.register_all(f.entries.clone()).unwrap();
+    let spec = spec(&f);
+    let victim = f.entries[0].id.clone();
+    assert!(source.evict(&victim));
+    let mut grng = Rng::new(88);
+    let requests: Vec<(Option<String>, String)> = f
+        .entries
+        .iter()
+        .map(|e| (Some(e.id.clone()), task.gen_sample(&mut grng).prompt))
+        .collect();
+    let stats = benchmark_pool(
+        &spec,
+        &source,
+        requests,
+        Duration::ZERO,
+        PoolOpts { workers: 2, sched: SchedulerOpts::default() },
+    )
+    .unwrap();
+    assert_eq!(stats.serve.total.errors, 1, "evicted tenant must error");
+    assert_eq!(stats.serve.total.served, f.entries.len() - 1);
+    let v = stats.serve.per_tenant.iter().find(|(id, _)| id == &victim).unwrap();
+    assert_eq!(v.1.errors, 1);
+    assert_eq!(v.1.served, 0);
+}
