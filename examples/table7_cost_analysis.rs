@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             .iter()
             .map(|&(o, i)| if quant {
                 int4_storage_bytes(o, i, hyper.group_size)
+                    .expect("config linear dims pack and group evenly")
             } else {
                 fp16_storage_bytes(o, i)
             })

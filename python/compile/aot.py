@@ -22,7 +22,7 @@ from jax._src.lib import xla_client as xc
 
 from . import model as M
 
-DTYPES = {jnp.float32: "f32", jnp.int32: "i32"}
+DTYPES = {jnp.float32: "f32", jnp.int32: "i32", jnp.uint8: "u8"}
 
 
 def to_hlo_text(lowered) -> str:
@@ -96,6 +96,8 @@ def build_config(cfg: M.ModelConfig, out_dir: str, manifest: dict):
         M.eval_input_specs(cfg, qa=False), ["logits"])
     art("eval_qa", M.make_eval_step(cfg, qa=True),
         M.eval_input_specs(cfg, qa=True), ["logits"])
+    art("eval_int4", M.make_eval_int4_step(cfg),
+        M.eval_int4_input_specs(cfg), ["logits"])
     art("calib", M.make_calib_step(cfg),
         M.calib_input_specs(cfg), M.calib_output_names())
     manifest["configs"][cfg.name] = entry

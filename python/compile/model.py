@@ -33,6 +33,11 @@ from . import kernels as K
 # Adapter target modules, matching the paper's Q,K,V,Up,Down set (Table 8).
 MODS = ("q", "k", "v", "up", "down")
 
+# Every linear weight stack, in canonical (manifest) order — the set that is
+# sparsified/quantized and, for the packed-INT4 serving path, stored as
+# two-nibbles-per-byte codes (matching rust `model::linear_keys`).
+LINEAR_KEYS = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
@@ -66,6 +71,12 @@ class ModelConfig:
         """Distinct (out, in) linear shapes — drives wanda/fakequant artifacts."""
         d, ff = self.d_model, self.d_ff
         return sorted({(d, d), (ff, d), (d, ff)})
+
+    def linear_dims(self, wkey: str) -> Tuple[int, int]:
+        """(out_features, in_features) of any linear weight stack."""
+        d, ff = self.d_model, self.d_ff
+        return {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+                "wgate": (ff, d), "wup": (ff, d), "wdown": (d, ff)}[wkey]
 
     def param_count(self) -> int:
         d, ff, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
@@ -497,6 +508,96 @@ def make_pretrain_step(cfg: ModelConfig):
         return tuple(outs + ms + vs + [jnp.reshape(loss, (1,))])
 
     return step_fn
+
+
+# --- packed-INT4 serving path (merged QA-SparsePEFT models) ----------------
+#
+# A merged quantized-base model is fully INT4-representable: every linear
+# weight stack exists as integer codes + shared group params (paper Eq. 3).
+# The serving artifact keeps the codes packed two-nibbles-per-byte in HBM and
+# dequantizes tile-wise inside the L1 int4 kernel, so resident weight memory
+# is the Table 7 INT4 figure rather than a dense f32 copy.  No adapter
+# inputs: the model is merged, adapters are gone by construction.
+
+
+def forward_int4(cfg: ModelConfig, params, tokens):
+    """Forward through packed-INT4 linear weights.
+
+    params: dict with embed/final_ln/ln1/ln2 (f32), packed_<wkey> uint8
+    stacks (L, out, in//2), and qscales_<wkey>/qzeros_<wkey> (L, out, G).
+    """
+    bsz, seq = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]
+    positions = jnp.arange(seq)
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+
+    def lin(wkey, l, x2d):
+        return K.int4_matmul(
+            x2d,
+            params[f"packed_{wkey}"][l],
+            params[f"qscales_{wkey}"][l],
+            params[f"qzeros_{wkey}"][l],
+        )
+
+    for l in range(cfg.n_layers):
+        hln = rms_norm(x, params["ln1"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        q = lin("wq", l, h2d).reshape(bsz, seq, h, dh)
+        k = lin("wk", l, h2d).reshape(bsz, seq, h, dh)
+        v = lin("wv", l, h2d).reshape(bsz, seq, h, dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+        att = jnp.where(causal[None, None, :, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz * seq, d)
+        x = x + lin("wo", l, o).reshape(bsz, seq, d)
+        hln = rms_norm(x, params["ln2"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        act = jax.nn.silu(lin("wgate", l, h2d)) * lin("wup", l, h2d)
+        x = x + lin("wdown", l, act).reshape(bsz, seq, d)
+    x = rms_norm(x, params["final_ln"])
+    return x @ params["embed"].T
+
+
+def int4_param_specs(cfg: ModelConfig):
+    """Canonical inputs of the eval_int4 artifact (without the batch)."""
+    d, v, l = cfg.d_model, cfg.vocab, cfg.n_layers
+    specs = [
+        ("embed", (v, d), jnp.float32),
+        ("final_ln", (d,), jnp.float32),
+        ("ln1", (l, d), jnp.float32),
+        ("ln2", (l, d), jnp.float32),
+    ]
+    for wkey in LINEAR_KEYS:
+        out, inp = cfg.linear_dims(wkey)
+        specs.append((f"packed_{wkey}", (l, out, inp // 2), jnp.uint8))
+    for wkey in LINEAR_KEYS:
+        out, inp = cfg.linear_dims(wkey)
+        g = inp // cfg.group_size
+        specs.append((f"qscales_{wkey}", (l, out, g), jnp.float32))
+    for wkey in LINEAR_KEYS:
+        out, inp = cfg.linear_dims(wkey)
+        g = inp // cfg.group_size
+        specs.append((f"qzeros_{wkey}", (l, out, g), jnp.float32))
+    return specs
+
+
+def eval_int4_input_specs(cfg: ModelConfig):
+    return int4_param_specs(cfg) + batch_specs(cfg, with_targets=False)
+
+
+def make_eval_int4_step(cfg: ModelConfig):
+    names = [n for n, _, _ in int4_param_specs(cfg)]
+
+    def eval_fn(*args):
+        params = dict(zip(names, args))
+        tokens = args[len(names)]
+        logits = forward_int4(cfg, params, tokens)
+        return (logits,)
+
+    return eval_fn
 
 
 # --- per-shape utility artifacts -------------------------------------------

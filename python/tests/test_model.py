@@ -173,6 +173,65 @@ class TestForward:
         np.testing.assert_allclose(l_qa, l_merged, rtol=1e-4, atol=1e-4)
 
 
+def pack_int4(codes):
+    """(N, K) integer codes in [0, 15] -> (N, K//2) uint8, low nibble first
+    (mirror of rust `quant::pack::pack_int4`, for test fixtures)."""
+    c = np.asarray(codes, np.uint8)
+    return jnp.asarray(c[:, 0::2] | (c[:, 1::2] << 4), jnp.uint8)
+
+
+class TestForwardInt4:
+    def _int4_params(self, rng, cfg=CFG):
+        """A random fully-quantized merged model: codes + group params, plus
+        the dense dequantized reference weights."""
+        base = init_base(rng, cfg)
+        params = {n: base[n] for n in ("embed", "final_ln", "ln1", "ln2")}
+        dense = dict(base)
+        for wkey in M.LINEAR_KEYS:
+            out, inp = cfg.linear_dims(wkey)
+            g = inp // cfg.group_size
+            scales = jnp.asarray(
+                np.abs(rng.normal(size=(cfg.n_layers, out, g))) * 0.05 + 0.02,
+                jnp.float32)
+            zeros = jnp.asarray(
+                rng.integers(4, 12, size=(cfg.n_layers, out, g)), jnp.float32)
+            codes = jnp.asarray(
+                rng.integers(0, 16, size=(cfg.n_layers, out, inp)), jnp.float32)
+            packed = jnp.stack(
+                [pack_int4(codes[l]) for l in range(cfg.n_layers)])
+            params[f"packed_{wkey}"] = packed
+            params[f"qscales_{wkey}"] = scales
+            params[f"qzeros_{wkey}"] = zeros
+            cg = codes.reshape(cfg.n_layers, out, g, inp // g)
+            dense[wkey] = ((cg - zeros[..., None]) * scales[..., None]).reshape(
+                cfg.n_layers, out, inp)
+        return params, dense
+
+    def test_matches_dense_dequant_forward(self, rng):
+        """The packed serving forward equals the plain forward over the
+        dequantized dense weights — the whole INT4 path in one assert."""
+        params, dense = self._int4_params(rng)
+        tokens, _, _ = toy_batch(rng)
+        l_int4 = M.forward_int4(CFG, params, tokens)
+        l_dense = M.forward_plain(CFG, dense, tokens)
+        assert l_int4.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+        np.testing.assert_allclose(l_int4, l_dense, rtol=1e-4, atol=1e-4)
+
+    def test_eval_step_jits_with_u8_inputs(self, rng):
+        """The exact function aot.py lowers accepts uint8 packed stacks."""
+        params, _ = self._int4_params(rng)
+        tokens, _, _ = toy_batch(rng)
+        specs = M.eval_int4_input_specs(CFG)
+        names = [n for n, _, _ in specs]
+        assert names[-1] == "tokens" and len(names) == len(set(names))
+        for n, shape, dtype in specs[:-1]:
+            assert params[n].shape == shape and params[n].dtype == dtype, n
+        fn = jax.jit(M.make_eval_int4_step(CFG))
+        (logits,) = fn(*[params[n] for n in names[:-1]], tokens)
+        ref_logits = M.forward_int4(CFG, params, tokens)
+        np.testing.assert_allclose(logits, ref_logits, rtol=1e-5, atol=1e-5)
+
+
 class TestTrainStep:
     @pytest.mark.parametrize("qa", [False, True])
     def test_loss_decreases(self, rng, qa):

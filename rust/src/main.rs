@@ -48,8 +48,8 @@ fn usage() -> &'static str {
      sqft search    --model M --task T --method M --sparsity S [--turns N]\n\
      sqft serve     --model M [--ckpt CKPT] [--requests N] [--workers N]\n\
                     [--adapters DIR | --tenants K [--tenant-steps N]]\n\
-                    [--max-new-tokens N] [--registry-cap K] [--aging-ms MS]\n\
-                    [--merged]\n\
+                    [--merged-ckpt CKPT] [--max-new-tokens N]\n\
+                    [--registry-cap K] [--aging-ms MS] [--merged]\n\
      \n\
      serve: one engine holds the frozen base device-resident; requests are\n\
      tagged with an adapter id and batched per adapter (registry -> batch\n\
@@ -60,7 +60,10 @@ fn usage() -> &'static str {
      tenants in-process; --merged adds no-adapter fast-path traffic.\n\
      --workers N > 1 serves through the worker pool: N per-thread engine\n\
      replicas fed by a sharded work-stealing scheduler (answers stay\n\
-     byte-identical to --workers 1; throughput scales with cores).\n"
+     byte-identical to --workers 1; throughput scales with cores).\n\
+     --merged-ckpt serves a packed-INT4 merged model (written by\n\
+     `pipeline --method qa-sparsepeft --out`) through the eval_int4\n\
+     artifact: weights stay device-resident as packed u8 + group params.\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -233,14 +236,32 @@ fn cmd_pipeline(artifacts: &Path, args: &Args) -> Result<()> {
             pct(macc.accuracy()),
             merged.sparsity_before * 100.0, merged.sparsity_after * 100.0);
         if let Some(out) = args.get("out") {
-            let meta = Json::obj(vec![
-                ("config", Json::Str(config.clone())),
-                ("method", Json::Str(method.cli_name().into())),
-                ("task", Json::Str(task.name().into())),
-                ("accuracy", Json::Num(macc.accuracy())),
-            ]);
-            checkpoint::save(&merged.base, Path::new(out), meta)?;
-            println!("saved merged model to {out}");
+            if method.quantized_base() {
+                // QA merge: persist the model in its final numerical format
+                // — packed INT4 codes + group params, never dequantized f32
+                let model = pipeline::int4_model(&prepared, &merged)?;
+                let disk = model.resident_bytes();
+                let dense = merged.base.total_bytes();
+                pipeline::save_int4_model(&model, Path::new(out), vec![
+                    ("method", Json::Str(method.cli_name().into())),
+                    ("task", Json::Str(task.name().into())),
+                    ("accuracy", Json::Num(macc.accuracy())),
+                ])?;
+                println!(
+                    "saved packed-INT4 merged model to {out} \
+                     ({:.1} KB vs {:.1} KB dense f32, {:.2}x smaller)",
+                    disk as f64 / 1e3, dense as f64 / 1e3, dense as f64 / disk as f64
+                );
+            } else {
+                let meta = Json::obj(vec![
+                    ("config", Json::Str(config.clone())),
+                    ("method", Json::Str(method.cli_name().into())),
+                    ("task", Json::Str(task.name().into())),
+                    ("accuracy", Json::Num(macc.accuracy())),
+                ]);
+                checkpoint::save(&merged.base, Path::new(out), meta)?;
+                println!("saved merged model to {out}");
+            }
         }
     } else if !method.mergeable() {
         println!("mergeable: no ({} keeps a separate FP16 adapter)", method.name());
@@ -304,6 +325,50 @@ fn cmd_search(artifacts: &Path, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve a packed-INT4 merged model (written by `pipeline --method
+/// qa-sparsepeft --out`): the base crosses the PJRT boundary once as packed
+/// u8 + f32 group params and every request takes the eval_int4 path.
+#[allow(clippy::too_many_arguments)]
+fn serve_int4_merged(
+    rt: &Runtime,
+    config: &str,
+    task: Task,
+    ckpt: &str,
+    n_requests: usize,
+    max_new_tokens: usize,
+    args: &Args,
+    seed: u64,
+) -> Result<()> {
+    if args.get("adapters").is_some() || args.get("tenants").is_some() {
+        bail!("--merged-ckpt serves a merged model; it has no adapters \
+               (drop --adapters/--tenants or serve them from a separate engine)");
+    }
+    if args.get_usize("workers", 1)? > 1 {
+        bail!("--merged-ckpt currently serves on one worker; drop --workers");
+    }
+    let model = pipeline::load_int4_model(Path::new(ckpt))?;
+    let engine = sqft::serve::Engine::new_int4(rt, config, &model, max_new_tokens)?;
+    println!(
+        "serving packed-INT4 merged model from {ckpt}: {:.1} KB resident \
+         (packed u8 codes + f32 group params)",
+        engine.resident_weight_bytes() as f64 / 1e3
+    );
+    let hyper = rt.model(config)?.clone();
+    let mut grng = Rng::new(seed ^ 9);
+    let requests: Vec<(Option<String>, String)> = (0..n_requests)
+        .map(|_| (None, task.gen_sample(&mut grng).prompt))
+        .collect();
+    let opts = sqft::serve::SchedulerOpts {
+        max_batch: hyper.batch,
+        aging: std::time::Duration::from_millis(args.get_u64("aging-ms", 50)?),
+    };
+    let mut router = sqft::serve::Router::new(engine, sqft::serve::AdapterRegistry::new(1));
+    let stats = sqft::serve::benchmark_router(
+        &mut router, requests, std::time::Duration::from_millis(2), opts)?;
+    print!("{}", stats.render());
+    Ok(())
+}
+
 fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
     let rt = Runtime::new(artifacts)?;
     let config = args.get_or("model", "sqft-tiny").to_string();
@@ -314,6 +379,13 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
     let tenant_steps = args.get_usize("tenant-steps", 30)?;
     let registry_cap = args.get_usize("registry-cap", 8)?;
     let seed = args.get_u64("seed", 7)?;
+    // a packed-INT4 merged checkpoint serves through its own engine: no
+    // base prep, no adapters — the model is already in final form
+    if let Some(ckpt) = args.get("merged-ckpt") {
+        let ckpt = ckpt.to_string();
+        return serve_int4_merged(&rt, &config, task, &ckpt, n_requests,
+                                 max_new_tokens, args, seed);
+    }
     let tok = Tokenizer::new();
     let pretrained = load_or_pretrain(&rt, &config, task, args, seed)?;
     let ds = pipeline::standard_datasets(task, seed);

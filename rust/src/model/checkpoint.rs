@@ -1,19 +1,28 @@
 //! Binary checkpoint format for ParamSets.
 //!
-//! Layout: magic "SQFTCKP1" | u64 header_len | JSON header | raw f32 data.
-//! The header maps each tensor name to {shape, offset} (offsets in f32
-//! elements into the data section, in header order).  Endianness: little
-//! (the only platform we target); the magic encodes the version.
+//! Layout: magic "SQFTCKP1" | u64 header_len | JSON header | raw f32 data
+//! | packed u8 data.  The header maps each tensor name to {shape, offset}
+//! (offsets in f32 elements into the data section, in header order), and —
+//! for checkpoints carrying true-INT4 weights — a `packed` section mapping
+//! each packed-tensor name to {shape, group_size, offset} with byte offsets
+//! into the trailing u8 region (`packed_bytes` records its total length, so
+//! the f32/u8 boundary is explicit).  Endianness: little (the only platform
+//! we target); the magic encodes the version.  Checkpoints without packed
+//! tensors are byte-identical to the pre-packed format.
 //!
-//! Two metadata flavors share the container: base/merged model checkpoints
-//! (free-form meta) and adapter checkpoints (`kind: "adapter"` plus the
-//! tuned NLS rank configuration), which the multi-tenant serving registry
-//! loads per tenant — see `save_adapter` / `load_adapter`.
+//! Three metadata flavors share the container: base/merged model checkpoints
+//! (free-form meta), adapter checkpoints (`kind: "adapter"` plus the
+//! tuned NLS rank configuration) which the multi-tenant serving registry
+//! loads per tenant — see `save_adapter` / `load_adapter` — and merged
+//! INT4 model checkpoints (`kind: "int4-model"`, written by `pipeline
+//! --out` for quantized-base mergeable methods) whose linear weights live
+//! in the packed section as two-nibble codes, not dequantized f32.
 
 use super::ParamSet;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -23,7 +32,58 @@ const MAGIC: &[u8; 8] = b"SQFTCKP1";
 /// file, not a checkpoint (headers are a few KB in practice).
 const MAX_HEADER_BYTES: usize = 64 << 20;
 
+/// One true-INT4 tensor as stored on disk: the *logical* (unpacked) shape,
+/// the quantization group size along the trailing in-dim, and the packed
+/// two-codes-per-byte payload (`quant::pack::pack_int4_stack` layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    pub shape: Vec<usize>,
+    pub group_size: usize,
+    pub data: Vec<u8>,
+}
+
+impl PackedTensor {
+    /// Validate the shape/group/payload consistency invariants.
+    pub fn validate(&self, name: &str) -> Result<()> {
+        let inner = *self.shape.last().unwrap_or(&0);
+        if self.shape.is_empty() || inner == 0 || inner % 2 != 0 {
+            bail!("packed tensor '{name}': unpackable shape {:?}", self.shape);
+        }
+        if self.group_size == 0 || inner % self.group_size != 0 {
+            bail!(
+                "packed tensor '{name}': group size {} does not divide in-dim {inner}",
+                self.group_size
+            );
+        }
+        let elems: usize = self
+            .shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .with_context(|| format!("packed tensor '{name}': shape overflows"))?;
+        if self.data.len() != elems / 2 {
+            bail!(
+                "packed tensor '{name}': {} bytes for shape {:?} (want {})",
+                self.data.len(),
+                self.shape,
+                elems / 2
+            );
+        }
+        Ok(())
+    }
+}
+
 pub fn save(params: &ParamSet, path: &Path, meta: Json) -> Result<()> {
+    save_packed(params, &BTreeMap::new(), path, meta)
+}
+
+/// Save a ParamSet plus true-INT4 packed tensors.  With an empty `packed`
+/// map this writes the exact legacy format.
+pub fn save_packed(
+    params: &ParamSet,
+    packed: &BTreeMap<String, PackedTensor>,
+    path: &Path,
+    meta: Json,
+) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -39,11 +99,31 @@ pub fn save(params: &ParamSet, path: &Path, meta: Json) -> Result<()> {
         ));
         offset += t.len() as u64;
     }
-    let header = Json::obj(vec![
-        ("meta", meta),
-        ("tensors", Json::Obj(tensors.into_iter().collect())),
-    ])
-    .to_string();
+    let mut header_fields = vec![("meta", meta)];
+    let tensors_json = Json::Obj(tensors.into_iter().collect());
+    header_fields.push(("tensors", tensors_json));
+    let mut packed_bytes = 0u64;
+    if !packed.is_empty() {
+        let mut entries = Vec::new();
+        for (name, p) in packed {
+            if params.contains(name) {
+                bail!("'{name}' is both an f32 tensor and a packed tensor");
+            }
+            p.validate(name)?;
+            entries.push((
+                name.clone(),
+                Json::obj(vec![
+                    ("shape", Json::Arr(p.shape.iter().map(|&d| Json::Num(d as f64)).collect())),
+                    ("group_size", Json::Num(p.group_size as f64)),
+                    ("offset", Json::Num(packed_bytes as f64)),
+                ]),
+            ));
+            packed_bytes += p.data.len() as u64;
+        }
+        header_fields.push(("packed", Json::Obj(entries.into_iter().collect())));
+        header_fields.push(("packed_bytes", Json::Num(packed_bytes as f64)));
+    }
+    let header = Json::obj(header_fields).to_string();
 
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
@@ -54,6 +134,9 @@ pub fn save(params: &ParamSet, path: &Path, meta: Json) -> Result<()> {
             std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
         };
         f.write_all(bytes)?;
+    }
+    for p in packed.values() {
+        f.write_all(&p.data)?;
     }
     f.flush()?;
     Ok(())
@@ -71,7 +154,24 @@ fn header_uint(name: &str, what: &str, x: &Json) -> Result<usize> {
     Ok(f as usize)
 }
 
+/// Load a checkpoint that must not carry packed tensors (base models,
+/// adapters).  A packed-tensor checkpoint here is a clear error — silently
+/// dropping true-INT4 weights would "load" a model with no linear weights.
 pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
+    let (params, packed, meta) = load_packed(path)?;
+    if !packed.is_empty() {
+        bail!(
+            "{path:?} carries {} packed INT4 tensor(s); load it through the \
+             INT4 model path (pipeline::load_int4_model / serve --merged-ckpt)",
+            packed.len()
+        );
+    }
+    Ok((params, meta))
+}
+
+/// Load a checkpoint including its packed-tensor section (empty map for
+/// legacy files).
+pub fn load_packed(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTensor>, Json)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
     );
@@ -93,10 +193,20 @@ pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
 
     let mut rest = Vec::new();
     f.read_to_end(&mut rest)?;
-    if rest.len() % 4 != 0 {
+    // the trailing packed u8 region (absent in legacy checkpoints) is
+    // delimited by the header's packed_bytes, so the f32 boundary is exact
+    let packed_bytes = match header.get("packed_bytes") {
+        Some(x) => header_uint("<packed>", "packed_bytes", x)?,
+        None => 0,
+    };
+    if packed_bytes > rest.len() {
+        bail!("corrupt checkpoint: packed section ({packed_bytes} B) exceeds data");
+    }
+    let f32_end = rest.len() - packed_bytes;
+    if f32_end % 4 != 0 {
         bail!("corrupt checkpoint: data section not f32-aligned");
     }
-    let floats: Vec<f32> = rest
+    let floats: Vec<f32> = rest[..f32_end]
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
@@ -135,7 +245,49 @@ pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
             bail!("corrupt checkpoint: tensors '{}' and '{}' overlap", w[0].2, w[1].2);
         }
     }
-    Ok((params, meta))
+
+    let mut packed = BTreeMap::new();
+    if let Some(pj) = header.get("packed") {
+        let region = &rest[f32_end..];
+        let mut pspans: Vec<(usize, usize, String)> = Vec::new();
+        for (name, desc) in pj.as_obj()? {
+            let shape: Vec<usize> = desc
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| header_uint(name, "shape dimension", x))
+                .collect::<Result<_>>()?;
+            let group_size = header_uint(name, "group_size", desc.req("group_size")?)?;
+            let offset = header_uint(name, "offset", desc.req("offset")?)?;
+            let elems: usize = shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .with_context(|| {
+                    format!("corrupt checkpoint: packed '{name}' shape overflows")
+                })?;
+            let end = offset.checked_add(elems / 2).with_context(|| {
+                format!("corrupt checkpoint: packed '{name}' offset overflows")
+            })?;
+            if end > region.len() {
+                bail!("corrupt checkpoint: packed '{name}' overruns packed section");
+            }
+            let p = PackedTensor { shape, group_size, data: region[offset..end].to_vec() };
+            p.validate(name)?;
+            if elems > 0 {
+                pspans.push((offset, end, name.clone()));
+            }
+            packed.insert(name.clone(), p);
+        }
+        pspans.sort();
+        for w in pspans.windows(2) {
+            if w[1].0 < w[0].1 {
+                bail!(
+                    "corrupt checkpoint: packed '{}' and '{}' overlap", w[0].2, w[1].2
+                );
+            }
+        }
+    }
+    Ok((params, packed, meta))
 }
 
 // ---------------------------------------------------------------------------
@@ -326,6 +478,91 @@ mod tests {
             &[1.0, 2.0, 3.0, 4.0],
         );
         assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn packed_section_roundtrips_and_legacy_files_read_back() {
+        let mut rng = Rng::new(9);
+        let mut p = ParamSet::new();
+        p.insert("embed", Tensor::randn(&mut rng, &[4, 6], 1.0));
+        p.insert("qscales_wq", Tensor::randn(&mut rng, &[2, 4, 2], 0.1));
+        let mut packed = BTreeMap::new();
+        packed.insert(
+            "packed_wq".to_string(),
+            PackedTensor {
+                shape: vec![2, 4, 8],
+                group_size: 4,
+                data: (0..32u8).collect(),
+            },
+        );
+        let dir = std::env::temp_dir().join("sqft_ckpt_packed");
+        let path = dir.join("int4.ckpt");
+        let meta = Json::obj(vec![("kind", Json::Str("int4-model".into()))]);
+        save_packed(&p, &packed, &path, meta).unwrap();
+        let (q, pk, m) = load_packed(&path).unwrap();
+        assert_eq!(m.get("kind").unwrap().as_str().unwrap(), "int4-model");
+        assert_eq!(q.get("embed").unwrap(), p.get("embed").unwrap());
+        assert_eq!(pk.len(), 1);
+        assert_eq!(pk["packed_wq"], packed["packed_wq"]);
+        // the plain loader refuses packed checkpoints instead of silently
+        // dropping the INT4 weights
+        let e = load(&path).unwrap_err();
+        assert!(format!("{e:#}").contains("packed"), "{e:#}");
+        // legacy (no packed section) files read back through both loaders
+        let legacy = dir.join("legacy.ckpt");
+        save(&p, &legacy, Json::obj(vec![])).unwrap();
+        let (q2, m2) = load(&legacy).unwrap();
+        assert_eq!(q2.len(), 2);
+        let _ = m2;
+        let (_, pk2, _) = load_packed(&legacy).unwrap();
+        assert!(pk2.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_packed_sections() {
+        let dir = std::env::temp_dir().join("sqft_ckpt_packed_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        // save-side validation: payload length, odd in-dim, group size,
+        // f32/packed name collision
+        let p = ParamSet::new();
+        let bad_len = PackedTensor { shape: vec![1, 2, 8], group_size: 4, data: vec![0; 7] };
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), bad_len);
+        assert!(save_packed(&p, &m, &path, Json::obj(vec![])).is_err());
+        let odd = PackedTensor { shape: vec![1, 2, 5], group_size: 5, data: vec![0; 5] };
+        m.insert("x".to_string(), odd);
+        assert!(save_packed(&p, &m, &path, Json::obj(vec![])).is_err());
+        let bad_gs = PackedTensor { shape: vec![1, 2, 8], group_size: 3, data: vec![0; 8] };
+        m.insert("x".to_string(), bad_gs);
+        assert!(save_packed(&p, &m, &path, Json::obj(vec![])).is_err());
+        let ok = PackedTensor { shape: vec![1, 2, 8], group_size: 4, data: vec![0; 8] };
+        let mut p2 = ParamSet::new();
+        p2.insert("x", Tensor::zeros(&[2]));
+        m.insert("x".to_string(), ok);
+        assert!(save_packed(&p2, &m, &path, Json::obj(vec![])).is_err());
+        // load-side validation: overruns and overlaps in the packed header
+        let cases = [
+            // overruns the 4-byte packed region
+            (r#"{"meta":{},"tensors":{},"packed":{"w":{"shape":[2,8],"group_size":4,"offset":0}},"packed_bytes":4}"#,
+             4usize),
+            // packed_bytes exceeds the file payload
+            (r#"{"meta":{},"tensors":{},"packed":{},"packed_bytes":64}"#, 4),
+            // overlapping packed entries
+            (r#"{"meta":{},"tensors":{},"packed":{"u":{"shape":[1,4],"group_size":4,"offset":0},"v":{"shape":[1,4],"group_size":4,"offset":1}},"packed_bytes":4}"#,
+             4),
+        ];
+        for (header, nbytes) in cases {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
+            buf.extend_from_slice(header.as_bytes());
+            buf.extend_from_slice(&vec![0u8; nbytes]);
+            std::fs::write(&path, buf).unwrap();
+            assert!(load_packed(&path).is_err(), "accepted: {header}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

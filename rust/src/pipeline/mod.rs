@@ -10,16 +10,20 @@
 
 use crate::data::{Sample, Task, Tokenizer};
 use crate::evalharness::{evaluate, EvalResult};
+use crate::model::checkpoint::PackedTensor;
 use crate::model::{checkpoint, init_adapters, linear_keys, ParamSet};
 use crate::nls::{Config, SearchSpace};
 use crate::peft::{merge_qa, merge_sparsepeft, Method};
+use crate::quant::pack::{pack_int4_stack, unpack_int4_stack};
 use crate::quant::{quantize_model, qmax, BITS};
 use crate::runtime::{DeviceStore, ModelHyper, Runtime};
 use crate::serve::AdapterEntry;
 use crate::sparsity::{adapter_masks_from, apply_masks, calibrate, wanda_masks, CalibStats};
 use crate::tensor::{Rng, Tensor};
 use crate::train::{upload, LossCurve, TrainOpts, Trainer};
-use anyhow::{bail, Result};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Frozen model state one Method fine-tunes against.
@@ -345,6 +349,168 @@ pub fn merged_state(
     };
     let sparsity_after = base.sparsity_of(&linear_keys());
     Ok(MergedState { base, codes, sparsity_before, sparsity_after })
+}
+
+/// A merged quantized-base model in its *final* numerical format: packed
+/// INT4 codes + shared group params for every linear weight, f32 only for
+/// embed/norms.  This is what `pipeline --out` persists for QA-SparsePEFT
+/// (true 4-bit on disk, not dequantized f32) and what the INT4-resident
+/// serving engine uploads — the paper's "INT4 Final Precision" column made
+/// real end to end.
+pub struct Int4Model {
+    /// model config the codes were produced against
+    pub config: String,
+    /// embed/final_ln/ln1/ln2 plus qscales_<wkey>/qzeros_<wkey> stacks
+    pub params: ParamSet,
+    /// packed_<wkey> → two-nibble codes for every linear weight stack
+    pub packed: BTreeMap<String, PackedTensor>,
+}
+
+impl Int4Model {
+    /// Total bytes this model keeps resident when serving: packed codes as
+    /// u8 plus everything in `params` as f32.  The exact byte count the
+    /// INT4 engine uploads (`BENCH_int4_serving.json` reads it).
+    pub fn resident_bytes(&self) -> usize {
+        self.params.total_bytes() + self.packed.values().map(|p| p.data.len()).sum::<usize>()
+    }
+
+    /// Reconstruct the dense f32 base (the fake-quant serving values) by
+    /// unpacking and dequantizing every linear stack.  `(q - z) * s` here
+    /// is the same f32 arithmetic `fake_quant_host` ran at merge time, so
+    /// the result is bit-identical to the merged base the codes came from
+    /// (asserted in tests) — the fallback path for runtimes without the
+    /// eval_int4 artifact, and the equivalence oracle.
+    pub fn dequant_base(&self) -> Result<ParamSet> {
+        let mut base = ParamSet::new();
+        for (n, t) in self.params.iter() {
+            if !n.starts_with("qscales_") && !n.starts_with("qzeros_") {
+                base.insert(n, t.clone());
+            }
+        }
+        for wkey in linear_keys() {
+            let p = self
+                .packed
+                .get(&format!("packed_{wkey}"))
+                .with_context(|| format!("int4 model missing 'packed_{wkey}'"))?;
+            let codes = unpack_int4_stack(&p.data, &p.shape)?;
+            let scales = self.params.get(&format!("qscales_{wkey}"))?;
+            let zeros = self.params.get(&format!("qzeros_{wkey}"))?;
+            let (l, out, inp) = (p.shape[0], p.shape[1], p.shape[2]);
+            let g = inp / p.group_size;
+            if scales.shape() != [l, out, g] || zeros.shape() != [l, out, g] {
+                bail!(
+                    "int4 model '{wkey}': group params {:?}/{:?} mismatch codes {:?} (gs {})",
+                    scales.shape(), zeros.shape(), p.shape, p.group_size
+                );
+            }
+            let mut w = Tensor::zeros(&p.shape);
+            let (cd, sd, zd) = (codes.data(), scales.data(), zeros.data());
+            let wd = w.data_mut();
+            for li in 0..l {
+                for i in 0..out {
+                    let row = (li * out + i) * inp;
+                    let grow = (li * out + i) * g;
+                    for j in 0..inp {
+                        let q = cd[row + j];
+                        let s = sd[grow + j / p.group_size];
+                        let z = zd[grow + j / p.group_size];
+                        wd[row + j] = (q - z) * s;
+                    }
+                }
+            }
+            base.insert(wkey, w);
+        }
+        Ok(base)
+    }
+}
+
+/// Assemble the true-INT4 model from a prepared + merged quantized-base
+/// run: adapted modules take their *re-quantized* merge codes (Eq. 3 on
+/// `W + L`), non-adapted linears (wo, wgate) keep their GPTQ codes from
+/// `prepare`, and every stack shares the base model's group params.
+pub fn int4_model(prepared: &Prepared, merged: &MergedState) -> Result<Int4Model> {
+    if !prepared.method.quantized_base() {
+        bail!("{} has no INT4 base; nothing to pack", prepared.method.name());
+    }
+    let merged_codes = merged
+        .codes
+        .as_ref()
+        .context("merged state carries no INT4 codes (not a QA merge?)")?;
+    let prep_codes = prepared.codes.as_ref().context("prepare produced no INT4 codes")?;
+    let qa = prepared.qa.as_ref().context("prepare produced no quant params")?;
+    let hyper = &prepared.hyper;
+    // mod → weight key ("q" → "wq"): adapted stacks use the merge codes
+    let adapted: BTreeMap<&str, &str> = hyper
+        .mods
+        .iter()
+        .map(|m| (ModelHyper::weight_key(m), m.as_str()))
+        .collect();
+    let mut params = ParamSet::new();
+    for n in ["embed", "final_ln", "ln1", "ln2"] {
+        params.insert(n, merged.base.get(n)?.clone());
+    }
+    let mut packed = BTreeMap::new();
+    for wkey in linear_keys() {
+        let codes = match adapted.get(wkey) {
+            Some(m) => merged_codes.get(&format!("codes_{m}"))?,
+            None => prep_codes.get(&format!("codes_{wkey}"))?,
+        };
+        let p = PackedTensor {
+            shape: codes.shape().to_vec(),
+            group_size: hyper.group_size,
+            data: pack_int4_stack(codes)?,
+        };
+        p.validate(wkey)?;
+        packed.insert(format!("packed_{wkey}"), p);
+        params.insert(&format!("qscales_{wkey}"), qa.get(&format!("qscales_{wkey}"))?.clone());
+        params.insert(&format!("qzeros_{wkey}"), qa.get(&format!("qzeros_{wkey}"))?.clone());
+    }
+    Ok(Int4Model { config: hyper.name.clone(), params, packed })
+}
+
+/// Persist an INT4 model: packed codes in the checkpoint's packed section
+/// (true 4-bit on disk), group params + embed/norms as f32.
+pub fn save_int4_model(
+    model: &Int4Model,
+    path: &Path,
+    mut extra_meta: Vec<(&str, Json)>,
+) -> Result<()> {
+    let mut meta = vec![
+        ("kind", Json::Str("int4-model".into())),
+        ("config", Json::Str(model.config.clone())),
+    ];
+    meta.append(&mut extra_meta);
+    checkpoint::save_packed(&model.params, &model.packed, path, Json::obj(meta))
+}
+
+/// Load an INT4 model checkpoint written by [`save_int4_model`].
+pub fn load_int4_model(path: &Path) -> Result<Int4Model> {
+    let (params, packed, meta) = checkpoint::load_packed(path)?;
+    let kind = meta.get("kind").and_then(|k| k.as_str().ok()).unwrap_or("");
+    if kind != "int4-model" {
+        bail!("{path:?} is not an INT4 model checkpoint (kind '{kind}')");
+    }
+    let config = meta.req("config")?.as_str()?.to_string();
+    let model = Int4Model { config, params, packed };
+    // every linear stack must be present and consistent with its params
+    for wkey in linear_keys() {
+        let p = model
+            .packed
+            .get(&format!("packed_{wkey}"))
+            .with_context(|| format!("{path:?}: missing packed stack for '{wkey}'"))?;
+        p.validate(wkey)?;
+        if p.shape.len() != 3 {
+            bail!("{path:?}: packed '{wkey}' is not a (L, out, in) stack");
+        }
+        let g = p.shape[2] / p.group_size;
+        let want = [p.shape[0], p.shape[1], g];
+        let sc = model.params.get(&format!("qscales_{wkey}"))?;
+        let ze = model.params.get(&format!("qzeros_{wkey}"))?;
+        if sc.shape() != want || ze.shape() != want {
+            bail!("{path:?}: group params for '{wkey}' mismatch the packed shape");
+        }
+    }
+    Ok(model)
 }
 
 /// Evaluate a merged state (zero adapters on the merged weights).

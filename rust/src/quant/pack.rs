@@ -1,33 +1,65 @@
 //! INT4 nibble packing — true 4-bit storage for the Table 6/7 model-storage
 //! and inference-memory metrics (low nibble = even column, matching the L1
-//! int4 kernel's unpack order).
+//! int4 kernel's unpack order).  The packed bytes are exactly what the
+//! `eval_int4` serving artifacts take as `packed_*` u8 inputs and what the
+//! checkpoint packed-tensor section stores on disk.
 
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 
-/// Pack integer codes (out, in) with values in [0,15] into (out, in/2) bytes.
-pub fn pack_int4(codes: &Tensor) -> Result<Vec<u8>> {
-    let (out, inp) = (codes.rows(), codes.cols());
+/// Validate one code value: finite, integral, in [0, 15].  `NaN as u8` is 0
+/// and `3.7 as u8` truncates to 3 — both silently corrupt the packed bytes,
+/// so every cast is gated on this check.
+#[inline]
+fn check_code(v: f32, i: usize, j: usize) -> Result<u8> {
+    if !v.is_finite() || v.fract() != 0.0 {
+        bail!("pack_int4: non-integral code {v} at ({i},{j})");
+    }
+    if !(0.0..=15.0).contains(&v) {
+        bail!("pack_int4: code {v} out of range [0,15] at ({i},{j})");
+    }
+    Ok(v as u8)
+}
+
+/// Pack `rows` rows of `inp` contiguous codes each (row-major `data`).
+fn pack_rows(data: &[f32], rows: usize, inp: usize) -> Result<Vec<u8>> {
     if inp % 2 != 0 {
         bail!("pack_int4: odd in-dim {inp}");
     }
-    let mut bytes = Vec::with_capacity(out * inp / 2);
-    for i in 0..out {
-        let row = codes.row(i);
+    let mut bytes = Vec::with_capacity(rows * inp / 2);
+    for i in 0..rows {
+        let row = &data[i * inp..(i + 1) * inp];
         for j in (0..inp).step_by(2) {
-            let lo = row[j] as u8;
-            let hi = row[j + 1] as u8;
-            if lo > 15 || hi > 15 || row[j] < 0.0 || row[j + 1] < 0.0 {
-                bail!("pack_int4: code out of range at ({i},{j})");
-            }
+            let lo = check_code(row[j], i, j)?;
+            let hi = check_code(row[j + 1], i, j + 1)?;
             bytes.push(lo | (hi << 4));
         }
     }
     Ok(bytes)
 }
 
+/// Pack integer codes (out, in) with values in [0,15] into (out, in/2) bytes.
+pub fn pack_int4(codes: &Tensor) -> Result<Vec<u8>> {
+    pack_rows(codes.data(), codes.rows(), codes.cols())
+}
+
+/// Pack a stacked (L, out, in) code tensor layer-contiguously — the layout
+/// the eval_int4 artifacts' `packed_*` inputs and the checkpoint packed
+/// section use.  Bytewise identical to packing each layer and concatenating
+/// (rows are contiguous either way, so no copy of the stack is made).
+pub fn pack_int4_stack(codes: &Tensor) -> Result<Vec<u8>> {
+    let shape = codes.shape();
+    if shape.len() != 3 {
+        bail!("pack_int4_stack: want a (L, out, in) stack, got {shape:?}");
+    }
+    pack_rows(codes.data(), shape[0] * shape[1], shape[2])
+}
+
 /// Inverse of `pack_int4`.
 pub fn unpack_int4(bytes: &[u8], out: usize, inp: usize) -> Result<Tensor> {
+    if inp % 2 != 0 {
+        bail!("unpack_int4: odd in-dim {inp}");
+    }
     if bytes.len() != out * inp / 2 {
         bail!("unpack_int4: {} bytes for ({out},{inp})", bytes.len());
     }
@@ -42,10 +74,29 @@ pub fn unpack_int4(bytes: &[u8], out: usize, inp: usize) -> Result<Tensor> {
     Ok(t)
 }
 
+/// Inverse of `pack_int4_stack`: bytes back to a (L, out, in) code stack.
+pub fn unpack_int4_stack(bytes: &[u8], shape: &[usize]) -> Result<Tensor> {
+    if shape.len() != 3 {
+        bail!("unpack_int4_stack: want a (L, out, in) shape, got {shape:?}");
+    }
+    unpack_int4(bytes, shape[0] * shape[1], shape[2])?.reshape(shape)
+}
+
 /// Storage bytes of an INT4-packed matrix incl. FP16 group params
 /// (scales+zeros at 2 bytes each) — used for the Table 7 storage column.
-pub fn int4_storage_bytes(out: usize, inp: usize, group_size: usize) -> usize {
-    out * inp / 2 + 2 * 2 * out * (inp / group_size)
+///
+/// Dims that don't pack/group evenly are an error, not a truncation: the
+/// old `inp / group_size` silently dropped the trailing partial group and
+/// `out * inp / 2` under-counted odd in-dims, so callers compared against
+/// a footprint no real packed layout could have.
+pub fn int4_storage_bytes(out: usize, inp: usize, group_size: usize) -> Result<usize> {
+    if inp % 2 != 0 {
+        bail!("int4_storage_bytes: odd in-dim {inp}");
+    }
+    if group_size == 0 || inp % group_size != 0 {
+        bail!("int4_storage_bytes: group size {group_size} does not divide in-dim {inp}");
+    }
+    Ok(out * inp / 2 + 2 * 2 * out * (inp / group_size))
 }
 
 /// FP16 storage of the same matrix.
@@ -70,6 +121,25 @@ mod tests {
     }
 
     #[test]
+    fn stack_roundtrip_matches_per_layer_packing() {
+        let mut rng = Rng::new(2);
+        let codes = Tensor::new(
+            &[3, 4, 8], (0..96).map(|_| rng.below(16) as f32).collect()).unwrap();
+        let bytes = pack_int4_stack(&codes).unwrap();
+        assert_eq!(bytes.len(), 48);
+        let mut per_layer = Vec::new();
+        for l in 0..3 {
+            per_layer.extend(pack_int4(&codes.index0(l)).unwrap());
+        }
+        assert_eq!(bytes, per_layer);
+        let back = unpack_int4_stack(&bytes, &[3, 4, 8]).unwrap();
+        assert_eq!(back, codes);
+        // non-3d stacks are rejected
+        assert!(pack_int4_stack(&Tensor::zeros(&[4, 8])).is_err());
+        assert!(unpack_int4_stack(&bytes, &[3, 4]).is_err());
+    }
+
+    #[test]
     fn nibble_order_matches_l1_kernel() {
         // kernel convention: low nibble first
         let codes = Tensor::new(&[1, 4], vec![1., 2., 3., 4.]).unwrap();
@@ -81,12 +151,51 @@ mod tests {
     fn rejects_out_of_range() {
         let codes = Tensor::new(&[1, 2], vec![16., 0.]).unwrap();
         assert!(pack_int4(&codes).is_err());
+        let codes = Tensor::new(&[1, 2], vec![-1., 0.]).unwrap();
+        assert!(pack_int4(&codes).is_err());
         assert!(unpack_int4(&[0u8; 3], 1, 4).is_err());
     }
 
     #[test]
+    fn rejects_non_finite_and_fractional_codes() {
+        // regression: NaN compares false against both range bounds and
+        // `NaN as u8` is 0, so NaN codes used to pack silently as 0
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 3.7, -0.5] {
+            let codes = Tensor::new(&[1, 2], vec![bad, 1.0]).unwrap();
+            let err = pack_int4(&codes).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("code"),
+                "unexpected error for {bad}: {err:#}"
+            );
+        }
+        // -0.0 is an integral in-range value, not an error
+        let codes = Tensor::new(&[1, 2], vec![-0.0, 15.0]).unwrap();
+        assert_eq!(pack_int4(&codes).unwrap(), vec![0xF0]);
+    }
+
+    #[test]
+    fn odd_dims_error_instead_of_truncating() {
+        // regression: unpack_int4 with odd inp used to panic past the
+        // buffer instead of rejecting the shape
+        let codes = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert!(pack_int4(&codes).is_err());
+        assert!(unpack_int4(&[0u8; 3], 2, 3).is_err());
+        assert!(unpack_int4(&[0u8; 2], 1, 5).is_err());
+    }
+
+    #[test]
+    fn storage_bytes_reject_non_dividing_dims() {
+        // regression: inp/group_size truncated, under-counting the group
+        // params of any layout a real packed matrix could not have anyway
+        assert!(int4_storage_bytes(4, 10, 4).is_err());
+        assert!(int4_storage_bytes(4, 7, 7).is_err());
+        assert!(int4_storage_bytes(4, 16, 0).is_err());
+        assert_eq!(int4_storage_bytes(4, 16, 8).unwrap(), 4 * 8 + 4 * 4 * 2);
+    }
+
+    #[test]
     fn storage_ratio_close_to_4x() {
-        let int4 = int4_storage_bytes(1024, 1024, 32) as f64;
+        let int4 = int4_storage_bytes(1024, 1024, 32).unwrap() as f64;
         let fp16 = fp16_storage_bytes(1024, 1024) as f64;
         let ratio = fp16 / int4;
         assert!(ratio > 3.0 && ratio < 4.0, "ratio={ratio}");

@@ -11,6 +11,9 @@ use std::path::{Path, PathBuf};
 pub enum DType {
     F32,
     I32,
+    /// packed INT4 weight bytes (two codes per element) — the eval_int4
+    /// serving artifacts' weight inputs
+    U8,
 }
 
 impl DType {
@@ -18,6 +21,7 @@ impl DType {
         match s {
             "f32" => Ok(DType::F32),
             "i32" => Ok(DType::I32),
+            "u8" => Ok(DType::U8),
             _ => bail!("unknown dtype '{s}'"),
         }
     }

@@ -84,6 +84,8 @@ fn note_upload(bytes: usize) {
 pub enum HostValue {
     F32(Tensor),
     I32(Vec<usize>, Vec<i32>),
+    /// packed INT4 weight bytes (eval_int4 inputs)
+    U8(Vec<usize>, Vec<u8>),
 }
 
 impl HostValue {
@@ -91,6 +93,7 @@ impl HostValue {
         match self {
             HostValue::F32(t) => t.shape(),
             HostValue::I32(s, _) => s,
+            HostValue::U8(s, _) => s,
         }
     }
 
@@ -98,6 +101,7 @@ impl HostValue {
         match self {
             HostValue::F32(_) => DType::F32,
             HostValue::I32(..) => DType::I32,
+            HostValue::U8(..) => DType::U8,
         }
     }
 
@@ -167,6 +171,13 @@ impl Executable {
                     }
                     Ok((s.clone(), DType::F32))
                 }
+                Arg::U8Ref(s, d) => {
+                    if s.iter().product::<usize>() != d.len() {
+                        bail!("u8 arg: shape {:?} wants {} elems, got {}",
+                            s, s.iter().product::<usize>(), d.len());
+                    }
+                    Ok((s.clone(), DType::U8))
+                }
                 Arg::Buf(b) => {
                     let s = b.on_device_shape()?;
                     match &s {
@@ -174,6 +185,7 @@ impl Executable {
                             arr.dims().iter().map(|&d| d as usize).collect(),
                             match arr.ty() {
                                 xla::ElementType::S32 => DType::I32,
+                                xla::ElementType::U8 => DType::U8,
                                 _ => DType::F32,
                             },
                         )),
@@ -207,6 +219,11 @@ impl Executable {
                 }
                 Arg::F32Ref(s, d) => {
                     note_upload(d.len() * 4);
+                    owned.push(client.buffer_from_host_buffer(d, s, None)?);
+                    order.push(owned.len() - 1);
+                }
+                Arg::U8Ref(s, d) => {
+                    note_upload(d.len());
                     owned.push(client.buffer_from_host_buffer(d, s, None)?);
                     order.push(owned.len() - 1);
                 }
@@ -245,6 +262,8 @@ pub enum Arg<'a> {
     I32Ref(Vec<usize>, &'a [i32]),
     /// borrowed f32 slice + owned shape (batch loss masks)
     F32Ref(Vec<usize>, &'a [f32]),
+    /// borrowed u8 slice + owned shape (packed INT4 weight bytes)
+    U8Ref(Vec<usize>, &'a [u8]),
     Buf(&'a xla::PjRtBuffer),
 }
 
@@ -263,6 +282,10 @@ pub fn host_to_buffer(client: &xla::PjRtClient, v: &HostValue) -> Result<xla::Pj
         }
         HostValue::I32(shape, data) => {
             note_upload(data.len() * 4);
+            Ok(client.buffer_from_host_buffer(data, shape, None)?)
+        }
+        HostValue::U8(shape, data) => {
+            note_upload(data.len());
             Ok(client.buffer_from_host_buffer(data, shape, None)?)
         }
     }
@@ -384,6 +407,24 @@ impl DeviceStore {
                 shape, shape.iter().product::<usize>(), data.len());
         }
         note_upload(data.len() * 4);
+        self.bufs.insert(name.to_string(), client.buffer_from_host_buffer(data, shape, None)?);
+        Ok(())
+    }
+
+    /// Upload a borrowed u8 slice (packed INT4 weight bytes — the
+    /// INT4-resident serving base).
+    pub fn put_u8(
+        &mut self,
+        client: &xla::PjRtClient,
+        name: &str,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<()> {
+        if shape.iter().product::<usize>() != data.len() {
+            bail!("'{name}': shape {:?} wants {} elems, got {}",
+                shape, shape.iter().product::<usize>(), data.len());
+        }
+        note_upload(data.len());
         self.bufs.insert(name.to_string(), client.buffer_from_host_buffer(data, shape, None)?);
         Ok(())
     }

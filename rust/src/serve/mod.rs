@@ -60,7 +60,7 @@ use crate::nls::{Config, SearchSpace};
 use crate::report::Table;
 use crate::runtime::{args::build_args, DeviceStore, Runtime};
 use crate::util::{summarize, Summary};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::cell::Cell;
 use std::collections::{BTreeMap, VecDeque};
 use std::fmt::Write as _;
@@ -91,6 +91,10 @@ pub struct Engine<'a> {
     /// `uploads <= steps` always, and a forward is only preceded by an
     /// upload when a live slot actually changed since the previous one
     last_decode_uploads: Cell<usize>,
+    /// bytes of model state this engine keeps device-resident (frozen f32
+    /// uploads, or packed u8 + f32 group params on the INT4 path) — the
+    /// Table 7 inference-memory figure, reported through `ServeStats`
+    resident_bytes: u64,
 }
 
 impl<'a> Engine<'a> {
@@ -145,7 +149,108 @@ impl<'a> Engine<'a> {
             stop_id,
             last_decode_steps: Cell::new(0),
             last_decode_uploads: Cell::new(0),
+            resident_bytes: frozen.total_bytes() as u64,
         })
+    }
+
+    /// Build an engine whose base stays in its final numerical format: the
+    /// packed INT4 codes cross the PJRT boundary once as u8 buffers plus
+    /// f32 group params, and every decode forward runs the `eval_int4`
+    /// artifact — no dense f32 weight copy ever exists on the device.
+    /// Serves merged-model (no-adapter) traffic only: the artifact has no
+    /// adapter inputs because a merged model has no adapters.
+    pub fn new_int4(
+        rt: &'a Runtime,
+        config: &str,
+        model: &crate::pipeline::Int4Model,
+        max_new_tokens: usize,
+    ) -> Result<Engine<'a>> {
+        if model.config != config {
+            bail!(
+                "INT4 model was packed for config '{}', engine runs '{config}'",
+                model.config
+            );
+        }
+        let hyper = rt.model(config)?.clone();
+        if max_new_tokens == 0 || max_new_tokens > hyper.seq_len.saturating_sub(2) {
+            bail!(
+                "max_new_tokens {max_new_tokens} does not fit seq_len {} (need 1..={})",
+                hyper.seq_len,
+                hyper.seq_len.saturating_sub(2)
+            );
+        }
+        let spec = rt
+            .manifest
+            .config(config)?
+            .artifacts
+            .get("eval_int4")
+            .with_context(|| format!(
+                "config '{config}' has no eval_int4 artifact; re-run `make artifacts` \
+                 (the packed-INT4 serving path needs regenerated artifacts)"
+            ))?
+            .clone();
+        // upload exactly the artifact's weight inputs, validating shapes
+        // against the manifest so a stale checkpoint fails here, not
+        // mid-serve
+        let mut device = DeviceStore::new();
+        for input in &spec.inputs {
+            let name = input.name.as_str();
+            if name == "tokens" {
+                continue;
+            }
+            if let Some(p) = model.packed.get(name) {
+                if input.dtype != crate::runtime::DType::U8 {
+                    bail!("artifact input '{name}' is not u8; manifest/checkpoint mismatch");
+                }
+                let mut packed_shape = p.shape.clone();
+                let last = packed_shape.len() - 1;
+                packed_shape[last] /= 2;
+                if packed_shape != input.shape {
+                    bail!(
+                        "packed '{name}': checkpoint shape {:?} packs to {:?}, artifact wants {:?}",
+                        p.shape, packed_shape, input.shape
+                    );
+                }
+                device.put_u8(&rt.client, name, &packed_shape, &p.data)?;
+            } else {
+                let t = model
+                    .params
+                    .get(name)
+                    .with_context(|| format!("INT4 model missing artifact input '{name}'"))?;
+                if t.shape() != input.shape.as_slice() {
+                    bail!(
+                        "'{name}': checkpoint shape {:?} != artifact spec {:?}",
+                        t.shape(), input.shape
+                    );
+                }
+                device.put_tensor(&rt.client, name, t)?;
+            }
+        }
+        let tok = Tokenizer::new();
+        let stop_id = tok.encode(".")?[0];
+        Ok(Engine {
+            rt,
+            config: config.to_string(),
+            device,
+            default_sets: Vec::new(),
+            default_kind: "eval_int4".to_string(),
+            tok,
+            max_new_tokens,
+            stop_id,
+            last_decode_steps: Cell::new(0),
+            last_decode_uploads: Cell::new(0),
+            resident_bytes: model.resident_bytes() as u64,
+        })
+    }
+
+    /// Device-resident model bytes (weights + group params + norms/embed).
+    pub fn resident_weight_bytes(&self) -> u64 {
+        self.resident_bytes
+    }
+
+    /// True when the merged/no-adapter path serves from packed INT4.
+    pub fn is_int4(&self) -> bool {
+        self.default_kind == "eval_int4"
     }
 
     pub fn max_new_tokens(&self) -> usize {
@@ -451,6 +556,10 @@ pub struct ServeStats {
     pub ttft_ms: Option<Summary>,
     /// queue wait (enqueue → admission into a decode slot)
     pub queue_ms: Option<Summary>,
+    /// bytes of model state the serving engine keeps device-resident
+    /// (packed u8 + group params on the INT4 path, dense f32 otherwise);
+    /// set on the run-level `total` stats, `None` on per-tenant rows
+    pub resident_weight_bytes: Option<u64>,
 }
 
 /// Per-run serving report: totals, per-tenant breakdown, the scheduler's
@@ -525,6 +634,13 @@ impl MultiServeStats {
             self.generated_tokens,
             self.generated_tokens as f64 / self.total.wall_secs.max(1e-9)
         );
+        if let Some(b) = self.total.resident_weight_bytes {
+            let _ = writeln!(
+                out,
+                "resident model weights: {:.1} KB per engine replica",
+                b as f64 / 1e3
+            );
+        }
         out
     }
 }
@@ -558,6 +674,7 @@ impl Tally {
             latency_ms: summ(self.latencies),
             ttft_ms: summ(self.ttfts),
             queue_ms: summ(self.queue_waits),
+            resident_weight_bytes: None,
         }
     }
 }
@@ -763,14 +880,16 @@ impl<'a> Router<'a> {
         }
         let wall = start.elapsed().as_secs_f64();
         let capacity = self.engine.artifact_batch()?;
-        Ok(finish_multi(
+        let mut stats = finish_multi(
             tallies,
             wall,
             sched.metrics().clone(),
             decode_steps,
             slot_steps,
             capacity,
-        ))
+        );
+        stats.total.resident_weight_bytes = Some(self.engine.resident_weight_bytes());
+        Ok(stats)
     }
 
     /// One same-tenant decode session: admit the handed-over batch, then

@@ -89,6 +89,8 @@ pub struct WorkerStats {
     /// sessions whose batch was stolen from another worker's shard
     pub stolen_sessions: usize,
     pub decode_steps: usize,
+    /// model bytes this worker's replica keeps device-resident
+    pub resident_weight_bytes: u64,
     /// replica setup time (runtime load + executable-compile-on-first-use
     /// happens lazily, so this covers runtime/engine build + tenant
     /// replication), measured from pool start
@@ -124,6 +126,7 @@ struct WorkerOutcome {
     decode_steps: usize,
     slot_steps: usize,
     capacity: usize,
+    resident_weight_bytes: u64,
     setup_secs: f64,
     setup_error: Option<String>,
 }
@@ -189,6 +192,7 @@ pub fn serve_pool(
             sessions: o.sessions,
             stolen_sessions: o.stolen_sessions,
             decode_steps: o.decode_steps,
+            resident_weight_bytes: o.resident_weight_bytes,
             setup_secs: o.setup_secs,
             setup_error: o.setup_error,
         });
@@ -198,8 +202,13 @@ pub fn serve_pool(
     // check in too — their time-to-fail gates the barrier the same way)
     let slowest_setup = per_worker.iter().map(|w| w.setup_secs).fold(0.0f64, f64::max);
     let serving_wall = wall - slowest_setup;
+    let mut serve = finish_multi(tallies, wall, sched.metrics(), decode_steps, slot_steps, capacity);
+    // per-replica figure (replicas are identical); 0 only if every worker
+    // failed before building its engine
+    serve.total.resident_weight_bytes =
+        per_worker.iter().map(|w| w.resident_weight_bytes).max().filter(|&b| b > 0);
     Ok(PoolServeStats {
-        serve: finish_multi(tallies, wall, sched.metrics(), decode_steps, slot_steps, capacity),
+        serve,
         workers,
         steals: sched.steals(),
         serving_wall_secs: if serving_wall > 0.0 { serving_wall } else { wall },
@@ -230,6 +239,7 @@ fn worker_main(
         decode_steps: 0,
         slot_steps: 0,
         capacity: 0,
+        resident_weight_bytes: 0,
         setup_secs: 0.0,
         setup_error: None,
     };
@@ -282,6 +292,7 @@ fn worker_serve(
     )
     .with_context(|| format!("worker {wid}: building engine replica"))?;
     out.capacity = engine.artifact_batch()?;
+    out.resident_weight_bytes = engine.resident_weight_bytes();
     // dispatched batches must fit the decode slots (idempotent across
     // workers; runs before the barrier, so before any dispatch)
     sched.clamp_max_batch(out.capacity);

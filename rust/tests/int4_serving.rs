@@ -1,0 +1,124 @@
+//! Packed-INT4 serving path, end to end on sqft-tiny: a merged
+//! QA-SparsePEFT model must serve from true packed u8 weights + group
+//! params with (1) answers identical to the fake-quant f32 reference,
+//! (2) only the token batch crossing the PJRT boundary per decode step,
+//! (3) a device weight footprint a multiple smaller than the f32 path,
+//! and (4) a lossless pack → save → load → serve round trip.
+//!
+//! Requires `make artifacts` (skips with a message if absent).
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::{init_base, linear_keys, ParamSet};
+use sqft::nls::SearchSpace;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::{Runtime, UploadScope};
+use sqft::serve::Engine;
+use sqft::tensor::Rng;
+use sqft::train::{Pretrainer, TrainOpts};
+use std::path::Path;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn int4_serving_matches_fake_quant_reference_and_stays_packed() {
+    let Some(rt) = runtime() else { return };
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 400, 0, 40, 7);
+
+    // a lightly-trained base, prepared + tuned with QA-SparsePEFT
+    let mut pre = Pretrainer::new(&rt, config, init_base(&hyper, &mut Rng::new(7)));
+    pre.train(&ds.train, &tok,
+              &TrainOpts { steps: 20, lr: 2e-3, log_every: 20, seed: 7, fixed_rank: false })
+        .unwrap();
+    let prepared = pipeline::prepare(
+        &rt, config, &pre.base, Method::QaSparsePeft, 0.5, &ds.train, &tok, 2,
+        &mut Rng::new(9)).unwrap();
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha).unwrap();
+    let (trainer, _) = pipeline::finetune(
+        &rt, config, &prepared, space, &ds.train, &tok,
+        &TrainOpts { steps: 8, lr: 1e-3, log_every: 8, seed: 11, fixed_rank: false })
+        .unwrap();
+    let cfg = trainer.space.heuristic_config();
+    let merged = pipeline::merged_state(&prepared, &trainer, &cfg).unwrap();
+    let int4 = pipeline::int4_model(&prepared, &merged).unwrap();
+
+    // (a) dequantizing the packed codes reproduces the merged base weights
+    // bit-for-bit — (q - z) * s is the same f32 arithmetic the merge ran
+    let dense = int4.dequant_base().unwrap();
+    for wkey in linear_keys() {
+        assert_eq!(
+            dense.get(wkey).unwrap(),
+            merged.base.get(wkey).unwrap(),
+            "{wkey}: packed codes do not reproduce the merged fake-quant values"
+        );
+    }
+
+    // (b) the INT4 engine answers identically to the fake-quant f32 engine
+    let mut frozen_m = ParamSet::new();
+    for (n, v) in merged.base.iter() {
+        frozen_m.insert(n, v.clone());
+    }
+    for (n, v) in pipeline::dense_adapter_masks(&hyper).iter() {
+        frozen_m.insert(n, v.clone());
+    }
+    let engine_f32 = Engine::new(&rt, config, &frozen_m, None, "eval", 5).unwrap();
+    let engine_i4 = Engine::new_int4(&rt, config, &int4, 5).unwrap();
+    assert!(engine_i4.is_int4());
+    let mut grng = Rng::new(3);
+    let prompts: Vec<String> =
+        (0..hyper.batch).map(|_| task.gen_sample(&mut grng).prompt).collect();
+    let ans_f32 = engine_f32.generate_batch(&prompts).unwrap();
+    let ans_i4 = engine_i4.generate_batch(&prompts).unwrap();
+    assert_eq!(ans_i4, ans_f32, "INT4 serving diverged from fake-quant serving");
+
+    // (c) steady-state decode ships only the token batch: all weight
+    // inputs are device-resident packed u8 / f32 buffers
+    let scope = UploadScope::begin();
+    let _ = engine_i4.generate_batch(&prompts).unwrap();
+    let token_batch = (hyper.batch * hyper.seq_len * 4) as u64;
+    assert_eq!(
+        scope.bytes(),
+        engine_i4.last_decode_uploads() as u64 * token_batch,
+        "INT4 decode must upload the token batch only"
+    );
+    assert!(engine_i4.last_decode_uploads() <= engine_i4.last_decode_steps());
+
+    // (d) the packed engine is resident at a fraction of the f32 engine
+    let ratio = engine_f32.resident_weight_bytes() as f64
+        / engine_i4.resident_weight_bytes().max(1) as f64;
+    assert!(ratio >= 3.5, "INT4 resident footprint only {ratio:.2}x smaller");
+
+    // (e) true-INT4 on disk: save → load → serve round-trips answers, and
+    // the plain checkpoint loader refuses the packed file rather than
+    // dropping weights
+    let dir = std::env::temp_dir().join("sqft_int4_serving_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("merged_int4.ckpt");
+    pipeline::save_int4_model(&int4, &path, vec![]).unwrap();
+    assert!(sqft::model::checkpoint::load(&path).is_err());
+    let loaded = pipeline::load_int4_model(&path).unwrap();
+    assert_eq!(loaded.config, config);
+    for wkey in linear_keys() {
+        assert_eq!(
+            loaded.packed[&format!("packed_{wkey}")],
+            int4.packed[&format!("packed_{wkey}")],
+            "{wkey}: packed bytes changed across the checkpoint round trip"
+        );
+    }
+    let engine_loaded = Engine::new_int4(&rt, config, &loaded, 5).unwrap();
+    let ans_loaded = engine_loaded.generate_batch(&prompts).unwrap();
+    assert_eq!(ans_loaded, ans_i4, "checkpoint round trip changed answers");
+    std::fs::remove_dir_all(&dir).ok();
+}

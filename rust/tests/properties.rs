@@ -120,6 +120,33 @@ fn prop_int4_pack_roundtrip() {
 }
 
 #[test]
+fn prop_int4_pack_rejects_corrupt_codes() {
+    // one corrupted entry anywhere must fail the whole pack, never pack a
+    // wrong byte (NaN casts to 0, fractions truncate — both silent without
+    // the validation)
+    forall("int4_rejects_corrupt", 23, 60,
+        |rng: &mut Rng, size| {
+            let (out, inp) = (1 + size, 2 * (1 + size));
+            let mut codes = Tensor::new(&[out, inp],
+                (0..out * inp).map(|_| rng.below(16) as f32).collect()).unwrap();
+            let (i, j) = (rng.below(out), rng.below(inp));
+            let bad = match rng.below(5) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => rng.below(15) as f32 + 0.5,
+                _ => 16.0 + rng.below(8) as f32,
+            };
+            codes.set2(i, j, bad);
+            codes
+        },
+        |codes| match pack_int4(codes) {
+            Err(_) => Ok(()),
+            Ok(_) => Err("corrupt code packed without error".into()),
+        });
+}
+
+#[test]
 fn prop_fake_quant_projection_and_range() {
     // fq is idempotent and its codes stay in [0, qmax]
     forall("fake_quant_projection", 19, 60,

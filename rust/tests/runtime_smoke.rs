@@ -31,33 +31,61 @@ fn wanda_artifact_matches_host_math() {
     }
 }
 
-#[test]
-fn eval_artifact_runs_and_outputs_logits() {
-    let Some(rt) = runtime() else { return };
-    let m = rt.model("sqft-tiny").unwrap().clone();
-    let exe = rt.executable("sqft-tiny", "eval").unwrap();
-    let mut rng = Rng::new(2);
+/// Random-but-plausible inputs for one artifact spec list.
+fn fill_inputs(rng: &mut Rng, vocab: usize, specs: &[sqft::runtime::IoSpec]) -> Vec<HostValue> {
     let mut inputs = Vec::new();
-    for spec in &exe.spec.inputs {
+    for spec in specs {
         match spec.dtype {
             sqft::runtime::DType::F32 => {
                 let t = if spec.name.starts_with("mask") || spec.name.starts_with("rankmask") {
                     Tensor::ones(&spec.shape)
                 } else if spec.name.starts_with("ln") || spec.name == "final_ln" {
                     Tensor::ones(&spec.shape)
+                } else if spec.name.starts_with("qscales") {
+                    Tensor::rand_uniform(rng, &spec.shape, 0.02, 0.1)
                 } else {
-                    Tensor::randn(&mut rng, &spec.shape, 0.05)
+                    Tensor::randn(rng, &spec.shape, 0.05)
                 };
                 inputs.push(HostValue::F32(t));
             }
             sqft::runtime::DType::I32 => {
                 let n: usize = spec.shape.iter().product();
-                let data: Vec<i32> =
-                    (0..n).map(|_| (rng.below(m.vocab)) as i32).collect();
+                let data: Vec<i32> = (0..n).map(|_| (rng.below(vocab)) as i32).collect();
                 inputs.push(HostValue::I32(spec.shape.clone(), data));
+            }
+            sqft::runtime::DType::U8 => {
+                let n: usize = spec.shape.iter().product();
+                let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                inputs.push(HostValue::U8(spec.shape.clone(), data));
             }
         }
     }
+    inputs
+}
+
+#[test]
+fn eval_artifact_runs_and_outputs_logits() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("sqft-tiny").unwrap().clone();
+    let exe = rt.executable("sqft-tiny", "eval").unwrap();
+    let mut rng = Rng::new(2);
+    let inputs = fill_inputs(&mut rng, m.vocab, &exe.spec.inputs);
+    let out = exe.run(&rt.client, &inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[m.batch, m.seq_len, m.vocab]);
+    assert!(out[0].data().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn eval_int4_artifact_accepts_packed_u8_weights() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model("sqft-tiny").unwrap().clone();
+    let exe = rt.executable("sqft-tiny", "eval_int4").unwrap();
+    // the packed stacks must be u8 in the manifest contract
+    assert!(exe.spec.inputs.iter().any(
+        |s| s.name.starts_with("packed_") && s.dtype == sqft::runtime::DType::U8));
+    let mut rng = Rng::new(3);
+    let inputs = fill_inputs(&mut rng, m.vocab, &exe.spec.inputs);
     let out = exe.run(&rt.client, &inputs).unwrap();
     assert_eq!(out.len(), 1);
     assert_eq!(out[0].shape(), &[m.batch, m.seq_len, m.vocab]);
