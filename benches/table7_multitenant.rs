@@ -9,9 +9,16 @@
 //! byte-identical to 1 worker, and full runs assert >1.5x aggregate
 //! tokens/s at 4 workers).
 //!
+//! Also measures the cost of the serving telemetry itself: the same
+//! closed-loop pool workload runs once fully instrumented (metrics
+//! registry + JSONL trace spans) and once through `ServeObs::disabled()`
+//! — the instrumented run must stay within 3% decode tokens/s of the
+//! baseline (`BENCH_obs_overhead.json`).
+//!
 //! `SQFT_BENCH_SMOKE=1` shrinks every iteration count to 1 and the
 //! worker sweep to `[1, 2]` (CI smoke); `-- --workers N` pins the sweep
-//! to `[1, N]`.
+//! to `[1, N]`; `-- --metrics-out PATH` writes the instrumented run's
+//! final metrics snapshot (Prometheus text + JSON + trace JSONL).
 
 use sqft::data::{Dataset, Task, Tokenizer};
 use sqft::model::{init_base, ParamSet};
@@ -21,8 +28,8 @@ use sqft::pipeline;
 use sqft::report::Table;
 use sqft::runtime::{DeviceStore, Runtime, UploadScope};
 use sqft::serve::{
-    benchmark_router, serve_pool, AdapterRegistry, Engine, EngineSpec, PoolOpts, Request,
-    Router, SchedulerOpts, SharedAdapterSource,
+    benchmark_router, serve_pool, serve_pool_obs, AdapterRegistry, Engine, EngineSpec,
+    PoolOpts, Request, Router, SchedulerOpts, ServeObs, SharedAdapterSource,
 };
 use sqft::tensor::Rng;
 use sqft::train::TrainOpts;
@@ -42,6 +49,14 @@ fn cli_workers() -> Option<usize> {
         .position(|a| a == "--workers")
         .and_then(|i| argv.get(i + 1))
         .and_then(|v| v.parse().ok())
+}
+
+/// `--metrics-out PATH`: dump the instrumented overhead run's final
+/// metrics snapshot — what CI's bench-smoke greps for the
+/// `serve_requests_total` sentinel and uploads as an artifact.
+fn cli_metrics_out() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--metrics-out").and_then(|i| argv.get(i + 1)).cloned()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -222,6 +237,76 @@ fn main() -> anyhow::Result<()> {
     }
     std::fs::write("BENCH_serve_scaling.json", Json::obj(scaling_report).to_string_pretty())?;
     println!("wrote BENCH_serve_scaling.json");
+
+    // --- observability overhead: full telemetry vs disabled -------------
+    // The same closed-loop workload through the same pool, once with the
+    // metrics registry + per-request trace spans and once through
+    // `ServeObs::disabled()` (every record call early-returns — the
+    // uninstrumented baseline).  Tokens are counted from the returned
+    // answers, not the registry, so both runs measure identically.
+    let obs_workers = cli_workers().unwrap_or(2).max(1);
+    let run_obs = |obs: ServeObs| -> anyhow::Result<(f64, ServeObs)> {
+        let (tx, rx) = channel::<Request>();
+        let mut replies = Vec::new();
+        for (id, p) in &scale_reqs {
+            let (rtx, rrx) = channel();
+            let _ = tx.send(Request::new(id.clone(), p.clone(), rtx));
+            replies.push(rrx);
+        }
+        drop(tx);
+        let popts = PoolOpts {
+            workers: obs_workers,
+            sched: SchedulerOpts { max_batch: hyper.batch, aging: Duration::from_millis(20) },
+        };
+        let kept = obs.clone();
+        let stats = serve_pool_obs(&spec, &source, rx, popts, obs)?;
+        let mut toks = 0usize;
+        for r in replies {
+            toks += r.recv().unwrap().unwrap().len() + 1; // answer + stop token
+        }
+        Ok((toks as f64 / stats.serving_wall_secs.max(1e-12), kept))
+    };
+    let obs_reps = smoke_iters(3);
+    let (mut without_tps, mut with_tps) = (0.0f64, 0.0f64);
+    let mut last_obs: Option<ServeObs> = None;
+    for _ in 0..obs_reps {
+        let (t, _) = run_obs(ServeObs::disabled())?;
+        without_tps = without_tps.max(t);
+        let (t, o) = run_obs(ServeObs::with_trace())?;
+        with_tps = with_tps.max(t);
+        last_obs = Some(o);
+    }
+    let obs_ratio = with_tps / without_tps.max(1e-12);
+    println!(
+        "bench obs_overhead: without {without_tps:.1} tok/s, with {with_tps:.1} tok/s \
+(ratio {obs_ratio:.3})"
+    );
+    // timing assert, so full runs only (smoke shares CI boxes)
+    if !sqft::util::bench::smoke() {
+        assert!(obs_ratio >= 0.97,
+            "telemetry costs more than 3% decode tokens/s (ratio {obs_ratio:.3})");
+    }
+    let obs_report = Json::obj(vec![
+        ("bench", Json::Str("obs_overhead".into())),
+        ("config", Json::Str(config.into())),
+        ("workers", Json::Num(obs_workers as f64)),
+        ("requests", Json::Num(n_scale as f64)),
+        ("reps", Json::Num(obs_reps as f64)),
+        ("without_tokens_per_s", Json::Num(without_tps)),
+        ("with_tokens_per_s", Json::Num(with_tps)),
+        ("ratio", Json::Num(obs_ratio)),
+        ("gate", Json::Num(0.97)),
+        ("gate_enforced", Json::Num(!sqft::util::bench::smoke() as u8 as f64)),
+        ("smoke", Json::Num(sqft::util::bench::smoke() as u8 as f64)),
+    ]);
+    std::fs::write("BENCH_obs_overhead.json", obs_report.to_string_pretty())?;
+    println!("wrote BENCH_obs_overhead.json");
+    if let Some(path) = cli_metrics_out() {
+        let obs = last_obs.as_ref().expect("instrumented rep ran");
+        let trace = obs.trace().map(|t| t.as_ref());
+        sqft::obs::expose::write_files(obs.registry(), trace, Path::new(&path))?;
+        println!("wrote metrics snapshot to {path} (+ .json, .trace.jsonl)");
+    }
 
     // --- decode hot path: cached device-resident adapters vs host upload
     // Steady-state criterion: a registered tenant's decode step ships only

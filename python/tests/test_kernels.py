@@ -9,13 +9,35 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal images: property tests skip, the rest run
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda f: f
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _MissingStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _MissingStrategies()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis is not installed"
+)
 
 from compile import kernels as K
 from compile.kernels import ref
 from compile.kernels.blocks import pick_block, vmem_bytes_f32
 
-from .conftest import rand_f32, rand_mask, rand_qparams
+from conftest import rand_f32, rand_mask, rand_qparams
 
 SHAPES = [
     # (M, K, N, r) — mixes block-divisible and odd sizes
@@ -98,6 +120,7 @@ class TestSparseLoraMatmul:
 
         assert jnp.all(jax.grad(lw)(w) == 0.0)
 
+    @needs_hypothesis
     @settings(max_examples=20, deadline=None)
     @given(
         m=st.integers(1, 40), k=st.integers(1, 48),
@@ -191,6 +214,7 @@ class TestFakeQuant:
         fq2 = K.fake_quant(fq1, scales, zeros, qmax)
         np.testing.assert_allclose(fq1, fq2, rtol=1e-6, atol=1e-6)
 
+    @needs_hypothesis
     @settings(max_examples=15, deadline=None)
     @given(n=st.integers(1, 32), g=st.integers(1, 4),
            gs=st.integers(1, 8), seed=st.integers(0, 2**16))

@@ -15,6 +15,7 @@ pub mod harness;
 pub mod model;
 pub mod evalharness;
 pub mod nls;
+pub mod obs;
 pub mod peft;
 pub mod pipeline;
 pub mod quant;

@@ -18,6 +18,7 @@ use anyhow::{bail, Context, Result};
 use sqft::data::{Task, Tokenizer};
 use sqft::model::{checkpoint, init_base};
 use sqft::nls::SearchSpace;
+use sqft::obs::expose::MetricsWriter;
 use sqft::peft::Method;
 use sqft::pipeline;
 use sqft::report::{pct, Table};
@@ -50,6 +51,7 @@ fn usage() -> &'static str {
                     [--adapters DIR | --tenants K [--tenant-steps N]]\n\
                     [--merged-ckpt CKPT] [--max-new-tokens N]\n\
                     [--registry-cap K] [--aging-ms MS] [--merged]\n\
+                    [--metrics-out PATH [--metrics-interval-ms N]]\n\
      \n\
      serve: one engine holds the frozen base device-resident; requests are\n\
      tagged with an adapter id and batched per adapter (registry -> batch\n\
@@ -63,7 +65,11 @@ fn usage() -> &'static str {
      byte-identical to --workers 1; throughput scales with cores).\n\
      --merged-ckpt serves a packed-INT4 merged model (written by\n\
      `pipeline --method qa-sparsepeft --out`) through the eval_int4\n\
-     artifact: weights stay device-resident as packed u8 + group params.\n"
+     artifact: weights stay device-resident as packed u8 + group params.\n\
+     --metrics-out PATH enables live telemetry: a background writer\n\
+     rewrites PATH (Prometheus text), PATH.json (snapshot), and\n\
+     PATH.trace.jsonl (per-request spans) every --metrics-interval-ms\n\
+     (default 500) during the run, plus a final snapshot at the end.\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -325,6 +331,37 @@ fn cmd_search(artifacts: &Path, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the serve observability context from --metrics-out /
+/// --metrics-interval-ms: with a path, metrics + trace plus a background
+/// exposition writer; without, metrics only (end-of-run tables still come
+/// from the same registry).
+fn serve_obs(args: &Args) -> Result<(sqft::serve::ServeObs, Option<MetricsWriter>)> {
+    match args.get("metrics-out") {
+        Some(path) => {
+            let obs = sqft::serve::ServeObs::with_trace();
+            let interval = args.get_u64("metrics-interval-ms", 500)?;
+            let writer = MetricsWriter::spawn(
+                obs.registry().clone(),
+                obs.trace().cloned(),
+                PathBuf::from(path),
+                std::time::Duration::from_millis(interval.max(1)),
+            );
+            Ok((obs, Some(writer)))
+        }
+        None => Ok((sqft::serve::ServeObs::new(), None)),
+    }
+}
+
+/// Final exposition write after the run (the writer also wrote
+/// periodically while serving).
+fn finish_metrics(writer: Option<MetricsWriter>) -> Result<()> {
+    if let Some(w) = writer {
+        let path = w.finish()?;
+        println!("metrics snapshot: {} (+ .json, .trace.jsonl)", path.display());
+    }
+    Ok(())
+}
+
 /// Serve a packed-INT4 merged model (written by `pipeline --method
 /// qa-sparsepeft --out`): the base crosses the PJRT boundary once as packed
 /// u8 + f32 group params and every request takes the eval_int4 path.
@@ -362,11 +399,13 @@ fn serve_int4_merged(
         max_batch: hyper.batch,
         aging: std::time::Duration::from_millis(args.get_u64("aging-ms", 50)?),
     };
+    let (obs, writer) = serve_obs(args)?;
     let mut router = sqft::serve::Router::new(engine, sqft::serve::AdapterRegistry::new(1));
+    router.set_obs(obs);
     let stats = sqft::serve::benchmark_router(
         &mut router, requests, std::time::Duration::from_millis(2), opts)?;
     print!("{}", stats.render());
-    Ok(())
+    finish_metrics(writer)
 }
 
 fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
@@ -474,8 +513,9 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
             registry_capacity: registry_cap,
         };
         let popts = sqft::serve::PoolOpts { workers, sched: opts };
-        let stats = sqft::serve::benchmark_pool(
-            &spec, &source, requests, std::time::Duration::from_millis(2), popts)?;
+        let (obs, writer) = serve_obs(args)?;
+        let stats = sqft::serve::benchmark_pool_obs(
+            &spec, &source, requests, std::time::Duration::from_millis(2), popts, obs)?;
         print!("{}", stats.serve.render());
         println!("pool: {} workers, {} stolen batches", stats.workers, stats.steals);
         for w in &stats.per_worker {
@@ -486,16 +526,20 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
                 w.setup_error.as_deref().map(|e| format!("  [SETUP FAILED: {e}]"))
                     .unwrap_or_default());
         }
+        finish_metrics(writer)?;
     } else {
         let engine = sqft::serve::Engine::new(&rt, &config, &frozen, None, "eval",
                                               max_new_tokens)?;
         let mut registry = sqft::serve::AdapterRegistry::new(registry_cap);
         registry.register_all_resident(&rt, &hyper, entries)
             .context("registering tenants (see --registry-cap / --adapter-id)")?;
+        let (obs, writer) = serve_obs(args)?;
         let mut router = sqft::serve::Router::new(engine, registry);
+        router.set_obs(obs);
         let stats = sqft::serve::benchmark_router(
             &mut router, requests, std::time::Duration::from_millis(2), opts)?;
         print!("{}", stats.render());
+        finish_metrics(writer)?;
     }
     Ok(())
 }

@@ -1,0 +1,329 @@
+//! Exposition: render a [`Snapshot`] as Prometheus-style text and as a
+//! JSON document, and rewrite both (plus the JSONL trace) periodically
+//! from a background thread while a serve run is live.
+//!
+//! `--metrics-out PATH` on `sqft serve` treats `PATH` as the text dump
+//! and writes two siblings next to it: `PATH.json` (the JSON snapshot)
+//! and `PATH.trace.jsonl` (the per-request span log).  Files are
+//! rewritten whole every `--metrics-interval-ms` and once more at run
+//! end, so the on-disk view is always a consistent point-in-time dump.
+
+use super::{Registry, Sample, Snapshot, TraceLog, Value};
+use crate::util::json::Json;
+use crate::util::summarize;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Process-level metrics sourced outside any registry: the runtime's
+/// host→device upload accounting (`runtime::host_upload_bytes`) folded
+/// into every exposition dump, so the registry view and the legacy
+/// counter can't drift apart.
+pub fn process_samples() -> Vec<Sample> {
+    vec![Sample {
+        name: "runtime_host_upload_bytes_total".to_string(),
+        labels: Vec::new(),
+        value: Value::Counter(crate::runtime::host_upload_bytes()),
+    }]
+}
+
+fn write_labels(out: &mut String, labels: &[(String, String)], extra: Option<(&str, &str)>) {
+    if labels.is_empty() && extra.is_none() {
+        return;
+    }
+    out.push('{');
+    let mut first = true;
+    for (k, v) in labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).chain(extra) {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let escaped = v.replace('\\', "\\\\").replace('"', "\\\"");
+        let _ = write!(out, "{k}=\"{escaped}\"");
+    }
+    out.push('}');
+}
+
+fn type_of(v: &Value) -> &'static str {
+    match v {
+        Value::Counter(_) | Value::FloatCounter(_) => "counter",
+        Value::Gauge { .. } => "gauge",
+        Value::Histogram { .. } => "histogram",
+        Value::Series(_) => "summary",
+    }
+}
+
+/// Prometheus-style text rendering: `# TYPE` headers per family, then
+/// one line per label set (histograms expand to `_bucket`/`_sum`/
+/// `_count`, series to quantile lines, gauges also emit a `_peak`
+/// family with their high-watermarks).
+pub fn prometheus_text(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut last: Option<&str> = None;
+    for s in &snap.samples {
+        if last != Some(s.name.as_str()) {
+            let _ = writeln!(out, "# TYPE {} {}", s.name, type_of(&s.value));
+            last = Some(s.name.as_str());
+        }
+        match &s.value {
+            Value::Counter(v) => {
+                out.push_str(&s.name);
+                write_labels(&mut out, &s.labels, None);
+                let _ = writeln!(out, " {v}");
+            }
+            Value::FloatCounter(v) | Value::Gauge { value: v, .. } => {
+                out.push_str(&s.name);
+                write_labels(&mut out, &s.labels, None);
+                let _ = writeln!(out, " {v}");
+            }
+            Value::Histogram { bounds, buckets, sum, count } => {
+                let mut cum = 0u64;
+                for (i, b) in buckets.iter().enumerate() {
+                    cum += b;
+                    let le = match bounds.get(i) {
+                        Some(bound) => format!("{bound}"),
+                        None => "+Inf".to_string(),
+                    };
+                    let _ = write!(out, "{}_bucket", s.name);
+                    write_labels(&mut out, &s.labels, Some(("le", le.as_str())));
+                    let _ = writeln!(out, " {cum}");
+                }
+                let _ = write!(out, "{}_sum", s.name);
+                write_labels(&mut out, &s.labels, None);
+                let _ = writeln!(out, " {sum}");
+                let _ = write!(out, "{}_count", s.name);
+                write_labels(&mut out, &s.labels, None);
+                let _ = writeln!(out, " {count}");
+            }
+            Value::Series(xs) => {
+                if !xs.is_empty() {
+                    let summ = summarize(xs.clone());
+                    for (q, v) in [("0.5", summ.p50), ("0.95", summ.p95), ("0.99", summ.p99)] {
+                        out.push_str(&s.name);
+                        write_labels(&mut out, &s.labels, Some(("quantile", q)));
+                        let _ = writeln!(out, " {v}");
+                    }
+                }
+                let _ = write!(out, "{}_sum", s.name);
+                write_labels(&mut out, &s.labels, None);
+                let _ = writeln!(out, " {}", xs.iter().sum::<f64>());
+                let _ = write!(out, "{}_count", s.name);
+                write_labels(&mut out, &s.labels, None);
+                let _ = writeln!(out, " {}", xs.len());
+            }
+        }
+    }
+    // gauge high-watermarks as their own families, after the main dump
+    let mut last: Option<&str> = None;
+    for s in &snap.samples {
+        if let Value::Gauge { peak, .. } = &s.value {
+            if last != Some(s.name.as_str()) {
+                let _ = writeln!(out, "# TYPE {}_peak gauge", s.name);
+                last = Some(s.name.as_str());
+            }
+            let _ = write!(out, "{}_peak", s.name);
+            write_labels(&mut out, &s.labels, None);
+            let _ = writeln!(out, " {peak}");
+        }
+    }
+    out
+}
+
+/// JSON snapshot: `{"metrics": [{name, labels, type, ...}, ...]}` with
+/// exact per-type payloads (series include their summary percentiles).
+pub fn json_snapshot(snap: &Snapshot) -> Json {
+    let metrics: Vec<Json> = snap
+        .samples
+        .iter()
+        .map(|s| {
+            let labels =
+                Json::Obj(s.labels.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect());
+            let mut fields = vec![
+                ("name", Json::Str(s.name.clone())),
+                ("labels", labels),
+                ("type", Json::Str(type_of(&s.value).to_string())),
+            ];
+            match &s.value {
+                Value::Counter(v) => fields.push(("value", Json::Num(*v as f64))),
+                Value::FloatCounter(v) => fields.push(("value", Json::Num(*v))),
+                Value::Gauge { value, peak } => {
+                    fields.push(("value", Json::Num(*value)));
+                    fields.push(("peak", Json::Num(*peak)));
+                }
+                Value::Histogram { bounds, buckets, sum, count } => {
+                    fields.push(("bounds", Json::arr_f64(bounds)));
+                    fields.push((
+                        "buckets",
+                        Json::Arr(buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+                    ));
+                    fields.push(("sum", Json::Num(*sum)));
+                    fields.push(("count", Json::Num(*count as f64)));
+                }
+                Value::Series(xs) => {
+                    fields.push(("count", Json::Num(xs.len() as f64)));
+                    fields.push(("sum", Json::Num(xs.iter().sum())));
+                    if !xs.is_empty() {
+                        let summ = summarize(xs.clone());
+                        for (k, v) in [
+                            ("mean", summ.mean),
+                            ("p50", summ.p50),
+                            ("p95", summ.p95),
+                            ("p99", summ.p99),
+                            ("min", summ.min),
+                            ("max", summ.max),
+                        ] {
+                            fields.push((k, Json::Num(v)));
+                        }
+                    }
+                }
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![("metrics", Json::Arr(metrics))])
+}
+
+/// Write the three exposition files for `registry` (+ optional trace):
+/// `path` (Prometheus text), `path.json`, `path.trace.jsonl`.
+pub fn write_files(registry: &Registry, trace: Option<&TraceLog>, path: &Path) -> Result<()> {
+    let mut snap = registry.snapshot();
+    snap.samples.extend(process_samples());
+    let write = |p: &Path, body: String| {
+        std::fs::write(p, body).with_context(|| format!("writing metrics file {p:?}"))
+    };
+    write(path, prometheus_text(&snap))?;
+    write(&sibling(path, "json"), json_snapshot(&snap).to_string_pretty())?;
+    if let Some(t) = trace {
+        write(&sibling(path, "trace.jsonl"), t.to_jsonl())?;
+    }
+    Ok(())
+}
+
+fn sibling(path: &Path, ext: &str) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".");
+    s.push(ext);
+    PathBuf::from(s)
+}
+
+/// Background snapshot writer: rewrites the exposition files every
+/// `interval` while the serve run is live, then once more on `finish`
+/// (the final write supersedes the hand-rolled end-of-run files).
+pub struct MetricsWriter {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<Result<()>>,
+    path: PathBuf,
+}
+
+impl MetricsWriter {
+    pub fn spawn(
+        registry: Arc<Registry>,
+        trace: Option<Arc<TraceLog>>,
+        path: PathBuf,
+        interval: Duration,
+    ) -> MetricsWriter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let out = path.clone();
+        let handle = std::thread::spawn(move || {
+            let interval = interval.max(Duration::from_millis(10));
+            loop {
+                write_files(&registry, trace.as_deref(), &out)?;
+                if stop2.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                // sleep in short slices so finish() isn't held up by a
+                // long interval; the final write happens on loop re-entry
+                let mut slept = Duration::ZERO;
+                while slept < interval && !stop2.load(Ordering::Relaxed) {
+                    let slice = (interval - slept).min(Duration::from_millis(25));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+            }
+        });
+        MetricsWriter { stop, handle, path }
+    }
+
+    /// Stop the writer, perform the final write, and return the text
+    /// dump's path.
+    pub fn finish(self) -> Result<PathBuf> {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("metrics writer thread panicked"),
+        }
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_registry() -> Registry {
+        let reg = Registry::new();
+        reg.counter("serve_requests_total", &[("tenant", "a"), ("worker", "0")]).add(4);
+        reg.gauge("sched_queue_depth", &[("shard", "0")]).set(3.0);
+        reg.histogram("serve_decode_step_ms", &[("worker", "0")], &[1.0, 10.0]).observe(2.0);
+        let s = reg.series("serve_latency_ms", &[("tenant", "a")]);
+        s.record(5.0);
+        s.record(9.0);
+        reg
+    }
+
+    #[test]
+    fn prometheus_text_exposes_sentinel_metric() {
+        let snap = demo_registry().snapshot();
+        let text = prometheus_text(&snap);
+        // the CI smoke job greps the dump for this exact family name
+        assert!(text.contains("# TYPE serve_requests_total counter"));
+        assert!(text.contains("serve_requests_total{tenant=\"a\",worker=\"0\"} 4"));
+        assert!(text.contains("serve_decode_step_ms_bucket{worker=\"0\",le=\"10\"} 1"));
+        assert!(text.contains("serve_decode_step_ms_bucket{worker=\"0\",le=\"+Inf\"} 1"));
+        assert!(text.contains("serve_latency_ms_count{tenant=\"a\"} 2"));
+        assert!(text.contains("sched_queue_depth_peak{shard=\"0\"} 3"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_carries_values() {
+        let snap = demo_registry().snapshot();
+        let j = json_snapshot(&snap);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let metrics = parsed.req("metrics").unwrap().as_arr().unwrap();
+        let counter = metrics
+            .iter()
+            .find(|m| m.get("name").and_then(|n| n.as_str().ok()) == Some("serve_requests_total"))
+            .unwrap();
+        assert_eq!(counter.req("value").unwrap().as_usize().unwrap(), 4);
+        let series = metrics
+            .iter()
+            .find(|m| m.get("name").and_then(|n| n.as_str().ok()) == Some("serve_latency_ms"))
+            .unwrap();
+        assert_eq!(series.req("count").unwrap().as_usize().unwrap(), 2);
+        assert!((series.req("mean").unwrap().as_f64().unwrap() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn write_files_produces_all_three_siblings() {
+        let reg = demo_registry();
+        let trace = TraceLog::new();
+        trace.event("enqueue", vec![("req", Json::Num(1.0))]);
+        let dir = std::env::temp_dir().join(format!("sqft_obs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.prom");
+        write_files(&reg, Some(&trace), &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("serve_requests_total"));
+        assert!(text.contains("runtime_host_upload_bytes_total"));
+        let json = std::fs::read_to_string(sibling(&path, "json")).unwrap();
+        assert!(Json::parse(&json).is_ok());
+        let jsonl = std::fs::read_to_string(sibling(&path, "trace.jsonl")).unwrap();
+        assert_eq!(jsonl.lines().count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

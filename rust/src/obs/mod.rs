@@ -1,0 +1,528 @@
+//! Process-wide serving telemetry: a metrics registry of cheap
+//! shared-atomic instruments, per-request trace spans, and exposition.
+//!
+//! The serving stack reports through per-subsystem structs
+//! (`ServeStats`, `SchedulerMetrics`, `PoolServeStats`) printed once at
+//! end of run — unusable for watching occupancy collapse, registry
+//! thrash, or aging starvation *while* they happen.  This module is the
+//! neutral instrument those reports (and live exposition) both read:
+//!
+//!   - **Instruments** ([`Counter`], [`FloatCounter`], [`Gauge`],
+//!     [`Histogram`], [`Series`]) are lock-free atomics (plus a striped
+//!     mutex for raw-sample series), safe to hit from the `!Send`
+//!     per-worker engine replicas and the dispatcher thread without
+//!     contending: counters stripe their cells by thread so two workers
+//!     never bounce one cache line.
+//!   - **One instrument, many views**: an owner (scheduler shard, decode
+//!     session) holds `Arc`s to its instruments and *registers* them in a
+//!     [`Registry`] under a stable name + label set.  `metrics()`-style
+//!     accessors and [`Registry::snapshot`] then read the *same* atomics
+//!     — per-run reports and live exposition cannot disagree, and there
+//!     is no double bookkeeping.
+//!   - **Spans** ([`TraceLog`]) record the slot lifecycle of every
+//!     request (enqueue → dispatch/steal → admit → first token →
+//!     retire/error) as JSONL events keyed by request id.
+//!   - **Exposition** ([`expose`]) renders a snapshot as Prometheus-style
+//!     text and as JSON, and a background [`expose::MetricsWriter`]
+//!     rewrites both periodically during a serve run
+//!     (`sqft serve --metrics-out PATH --metrics-interval-ms N`).
+//!
+//! Instruments are owned by their run: a serve run creates a fresh
+//! registry (via `serve::ServeObs`), so counters start at zero per run
+//! and end-of-run stats are exact.  A process that exposes successive
+//! runs under one registry simply shows Prometheus-legal counter resets.
+
+pub mod expose;
+pub mod trace;
+
+pub use trace::TraceLog;
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Stripes per counter/series: enough that a handful of worker threads
+/// rarely collide, small enough that a registry of ~30 metrics stays
+/// cache-resident.
+const STRIPES: usize = 8;
+
+static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each thread's stable stripe index (assigned on first use).
+    static THREAD_SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+fn thread_stripe() -> usize {
+    THREAD_SLOT.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed);
+            s.set(v);
+        }
+        v % STRIPES
+    })
+}
+
+/// One cache line per stripe so two workers incrementing the same
+/// counter never write-share a line.
+#[repr(align(64))]
+struct Stripe(AtomicU64);
+
+/// Monotonic event counter, striped across cache lines by thread.
+pub struct Counter {
+    stripes: Vec<Stripe>,
+}
+
+impl Counter {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Counter {
+        Counter { stripes: (0..STRIPES).map(|_| Stripe(AtomicU64::new(0))).collect() }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.stripes[thread_stripe()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Monotonic f64 accumulator (CAS loop over the bit pattern) for sums
+/// that aren't integral — e.g. the scheduler's batch-fill ratios.
+pub struct FloatCounter {
+    bits: AtomicU64,
+}
+
+impl FloatCounter {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> FloatCounter {
+        FloatCounter { bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn add(&self, v: f64) {
+        let _ = self.bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+            Some((f64::from_bits(b) + v).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Last-write-wins level (occupancy, queue depth, resident bytes) with a
+/// high-watermark: `peak()` is the largest value ever `set`/`add`ed —
+/// how `max_queue_depth` survives the end-of-run snapshot.  Values are
+/// assumed non-negative (the watermark starts at 0).
+pub struct Gauge {
+    bits: AtomicU64,
+    peak_bits: AtomicU64,
+}
+
+impl Gauge {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0f64.to_bits()), peak_bits: AtomicU64::new(0f64.to_bits()) }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+        let _ = self.peak_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| {
+            if v > f64::from_bits(b) { Some(v.to_bits()) } else { None }
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    pub fn peak(&self) -> f64 {
+        f64::from_bits(self.peak_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: atomic per-bucket counts over caller-chosen
+/// upper bounds (an implicit `+Inf` bucket catches the tail).  The cheap
+/// instrument for hot-path observations (decode-step latency, upload
+/// bytes per step) where raw samples would cost allocation per forward.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    sum: FloatCounter,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum: FloatCounter::new(),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let mut i = 0;
+        while i < self.bounds.len() && v > self.bounds[i] {
+            i += 1;
+        }
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.sum.add(v);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum.get()
+    }
+}
+
+/// Raw-sample series for per-request observations (latency, TTFT, queue
+/// wait) where the reports need *exact* percentiles, not bucket edges.
+/// Pushes go to a per-thread-striped mutex lane — requests are orders of
+/// magnitude rarer than decode steps, so a short lock is fine.
+pub struct Series {
+    lanes: Vec<Mutex<Vec<f64>>>,
+}
+
+impl Series {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Series {
+        Series { lanes: (0..STRIPES).map(|_| Mutex::new(Vec::new())).collect() }
+    }
+
+    pub fn record(&self, v: f64) {
+        self.lanes[thread_stripe()].lock().unwrap().push(v);
+    }
+
+    /// All samples recorded so far (order unspecified across threads).
+    pub fn samples(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for lane in &self.lanes {
+            out.extend_from_slice(&lane.lock().unwrap());
+        }
+        out
+    }
+
+    pub fn count(&self) -> usize {
+        self.lanes.iter().map(|l| l.lock().unwrap().len()).sum()
+    }
+}
+
+/// A registered instrument (shared handle; the registry and every owner
+/// hold the same `Arc`, so all views read the same storage).
+#[derive(Clone)]
+pub enum Instrument {
+    Counter(Arc<Counter>),
+    FloatCounter(Arc<FloatCounter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+    Series(Arc<Series>),
+}
+
+type Key = (String, Vec<(String, String)>);
+
+fn key_of(name: &str, labels: &[(&str, &str)]) -> Key {
+    let mut l: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    l.sort();
+    (name.to_string(), l)
+}
+
+/// Name + label-set → instrument map.  `counter`/`gauge`/… are
+/// get-or-create: the first caller allocates, later callers (and the
+/// snapshot) share the same atomics.  `Sync`, so the exposition writer
+/// thread snapshots while workers record.
+pub struct Registry {
+    metrics: RwLock<BTreeMap<Key, Instrument>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { metrics: RwLock::new(BTreeMap::new()) }
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Instrument,
+    ) -> Instrument {
+        let key = key_of(name, labels);
+        if let Some(m) = self.metrics.read().unwrap().get(&key) {
+            return m.clone();
+        }
+        self.metrics.write().unwrap().entry(key).or_insert_with(make).clone()
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.get_or_insert(name, labels, || Instrument::Counter(Arc::new(Counter::new()))) {
+            Instrument::Counter(c) => c,
+            _ => panic!("metric '{name}' is registered with a different type"),
+        }
+    }
+
+    pub fn float_counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<FloatCounter> {
+        match self
+            .get_or_insert(name, labels, || Instrument::FloatCounter(Arc::new(FloatCounter::new())))
+        {
+            Instrument::FloatCounter(c) => c,
+            _ => panic!("metric '{name}' is registered with a different type"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.get_or_insert(name, labels, || Instrument::Gauge(Arc::new(Gauge::new()))) {
+            Instrument::Gauge(g) => g,
+            _ => panic!("metric '{name}' is registered with a different type"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)], bounds: &[f64]) -> Arc<Histogram> {
+        match self
+            .get_or_insert(name, labels, || Instrument::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Instrument::Histogram(h) => h,
+            _ => panic!("metric '{name}' is registered with a different type"),
+        }
+    }
+
+    pub fn series(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Series> {
+        match self.get_or_insert(name, labels, || Instrument::Series(Arc::new(Series::new()))) {
+            Instrument::Series(s) => s,
+            _ => panic!("metric '{name}' is registered with a different type"),
+        }
+    }
+
+    /// Point-in-time copy of every registered instrument's state, in
+    /// stable `(name, labels)` order.
+    pub fn snapshot(&self) -> Snapshot {
+        let metrics = self.metrics.read().unwrap();
+        let samples = metrics
+            .iter()
+            .map(|((name, labels), m)| Sample {
+                name: name.clone(),
+                labels: labels.clone(),
+                value: match m {
+                    Instrument::Counter(c) => Value::Counter(c.get()),
+                    Instrument::FloatCounter(c) => Value::FloatCounter(c.get()),
+                    Instrument::Gauge(g) => Value::Gauge { value: g.get(), peak: g.peak() },
+                    Instrument::Histogram(h) => Value::Histogram {
+                        bounds: h.bounds.clone(),
+                        buckets: h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+                        sum: h.sum(),
+                        count: h.count(),
+                    },
+                    Instrument::Series(s) => Value::Series(s.samples()),
+                },
+            })
+            .collect();
+        Snapshot { samples }
+    }
+}
+
+/// One instrument's state at snapshot time.
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: Value,
+}
+
+impl Sample {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+pub enum Value {
+    Counter(u64),
+    FloatCounter(f64),
+    Gauge { value: f64, peak: f64 },
+    Histogram { bounds: Vec<f64>, buckets: Vec<u64>, sum: f64, count: u64 },
+    Series(Vec<f64>),
+}
+
+impl Value {
+    /// A single scalar per instrument, used by the `sum*` helpers:
+    /// counters report their count, gauges their current value,
+    /// histograms their sum, series their sample sum.
+    fn scalar(&self) -> f64 {
+        match self {
+            Value::Counter(v) => *v as f64,
+            Value::FloatCounter(v) => *v,
+            Value::Gauge { value, .. } => *value,
+            Value::Histogram { sum, .. } => *sum,
+            Value::Series(xs) => xs.iter().sum(),
+        }
+    }
+}
+
+/// The view side of the registry: aggregation helpers the stats structs
+/// (`ServeStats`, `PoolServeStats`) are derived through.
+pub struct Snapshot {
+    pub samples: Vec<Sample>,
+}
+
+impl Snapshot {
+    fn named(&self, name: &str) -> impl Iterator<Item = &Sample> {
+        self.samples.iter().filter(move |s| s.name == name)
+    }
+
+    /// Sum a metric's scalar across every label combination.
+    pub fn sum(&self, name: &str) -> f64 {
+        self.named(name).map(|s| s.value.scalar()).sum()
+    }
+
+    /// Sum a metric's scalar grouped by one label's values.
+    pub fn sum_by(&self, name: &str, label: &str) -> BTreeMap<String, f64> {
+        let mut out = BTreeMap::new();
+        for s in self.named(name) {
+            if let Some(v) = s.label(label) {
+                *out.entry(v.to_string()).or_insert(0.0) += s.value.scalar();
+            }
+        }
+        out
+    }
+
+    /// Concatenate a series metric's samples grouped by one label.
+    pub fn series_by(&self, name: &str, label: &str) -> BTreeMap<String, Vec<f64>> {
+        let mut out: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for s in self.named(name) {
+            if let (Some(l), Value::Series(xs)) = (s.label(label), &s.value) {
+                out.entry(l.to_string()).or_default().extend_from_slice(xs);
+            }
+        }
+        out
+    }
+
+    /// Largest current value of a gauge across label combinations.
+    pub fn gauge_max(&self, name: &str) -> f64 {
+        self.named(name)
+            .filter_map(|s| match &s.value {
+                Value::Gauge { value, .. } => Some(*value),
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Largest high-watermark of a gauge across label combinations.
+    pub fn gauge_peak_max(&self, name: &str) -> f64 {
+        self.named(name)
+            .filter_map(|s| match &s.value {
+                Value::Gauge { peak, .. } => Some(*peak),
+                _ => None,
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Arc::new(Counter::new());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = c.clone();
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn float_counter_accumulates_under_contention() {
+        let c = Arc::new(FloatCounter::new());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = c.clone();
+                scope.spawn(move || {
+                    for _ in 0..100 {
+                        c.add(0.5);
+                    }
+                });
+            }
+        });
+        assert!((c.get() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let g = Gauge::new();
+        g.set(3.0);
+        g.set(7.0);
+        g.set(2.0);
+        assert_eq!(g.get(), 2.0);
+        assert_eq!(g.peak(), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_le_bounds() {
+        let h = Histogram::new(&[1.0, 10.0]);
+        for v in [0.5, 1.0, 2.0, 100.0] {
+            h.observe(v);
+        }
+        let counts: Vec<u64> =
+            h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        assert_eq!(counts, vec![2, 1, 1]); // le=1, le=10, +Inf
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 103.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_get_or_create_shares_storage() {
+        let reg = Registry::new();
+        let a = reg.counter("x_total", &[("tenant", "a")]);
+        let b = reg.counter("x_total", &[("tenant", "a")]);
+        assert!(Arc::ptr_eq(&a, &b), "same name+labels must share one instrument");
+        a.add(3);
+        assert_eq!(b.get(), 3);
+        let other = reg.counter("x_total", &[("tenant", "b")]);
+        assert_eq!(other.get(), 0);
+    }
+
+    #[test]
+    fn snapshot_sums_and_groups() {
+        let reg = Registry::new();
+        reg.counter("req_total", &[("tenant", "a"), ("worker", "0")]).add(2);
+        reg.counter("req_total", &[("tenant", "a"), ("worker", "1")]).add(3);
+        reg.counter("req_total", &[("tenant", "b"), ("worker", "0")]).add(5);
+        reg.series("lat_ms", &[("tenant", "a")]).record(4.0);
+        reg.gauge("depth", &[("shard", "0")]).set(9.0);
+        reg.gauge("depth", &[("shard", "0")]).set(1.0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.sum("req_total") as u64, 10);
+        let by_tenant = snap.sum_by("req_total", "tenant");
+        assert_eq!(*by_tenant.get("a").unwrap() as u64, 5);
+        assert_eq!(*by_tenant.get("b").unwrap() as u64, 5);
+        let by_worker = snap.sum_by("req_total", "worker");
+        assert_eq!(*by_worker.get("0").unwrap() as u64, 7);
+        assert_eq!(snap.series_by("lat_ms", "tenant").get("a").unwrap(), &vec![4.0]);
+        assert_eq!(snap.gauge_max("depth"), 1.0);
+        assert_eq!(snap.gauge_peak_max("depth"), 9.0);
+    }
+}

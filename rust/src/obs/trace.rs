@@ -1,0 +1,94 @@
+//! Per-request trace spans: a structured JSONL event log following the
+//! slot lifecycle (enqueue → dispatch/steal → admit → first token →
+//! retire/error).
+//!
+//! Events are preformatted into JSON lines at emit time (requests are
+//! rare relative to decode forwards, so per-event allocation is cheap)
+//! and buffered behind one mutex; the exposition writer rewrites the
+//! `.trace.jsonl` file from the buffer periodically and at run end.
+//!
+//! Every event carries `ev` (the phase name) and `t_ms` (milliseconds
+//! since the log was created); phase-specific fields — `req`, `tenant`,
+//! `worker`, `slot`, `batch`, `stolen`, `queue_ms`, `ttft_ms`,
+//! `latency_ms`, `tokens`, `error` — come from the serve layer.  Keys
+//! are emitted in sorted order (the JSON layer stores objects as
+//! `BTreeMap`), so the log is stable and grep-able.
+
+use crate::util::json::Json;
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub struct TraceLog {
+    epoch: Instant,
+    lines: Mutex<Vec<String>>,
+}
+
+impl TraceLog {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> TraceLog {
+        TraceLog { epoch: Instant::now(), lines: Mutex::new(Vec::new()) }
+    }
+
+    /// Record one event.  `fields` are appended to the standard
+    /// `ev`/`t_ms` pair; duplicate keys keep the caller's value.
+    pub fn event(&self, ev: &str, mut fields: Vec<(&str, Json)>) {
+        let t_ms = self.epoch.elapsed().as_secs_f64() * 1e3;
+        fields.push(("ev", Json::Str(ev.to_string())));
+        fields.push(("t_ms", Json::Num(t_ms)));
+        let line = Json::obj(fields).to_string();
+        self.lines.lock().unwrap().push(line);
+    }
+
+    /// Events recorded so far, one JSON document per line.
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The whole log as one JSONL string (trailing newline included when
+    /// non-empty).
+    pub fn to_jsonl(&self) -> String {
+        let lines = self.lines.lock().unwrap();
+        let mut out = String::new();
+        for l in lines.iter() {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_round_trip_as_json_lines() {
+        let log = TraceLog::new();
+        log.event(
+            "admit",
+            vec![
+                ("req", Json::Num(7.0)),
+                ("tenant", Json::Str("a".into())),
+                ("slot", Json::Num(2.0)),
+            ],
+        );
+        log.event("retire", vec![("req", Json::Num(7.0)), ("tokens", Json::Num(3.0))]);
+        assert_eq!(log.len(), 2);
+        let lines = log.lines();
+        let first = Json::parse(&lines[0]).unwrap();
+        assert_eq!(first.req("ev").unwrap().as_str().unwrap(), "admit");
+        assert_eq!(first.req("req").unwrap().as_usize().unwrap(), 7);
+        assert!(first.req("t_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let second = Json::parse(&lines[1]).unwrap();
+        assert_eq!(second.req("tokens").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(log.to_jsonl().lines().count(), 2);
+    }
+}

@@ -50,21 +50,28 @@ pub mod pool;
 pub mod registry;
 pub mod scheduler;
 
-pub use pool::{benchmark_pool, serve_pool, EngineSpec, PoolOpts, PoolServeStats, WorkerStats};
+pub use pool::{
+    benchmark_pool, benchmark_pool_obs, serve_pool, serve_pool_obs, EngineSpec, PoolOpts,
+    PoolServeStats, WorkerStats,
+};
 pub use registry::{load_adapter_dir, AdapterEntry, AdapterRegistry, SharedAdapterSource};
 pub use scheduler::{Request, Scheduler, SchedulerMetrics, SchedulerOpts, ShardedScheduler};
 
 use crate::data::Tokenizer;
 use crate::model::ParamSet;
 use crate::nls::{Config, SearchSpace};
+use crate::obs::{Counter, Gauge, Histogram, Registry, Series, TraceLog};
 use crate::report::Table;
 use crate::runtime::{args::build_args, DeviceStore, Runtime};
+use crate::util::json::Json;
 use crate::util::{summarize, Summary};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::Cell;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Stats label for the merged / no-adapter fast path.
@@ -589,7 +596,7 @@ impl MultiServeStats {
         let mut t = Table::new(
             "Multi-tenant serving",
             &[
-                "tenant", "served", "errors", "req/s", "mean ms", "p50 ms", "p95 ms",
+                "tenant", "served", "errors", "req/s", "mean ms", "p50 ms", "p95 ms", "p99 ms",
                 "ttft ms", "queue ms",
             ],
         );
@@ -606,6 +613,7 @@ impl MultiServeStats {
                 summ(&s.latency_ms, |l| l.mean),
                 summ(&s.latency_ms, |l| l.p50),
                 summ(&s.latency_ms, |l| l.p95),
+                summ(&s.latency_ms, |l| l.p99),
                 summ(&s.ttft_ms, |l| l.mean),
                 summ(&s.queue_ms, |l| l.mean),
             ]
@@ -645,71 +653,383 @@ impl MultiServeStats {
     }
 }
 
-#[derive(Default)]
-pub(crate) struct Tally {
-    pub(crate) served: usize,
-    pub(crate) errors: usize,
-    pub(crate) latencies: Vec<f64>,
-    pub(crate) ttfts: Vec<f64>,
-    pub(crate) queue_waits: Vec<f64>,
+/// Decode-step latency buckets (ms) for `serve_decode_step_ms`.
+const DECODE_STEP_MS_BOUNDS: &[f64] =
+    &[0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0];
+
+/// Per-step upload-bytes buckets for `runtime_upload_step_bytes` (0 = the
+/// device-resident steady state where nothing but tokens moves).
+const UPLOAD_STEP_BYTES_BOUNDS: &[f64] =
+    &[0.0, 4096.0, 65536.0, 1048576.0, 16777216.0, 268435456.0];
+
+/// One serve run's observability context: a fresh metrics [`Registry`]
+/// plus (optionally) a [`TraceLog`] of per-request slot-lifecycle spans.
+///
+/// Cloned into the dispatcher and every worker; all clones share the same
+/// registry, so the end-of-run stats ([`finish_multi_obs`]), the live
+/// exposition writer, and `metrics()`-style accessors read the *same*
+/// instruments.  A `disabled()` context still hands out recorders, but
+/// every record call early-returns — the uninstrumented baseline for the
+/// overhead bench.
+#[derive(Clone)]
+pub struct ServeObs {
+    registry: Arc<Registry>,
+    trace: Option<Arc<TraceLog>>,
+    enabled: bool,
+    /// monotonically numbers dispatched batches across workers so trace
+    /// spans can attribute requests to (worker, batch) pairs
+    batch_seq: Arc<AtomicU64>,
 }
 
-impl Tally {
-    /// Fold another worker's tally for the same tenant into this one.
-    pub(crate) fn merge(&mut self, other: Tally) {
-        self.served += other.served;
-        self.errors += other.errors;
-        self.latencies.extend(other.latencies);
-        self.ttfts.extend(other.ttfts);
-        self.queue_waits.extend(other.queue_waits);
+impl Default for ServeObs {
+    fn default() -> Self {
+        ServeObs::new()
+    }
+}
+
+impl ServeObs {
+    /// Metrics only — counters/gauges/histograms, no per-request trace.
+    pub fn new() -> ServeObs {
+        ServeObs {
+            registry: Arc::new(Registry::new()),
+            trace: None,
+            enabled: true,
+            batch_seq: Arc::new(AtomicU64::new(0)),
+        }
     }
 
-    fn finish(self, wall: f64) -> ServeStats {
-        let summ = |xs: Vec<f64>| if xs.is_empty() { None } else { Some(summarize(xs)) };
-        ServeStats {
-            served: self.served,
-            errors: self.errors,
-            wall_secs: wall,
-            throughput: self.served as f64 / wall.max(1e-9),
-            latency_ms: summ(self.latencies),
-            ttft_ms: summ(self.ttfts),
-            queue_ms: summ(self.queue_waits),
-            resident_weight_bytes: None,
+    /// Metrics plus a JSONL trace of request lifecycle events.
+    pub fn with_trace() -> ServeObs {
+        ServeObs { trace: Some(Arc::new(TraceLog::new())), ..ServeObs::new() }
+    }
+
+    /// No-op context: every record call early-returns.  The registry is a
+    /// throwaway so the stats assembly still works (and reports zeros).
+    pub fn disabled() -> ServeObs {
+        ServeObs { enabled: false, ..ServeObs::new() }
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    pub fn trace(&self) -> Option<&Arc<TraceLog>> {
+        self.trace.as_ref()
+    }
+
+    fn tenant_key(id: &Option<String>) -> &str {
+        id.as_deref().unwrap_or(MERGED_ID)
+    }
+
+    /// A request entered the serving endpoint (dispatcher side).
+    pub(crate) fn enqueue(&self, req: &Request) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(t) = &self.trace {
+            t.event(
+                "enqueue",
+                vec![
+                    ("req", Json::Num(req.id as f64)),
+                    ("tenant", Json::Str(Self::tenant_key(&req.adapter_id).to_string())),
+                ],
+            );
+        }
+    }
+
+    /// A scheduler batch was handed to `worker` (stolen = pulled from
+    /// another shard's queue).  One batch id covers all its requests.
+    pub(crate) fn dispatch(
+        &self,
+        id: &Option<String>,
+        worker: usize,
+        reqs: &[Request],
+        stolen: bool,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let batch = self.batch_seq.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = &self.trace {
+            for req in reqs {
+                t.event(
+                    "dispatch",
+                    vec![
+                        ("req", Json::Num(req.id as f64)),
+                        ("tenant", Json::Str(Self::tenant_key(id).to_string())),
+                        ("worker", Json::Num(worker as f64)),
+                        ("batch", Json::Num(batch as f64)),
+                        ("stolen", Json::Bool(stolen)),
+                    ],
+                );
+            }
+        }
+    }
+
+    /// Per-(tenant, worker) instrument bundle for one decode session.
+    pub(crate) fn recorder(&self, id: &Option<String>, worker: usize) -> SessionRecorder {
+        let tenant = Self::tenant_key(id).to_string();
+        let w = worker.to_string();
+        let tw = [("tenant", tenant.as_str()), ("worker", w.as_str())];
+        let tl = [("tenant", tenant.as_str())];
+        let wl = [("worker", w.as_str())];
+        let reg = &self.registry;
+        SessionRecorder {
+            enabled: self.enabled,
+            trace: self.trace.clone(),
+            worker,
+            requests: reg.counter("serve_requests_total", &tw),
+            errors: reg.counter("serve_errors_total", &tw),
+            tokens: reg.counter("serve_tokens_total", &tw),
+            latency: reg.series("serve_latency_ms", &tl),
+            ttft: reg.series("serve_ttft_ms", &tl),
+            queue: reg.series("serve_queue_ms", &tl),
+            decode_steps: reg.counter("serve_decode_steps_total", &wl),
+            decode_step_ms: reg.histogram("serve_decode_step_ms", &wl, DECODE_STEP_MS_BOUNDS),
+            uploads: reg.counter("runtime_uploads_total", &wl),
+            upload_bytes: reg.counter("runtime_upload_bytes_total", &wl),
+            upload_step_bytes: reg.histogram(
+                "runtime_upload_step_bytes",
+                &wl,
+                UPLOAD_STEP_BYTES_BOUNDS,
+            ),
+            occupied: reg.gauge("serve_slots_occupied", &wl),
+            tenant: tenant.clone(),
+        }
+    }
+
+    /// Static per-worker levels, set once after engine setup.
+    pub(crate) fn set_worker_gauges(&self, worker: usize, capacity: usize, resident_bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        let w = worker.to_string();
+        let wl = [("worker", w.as_str())];
+        self.registry.gauge("serve_slots_capacity", &wl).set(capacity as f64);
+        self.registry.gauge("serve_resident_weight_bytes", &wl).set(resident_bytes as f64);
+    }
+
+    /// A pool worker's engine replica failed to set up.
+    pub(crate) fn setup_failure(&self, worker: usize) {
+        if !self.enabled {
+            return;
+        }
+        let w = worker.to_string();
+        self.registry.counter("pool_setup_failures_total", &[("worker", w.as_str())]).inc();
+    }
+
+    /// A worker started a decode session (stolen = batch came from
+    /// another shard's queue).
+    pub(crate) fn session_start(&self, worker: usize, stolen: bool) {
+        if !self.enabled {
+            return;
+        }
+        let w = worker.to_string();
+        let wl = [("worker", w.as_str())];
+        self.registry.counter("serve_sessions_total", &wl).inc();
+        if stolen {
+            self.registry.counter("serve_stolen_sessions_total", &wl).inc();
         }
     }
 }
 
-/// Assemble the per-run report from merged tenant tallies (shared by the
-/// single-worker router and the worker pool).
-pub(crate) fn finish_multi(
-    tallies: BTreeMap<String, Tally>,
+/// The decode loop's hot-path handle: pre-resolved `Arc`s to every
+/// instrument one (tenant, worker) session touches, so recording is a few
+/// relaxed atomic ops with no registry lookups per forward.
+pub(crate) struct SessionRecorder {
+    enabled: bool,
+    trace: Option<Arc<TraceLog>>,
+    tenant: String,
+    worker: usize,
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    tokens: Arc<Counter>,
+    latency: Arc<Series>,
+    ttft: Arc<Series>,
+    queue: Arc<Series>,
+    decode_steps: Arc<Counter>,
+    decode_step_ms: Arc<Histogram>,
+    uploads: Arc<Counter>,
+    upload_bytes: Arc<Counter>,
+    upload_step_bytes: Arc<Histogram>,
+    occupied: Arc<Gauge>,
+}
+
+impl SessionRecorder {
+    pub(crate) fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Request admitted into a decode slot.
+    pub(crate) fn admit(&self, req: &Request, slot: usize, queue_ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.queue.record(queue_ms);
+        if let Some(t) = &self.trace {
+            t.event(
+                "admit",
+                vec![
+                    ("req", Json::Num(req.id as f64)),
+                    ("tenant", Json::Str(self.tenant.clone())),
+                    ("worker", Json::Num(self.worker as f64)),
+                    ("slot", Json::Num(slot as f64)),
+                    ("queue_ms", Json::Num(queue_ms)),
+                ],
+            );
+        }
+    }
+
+    /// Request's slot went through its first forward.
+    pub(crate) fn first_token(&self, req: &Request, ttft_ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.ttft.record(ttft_ms);
+        if let Some(t) = &self.trace {
+            t.event(
+                "first_token",
+                vec![("req", Json::Num(req.id as f64)), ("ttft_ms", Json::Num(ttft_ms))],
+            );
+        }
+    }
+
+    /// Request completed; `tokens` = forwards its slot went through.
+    pub(crate) fn retire(&self, req: &Request, slot: usize, tokens: usize, latency_ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.requests.inc();
+        self.tokens.add(tokens as u64);
+        self.latency.record(latency_ms);
+        if let Some(t) = &self.trace {
+            t.event(
+                "retire",
+                vec![
+                    ("req", Json::Num(req.id as f64)),
+                    ("tenant", Json::Str(self.tenant.clone())),
+                    ("worker", Json::Num(self.worker as f64)),
+                    ("slot", Json::Num(slot as f64)),
+                    ("tokens", Json::Num(tokens as f64)),
+                    ("latency_ms", Json::Num(latency_ms)),
+                ],
+            );
+        }
+    }
+
+    /// Request failed.  `tokens` counts forwards an in-flight slot already
+    /// completed before the failure, so `serve_tokens_total` stays equal
+    /// to occupied-slot-forwards even on a poisoned session.
+    pub(crate) fn error(&self, req: &Request, tokens: usize, error: &str) {
+        if !self.enabled {
+            return;
+        }
+        self.errors.inc();
+        if tokens > 0 {
+            self.tokens.add(tokens as u64);
+        }
+        if let Some(t) = &self.trace {
+            t.event(
+                "error",
+                vec![
+                    ("req", Json::Num(req.id as f64)),
+                    ("tenant", Json::Str(self.tenant.clone())),
+                    ("error", Json::Str(error.to_string())),
+                    ("tokens", Json::Num(tokens as f64)),
+                ],
+            );
+        }
+    }
+
+    /// One decode forward: latency, occupancy level, and what the step
+    /// moved host→device (token-batch upload flag + byte delta).
+    pub(crate) fn step(&self, step_ms: f64, active: usize, uploaded: bool, upload_bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.decode_steps.inc();
+        self.decode_step_ms.observe(step_ms);
+        self.occupied.set(active as f64);
+        self.upload_step_bytes.observe(upload_bytes as f64);
+        if uploaded {
+            self.uploads.inc();
+        }
+        if upload_bytes > 0 {
+            self.upload_bytes.add(upload_bytes);
+        }
+    }
+}
+
+/// Assemble the per-run report from a registry snapshot (shared by the
+/// single-worker router and the worker pool).  `ServeStats` rows are pure
+/// *views* over the same instruments the live exposition reads — there is
+/// no second bookkeeping path to drift from it.
+pub(crate) fn finish_multi_obs(
+    obs: &ServeObs,
     wall: f64,
     scheduler: SchedulerMetrics,
-    decode_steps: usize,
-    slot_steps: usize,
     capacity: usize,
 ) -> MultiServeStats {
-    let mut total = Tally::default();
+    let snap = obs.registry().snapshot();
+    let served = snap.sum_by("serve_requests_total", "tenant");
+    let errors = snap.sum_by("serve_errors_total", "tenant");
+    let mut lat = snap.series_by("serve_latency_ms", "tenant");
+    let mut ttft = snap.series_by("serve_ttft_ms", "tenant");
+    let mut queue = snap.series_by("serve_queue_ms", "tenant");
+    let mut tenants: Vec<String> = served.keys().chain(errors.keys()).cloned().collect();
+    tenants.sort();
+    tenants.dedup();
+    let summ = |xs: Vec<f64>| if xs.is_empty() { None } else { Some(summarize(xs)) };
     let mut per_tenant = Vec::new();
-    for (id, tally) in tallies {
-        total.served += tally.served;
-        total.errors += tally.errors;
-        total.latencies.extend_from_slice(&tally.latencies);
-        total.ttfts.extend_from_slice(&tally.ttfts);
-        total.queue_waits.extend_from_slice(&tally.queue_waits);
-        per_tenant.push((id, tally.finish(wall)));
+    let (mut tot_served, mut tot_errors) = (0usize, 0usize);
+    let (mut tot_lat, mut tot_ttft, mut tot_queue) = (Vec::new(), Vec::new(), Vec::new());
+    for id in tenants {
+        let s = served.get(&id).copied().unwrap_or(0.0) as usize;
+        let e = errors.get(&id).copied().unwrap_or(0.0) as usize;
+        let l = lat.remove(&id).unwrap_or_default();
+        let t = ttft.remove(&id).unwrap_or_default();
+        let q = queue.remove(&id).unwrap_or_default();
+        tot_served += s;
+        tot_errors += e;
+        tot_lat.extend_from_slice(&l);
+        tot_ttft.extend_from_slice(&t);
+        tot_queue.extend_from_slice(&q);
+        per_tenant.push((
+            id,
+            ServeStats {
+                served: s,
+                errors: e,
+                wall_secs: wall,
+                throughput: s as f64 / wall.max(1e-9),
+                latency_ms: summ(l),
+                ttft_ms: summ(t),
+                queue_ms: summ(q),
+                resident_weight_bytes: None,
+            },
+        ));
     }
+    let decode_steps = snap.sum("serve_decode_steps_total") as usize;
+    let generated_tokens = snap.sum("serve_tokens_total") as usize;
     MultiServeStats {
-        total: total.finish(wall),
+        total: ServeStats {
+            served: tot_served,
+            errors: tot_errors,
+            wall_secs: wall,
+            throughput: tot_served as f64 / wall.max(1e-9),
+            latency_ms: summ(tot_lat),
+            ttft_ms: summ(tot_ttft),
+            queue_ms: summ(tot_queue),
+            resident_weight_bytes: None,
+        },
         per_tenant,
         scheduler,
         decode_steps,
         occupancy: if decode_steps == 0 {
             0.0
         } else {
-            slot_steps as f64 / (decode_steps * capacity.max(1)) as f64
+            generated_tokens as f64 / (decode_steps * capacity.max(1)) as f64
         },
-        generated_tokens: slot_steps,
+        generated_tokens,
     }
 }
 
@@ -720,8 +1040,12 @@ pub(crate) fn finish_multi(
 /// current free-slot count — the single-worker router drains its request
 /// channel and asks its scheduler there; pool workers ask the sharded
 /// scheduler (which applies the home shard's aging hold).  A failed
-/// forward poisons everything still in flight or waiting.  Returns
-/// `(forwards, occupied-slot-forwards)` for occupancy accounting.
+/// forward poisons everything still in flight or waiting.
+///
+/// All accounting flows through `rec` — a request's token count is the
+/// number of forwards between its admission and retirement, so summed
+/// retire (+ error) tokens equal the session's occupied-slot-forwards
+/// exactly, even when a failure poisons slots mid-flight.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_decode_session(
     engine: &Engine,
@@ -731,22 +1055,24 @@ pub(crate) fn run_decode_session(
     host_sets: &[&ParamSet],
     eval_kind: &str,
     refill: &mut dyn FnMut(&Option<String>, usize) -> Vec<Request>,
-    tally: &mut Tally,
-) -> (usize, usize) {
+    rec: &SessionRecorder,
+) {
     let mut session = match engine.begin_decode() {
         Ok(s) => s,
         Err(e) => {
             let msg = format!("{e:#}");
             for req in reqs {
-                tally.errors += 1;
+                rec.error(&req, 0, &msg);
                 let _ = req.reply.send(Err(anyhow!(msg.clone())));
             }
-            return (0, 0);
+            return;
         }
     };
-    // in-flight request per slot; true = its row hasn't been through a
-    // forward yet (time-to-first-token pending)
-    let mut slots: Vec<Option<(Request, bool)>> = (0..session.capacity()).map(|_| None).collect();
+    // in-flight request per slot: (request, first-forward pending, session
+    // step count at admission — its token count at retire is the forwards
+    // since then)
+    let mut slots: Vec<Option<(Request, bool, usize)>> =
+        (0..session.capacity()).map(|_| None).collect();
     let mut waiting: VecDeque<Request> = reqs.into();
     let mut failure: Option<String> = None;
     loop {
@@ -756,18 +1082,23 @@ pub(crate) fn run_decode_session(
             match engine.admit(&mut session, &req.prompt, req.max_new_tokens, req.min_new_tokens)
             {
                 Ok(slot) => {
-                    tally.queue_waits.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
-                    slots[slot] = Some((req, true));
+                    rec.admit(&req, slot, req.enqueued.elapsed().as_secs_f64() * 1e3);
+                    slots[slot] = Some((req, true, session.steps()));
                 }
                 Err(e) => {
-                    tally.errors += 1;
+                    rec.error(&req, 0, &format!("{e:#}"));
                     let _ = req.reply.send(Err(e));
                 }
             }
         }
-        if session.active_slots() == 0 {
+        let active = session.active_slots();
+        if active == 0 {
             break; // nothing admitted and nothing same-tenant waiting
         }
+        // pre-step state for the step record, captured only when recording
+        let pre = rec
+            .enabled()
+            .then(|| (Instant::now(), session.uploads(), crate::runtime::thread_upload_bytes()));
         let retired = match engine.decode_step(&mut session, dev, host_sets, eval_kind) {
             Ok(r) => r,
             Err(e) => {
@@ -775,19 +1106,27 @@ pub(crate) fn run_decode_session(
                 break;
             }
         };
+        if let Some((t0, uploads_before, bytes_before)) = pre {
+            rec.step(
+                t0.elapsed().as_secs_f64() * 1e3,
+                active,
+                session.uploads() > uploads_before,
+                crate::runtime::thread_upload_bytes().saturating_sub(bytes_before),
+            );
+        }
         // every occupied row went through that forward: first tokens
         let now = Instant::now();
         for entry in slots.iter_mut().flatten() {
             if entry.1 {
                 entry.1 = false;
                 let waited = now.saturating_duration_since(entry.0.enqueued);
-                tally.ttfts.push(waited.as_secs_f64() * 1e3);
+                rec.first_token(&entry.0, waited.as_secs_f64() * 1e3);
             }
         }
         for (slot, answer) in retired {
-            if let Some((req, _)) = slots[slot].take() {
-                tally.latencies.push(req.enqueued.elapsed().as_secs_f64() * 1e3);
-                tally.served += 1;
+            if let Some((req, _, admit_steps)) = slots[slot].take() {
+                let tokens = session.steps() - admit_steps;
+                rec.retire(&req, slot, tokens, req.enqueued.elapsed().as_secs_f64() * 1e3);
                 let _ = req.reply.send(Ok(answer));
             }
         }
@@ -802,28 +1141,30 @@ pub(crate) fn run_decode_session(
     }
     if let Some(msg) = failure {
         for entry in slots.iter_mut() {
-            if let Some((req, _)) = entry.take() {
-                tally.errors += 1;
+            if let Some((req, _, admit_steps)) = entry.take() {
+                // forwards the poisoned slot did complete still count as
+                // generated tokens, so token totals stay exact
+                rec.error(&req, session.steps() - admit_steps, &msg);
                 let _ = req.reply.send(Err(anyhow!(msg.clone())));
             }
         }
         for req in waiting {
-            tally.errors += 1;
+            rec.error(&req, 0, &msg);
             let _ = req.reply.send(Err(anyhow!(msg.clone())));
         }
     }
-    (session.steps(), session.slot_steps())
 }
 
 /// One engine + one registry = a multi-tenant serving endpoint.
 pub struct Router<'a> {
     engine: Engine<'a>,
     registry: AdapterRegistry,
+    obs: Option<ServeObs>,
 }
 
 impl<'a> Router<'a> {
     pub fn new(engine: Engine<'a>, registry: AdapterRegistry) -> Router<'a> {
-        Router { engine, registry }
+        Router { engine, registry, obs: None }
     }
 
     pub fn engine(&self) -> &Engine<'a> {
@@ -832,6 +1173,16 @@ impl<'a> Router<'a> {
 
     pub fn registry_mut(&mut self) -> &mut AdapterRegistry {
         &mut self.registry
+    }
+
+    /// Install a shared observability context (metrics and optional trace)
+    /// before serving — e.g. one a [`crate::obs::expose::MetricsWriter`]
+    /// is already watching.  Without this, `serve` creates a private
+    /// metrics-only context per run.  Binds the adapter registry's
+    /// instruments immediately so registrations from now on are counted.
+    pub fn set_obs(&mut self, obs: ServeObs) {
+        self.registry.bind_obs(obs.registry(), 0);
+        self.obs = Some(obs);
     }
 
     /// Serve requests from a channel until it closes and all queues drain.
@@ -846,48 +1197,42 @@ impl<'a> Router<'a> {
     pub fn serve(&mut self, rx: Receiver<Request>, opts: SchedulerOpts) -> Result<MultiServeStats> {
         let cap = self.engine.artifact_batch()?;
         let opts = SchedulerOpts { max_batch: opts.max_batch.min(cap).max(1), ..opts };
+        let obs = match &self.obs {
+            Some(o) => o.clone(),
+            None => {
+                let o = ServeObs::new();
+                self.registry.bind_obs(o.registry(), 0);
+                o
+            }
+        };
         let mut sched = Scheduler::new(opts);
-        let mut tallies: BTreeMap<String, Tally> = BTreeMap::new();
+        sched.bind_obs(obs.registry(), 0);
+        obs.set_worker_gauges(0, cap, self.engine.resident_weight_bytes());
         let start = Instant::now();
         let mut open = true;
-        let mut decode_steps = 0usize;
-        let mut slot_steps = 0usize;
         while open || !sched.is_empty() {
             if sched.is_empty() {
                 // block for the first pending request
                 match rx.recv() {
-                    Ok(r) => sched.push(r),
+                    Ok(r) => {
+                        obs.enqueue(&r);
+                        sched.push(r);
+                    }
                     Err(_) => {
                         open = false;
                         continue;
                     }
                 }
             }
-            drain_channel(&rx, &mut sched, &mut open);
+            drain_channel(&rx, &mut sched, &mut open, &obs);
             let Some((id, reqs)) = sched.next_batch(Instant::now()) else {
                 continue;
             };
-            self.run_session(
-                id,
-                reqs,
-                &mut sched,
-                &rx,
-                &mut open,
-                &mut tallies,
-                &mut decode_steps,
-                &mut slot_steps,
-            );
+            obs.dispatch(&id, 0, &reqs, false);
+            self.run_session(id, reqs, &mut sched, &rx, &mut open, &obs);
         }
         let wall = start.elapsed().as_secs_f64();
-        let capacity = self.engine.artifact_batch()?;
-        let mut stats = finish_multi(
-            tallies,
-            wall,
-            sched.metrics().clone(),
-            decode_steps,
-            slot_steps,
-            capacity,
-        );
+        let mut stats = finish_multi_obs(&obs, wall, sched.metrics(), cap);
         stats.total.resident_weight_bytes = Some(self.engine.resident_weight_bytes());
         Ok(stats)
     }
@@ -897,7 +1242,6 @@ impl<'a> Router<'a> {
     /// tenant's queue, until the slots drain and no same-tenant work is
     /// waiting.  Registered-resident tenants take the device-cached path;
     /// host-only registrations fall back to per-forward upload.
-    #[allow(clippy::too_many_arguments)]
     fn run_session(
         &mut self,
         id: Option<String>,
@@ -905,12 +1249,10 @@ impl<'a> Router<'a> {
         sched: &mut Scheduler,
         rx: &Receiver<Request>,
         open: &mut bool,
-        tallies: &mut BTreeMap<String, Tally>,
-        decode_steps: &mut usize,
-        slot_steps: &mut usize,
+        obs: &ServeObs,
     ) {
-        let key = id.as_deref().unwrap_or(MERGED_ID).to_string();
-        let tally = tallies.entry(key).or_default();
+        let rec = obs.recorder(&id, 0);
+        obs.session_start(0, false);
         // resolve the tenant's serving state once for the whole session
         let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) =
             match &id {
@@ -926,7 +1268,7 @@ impl<'a> Router<'a> {
                     None => {
                         let msg = format!("adapter '{tid}' is not registered");
                         for req in reqs {
-                            tally.errors += 1;
+                            rec.error(&req, 0, &msg);
                             let _ = req.reply.send(Err(anyhow!(msg.clone())));
                         }
                         return;
@@ -937,22 +1279,22 @@ impl<'a> Router<'a> {
         // slots up from the tenant's own queue under the aging hold
         let engine = &self.engine;
         let mut refill = |current: &Option<String>, free: usize| {
-            drain_channel(rx, sched, open);
+            drain_channel(rx, sched, open, obs);
             sched.admit(current, Instant::now(), free)
         };
-        let (steps, slots) =
-            run_decode_session(engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, tally);
-        *decode_steps += steps;
-        *slot_steps += slots;
+        run_decode_session(engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec);
     }
 }
 
 /// Pull everything currently buffered on the request channel into the
 /// scheduler without blocking; flips `open` off when the channel closes.
-fn drain_channel(rx: &Receiver<Request>, sched: &mut Scheduler, open: &mut bool) {
+fn drain_channel(rx: &Receiver<Request>, sched: &mut Scheduler, open: &mut bool, obs: &ServeObs) {
     loop {
         match rx.try_recv() {
-            Ok(r) => sched.push(r),
+            Ok(r) => {
+                obs.enqueue(&r);
+                sched.push(r);
+            }
             Err(TryRecvError::Empty) => break,
             Err(TryRecvError::Disconnected) => {
                 *open = false;

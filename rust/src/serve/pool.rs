@@ -34,7 +34,7 @@
 
 use super::registry::{AdapterRegistry, SharedAdapterSource};
 use super::scheduler::{Request, SchedulerOpts, ShardedScheduler};
-use super::{finish_multi, run_decode_session, Engine, MultiServeStats, Tally, MERGED_ID};
+use super::{finish_multi_obs, run_decode_session, Engine, MultiServeStats, ServeObs};
 use crate::model::ParamSet;
 use crate::runtime::{DeviceStore, Runtime};
 use anyhow::{anyhow, Context, Result};
@@ -117,14 +117,11 @@ pub struct PoolServeStats {
     pub per_worker: Vec<WorkerStats>,
 }
 
-/// What a worker thread hands back at join time.
+/// What a worker thread hands back at join time.  Serving counts live in
+/// the shared [`ServeObs`] registry (one instrument, many views); only
+/// setup facts the registry doesn't carry come back through here.
 struct WorkerOutcome {
     worker: usize,
-    tallies: BTreeMap<String, Tally>,
-    sessions: usize,
-    stolen_sessions: usize,
-    decode_steps: usize,
-    slot_steps: usize,
     capacity: usize,
     resident_weight_bytes: u64,
     setup_secs: f64,
@@ -143,8 +140,21 @@ pub fn serve_pool(
     rx: Receiver<Request>,
     opts: PoolOpts,
 ) -> Result<PoolServeStats> {
+    serve_pool_obs(spec, source, rx, opts, ServeObs::new())
+}
+
+/// [`serve_pool`] with a caller-supplied observability context — e.g. one
+/// with tracing enabled, or one a `MetricsWriter` is already exposing.
+pub fn serve_pool_obs(
+    spec: &EngineSpec,
+    source: &SharedAdapterSource,
+    rx: Receiver<Request>,
+    opts: PoolOpts,
+    obs: ServeObs,
+) -> Result<PoolServeStats> {
     let workers = opts.workers.max(1);
-    let sched = ShardedScheduler::new(workers, opts.sched.clone());
+    let mut sched = ShardedScheduler::new(workers, opts.sched.clone());
+    sched.bind_obs(obs.registry());
     let start = Instant::now();
     // replicas go live together: every worker (healthy or failed) checks
     // in here after setup, so no request is served while a sibling is
@@ -154,14 +164,17 @@ pub fn serve_pool(
     let ready = Barrier::new(workers);
     let failed = AtomicUsize::new(0);
     let outcomes: Vec<WorkerOutcome> = std::thread::scope(|scope| {
-        let (sched, ready, failed) = (&sched, &ready, &failed);
+        let (sched, ready, failed, obs) = (&sched, &ready, &failed, &obs);
         let handles: Vec<_> = (0..workers)
             .map(|wid| {
-                scope.spawn(move || worker_main(wid, spec, source, sched, start, ready, failed))
+                scope.spawn(move || {
+                    worker_main(wid, spec, source, sched, start, ready, failed, obs)
+                })
             })
             .collect();
         // dispatcher: feed the shards until the producer side closes
         for req in rx.iter() {
+            obs.enqueue(&req);
             sched.push(req);
         }
         sched.close();
@@ -172,26 +185,25 @@ pub fn serve_pool(
     });
     let wall = start.elapsed().as_secs_f64();
     let capacity = outcomes.iter().map(|o| o.capacity).max().unwrap_or(0);
-    let mut tallies: BTreeMap<String, Tally> = BTreeMap::new();
-    let mut decode_steps = 0usize;
-    let mut slot_steps = 0usize;
+    // per-worker serving counts are views over the shared registry, keyed
+    // by the worker label the recorders stamped
+    let snap = obs.registry().snapshot();
+    let served_by = snap.sum_by("serve_requests_total", "worker");
+    let errors_by = snap.sum_by("serve_errors_total", "worker");
+    let sessions_by = snap.sum_by("serve_sessions_total", "worker");
+    let stolen_by = snap.sum_by("serve_stolen_sessions_total", "worker");
+    let steps_by = snap.sum_by("serve_decode_steps_total", "worker");
     let mut per_worker = Vec::with_capacity(outcomes.len());
     for o in outcomes {
-        let (mut served, mut errors) = (0usize, 0usize);
-        for (id, tally) in o.tallies {
-            served += tally.served;
-            errors += tally.errors;
-            tallies.entry(id).or_default().merge(tally);
-        }
-        decode_steps += o.decode_steps;
-        slot_steps += o.slot_steps;
+        let w = o.worker.to_string();
+        let count = |m: &BTreeMap<String, f64>| m.get(&w).copied().unwrap_or(0.0) as usize;
         per_worker.push(WorkerStats {
             worker: o.worker,
-            served,
-            errors,
-            sessions: o.sessions,
-            stolen_sessions: o.stolen_sessions,
-            decode_steps: o.decode_steps,
+            served: count(&served_by),
+            errors: count(&errors_by),
+            sessions: count(&sessions_by),
+            stolen_sessions: count(&stolen_by),
+            decode_steps: count(&steps_by),
             resident_weight_bytes: o.resident_weight_bytes,
             setup_secs: o.setup_secs,
             setup_error: o.setup_error,
@@ -202,7 +214,7 @@ pub fn serve_pool(
     // check in too — their time-to-fail gates the barrier the same way)
     let slowest_setup = per_worker.iter().map(|w| w.setup_secs).fold(0.0f64, f64::max);
     let serving_wall = wall - slowest_setup;
-    let mut serve = finish_multi(tallies, wall, sched.metrics(), decode_steps, slot_steps, capacity);
+    let mut serve = finish_multi_obs(&obs, wall, sched.metrics(), capacity);
     // per-replica figure (replicas are identical); 0 only if every worker
     // failed before building its engine
     serve.total.resident_weight_bytes =
@@ -222,6 +234,7 @@ pub fn serve_pool(
 /// *every* replica failed does the last one drain the queues with
 /// errors, so no request ever hangs and none is failed while a healthy
 /// replica could have served it.
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     wid: usize,
     spec: &EngineSpec,
@@ -230,36 +243,32 @@ fn worker_main(
     epoch: Instant,
     ready: &Barrier,
     failed: &AtomicUsize,
+    obs: &ServeObs,
 ) -> WorkerOutcome {
     let mut out = WorkerOutcome {
         worker: wid,
-        tallies: BTreeMap::new(),
-        sessions: 0,
-        stolen_sessions: 0,
-        decode_steps: 0,
-        slot_steps: 0,
         capacity: 0,
         resident_weight_bytes: 0,
         setup_secs: 0.0,
         setup_error: None,
     };
-    match worker_serve(wid, spec, source, sched, epoch, ready, &mut out) {
+    match worker_serve(wid, spec, source, sched, epoch, ready, obs, &mut out) {
         Ok(()) => {}
         Err(e) => {
             let msg = format!("worker {wid} replica setup failed: {e:#}");
             out.setup_error = Some(format!("{e:#}"));
             out.setup_secs = epoch.elapsed().as_secs_f64();
-            let all_failed =
-                failed.fetch_add(1, Ordering::SeqCst) + 1 == sched.shards();
+            obs.setup_failure(wid);
+            let all_failed = failed.fetch_add(1, Ordering::SeqCst) + 1 == sched.shards();
             ready.wait();
             if !all_failed {
                 return out; // a healthy sibling serves (and steals) instead
             }
-            while let Some((id, reqs, _stolen)) = sched.next_work(wid, Instant::now()) {
-                let key = id.as_deref().unwrap_or(MERGED_ID).to_string();
-                let tally = out.tallies.entry(key).or_default();
+            while let Some((id, reqs, stolen)) = sched.next_work(wid, Instant::now()) {
+                obs.dispatch(&id, wid, &reqs, stolen);
+                let rec = obs.recorder(&id, wid);
                 for req in reqs {
-                    tally.errors += 1;
+                    rec.error(&req, 0, &msg);
                     let _ = req.reply.send(Err(anyhow!(msg.clone())));
                 }
             }
@@ -276,6 +285,7 @@ fn worker_serve(
     sched: &ShardedScheduler,
     epoch: Instant,
     ready: &Barrier,
+    obs: &ServeObs,
     out: &mut WorkerOutcome,
 ) -> Result<()> {
     // the replica: everything below is thread-local, including the PJRT
@@ -302,30 +312,29 @@ fn worker_serve(
     rt.executable(&spec.config, &spec.eval_kind)
         .with_context(|| format!("worker {wid}: compiling '{}'", spec.eval_kind))?;
     let mut registry = AdapterRegistry::new(spec.registry_capacity.max(source.capacity()));
+    registry.bind_obs(obs.registry(), wid);
     let mut cursor = 0u64;
     source
         .sync(&mut registry, Some(&rt), &mut cursor)
         .with_context(|| format!("worker {wid}: replicating resident tenants"))?;
     out.setup_secs = epoch.elapsed().as_secs_f64();
+    obs.set_worker_gauges(wid, out.capacity, out.resident_weight_bytes);
     ready.wait(); // go live together (see serve_pool)
     while let Some((id, reqs, stolen)) = sched.next_work(wid, Instant::now()) {
-        let key = id.as_deref().unwrap_or(MERGED_ID).to_string();
-        let tally = out.tallies.entry(key).or_default();
+        obs.dispatch(&id, wid, &reqs, stolen);
+        let rec = obs.recorder(&id, wid);
         // pick up registrations/evictions before resolving the tenant; a
         // failed sync fails this batch but keeps the worker serving (the
         // unchanged cursor retries the same changes next session)
         if let Err(e) = source.sync(&mut registry, Some(&rt), &mut cursor) {
             let msg = format!("worker {wid}: syncing tenant changes: {e:#}");
             for req in reqs {
-                tally.errors += 1;
+                rec.error(&req, 0, &msg);
                 let _ = req.reply.send(Err(anyhow!(msg.clone())));
             }
             continue;
         }
-        out.sessions += 1;
-        if stolen {
-            out.stolen_sessions += 1;
-        }
+        obs.session_start(wid, stolen);
         let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) = match &id
         {
             None => (
@@ -340,7 +349,7 @@ fn worker_serve(
                 None => {
                     let msg = format!("adapter '{tid}' is not registered");
                     for req in reqs {
-                        tally.errors += 1;
+                        rec.error(&req, 0, &msg);
                         let _ = req.reply.send(Err(anyhow!(msg.clone())));
                     }
                     continue;
@@ -349,18 +358,7 @@ fn worker_serve(
         };
         let mut refill =
             |current: &Option<String>, free: usize| sched.admit(current, Instant::now(), free);
-        let (steps, slots) = run_decode_session(
-            &engine,
-            &id,
-            reqs,
-            dev,
-            &host_sets,
-            eval_kind,
-            &mut refill,
-            tally,
-        );
-        out.decode_steps += steps;
-        out.slot_steps += slots;
+        run_decode_session(&engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec);
     }
     Ok(())
 }
@@ -375,6 +373,18 @@ pub fn benchmark_pool(
     requests: Vec<(Option<String>, String)>,
     inter_arrival: Duration,
     opts: PoolOpts,
+) -> Result<PoolServeStats> {
+    benchmark_pool_obs(spec, source, requests, inter_arrival, opts, ServeObs::new())
+}
+
+/// [`benchmark_pool`] with a caller-supplied observability context.
+pub fn benchmark_pool_obs(
+    spec: &EngineSpec,
+    source: &SharedAdapterSource,
+    requests: Vec<(Option<String>, String)>,
+    inter_arrival: Duration,
+    opts: PoolOpts,
+    obs: ServeObs,
 ) -> Result<PoolServeStats> {
     let (tx, rx) = channel::<Request>();
     let producer = std::thread::spawn(move || {
@@ -393,7 +403,7 @@ pub fn benchmark_pool(
             let _ = r.recv();
         }
     });
-    let stats = serve_pool(spec, source, rx, opts);
+    let stats = serve_pool_obs(spec, source, rx, opts, obs);
     producer.join().ok();
     stats
 }

@@ -15,12 +15,13 @@
 
 use crate::model::checkpoint::{self, AdapterCkpt};
 use crate::model::ParamSet;
+use crate::obs::{Counter, Gauge, Registry};
 use crate::runtime::{DeviceStore, ModelHyper, Runtime};
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// One registered tenant: id, eval artifact kind, and the host-side
 /// per-forward input sets (`[adapters (a_/b_), rank params]`, resolved in
@@ -93,6 +94,16 @@ pub struct AdapterRegistry {
     entries: BTreeMap<String, (u64, AdapterEntry)>,
     device_sets: BTreeMap<String, DeviceStore>,
     evictions: Vec<String>,
+    obs: Option<RegistryObs>,
+}
+
+/// Registry instruments (bound per worker replica): registration and
+/// eviction event counters plus resident-state level gauges.
+struct RegistryObs {
+    registrations: Arc<Counter>,
+    evictions: Arc<Counter>,
+    resident: Arc<Gauge>,
+    resident_bytes: Arc<Gauge>,
 }
 
 fn find<'s>(sets: &'s [ParamSet], name: &str) -> Option<&'s Tensor> {
@@ -115,6 +126,38 @@ impl AdapterRegistry {
             entries: BTreeMap::new(),
             device_sets: BTreeMap::new(),
             evictions: Vec::new(),
+            obs: None,
+        }
+    }
+
+    /// Export this registry's state into a metrics registry (labelled by
+    /// `worker`, since pool replicas each carry one): registration and
+    /// eviction counters count events from now on; the resident-tenant /
+    /// resident-byte gauges reflect current contents immediately.
+    pub fn bind_obs(&mut self, reg: &Registry, worker: usize) {
+        let w = worker.to_string();
+        let l = [("worker", w.as_str())];
+        self.obs = Some(RegistryObs {
+            registrations: reg.counter("registry_registrations_total", &l),
+            evictions: reg.counter("registry_evictions_total", &l),
+            resident: reg.gauge("registry_resident_adapters", &l),
+            resident_bytes: reg.gauge("registry_resident_adapter_bytes", &l),
+        });
+        self.refresh_obs();
+    }
+
+    /// Re-level the resident gauges after any mutation: tenant count and
+    /// total host-state bytes of the registered entries (the same tensors
+    /// `register_resident` keeps device-resident).
+    fn refresh_obs(&self) {
+        if let Some(o) = &self.obs {
+            o.resident.set(self.entries.len() as f64);
+            let bytes: usize = self
+                .entries
+                .values()
+                .map(|(_, e)| e.host_sets.iter().map(|s| s.total_bytes()).sum::<usize>())
+                .sum();
+            o.resident_bytes.set(bytes as f64);
         }
     }
 
@@ -210,7 +253,11 @@ impl AdapterRegistry {
         let id = entry.id.clone();
         self.device_sets.remove(&id);
         self.entries.insert(id.clone(), (self.clock, entry));
+        if let Some(o) = &self.obs {
+            o.registrations.inc();
+        }
         if self.entries.len() <= self.capacity {
+            self.refresh_obs();
             return None;
         }
         let victim = self
@@ -223,8 +270,13 @@ impl AdapterRegistry {
             self.entries.remove(&v);
             self.device_sets.remove(&v);
             self.evictions.push(v.clone());
+            if let Some(o) = &self.obs {
+                o.evictions.inc();
+            }
+            self.refresh_obs();
             return Some(v);
         }
+        self.refresh_obs();
         None
     }
 
@@ -299,7 +351,14 @@ impl AdapterRegistry {
     /// it was resident.
     pub fn evict(&mut self, id: &str) -> bool {
         self.device_sets.remove(id);
-        self.entries.remove(id).is_some()
+        let evicted = self.entries.remove(id).is_some();
+        if evicted {
+            if let Some(o) = &self.obs {
+                o.evictions.inc();
+            }
+            self.refresh_obs();
+        }
+        evicted
     }
 
     /// Register a batch of tenants the caller is about to route traffic
@@ -349,6 +408,9 @@ impl AdapterRegistry {
                         self.entries.remove(done);
                         self.device_sets.remove(done);
                     }
+                    // rollback removals are not evictions, but the
+                    // resident gauges must re-level
+                    self.refresh_obs();
                     return Err(e.context(
                         "register_all rollback: no tenants from this batch remain resident",
                     ));

@@ -27,16 +27,23 @@
 //! The scheduler is pure bookkeeping (no runtime handles), so the policy is
 //! unit-testable without artifacts; `now` is passed in rather than sampled.
 
+use crate::obs::{Counter, FloatCounter, Gauge, Registry};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
 
 /// One inference request: a prompt routed to a registered adapter
 /// (`adapter_id: None` selects the merged / no-adapter fast path).
 pub struct Request {
+    /// Process-unique id stamped at construction; keys the trace spans
+    /// (enqueue → dispatch → admit → first token → retire) in the JSONL
+    /// event log so per-request phases can be joined across threads.
+    pub id: u64,
     pub adapter_id: Option<String>,
     pub prompt: String,
     pub reply: Sender<Result<String>>,
@@ -59,6 +66,7 @@ impl Request {
         reply: Sender<Result<String>>,
     ) -> Request {
         Request {
+            id: NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed),
             adapter_id,
             prompt,
             reply,
@@ -112,6 +120,23 @@ impl SchedulerMetrics {
         if self.batches == 0 { 0.0 } else { self.fill_sum / self.batches as f64 }
     }
 
+    /// Build the metrics view from the scheduler's live instruments.
+    /// `SchedulerMetrics` is a *snapshot*, not the source of truth — the
+    /// counters live in [`SchedInstruments`] (shared with the obs
+    /// registry when bound), so the end-of-run table and `--metrics-out`
+    /// exposition read the same atomics.
+    fn from_instruments(obs: &SchedInstruments) -> SchedulerMetrics {
+        SchedulerMetrics {
+            batches: obs.batches.get() as usize,
+            scheduled: obs.scheduled.get() as usize,
+            fill_sum: obs.fill_sum.get(),
+            max_queue_depth: obs.queue_depth.peak() as usize,
+            aged_batches: obs.aged_batches.get() as usize,
+            admitted: obs.admitted.get() as usize,
+            aging_holds: obs.aging_holds.get() as usize,
+        }
+    }
+
     /// Fold another scheduler's counters into this one (used to aggregate
     /// per-shard metrics into the pool-wide report).  Counters sum;
     /// `max_queue_depth` takes the max — i.e. the deepest any single
@@ -127,12 +152,56 @@ impl SchedulerMetrics {
     }
 }
 
+/// The scheduler's counters as shared atomic instruments.  Standalone
+/// `Arc`s by default (unit tests, no registry); [`Scheduler::bind_obs`]
+/// swaps in registry-owned instruments under the `sched_*` metric names,
+/// after which the registry snapshot and [`Scheduler::metrics`] read the
+/// same storage — one instrument, many views.
+struct SchedInstruments {
+    batches: Arc<Counter>,
+    scheduled: Arc<Counter>,
+    fill_sum: Arc<FloatCounter>,
+    /// live queue depth; its peak watermark is `max_queue_depth`
+    queue_depth: Arc<Gauge>,
+    aged_batches: Arc<Counter>,
+    admitted: Arc<Counter>,
+    aging_holds: Arc<Counter>,
+}
+
+impl SchedInstruments {
+    fn standalone() -> SchedInstruments {
+        SchedInstruments {
+            batches: Arc::new(Counter::new()),
+            scheduled: Arc::new(Counter::new()),
+            fill_sum: Arc::new(FloatCounter::new()),
+            queue_depth: Arc::new(Gauge::new()),
+            aged_batches: Arc::new(Counter::new()),
+            admitted: Arc::new(Counter::new()),
+            aging_holds: Arc::new(Counter::new()),
+        }
+    }
+
+    fn registered(reg: &Registry, shard: usize) -> SchedInstruments {
+        let shard = shard.to_string();
+        let labels = [("shard", shard.as_str())];
+        SchedInstruments {
+            batches: reg.counter("sched_batches_total", &labels),
+            scheduled: reg.counter("sched_scheduled_total", &labels),
+            fill_sum: reg.float_counter("sched_fill_sum", &labels),
+            queue_depth: reg.gauge("sched_queue_depth", &labels),
+            aged_batches: reg.counter("sched_aged_batches_total", &labels),
+            admitted: reg.counter("sched_admitted_total", &labels),
+            aging_holds: reg.counter("sched_aging_holds_total", &labels),
+        }
+    }
+}
+
 /// Per-adapter FIFO queues + the dispatch policy.
 pub struct Scheduler {
     opts: SchedulerOpts,
     queues: BTreeMap<Option<String>, VecDeque<Request>>,
     pending: usize,
-    metrics: SchedulerMetrics,
+    obs: SchedInstruments,
     /// an aging hold is in effect (dedupes `aging_holds`: the router polls
     /// `admit` after every forward, but one sustained hold is one event)
     holding: bool,
@@ -145,14 +214,21 @@ impl Scheduler {
             opts,
             queues: BTreeMap::new(),
             pending: 0,
-            metrics: SchedulerMetrics::default(),
+            obs: SchedInstruments::standalone(),
             holding: false,
         }
     }
 
+    /// Re-home the counters into `reg` (labelled `shard=<shard>`).  Call
+    /// before any traffic: binding replaces the instruments, so counts
+    /// recorded earlier stay behind in the standalone atomics.
+    pub fn bind_obs(&mut self, reg: &Registry, shard: usize) {
+        self.obs = SchedInstruments::registered(reg, shard);
+    }
+
     pub fn push(&mut self, req: Request) {
         self.pending += 1;
-        self.metrics.max_queue_depth = self.metrics.max_queue_depth.max(self.pending);
+        self.obs.queue_depth.set(self.pending as f64);
         self.queues.entry(req.adapter_id.clone()).or_default().push_back(req);
     }
 
@@ -164,8 +240,10 @@ impl Scheduler {
         self.pending == 0
     }
 
-    pub fn metrics(&self) -> &SchedulerMetrics {
-        &self.metrics
+    /// Snapshot of the scheduler counters (see
+    /// [`SchedulerMetrics::from_instruments`]).
+    pub fn metrics(&self) -> SchedulerMetrics {
+        SchedulerMetrics::from_instruments(&self.obs)
     }
 
     /// Tighten `max_batch` to `cap` (idempotent; never below 1).  The
@@ -205,7 +283,7 @@ impl Scheduler {
         // oldest request exceeded the aging bound (microsecond wait
         // differences between equally-full queues don't count)
         if fill < max_fill && wait >= aging {
-            self.metrics.aged_batches += 1;
+            self.obs.aged_batches.inc();
         }
         let q = self.queues.get_mut(&id)?;
         let n = q.len().min(self.opts.max_batch);
@@ -214,9 +292,10 @@ impl Scheduler {
             self.queues.remove(&id);
         }
         self.pending -= reqs.len();
-        self.metrics.batches += 1;
-        self.metrics.scheduled += reqs.len();
-        self.metrics.fill_sum += reqs.len() as f64 / self.opts.max_batch as f64;
+        self.obs.queue_depth.set(self.pending as f64);
+        self.obs.batches.inc();
+        self.obs.scheduled.add(reqs.len() as u64);
+        self.obs.fill_sum.add(reqs.len() as f64 / self.opts.max_batch as f64);
         Some((id, reqs))
     }
 
@@ -239,8 +318,7 @@ impl Scheduler {
         if free_slots == 0 {
             return Vec::new();
         }
-        let has_current =
-            self.queues.get(current).map(|q| !q.is_empty()).unwrap_or(false);
+        let has_current = self.queues.get(current).map(|q| !q.is_empty()).unwrap_or(false);
         if !has_current {
             return Vec::new();
         }
@@ -254,7 +332,7 @@ impl Scheduler {
         if aged_elsewhere {
             // count the hold once per episode, not once per forward polled
             if !self.holding {
-                self.metrics.aging_holds += 1;
+                self.obs.aging_holds.inc();
                 self.holding = true;
             }
             return Vec::new();
@@ -267,8 +345,9 @@ impl Scheduler {
             self.queues.remove(current);
         }
         self.pending -= reqs.len();
-        self.metrics.admitted += reqs.len();
-        self.metrics.scheduled += reqs.len();
+        self.obs.queue_depth.set(self.pending as f64);
+        self.obs.admitted.add(reqs.len() as u64);
+        self.obs.scheduled.add(reqs.len() as u64);
         reqs
     }
 }
@@ -306,8 +385,10 @@ pub struct ShardedScheduler {
     shards: Vec<Mutex<Scheduler>>,
     /// queued requests across all shards (fast idle check without locks)
     pending: AtomicUsize,
-    /// batches handed to a worker whose home shard didn't own them
-    steals: AtomicUsize,
+    /// batches handed to a worker whose home shard didn't own them, one
+    /// counter per worker (the thief) so steal *attribution* is visible;
+    /// [`ShardedScheduler::steals`] sums them
+    steal_obs: Vec<Arc<Counter>>,
     /// open flag guarded for the condvar; false once the producer closes
     gate: Mutex<bool>,
     work_ready: Condvar,
@@ -319,10 +400,25 @@ impl ShardedScheduler {
         ShardedScheduler {
             shards: (0..shards).map(|_| Mutex::new(Scheduler::new(opts.clone()))).collect(),
             pending: AtomicUsize::new(0),
-            steals: AtomicUsize::new(0),
+            steal_obs: (0..shards).map(|_| Arc::new(Counter::new())).collect(),
             gate: Mutex::new(true),
             work_ready: Condvar::new(),
         }
+    }
+
+    /// Re-home every shard's counters plus the per-worker steal counters
+    /// into `reg` (`sched_*{shard=..}`, `sched_steals_total{worker=..}`).
+    /// Call before serving starts, like [`Scheduler::bind_obs`].
+    pub fn bind_obs(&mut self, reg: &Registry) {
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            shard.get_mut().unwrap().bind_obs(reg, i);
+        }
+        self.steal_obs = (0..self.shards.len())
+            .map(|w| {
+                let w = w.to_string();
+                reg.counter("sched_steals_total", &[("worker", w.as_str())])
+            })
+            .collect();
     }
 
     pub fn shards(&self) -> usize {
@@ -338,9 +434,9 @@ impl ShardedScheduler {
         self.pending.load(Ordering::SeqCst)
     }
 
-    /// Batches taken by non-home workers so far.
+    /// Batches taken by non-home workers so far (all workers summed).
     pub fn steals(&self) -> usize {
-        self.steals.load(Ordering::SeqCst)
+        self.steal_obs.iter().map(|c| c.get() as usize).sum()
     }
 
     /// Enqueue a request on its tenant's home shard and wake a worker.
@@ -382,7 +478,7 @@ impl ShardedScheduler {
                     if let Some((id, reqs)) = got {
                         self.pending.fetch_sub(reqs.len(), Ordering::SeqCst);
                         if k > 0 {
-                            self.steals.fetch_add(1, Ordering::SeqCst);
+                            self.steal_obs[home].inc();
                         }
                         return Some((id, reqs, k > 0));
                     }
@@ -435,7 +531,7 @@ impl ShardedScheduler {
     pub fn metrics(&self) -> SchedulerMetrics {
         let mut out = SchedulerMetrics::default();
         for shard in &self.shards {
-            out.merge(shard.lock().unwrap().metrics());
+            out.merge(&shard.lock().unwrap().metrics());
         }
         out
     }
@@ -446,20 +542,15 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
-    fn req(id: Option<&str>, prompt: &str, age: Duration) -> (Request, std::sync::mpsc::Receiver<Result<String>>) {
+    fn req(
+        id: Option<&str>,
+        prompt: &str,
+        age: Duration,
+    ) -> (Request, std::sync::mpsc::Receiver<Result<String>>) {
         let (tx, rx) = channel();
-        let enqueued = Instant::now().checked_sub(age).unwrap_or_else(Instant::now);
-        (
-            Request {
-                adapter_id: id.map(|s| s.to_string()),
-                prompt: prompt.to_string(),
-                reply: tx,
-                enqueued,
-                max_new_tokens: None,
-                min_new_tokens: 0,
-            },
-            rx,
-        )
+        let mut r = Request::new(id.map(|s| s.to_string()), prompt.to_string(), tx);
+        r.enqueued = Instant::now().checked_sub(age).unwrap_or_else(Instant::now);
+        (r, rx)
     }
 
     fn opts(max_batch: usize, aging_ms: u64) -> SchedulerOpts {
@@ -750,6 +841,32 @@ mod tests {
         assert_eq!(m.batches, batches);
         assert_eq!(m.scheduled, 10);
         assert!(m.avg_fill() > 0.0);
+    }
+
+    #[test]
+    fn bound_scheduler_reports_through_registry() {
+        // after bind_obs, metrics() and the registry snapshot read the
+        // same atomics — the counters must agree exactly
+        let reg = Registry::new();
+        let mut s = ShardedScheduler::new(2, opts(2, 50));
+        s.bind_obs(&reg);
+        let mut keep = Vec::new();
+        for t in ["a", "b", "c"] {
+            for i in 0..2 {
+                let (r, k) = req(Some(t), &format!("{t}{i}"), Duration::ZERO);
+                s.push(r);
+                keep.push(k);
+            }
+        }
+        s.close();
+        while s.next_work(1, Instant::now()).is_some() {}
+        let m = s.metrics();
+        assert_eq!(m.scheduled, 6);
+        let snap = reg.snapshot();
+        assert_eq!(snap.sum("sched_batches_total") as usize, m.batches);
+        assert_eq!(snap.sum("sched_scheduled_total") as usize, m.scheduled);
+        assert_eq!(snap.gauge_peak_max("sched_queue_depth") as usize, m.max_queue_depth);
+        assert_eq!(snap.sum("sched_steals_total") as usize, s.steals());
     }
 
     #[test]

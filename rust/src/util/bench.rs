@@ -28,8 +28,8 @@ pub struct BenchReport {
 impl BenchReport {
     pub fn print(&self) {
         println!(
-            "bench {:<44} mean {:>9.3}ms  p50 {:>9.3}ms  min {:>9.3}ms  max {:>9.3}ms  (n={})",
-            self.name, self.ms.mean, self.ms.p50, self.ms.min, self.ms.max, self.iters
+            "bench {:<44} mean {:>9.3}ms  p50 {:>9.3}ms  p99 {:>9.3}ms  min {:>9.3}ms  max {:>9.3}ms  (n={})",
+            self.name, self.ms.mean, self.ms.p50, self.ms.p99, self.ms.min, self.ms.max, self.iters
         );
     }
 }
@@ -51,8 +51,12 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 }
 
 /// Throughput variant: returns items/sec from the mean.
-pub fn bench_throughput<F: FnMut() -> usize>(name: &str, warmup: usize, iters: usize,
-                                             mut f: F) -> f64 {
+pub fn bench_throughput<F: FnMut() -> usize>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> f64 {
     for _ in 0..warmup {
         f();
     }

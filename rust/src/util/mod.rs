@@ -32,8 +32,10 @@ pub struct Summary {
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub min: f64,
     pub max: f64,
+    pub count: usize,
 }
 
 pub fn summarize(mut xs: Vec<f64>) -> Summary {
@@ -41,7 +43,15 @@ pub fn summarize(mut xs: Vec<f64>) -> Summary {
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = xs.iter().sum::<f64>() / xs.len() as f64;
     let pct = |p: f64| xs[((xs.len() as f64 - 1.0) * p).round() as usize];
-    Summary { mean, p50: pct(0.5), p95: pct(0.95), min: xs[0], max: xs[xs.len() - 1] }
+    Summary {
+        mean,
+        p50: pct(0.5),
+        p95: pct(0.95),
+        p99: pct(0.99),
+        min: xs[0],
+        max: xs[xs.len() - 1],
+        count: xs.len(),
+    }
 }
 
 #[cfg(test)]
@@ -56,5 +66,7 @@ mod tests {
         assert!((s.mean - 50.5).abs() < 1e-9);
         assert!((s.p50 - 50.0).abs() <= 1.0);
         assert!((s.p95 - 95.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+        assert_eq!(s.count, 100);
     }
 }

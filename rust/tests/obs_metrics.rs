@@ -1,0 +1,227 @@
+//! Observability reconciliation (ISSUE 6 acceptance): the metrics
+//! registry and the JSONL trace are two views over one instrumented
+//! serving run, so they must agree *exactly* — with each other and with
+//! the `ServeStats`/`PoolServeStats` assembled from the same registry.
+//!
+//! A 2-worker pool serves a mixed short/long multi-tenant workload
+//! (per-request `max_new_tokens` caps plus one unknown tenant), then:
+//!
+//!   - retire/error trace events count up to `served`/`errors` and to
+//!     the `serve_requests_total`/`serve_errors_total` counters;
+//!   - per-request token spans (retire + error `tokens` fields) sum to
+//!     `generated_tokens` == `serve_tokens_total` — token accounting is
+//!     exact, not sampled;
+//!   - dispatch batches map 1:1 onto decode sessions, stolen batches
+//!     onto `sched_steals_total` and `serve_stolen_sessions_total`;
+//!   - uploads reconcile bytewise: every token-batch upload moves
+//!     exactly `batch * seq * 4` bytes (all tenants device-resident);
+//!   - the cross-shard `SchedulerMetrics` merge equals the registry's
+//!     `sched_*` sums, and `max_queue_depth` equals the queue-depth
+//!     gauge's peak watermark.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::init_base;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::serve::{
+    serve_pool_obs, AdapterEntry, EngineSpec, PoolOpts, Request, SchedulerOpts, ServeObs,
+    SharedAdapterSource,
+};
+use sqft::tensor::Rng;
+use sqft::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+struct Fixture {
+    dir: PathBuf,
+    hyper: sqft::runtime::ModelHyper,
+    frozen: sqft::model::ParamSet,
+    entries: Vec<AdapterEntry>,
+}
+
+fn fixture(rt: &Runtime) -> Fixture {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 171);
+    let base = init_base(&hyper, &mut Rng::new(133));
+    let prepared = pipeline::prepare(rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(134)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let entries = pipeline::tenant_adapters(rt, config, &prepared, 3,
+                                            &ds.train, &tok, 2, 800).unwrap();
+    Fixture { dir, hyper, frozen, entries }
+}
+
+fn spec(f: &Fixture) -> EngineSpec {
+    EngineSpec {
+        artifacts: f.dir.clone(),
+        config: "sqft-tiny".to_string(),
+        frozen: f.frozen.clone(),
+        eval_kind: "eval".to_string(),
+        max_new_tokens: 4,
+        registry_capacity: 8,
+    }
+}
+
+/// Parsed trace events of one kind, keyed helpers over `Json` objects.
+fn events<'a>(parsed: &'a [Json], ev: &str) -> Vec<&'a Json> {
+    parsed.iter().filter(|e| e.req("ev").unwrap().as_str().unwrap() == ev).collect()
+}
+
+fn num(e: &Json, key: &str) -> usize {
+    e.req(key).unwrap().as_usize().unwrap()
+}
+
+#[test]
+fn pool_counters_reconcile_with_trace_spans() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt);
+    let task = Task::SynBoolq;
+    let source = SharedAdapterSource::new(f.hyper.clone(), 8);
+    source.register_all(f.entries.clone()).unwrap();
+
+    // mixed short/long workload: even requests are capped at 2 generated
+    // tokens, odd ones run to the engine default (4); one unknown tenant
+    let mut grng = Rng::new(177);
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    // request id -> generated-token cap, for per-span bounds checks
+    let mut caps: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut sent = 0usize;
+    for i in 0..20 {
+        let id = Some(f.entries[i % f.entries.len()].id.clone());
+        let (rtx, rrx) = channel();
+        let mut req = Request::new(id, task.gen_sample(&mut grng).prompt, rtx);
+        if i % 2 == 0 {
+            req.max_new_tokens = Some(2);
+            req.min_new_tokens = 1;
+        }
+        caps.insert(req.id as usize, req.max_new_tokens.unwrap_or(4));
+        sent += 1;
+        tx.send(req).unwrap();
+        replies.push(rrx);
+    }
+    let (rtx, rrx) = channel();
+    tx.send(Request::new(Some("nope".into()), task.gen_sample(&mut grng).prompt, rtx)).unwrap();
+    replies.push(rrx);
+    sent += 1;
+    drop(tx);
+
+    let obs = ServeObs::with_trace();
+    let stats = serve_pool_obs(
+        &spec(&f),
+        &source,
+        rx,
+        PoolOpts {
+            workers: 2,
+            sched: SchedulerOpts { max_batch: f.hyper.batch, aging: Duration::from_millis(20) },
+        },
+        obs.clone(),
+    )
+    .unwrap();
+    for r in replies {
+        let _ = r.recv().unwrap();
+    }
+    assert_eq!(stats.serve.total.served, sent - 1);
+    assert_eq!(stats.serve.total.errors, 1, "exactly the unknown tenant errors");
+
+    let snap = obs.registry().snapshot();
+    let lines = obs.trace().expect("with_trace carries a log").lines();
+    let parsed: Vec<Json> = lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+    let served = stats.serve.total.served;
+
+    // lifecycle counts: every request enqueues once; every served request
+    // admits, sees a first token, and retires exactly once
+    assert_eq!(events(&parsed, "enqueue").len(), sent);
+    assert_eq!(events(&parsed, "admit").len(), served);
+    assert_eq!(events(&parsed, "first_token").len(), served);
+    let retires = events(&parsed, "retire");
+    let errors = events(&parsed, "error");
+    assert_eq!(retires.len(), served);
+    assert_eq!(errors.len(), stats.serve.total.errors);
+    assert_eq!(snap.sum("serve_requests_total") as usize, served);
+    assert_eq!(snap.sum("serve_errors_total") as usize, stats.serve.total.errors);
+
+    // per-request token spans sum to the reported totals, exactly
+    let retire_tokens: usize = retires.iter().map(|e| num(e, "tokens")).sum();
+    let error_tokens: usize = errors.iter().map(|e| num(e, "tokens")).sum();
+    assert_eq!(retire_tokens + error_tokens, stats.serve.generated_tokens);
+    assert_eq!(snap.sum("serve_tokens_total") as usize, stats.serve.generated_tokens);
+    for e in &retires {
+        let cap = caps[&num(e, "req")];
+        let tokens = num(e, "tokens");
+        assert!(tokens >= 1 && tokens <= cap, "span of {tokens} tokens exceeds cap {cap}");
+    }
+
+    // each retired request went enqueue -> admit -> retire in order, on
+    // one worker, out of one slot
+    let admits: BTreeMap<usize, &Json> =
+        events(&parsed, "admit").iter().map(|e| (num(e, "req"), *e)).collect();
+    let t_ms = |e: &Json| e.req("t_ms").unwrap().as_f64().unwrap();
+    for e in &retires {
+        let a = admits[&num(e, "req")];
+        assert_eq!(num(a, "worker"), num(e, "worker"));
+        assert!(t_ms(a) <= t_ms(e), "admit after retire for req {}", num(e, "req"));
+    }
+
+    // dispatched batches map 1:1 onto decode sessions; stolen batches
+    // onto the scheduler's steal count and the stolen-session counter
+    let dispatches = events(&parsed, "dispatch");
+    let batches: BTreeSet<usize> = dispatches.iter().map(|e| num(e, "batch")).collect();
+    assert_eq!(batches.len(), snap.sum("serve_sessions_total") as usize);
+    let stolen: BTreeSet<usize> = dispatches
+        .iter()
+        .filter(|e| matches!(e.req("stolen").unwrap(), Json::Bool(true)))
+        .map(|e| num(e, "batch"))
+        .collect();
+    assert_eq!(stolen.len(), stats.steals);
+    assert_eq!(snap.sum("sched_steals_total") as usize, stats.steals);
+    assert_eq!(snap.sum("serve_stolen_sessions_total") as usize, stats.steals);
+
+    // per-worker views are the same counters sliced by label
+    let mut by_worker: BTreeMap<usize, usize> = BTreeMap::new();
+    for e in &retires {
+        *by_worker.entry(num(e, "worker")).or_default() += 1;
+    }
+    for w in &stats.per_worker {
+        assert!(w.setup_error.is_none());
+        assert_eq!(w.served, by_worker.get(&w.worker).copied().unwrap_or(0));
+    }
+    assert_eq!(stats.per_worker.iter().map(|w| w.served).sum::<usize>(), served);
+
+    // bytewise upload reconciliation: every tenant is device-resident, so
+    // a decode step moves either nothing or exactly one token batch
+    let token_batch_bytes = (f.hyper.batch * f.hyper.seq_len * 4) as u64;
+    let uploads = snap.sum("runtime_uploads_total") as u64;
+    assert!(uploads >= 1);
+    assert!(uploads <= snap.sum("serve_decode_steps_total") as u64);
+    assert_eq!(snap.sum("runtime_upload_bytes_total") as u64, uploads * token_batch_bytes);
+
+    // the cross-shard SchedulerMetrics merge equals the registry's sums
+    let sched = &stats.serve.scheduler;
+    assert_eq!(sched.scheduled, sent);
+    assert_eq!(snap.sum("sched_scheduled_total") as usize, sched.scheduled);
+    assert_eq!(snap.sum("sched_batches_total") as usize, sched.batches);
+    assert_eq!(snap.sum("sched_admitted_total") as usize, sched.admitted);
+    assert_eq!(snap.sum("sched_aged_batches_total") as usize, sched.aged_batches);
+    assert_eq!(snap.sum("sched_aging_holds_total") as usize, sched.aging_holds);
+    assert!((snap.sum("sched_fill_sum") - sched.fill_sum).abs() < 1e-9);
+    assert_eq!(snap.gauge_peak_max("sched_queue_depth") as usize, sched.max_queue_depth);
+
+    // latency/ttft/queue series are per-served-request, never sampled
+    for name in ["serve_latency_ms", "serve_ttft_ms", "serve_queue_ms"] {
+        let n: usize = snap.series_by(name, "tenant").values().map(Vec::len).sum();
+        assert_eq!(n, served, "{name} must carry one sample per served request");
+    }
+}
