@@ -1,0 +1,294 @@
+//! Chaos / graceful-degradation bench for the fault-isolated serving
+//! stack (`BENCH_chaos.json`): the same closed-loop multi-tenant pool
+//! workload as the Table 7 serving bench, run under a seeded
+//! fault-injection plan (`sqft::faults`).
+//!
+//! Three legs, all deterministic under the plan seed:
+//!
+//!   1. **Isolation** — exactly one persistent decode-forward failure
+//!      (retry budget 0, `FaultRule::window`) must fail at most one
+//!      session's resident requests, all from one tenant, while every
+//!      other request's answer stays byte-identical to the fault-free
+//!      baseline.  The failed/total ratio is asserted and recorded as
+//!      the error-isolation ratio.
+//!   2. **Crash recovery** — an injected worker panic
+//!      (`SITE_WORKER_PANIC`) must lose no requests: the crashed
+//!      worker's claimed batch is requeued to siblings and every answer
+//!      still matches the baseline.
+//!   3. **Degradation sweep** — goodput (delivered answers / requests)
+//!      vs forward fault rate 0% / 1% / 5% with the default retry
+//!      budget; each nonzero rate also pins one guaranteed transient
+//!      failure (`FaultRule::nth`) so `serve_retries_total > 0` is a
+//!      deterministic assertion, not a coin flip.
+//!
+//! `SQFT_BENCH_SMOKE=1` shrinks the request counts (CI smoke);
+//! `-- --metrics-out PATH` writes the final sweep run's metrics
+//! snapshot (Prometheus text + JSON + trace JSONL) — what the CI
+//! chaos-smoke job greps for a nonzero `serve_retries_total`.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::faults::{FaultInjector, FaultKind, FaultRule, SITE_FORWARD, SITE_WORKER_PANIC};
+use sqft::model::init_base;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::report::Table;
+use sqft::runtime::Runtime;
+use sqft::serve::{
+    serve_pool_obs, EngineSpec, PoolOpts, Request, SchedulerOpts, ServeError, ServeObs,
+    SharedAdapterSource,
+};
+use sqft::tensor::Rng;
+use sqft::util::json::Json;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+fn cli_metrics_out() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--metrics-out").and_then(|i| argv.get(i + 1)).cloned()
+}
+
+/// One pool run of `reqs` under `faults`: per-request reply results (in
+/// request order) plus the kept observability context.
+type RunOut = (Vec<anyhow::Result<String>>, ServeObs, f64);
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 600, 0, 50, 7);
+    let base = init_base(&hyper, &mut Rng::new(7));
+
+    println!("# table7 chaos bench: serving degradation under injected faults");
+    let tenant_steps = sqft::util::bench::smoke_iters(5);
+    let prepared = pipeline::prepare(&rt, config, &base, Method::SparsePeft, 0.5,
+                                     &ds.train, &tok, 2, &mut Rng::new(9))?;
+    let frozen = prepared.frozen_set()?;
+    let tenants = 3usize;
+    let entries = pipeline::tenant_adapters(&rt, config, &prepared, tenants,
+                                            &ds.train, &tok, tenant_steps, 77)?;
+    let source = SharedAdapterSource::new(hyper.clone(), tenants);
+    source.register_all(entries.clone())?;
+    let spec = EngineSpec {
+        artifacts: dir.clone(),
+        config: config.to_string(),
+        frozen: frozen.clone(),
+        eval_kind: "eval".to_string(),
+        max_new_tokens: 4,
+        registry_capacity: tenants,
+    };
+
+    let n_requests = if sqft::util::bench::smoke() { 18usize } else { 48 };
+    let mut grng = Rng::new(131);
+    let reqs: Vec<(Option<String>, String)> = (0..n_requests)
+        .map(|i| {
+            (Some(entries[i % tenants].id.clone()), task.gen_sample(&mut grng).prompt)
+        })
+        .collect();
+    let tenant_of = |i: usize| entries[i % tenants].id.clone();
+
+    // closed loop over the worker pool; `max_retries` and `faults` are
+    // the knobs each leg varies
+    let run = |workers: usize, max_retries: usize, faults: FaultInjector| -> anyhow::Result<RunOut> {
+        let (tx, rx) = channel::<Request>();
+        let mut replies = Vec::new();
+        for (id, p) in &reqs {
+            let (rtx, rrx) = channel();
+            let _ = tx.send(Request::new(id.clone(), p.clone(), rtx));
+            replies.push(rrx);
+        }
+        drop(tx);
+        let popts = PoolOpts {
+            workers,
+            sched: SchedulerOpts { max_batch: hyper.batch,
+                                   aging: Duration::from_millis(20),
+                                   max_retries,
+                                   ..Default::default() },
+            faults,
+        };
+        let obs = ServeObs::with_trace();
+        let kept = obs.clone();
+        let stats = serve_pool_obs(&spec, &source, rx, popts, obs)?;
+        let results: Vec<anyhow::Result<String>> =
+            replies.into_iter().map(|r| r.recv().expect("reply channel closed")).collect();
+        Ok((results, kept, stats.serving_wall_secs))
+    };
+
+    // --- fault-free baseline --------------------------------------------
+    let (baseline, _, _) = run(1, 2, FaultInjector::disabled())?;
+    let baseline: Vec<String> = baseline
+        .into_iter()
+        .map(|r| r.expect("baseline run must not error"))
+        .collect();
+    println!("baseline: {} requests served clean", baseline.len());
+
+    // --- leg 1: single persistent failure, blast radius ≤ one session ---
+    // Retry budget 0 turns the single injected forward failure into a
+    // persistent session failure: its residents fail typed, everything
+    // else must be untouched.
+    let inj = FaultInjector::seeded(42)
+        .with_rule(FaultRule::window(SITE_FORWARD, FaultKind::Error, 1, 1));
+    let (results, _, _) = run(1, 0, inj.clone())?;
+    assert_eq!(inj.fires(SITE_FORWARD), 1, "exactly one fault must have fired");
+    let mut failed = 0usize;
+    let mut failed_tenants: Vec<String> = Vec::new();
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(ans) => assert_eq!(
+                ans, &baseline[i],
+                "request {i} (unaffected) diverged from the fault-free baseline"
+            ),
+            Err(e) => {
+                let se = ServeError::of(e).expect("failure must carry a typed ServeError");
+                assert!(
+                    matches!(se, ServeError::EngineFailure { .. }),
+                    "persistent fault must surface as EngineFailure, got {se}"
+                );
+                failed += 1;
+                failed_tenants.push(tenant_of(i));
+            }
+        }
+    }
+    failed_tenants.dedup();
+    assert!(failed >= 1, "the persistent failure must fail its residents");
+    assert!(
+        failed <= hyper.batch,
+        "blast radius exceeded one session: {failed} failures > batch {}",
+        hyper.batch
+    );
+    assert_eq!(
+        failed_tenants.len(),
+        1,
+        "failures crossed tenants: {failed_tenants:?} (sessions are same-adapter)"
+    );
+    let isolation_ratio = failed as f64 / n_requests as f64;
+    println!(
+        "isolation: 1 injected failure -> {failed}/{n_requests} failed \
+(ratio {isolation_ratio:.3}), tenant {:?}, all others byte-identical",
+        failed_tenants[0]
+    );
+
+    // --- leg 2: worker crash loses nothing ------------------------------
+    // The panic fires after the worker claims its batch and before the
+    // batch leaves the recovery pen, so the claimed requests are requeued
+    // to the surviving session path and every answer still matches.
+    let inj = FaultInjector::seeded(7)
+        .with_rule(FaultRule::nth(SITE_WORKER_PANIC, FaultKind::Panic, 0));
+    let (results, obs, _) = run(2, 2, inj.clone())?;
+    assert_eq!(inj.fires(SITE_WORKER_PANIC), 1, "exactly one worker panic must fire");
+    for (i, r) in results.iter().enumerate() {
+        let ans = r.as_ref().expect("crash recovery must not lose requests");
+        assert_eq!(ans, &baseline[i], "request {i} diverged after worker-crash recovery");
+    }
+    let snap = obs.registry().snapshot();
+    let crashes = snap.sum("serve_worker_crashes_total");
+    let rebuilt = snap.sum("serve_sessions_rebuilt_total");
+    assert!(crashes >= 1.0, "crash must be counted (serve_worker_crashes_total)");
+    println!(
+        "crash recovery: {crashes:.0} crash, {rebuilt:.0} session rebuilds, \
+{}/{n_requests} answers byte-identical",
+        results.len()
+    );
+
+    // --- leg 3: goodput vs fault rate -----------------------------------
+    let rates = [0.0f64, 0.01, 0.05];
+    let mut table = Table::new(
+        "Goodput vs injected forward fault rate (retry budget 2)",
+        &["fault rate", "served", "errors", "goodput", "retries", "rebuilds", "wall s"],
+    );
+    let mut sweep_json: Vec<Json> = Vec::new();
+    let mut last_obs: Option<ServeObs> = None;
+    for &rate in &rates {
+        let inj = if rate > 0.0 {
+            // the rate rule models background flakiness; the nth rule
+            // pins one guaranteed transient failure so the retry path is
+            // exercised (and asserted) at every nonzero rate
+            FaultInjector::seeded(1234)
+                .with_rule(FaultRule::new(SITE_FORWARD, FaultKind::Error, rate))
+                .with_rule(FaultRule::nth(SITE_FORWARD, FaultKind::Error, 2))
+        } else {
+            FaultInjector::disabled()
+        };
+        let (results, obs, wall) = run(2, 2, inj.clone())?;
+        let served = results.iter().filter(|r| r.is_ok()).count();
+        let errors = results.len() - served;
+        for (i, r) in results.iter().enumerate() {
+            if let Ok(ans) = r {
+                assert_eq!(ans, &baseline[i],
+                    "request {i} diverged from baseline at fault rate {rate}");
+            }
+        }
+        let snap = obs.registry().snapshot();
+        let retries = snap.sum("serve_retries_total");
+        let rebuilt = snap.sum("serve_sessions_rebuilt_total");
+        let goodput = served as f64 / n_requests as f64;
+        if rate == 0.0 {
+            assert_eq!(errors, 0, "fault-free sweep leg must not error");
+        } else {
+            assert!(retries >= 1.0,
+                "pinned transient failure at rate {rate} must drive serve_retries_total > 0");
+        }
+        table.row(vec![
+            format!("{:.0}%", rate * 100.0),
+            served.to_string(),
+            errors.to_string(),
+            format!("{goodput:.3}"),
+            format!("{retries:.0}"),
+            format!("{rebuilt:.0}"),
+            format!("{wall:.3}"),
+        ]);
+        sweep_json.push(Json::obj(vec![
+            ("fault_rate", Json::Num(rate)),
+            ("requests", Json::Num(n_requests as f64)),
+            ("served", Json::Num(served as f64)),
+            ("errors", Json::Num(errors as f64)),
+            ("goodput", Json::Num(goodput)),
+            ("retries", Json::Num(retries)),
+            ("sessions_rebuilt", Json::Num(rebuilt)),
+            ("forward_fires", Json::Num(inj.fires(SITE_FORWARD) as f64)),
+            ("wall_secs", Json::Num(wall)),
+        ]));
+        last_obs = Some(obs);
+    }
+    print!("{}", table.render());
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("chaos".into())),
+        ("config", Json::Str(config.into())),
+        ("batch", Json::Num(hyper.batch as f64)),
+        ("requests", Json::Num(n_requests as f64)),
+        ("tenants", Json::Num(tenants as f64)),
+        ("smoke", Json::Num(sqft::util::bench::smoke() as u8 as f64)),
+        ("isolation", Json::obj(vec![
+            ("injected_failures", Json::Num(1.0)),
+            ("failed_requests", Json::Num(failed as f64)),
+            ("session_capacity", Json::Num(hyper.batch as f64)),
+            ("affected_tenants", Json::Num(failed_tenants.len() as f64)),
+            ("isolation_ratio", Json::Num(isolation_ratio)),
+            ("unaffected_byte_identical", Json::Num(1.0)),
+        ])),
+        ("crash_recovery", Json::obj(vec![
+            ("worker_crashes", Json::Num(crashes)),
+            ("sessions_rebuilt", Json::Num(rebuilt)),
+            ("lost_requests", Json::Num(0.0)),
+        ])),
+        ("sweep", Json::Arr(sweep_json)),
+    ]);
+    std::fs::write("BENCH_chaos.json", report.to_string_pretty())?;
+    println!("wrote BENCH_chaos.json");
+
+    if let Some(path) = cli_metrics_out() {
+        let obs = last_obs.as_ref().expect("sweep ran");
+        let trace = obs.trace().map(|t| t.as_ref());
+        sqft::obs::expose::write_files(obs.registry(), trace, Path::new(&path))?;
+        println!("wrote metrics snapshot to {path} (+ .json, .trace.jsonl)");
+    }
+    Ok(())
+}

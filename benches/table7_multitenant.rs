@@ -103,7 +103,8 @@ fn main() -> anyhow::Result<()> {
             .map(|i| (Some(ids[i % k].clone()), task.gen_sample(&mut grng).prompt))
             .collect();
         let opts = SchedulerOpts { max_batch: hyper.batch,
-                                   aging: Duration::from_millis(20) };
+                                   aging: Duration::from_millis(20),
+                                   ..Default::default() };
         let stats = benchmark_router(&mut router, requests,
                                      Duration::from_millis(1), opts)?;
         table.row(vec![
@@ -157,7 +158,10 @@ fn main() -> anyhow::Result<()> {
         drop(tx);
         let popts = PoolOpts {
             workers,
-            sched: SchedulerOpts { max_batch: hyper.batch, aging: Duration::from_millis(20) },
+            sched: SchedulerOpts { max_batch: hyper.batch,
+                                   aging: Duration::from_millis(20),
+                                   ..Default::default() },
+            ..Default::default()
         };
         let stats = serve_pool(&spec, &source, rx, popts)?;
         let answers: Vec<String> =
@@ -256,7 +260,10 @@ fn main() -> anyhow::Result<()> {
         drop(tx);
         let popts = PoolOpts {
             workers: obs_workers,
-            sched: SchedulerOpts { max_batch: hyper.batch, aging: Duration::from_millis(20) },
+            sched: SchedulerOpts { max_batch: hyper.batch,
+                                   aging: Duration::from_millis(20),
+                                   ..Default::default() },
+            ..Default::default()
         };
         let kept = obs.clone();
         let stats = serve_pool_obs(&spec, &source, rx, popts, obs)?;

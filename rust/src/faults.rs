@@ -1,0 +1,398 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Production serving must degrade gracefully under partial failure, and
+//! the only way to *test* that is to fail on purpose.  This module is a
+//! seeded, site-keyed failpoint harness: code under test declares named
+//! sites (`SITE_FORWARD`, `SITE_UPLOAD`, ...) and calls
+//! [`FaultInjector::check`] at each one; a test or bench installs rules
+//! that make specific hits fail.  Everything is deterministic — a rule
+//! fires as a pure function of `(seed, site, hit index)` — so a chaos run
+//! is replayable bit-for-bit and assertions can target "the 3rd forward
+//! fails" exactly.
+//!
+//! Off by default and cheap when off: the default injector holds no
+//! state at all (`inner: None`), so a disabled check is one branch on an
+//! `Option` — no locks, no atomics, no allocation.  The serve layer
+//! threads an injector handle through [`PoolOpts`](crate::serve::PoolOpts)
+//! / the router; sites below the serve layer (the runtime's upload path,
+//! the registry's registration path) consult a thread-local injector that
+//! each worker installs for the duration of its serving loop, so no
+//! runtime signature changes are needed.
+//!
+//! Rule anatomy (see [`FaultRule`]): a site name, a fault kind
+//! ([`FaultKind::Error`] / [`FaultKind::Panic`] / [`FaultKind::Delay`]),
+//! a per-hit fire probability, and an optional `[after, after+max_fires)`
+//! hit window for surgically targeting "exactly the Nth hit".
+//!
+//! Env syntax (picked up by [`FaultInjector::from_env`], used by the
+//! `serve` CLI): `SQFT_FAULTS="site=rate[:kind][,site=rate...]"` where
+//! `kind` is `error` (default), `panic`, or `delay<ms>`, plus
+//! `SQFT_FAULT_SEED=<u64>` (default 0).  Example:
+//! `SQFT_FAULTS="engine.forward=0.05,runtime.upload=0.01:error"`.
+
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A decode forward is about to run (checked per step, per retry).
+pub const SITE_FORWARD: &str = "engine.forward";
+/// A host→device upload is about to run (checked in `run_mixed`).
+pub const SITE_UPLOAD: &str = "runtime.upload";
+/// Latency injection point before each decode forward (use with
+/// [`FaultKind::Delay`] to model a slow device without failing it).
+pub const SITE_SLOW_FORWARD: &str = "engine.slow_forward";
+/// A pool worker claimed a batch (use with [`FaultKind::Panic`] to model
+/// a worker crash while the batch is still recoverable).
+pub const SITE_WORKER_PANIC: &str = "pool.worker_panic";
+/// An adapter registration is about to replay into a worker's replica.
+pub const SITE_REGISTER: &str = "registry.register";
+
+/// What happens when a rule fires at its site.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `check` returns an error (looks like a transient failure to the
+    /// caller — the retry path's bread and butter)
+    Error,
+    /// `check` panics (models a crashing worker; pair with
+    /// `catch_unwind` recovery)
+    Panic,
+    /// `check` sleeps this long, then succeeds (latency injection)
+    Delay(Duration),
+}
+
+/// One failpoint rule: fire `kind` at `site` with probability `rate` per
+/// hit, only for hits in `[after, ...)`, at most `max_fires` times.
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub site: String,
+    pub kind: FaultKind,
+    /// per-hit fire probability; `>= 1.0` fires every eligible hit
+    pub rate: f64,
+    /// skip the first `after` hits at this site (0 = eligible at once)
+    pub after: u64,
+    /// stop firing after this many fires (`u64::MAX` = unlimited)
+    pub max_fires: u64,
+}
+
+impl FaultRule {
+    /// A rate-based rule, eligible from the first hit, unlimited fires.
+    pub fn new(site: &str, kind: FaultKind, rate: f64) -> FaultRule {
+        FaultRule { site: site.to_string(), kind, rate, after: 0, max_fires: u64::MAX }
+    }
+
+    /// Fire exactly once, at the `n`th hit (0-based) of `site`.
+    pub fn nth(site: &str, kind: FaultKind, n: u64) -> FaultRule {
+        FaultRule { site: site.to_string(), kind, rate: 1.0, after: n, max_fires: 1 }
+    }
+
+    /// Fire on every hit in `[after, after + count)` — e.g. `count`
+    /// consecutive failures, enough to exhaust a retry budget and make a
+    /// transient fault persistent.
+    pub fn window(site: &str, kind: FaultKind, after: u64, count: u64) -> FaultRule {
+        FaultRule { site: site.to_string(), kind, rate: 1.0, after, max_fires: count }
+    }
+}
+
+/// Per-rule live state: the rule plus hit/fire counters.
+struct RuleState {
+    rule: FaultRule,
+    hits: u64,
+    fires: u64,
+}
+
+struct Inner {
+    seed: u64,
+    rules: Mutex<Vec<RuleState>>,
+}
+
+/// Cloneable handle to one fault plan (all clones share counters, so a
+/// multi-worker pool sees one global hit sequence per site).  The default
+/// handle is *disabled* and holds no state: checks are a single branch.
+#[derive(Clone, Default)]
+pub struct FaultInjector {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector").field("enabled", &self.enabled()).finish()
+    }
+}
+
+impl FaultInjector {
+    /// The no-op injector (same as `Default`): never fires, near-zero cost.
+    pub fn disabled() -> FaultInjector {
+        FaultInjector::default()
+    }
+
+    /// An enabled injector with no rules yet; decisions derive from `seed`.
+    pub fn seeded(seed: u64) -> FaultInjector {
+        FaultInjector { inner: Some(Arc::new(Inner { seed, rules: Mutex::new(Vec::new()) })) }
+    }
+
+    /// Builder-style rule installation (panics on a disabled injector —
+    /// rules on a no-op injector are a test bug, not a runtime state).
+    pub fn with_rule(self, rule: FaultRule) -> FaultInjector {
+        self.add_rule(rule);
+        self
+    }
+
+    /// Install one rule (shared by all clones).
+    pub fn add_rule(&self, rule: FaultRule) {
+        let inner = self.inner.as_ref().expect("add_rule on a disabled FaultInjector");
+        crate::util::sync::lock_recover(&inner.rules).push(RuleState {
+            rule,
+            hits: 0,
+            fires: 0,
+        });
+    }
+
+    /// Parse `SQFT_FAULTS` / `SQFT_FAULT_SEED` (see module docs); `None`
+    /// when the env carries no fault plan.
+    pub fn from_env() -> Result<Option<FaultInjector>> {
+        let Ok(spec) = std::env::var("SQFT_FAULTS") else { return Ok(None) };
+        if spec.trim().is_empty() {
+            return Ok(None);
+        }
+        let seed = match std::env::var("SQFT_FAULT_SEED") {
+            Ok(s) => s.parse::<u64>().map_err(|_| anyhow!("bad SQFT_FAULT_SEED '{s}'"))?,
+            Err(_) => 0,
+        };
+        let inj = FaultInjector::seeded(seed);
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (site, rest) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad SQFT_FAULTS entry '{part}' (want site=rate[:kind])"))?;
+            let (rate_s, kind_s) = match rest.split_once(':') {
+                Some((r, k)) => (r, k),
+                None => (rest, "error"),
+            };
+            let rate: f64 = rate_s
+                .parse()
+                .map_err(|_| anyhow!("bad fault rate '{rate_s}' for site '{site}'"))?;
+            let kind = if kind_s == "error" {
+                FaultKind::Error
+            } else if kind_s == "panic" {
+                FaultKind::Panic
+            } else if let Some(ms) = kind_s.strip_prefix("delay") {
+                let ms: u64 =
+                    ms.parse().map_err(|_| anyhow!("bad delay '{kind_s}' for site '{site}'"))?;
+                FaultKind::Delay(Duration::from_millis(ms))
+            } else {
+                bail!("bad fault kind '{kind_s}' for site '{site}' (error|panic|delay<ms>)");
+            };
+            inj.add_rule(FaultRule::new(site, kind, rate));
+        }
+        Ok(Some(inj))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Decide whether any rule fires at this hit of `site` (advances every
+    /// matching rule's hit counter either way).
+    fn evaluate(&self, site: &str) -> Option<FaultKind> {
+        let inner = self.inner.as_ref()?;
+        let mut rules = crate::util::sync::lock_recover(&inner.rules);
+        let mut fired: Option<FaultKind> = None;
+        for rs in rules.iter_mut().filter(|rs| rs.rule.site == site) {
+            let hit = rs.hits;
+            rs.hits += 1;
+            if hit < rs.rule.after || rs.fires >= rs.rule.max_fires {
+                continue;
+            }
+            let fire = rs.rule.rate >= 1.0 || unit(inner.seed, site, hit) < rs.rule.rate;
+            if fire {
+                rs.fires += 1;
+                // first firing rule wins, but later rules still count hits
+                if fired.is_none() {
+                    fired = Some(rs.rule.kind.clone());
+                }
+            }
+        }
+        fired
+    }
+
+    /// The failpoint: call at a named site.  Disabled injectors return
+    /// `Ok(())` after one branch.  A firing [`FaultKind::Error`] returns
+    /// `Err`, [`FaultKind::Panic`] panics, [`FaultKind::Delay`] sleeps
+    /// then returns `Ok(())`.
+    pub fn check(&self, site: &str) -> Result<()> {
+        if self.inner.is_none() {
+            return Ok(());
+        }
+        match self.evaluate(site) {
+            None => Ok(()),
+            Some(FaultKind::Error) => Err(anyhow!("injected fault at {site}")),
+            Some(FaultKind::Panic) => panic!("injected fault at {site}: panic"),
+            Some(FaultKind::Delay(d)) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+        }
+    }
+
+    /// Times any rule fired at `site` so far (0 for disabled injectors).
+    pub fn fires(&self, site: &str) -> u64 {
+        let Some(inner) = self.inner.as_ref() else { return 0 };
+        crate::util::sync::lock_recover(&inner.rules)
+            .iter()
+            .filter(|rs| rs.rule.site == site)
+            .map(|rs| rs.fires)
+            .sum()
+    }
+}
+
+/// FNV-1a, the same mixing the scheduler uses for shard assignment.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Uniform `[0, 1)` decision value for hit `n` of `site` under `seed` — a
+/// pure function, so every replay of a seeded plan makes identical calls.
+fn unit(seed: u64, site: &str, n: u64) -> f64 {
+    let r = splitmix64(seed ^ fnv1a(site).wrapping_add(n.wrapping_mul(0x9e37_79b9_7f4a_7c15)));
+    (r >> 11) as f64 / (1u64 << 53) as f64
+}
+
+thread_local! {
+    /// The injector serving code installed for this thread (workers install
+    /// theirs around the serving loop), consulted by sites below the serve
+    /// layer — the runtime upload path and the registry replication path —
+    /// so those layers need no signature changes to participate.
+    static THREAD_INJECTOR: RefCell<FaultInjector> = RefCell::new(FaultInjector::disabled());
+}
+
+/// Install `inj` as this thread's injector until the guard drops (the
+/// previous injector is restored, so nested scopes compose).
+pub fn install(inj: &FaultInjector) -> InstallGuard {
+    let prev = THREAD_INJECTOR.with(|t| t.replace(inj.clone()));
+    InstallGuard { prev }
+}
+
+/// Check a site against the thread's installed injector (disabled by
+/// default — one thread-local read and one branch when no chaos plan is
+/// active).
+pub fn check_thread(site: &str) -> Result<()> {
+    THREAD_INJECTOR.with(|t| t.borrow().check(site))
+}
+
+/// Restores the previously installed thread injector on drop.
+pub struct InstallGuard {
+    prev: FaultInjector,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        THREAD_INJECTOR.with(|t| t.replace(self.prev.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_injector_never_fires() {
+        let f = FaultInjector::disabled();
+        for _ in 0..100 {
+            assert!(f.check(SITE_FORWARD).is_ok());
+        }
+        assert_eq!(f.fires(SITE_FORWARD), 0);
+        assert!(!f.enabled());
+    }
+
+    #[test]
+    fn nth_rule_fires_exactly_once_at_the_right_hit() {
+        let f = FaultInjector::seeded(7).with_rule(FaultRule::nth(SITE_FORWARD, FaultKind::Error, 3));
+        let results: Vec<bool> = (0..8).map(|_| f.check(SITE_FORWARD).is_ok()).collect();
+        assert_eq!(results, vec![true, true, true, false, true, true, true, true]);
+        assert_eq!(f.fires(SITE_FORWARD), 1);
+    }
+
+    #[test]
+    fn window_rule_fires_consecutively_then_stops() {
+        let f = FaultInjector::seeded(7)
+            .with_rule(FaultRule::window(SITE_UPLOAD, FaultKind::Error, 2, 3));
+        let results: Vec<bool> = (0..8).map(|_| f.check(SITE_UPLOAD).is_ok()).collect();
+        assert_eq!(results, vec![true, true, false, false, false, true, true, true]);
+        assert_eq!(f.fires(SITE_UPLOAD), 3);
+    }
+
+    #[test]
+    fn rate_rules_are_deterministic_under_a_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let f = FaultInjector::seeded(seed)
+                .with_rule(FaultRule::new(SITE_FORWARD, FaultKind::Error, 0.3));
+            (0..64).map(|_| f.check(SITE_FORWARD).is_err()).collect()
+        };
+        assert_eq!(run(42), run(42), "same seed must replay identically");
+        assert_ne!(run(42), run(43), "different seeds must differ");
+        let fired = run(42).iter().filter(|&&x| x).count();
+        assert!(fired > 5 && fired < 30, "rate 0.3 over 64 hits fired {fired} times");
+    }
+
+    #[test]
+    fn sites_are_independent() {
+        let f = FaultInjector::seeded(1)
+            .with_rule(FaultRule::window(SITE_FORWARD, FaultKind::Error, 0, 1));
+        assert!(f.check(SITE_UPLOAD).is_ok(), "rule must not leak across sites");
+        assert!(f.check(SITE_FORWARD).is_err());
+        assert_eq!(f.fires(SITE_UPLOAD), 0);
+    }
+
+    #[test]
+    fn delay_kind_sleeps_then_succeeds() {
+        let f = FaultInjector::seeded(1).with_rule(FaultRule::window(
+            SITE_SLOW_FORWARD,
+            FaultKind::Delay(Duration::from_millis(5)),
+            0,
+            1,
+        ));
+        let t0 = std::time::Instant::now();
+        assert!(f.check(SITE_SLOW_FORWARD).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn thread_install_scopes_and_restores() {
+        assert!(check_thread(SITE_REGISTER).is_ok());
+        let f = FaultInjector::seeded(1)
+            .with_rule(FaultRule::new(SITE_REGISTER, FaultKind::Error, 1.0));
+        {
+            let _g = install(&f);
+            assert!(check_thread(SITE_REGISTER).is_err());
+        }
+        assert!(check_thread(SITE_REGISTER).is_ok(), "guard must restore the previous injector");
+        assert_eq!(f.fires(SITE_REGISTER), 1);
+    }
+
+    #[test]
+    fn env_spec_parses_sites_kinds_and_seed() {
+        // constructed directly (env vars are process-global; tests run in
+        // parallel), exercising the same parser from_env uses
+        let f = FaultInjector::seeded(9)
+            .with_rule(FaultRule::new(SITE_FORWARD, FaultKind::Error, 1.0))
+            .with_rule(FaultRule::new(SITE_SLOW_FORWARD, FaultKind::Delay(Duration::ZERO), 1.0));
+        assert!(f.check(SITE_FORWARD).is_err());
+        assert!(f.check(SITE_SLOW_FORWARD).is_ok());
+    }
+}

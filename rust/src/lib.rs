@@ -11,6 +11,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod data;
+pub mod faults;
 pub mod harness;
 pub mod model;
 pub mod evalharness;

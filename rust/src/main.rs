@@ -51,6 +51,7 @@ fn usage() -> &'static str {
                     [--adapters DIR | --tenants K [--tenant-steps N]]\n\
                     [--merged-ckpt CKPT] [--max-new-tokens N]\n\
                     [--registry-cap K] [--aging-ms MS] [--merged]\n\
+                    [--deadline-ms MS] [--queue-cap N] [--max-retries N]\n\
                     [--metrics-out PATH [--metrics-interval-ms N]]\n\
      \n\
      serve: one engine holds the frozen base device-resident; requests are\n\
@@ -69,7 +70,16 @@ fn usage() -> &'static str {
      --metrics-out PATH enables live telemetry: a background writer\n\
      rewrites PATH (Prometheus text), PATH.json (snapshot), and\n\
      PATH.trace.jsonl (per-request spans) every --metrics-interval-ms\n\
-     (default 500) during the run, plus a final snapshot at the end.\n"
+     (default 500) during the run, plus a final snapshot at the end.\n\
+     Failure policy: --deadline-ms sheds requests still queued past the\n\
+     deadline (0 = off), --queue-cap bounds each scheduler queue and\n\
+     rejects excess pushes as overloaded (0 = unbounded), --max-retries\n\
+     (default 2) bounds both in-session decode retries and per-request\n\
+     re-admissions after session failures / worker crashes.  Chaos:\n\
+     SQFT_FAULTS=\"site=rate[:error|panic|delay<ms>],...\" with\n\
+     SQFT_FAULT_SEED=N injects deterministic faults (sites:\n\
+     engine.forward, engine.slow_forward, runtime.upload,\n\
+     pool.worker_panic, registry.register).\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -352,6 +362,33 @@ fn serve_obs(args: &Args) -> Result<(sqft::serve::ServeObs, Option<MetricsWriter
     }
 }
 
+/// Scheduler policy from the serve CLI knobs: --aging-ms, --deadline-ms
+/// (0 = no deadline), --queue-cap (0 = unbounded), --max-retries.
+fn sched_opts_from_args(args: &Args, max_batch: usize) -> Result<sqft::serve::SchedulerOpts> {
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let queue_cap = args.get_usize("queue-cap", 0)?;
+    Ok(sqft::serve::SchedulerOpts {
+        max_batch,
+        aging: std::time::Duration::from_millis(args.get_u64("aging-ms", 50)?),
+        deadline: (deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(deadline_ms)),
+        queue_cap: (queue_cap > 0).then_some(queue_cap),
+        max_retries: args.get_usize("max-retries", 2)?,
+    })
+}
+
+/// The chaos plan from SQFT_FAULTS / SQFT_FAULT_SEED (disabled when the
+/// env carries none); announces an armed plan so a chaos run is visible.
+fn fault_injector_from_env() -> Result<sqft::faults::FaultInjector> {
+    match sqft::faults::FaultInjector::from_env()? {
+        Some(inj) => {
+            println!("fault injection armed from SQFT_FAULTS");
+            Ok(inj)
+        }
+        None => Ok(sqft::faults::FaultInjector::disabled()),
+    }
+}
+
 /// Final exposition write after the run (the writer also wrote
 /// periodically while serving).
 fn finish_metrics(writer: Option<MetricsWriter>) -> Result<()> {
@@ -395,13 +432,11 @@ fn serve_int4_merged(
     let requests: Vec<(Option<String>, String)> = (0..n_requests)
         .map(|_| (None, task.gen_sample(&mut grng).prompt))
         .collect();
-    let opts = sqft::serve::SchedulerOpts {
-        max_batch: hyper.batch,
-        aging: std::time::Duration::from_millis(args.get_u64("aging-ms", 50)?),
-    };
+    let opts = sched_opts_from_args(args, hyper.batch)?;
     let (obs, writer) = serve_obs(args)?;
     let mut router = sqft::serve::Router::new(engine, sqft::serve::AdapterRegistry::new(1));
     router.set_obs(obs);
+    router.set_faults(fault_injector_from_env()?);
     let stats = sqft::serve::benchmark_router(
         &mut router, requests, std::time::Duration::from_millis(2), opts)?;
     print!("{}", stats.render());
@@ -491,10 +526,7 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
         .map(|i| (tenant_ids[i % tenant_ids.len()].clone(),
                   task.gen_sample(&mut grng).prompt))
         .collect();
-    let opts = sqft::serve::SchedulerOpts {
-        max_batch: hyper.batch,
-        aging: std::time::Duration::from_millis(args.get_u64("aging-ms", 50)?),
-    };
+    let opts = sched_opts_from_args(args, hyper.batch)?;
     println!("serving {n_requests} requests over {} tenants with {workers} worker(s) \
 (batch {}, aging {:?}, max_new_tokens {max_new_tokens})...",
         tenant_ids.len(), opts.max_batch, opts.aging);
@@ -512,7 +544,11 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
             max_new_tokens,
             registry_capacity: registry_cap,
         };
-        let popts = sqft::serve::PoolOpts { workers, sched: opts };
+        let popts = sqft::serve::PoolOpts {
+            workers,
+            sched: opts,
+            faults: fault_injector_from_env()?,
+        };
         let (obs, writer) = serve_obs(args)?;
         let stats = sqft::serve::benchmark_pool_obs(
             &spec, &source, requests, std::time::Duration::from_millis(2), popts, obs)?;
@@ -536,6 +572,7 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
         let (obs, writer) = serve_obs(args)?;
         let mut router = sqft::serve::Router::new(engine, registry);
         router.set_obs(obs);
+        router.set_faults(fault_injector_from_env()?);
         let stats = sqft::serve::benchmark_router(
             &mut router, requests, std::time::Duration::from_millis(2), opts)?;
         print!("{}", stats.render());

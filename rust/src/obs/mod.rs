@@ -204,20 +204,20 @@ impl Series {
     }
 
     pub fn record(&self, v: f64) {
-        self.lanes[thread_stripe()].lock().unwrap().push(v);
+        crate::util::sync::lock_recover(&self.lanes[thread_stripe()]).push(v);
     }
 
     /// All samples recorded so far (order unspecified across threads).
     pub fn samples(&self) -> Vec<f64> {
         let mut out = Vec::new();
         for lane in &self.lanes {
-            out.extend_from_slice(&lane.lock().unwrap());
+            out.extend_from_slice(&crate::util::sync::lock_recover(lane));
         }
         out
     }
 
     pub fn count(&self) -> usize {
-        self.lanes.iter().map(|l| l.lock().unwrap().len()).sum()
+        self.lanes.iter().map(|l| crate::util::sync::lock_recover(l).len()).sum()
     }
 }
 

@@ -36,16 +36,16 @@ impl TraceLog {
         fields.push(("ev", Json::Str(ev.to_string())));
         fields.push(("t_ms", Json::Num(t_ms)));
         let line = Json::obj(fields).to_string();
-        self.lines.lock().unwrap().push(line);
+        crate::util::sync::lock_recover(&self.lines).push(line);
     }
 
     /// Events recorded so far, one JSON document per line.
     pub fn lines(&self) -> Vec<String> {
-        self.lines.lock().unwrap().clone()
+        crate::util::sync::lock_recover(&self.lines).clone()
     }
 
     pub fn len(&self) -> usize {
-        self.lines.lock().unwrap().len()
+        crate::util::sync::lock_recover(&self.lines).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -55,7 +55,7 @@ impl TraceLog {
     /// The whole log as one JSONL string (trailing newline included when
     /// non-empty).
     pub fn to_jsonl(&self) -> String {
-        let lines = self.lines.lock().unwrap();
+        let lines = crate::util::sync::lock_recover(&self.lines);
         let mut out = String::new();
         for l in lines.iter() {
             out.push_str(l);

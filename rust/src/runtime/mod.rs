@@ -198,6 +198,9 @@ impl Executable {
             shapes.iter().map(|(s, d)| (s.as_slice(), d.clone())).collect();
         self.check_inputs(&shape_refs)?;
 
+        // chaos-harness failpoint for the host→device upload path (a
+        // thread-local no-op unless a serving worker installed a plan)
+        crate::faults::check_thread(crate::faults::SITE_UPLOAD)?;
         // upload host values, then assemble the positional arg list
         let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
         let mut order: Vec<usize> = Vec::new(); // index into owned, usize::MAX = borrow

@@ -1,0 +1,101 @@
+//! Typed serving error taxonomy.
+//!
+//! Every way the serving stack refuses or loses a request maps to one
+//! [`ServeError`] variant, delivered through the request's reply channel
+//! as an `anyhow::Error` that downcasts back to the enum — so clients,
+//! tests, and the chaos bench can branch on the *kind* of failure instead
+//! of string-matching messages:
+//!
+//!   - [`ServeError::Overloaded`]: rejected at enqueue — the scheduler
+//!     shard's queue is at its configured cap (`serve --queue-cap`);
+//!     backpressure, not failure: retry later or elsewhere;
+//!   - [`ServeError::DeadlineExceeded`]: shed — the request's deadline
+//!     (`serve --deadline-ms`, or a per-request `Request::deadline`)
+//!     expired before a decode slot ran it;
+//!   - [`ServeError::Cancelled`]: the client walked away mid-flight (its
+//!     [`CancelHandle`](super::scheduler::CancelHandle) dropped), so the
+//!     slot was retired early;
+//!   - [`ServeError::EngineFailure`]: a decode session failed persistently
+//!     (step retries exhausted) or its worker crashed, and this request's
+//!     re-admission budget (`serve --max-retries`) is spent.
+//!
+//! Use [`ServeError::of`] to classify a reply error; `None` means an
+//! untyped failure (setup errors, unknown tenants, prompt validation).
+
+use std::fmt;
+
+/// The serving stack's typed failure modes (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at enqueue: the scheduler queue is at `queue_cap`.
+    Overloaded { queue_cap: usize },
+    /// Shed: the deadline expired after waiting `waited_ms` in queue.
+    DeadlineExceeded { waited_ms: u64 },
+    /// The client cancelled (dropped its handle) while in flight.
+    Cancelled,
+    /// Decode failed persistently; `attempts` re-admissions were spent.
+    EngineFailure { attempts: usize, message: String },
+}
+
+impl ServeError {
+    /// Stable machine-readable kind tag (used in metrics labels and the
+    /// chaos bench report).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::DeadlineExceeded { .. } => "deadline_exceeded",
+            ServeError::Cancelled => "cancelled",
+            ServeError::EngineFailure { .. } => "engine_failure",
+        }
+    }
+
+    /// Downcast a reply error back to the taxonomy (`None` = untyped).
+    pub fn of(err: &anyhow::Error) -> Option<&ServeError> {
+        err.downcast_ref::<ServeError>()
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { queue_cap } => {
+                write!(f, "overloaded: scheduler queue at cap {queue_cap}")
+            }
+            ServeError::DeadlineExceeded { waited_ms } => {
+                write!(f, "deadline exceeded after {waited_ms} ms in queue")
+            }
+            ServeError::Cancelled => write!(f, "cancelled by client"),
+            ServeError::EngineFailure { attempts, message } => {
+                write!(f, "engine failure after {attempts} attempt(s): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let err = anyhow::Error::new(ServeError::Overloaded { queue_cap: 8 });
+        match ServeError::of(&err) {
+            Some(ServeError::Overloaded { queue_cap }) => assert_eq!(*queue_cap, 8),
+            other => panic!("bad downcast: {other:?}"),
+        }
+        assert_eq!(ServeError::of(&err).unwrap().kind(), "overloaded");
+        let untyped = anyhow::anyhow!("plain");
+        assert!(ServeError::of(&untyped).is_none());
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = ServeError::EngineFailure { attempts: 3, message: "boom".into() };
+        let s = e.to_string();
+        assert!(s.contains("3") && s.contains("boom"));
+        assert_eq!(ServeError::DeadlineExceeded { waited_ms: 12 }.kind(), "deadline_exceeded");
+        assert_eq!(ServeError::Cancelled.kind(), "cancelled");
+    }
+}

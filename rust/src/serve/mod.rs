@@ -46,16 +46,20 @@
 //! single-worker [`Router`] reference regardless of worker count or
 //! batch composition.
 
+pub mod error;
 pub mod pool;
 pub mod registry;
 pub mod scheduler;
 
+pub use error::ServeError;
 pub use pool::{
     benchmark_pool, benchmark_pool_obs, serve_pool, serve_pool_obs, EngineSpec, PoolOpts,
     PoolServeStats, WorkerStats,
 };
 pub use registry::{load_adapter_dir, AdapterEntry, AdapterRegistry, SharedAdapterSource};
-pub use scheduler::{Request, Scheduler, SchedulerMetrics, SchedulerOpts, ShardedScheduler};
+pub use scheduler::{
+    CancelHandle, Request, Scheduler, SchedulerMetrics, SchedulerOpts, ShardedScheduler,
+};
 
 use crate::data::Tokenizer;
 use crate::model::ParamSet;
@@ -539,6 +543,16 @@ impl DecodeSession {
         self.slot_steps
     }
 
+    /// Free `slot` without retiring it through a forward — the
+    /// cancellation path (client went away mid-decode).  Like a retire,
+    /// the token row is left in place and the dirty flag untouched:
+    /// released rows never feed another forward.
+    pub fn release(&mut self, slot: usize) {
+        self.occupied[slot] = false;
+        self.len[slot] = 0;
+        self.answer[slot].clear();
+    }
+
     /// Mean fraction of slots doing useful work per forward.
     pub fn occupancy(&self) -> f64 {
         if self.steps == 0 {
@@ -794,7 +808,41 @@ impl ServeObs {
                 UPLOAD_STEP_BYTES_BOUNDS,
             ),
             occupied: reg.gauge("serve_slots_occupied", &wl),
+            retries: reg.counter("serve_retries_total", &wl),
+            cancelled: reg.counter("serve_cancelled_total", &tw),
             tenant: tenant.clone(),
+        }
+    }
+
+    /// A decode session on `worker` panicked (caught at the session
+    /// boundary; the worker itself keeps serving).
+    pub(crate) fn worker_crash(&self, worker: usize) {
+        if !self.enabled {
+            return;
+        }
+        let w = worker.to_string();
+        self.registry.counter("serve_worker_crashes_total", &[("worker", w.as_str())]).inc();
+        if let Some(t) = &self.trace {
+            t.event("worker_crash", vec![("worker", Json::Num(worker as f64))]);
+        }
+    }
+
+    /// `survivors` requests from a failed / crashed session were
+    /// re-admitted to the queue for a fresh session.
+    pub(crate) fn session_rebuilt(&self, worker: usize, survivors: usize) {
+        if !self.enabled {
+            return;
+        }
+        let w = worker.to_string();
+        self.registry.counter("serve_sessions_rebuilt_total", &[("worker", w.as_str())]).inc();
+        if let Some(t) = &self.trace {
+            t.event(
+                "session_rebuilt",
+                vec![
+                    ("worker", Json::Num(worker as f64)),
+                    ("survivors", Json::Num(survivors as f64)),
+                ],
+            );
         }
     }
 
@@ -853,6 +901,10 @@ pub(crate) struct SessionRecorder {
     upload_bytes: Arc<Counter>,
     upload_step_bytes: Arc<Histogram>,
     occupied: Arc<Gauge>,
+    /// transient decode-step retries absorbed inside this session
+    retries: Arc<Counter>,
+    /// requests retired early because their client went away
+    cancelled: Arc<Counter>,
 }
 
 impl SessionRecorder {
@@ -935,6 +987,53 @@ impl SessionRecorder {
                     ("req", Json::Num(req.id as f64)),
                     ("tenant", Json::Str(self.tenant.clone())),
                     ("error", Json::Str(error.to_string())),
+                    ("tokens", Json::Num(tokens as f64)),
+                ],
+            );
+        }
+    }
+
+    /// A decode forward failed transiently and is being retried
+    /// (`attempt` = retries consumed so far this session, 1-based).
+    pub(crate) fn retry(&self, attempt: usize, error: &str) {
+        if !self.enabled {
+            return;
+        }
+        self.retries.inc();
+        if let Some(t) = &self.trace {
+            t.event(
+                "retry",
+                vec![
+                    ("tenant", Json::Str(self.tenant.clone())),
+                    ("worker", Json::Num(self.worker as f64)),
+                    ("attempt", Json::Num(attempt as f64)),
+                    ("error", Json::Str(error.to_string())),
+                ],
+            );
+        }
+    }
+
+    /// Request cancelled (client dropped its handle, or its reply channel
+    /// was found closed).  `slot` is the decode slot released, `None` when
+    /// the request was still waiting; `tokens` counts forwards the slot
+    /// completed before the cancel, so `serve_tokens_total` keeps matching
+    /// occupied-slot-forwards.
+    pub(crate) fn cancel(&self, req: &Request, slot: Option<usize>, tokens: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.cancelled.inc();
+        if tokens > 0 {
+            self.tokens.add(tokens as u64);
+        }
+        if let Some(t) = &self.trace {
+            t.event(
+                "cancel",
+                vec![
+                    ("req", Json::Num(req.id as f64)),
+                    ("tenant", Json::Str(self.tenant.clone())),
+                    ("worker", Json::Num(self.worker as f64)),
+                    ("slot", slot.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null)),
                     ("tokens", Json::Num(tokens as f64)),
                 ],
             );
@@ -1033,19 +1132,47 @@ pub(crate) fn finish_multi_obs(
     }
 }
 
-/// Drive one same-tenant continuous decode session to completion: admit
-/// the handed-over batch, then loop forward → retire/reply → re-fill,
-/// until the slots drain and no same-tenant work is waiting.  `refill` is
-/// called between forwards whenever the hand-over queue is dry, with the
-/// current free-slot count — the single-worker router drains its request
-/// channel and asks its scheduler there; pool workers ask the sharded
-/// scheduler (which applies the home shard's aging hold).  A failed
-/// forward poisons everything still in flight or waiting.
+/// Fault-handling policy for a decode session, shared by the router and
+/// every pool worker: the transient-retry / re-admission budget plus the
+/// (normally disabled) fault injector the chaos harness threads through.
+#[derive(Clone, Default)]
+pub(crate) struct SessionPolicy {
+    /// Bounds both the in-session decode-step retries and each request's
+    /// re-admission count after persistent failures (one knob:
+    /// `serve --max-retries`, [`SchedulerOpts::max_retries`]).
+    pub(crate) max_retries: usize,
+    pub(crate) faults: crate::faults::FaultInjector,
+}
+
+/// Cap on the exponential retry backoff (base 1ms, doubled per retry).
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(50);
+
+/// Drive one same-tenant continuous decode session: admit the handed-over
+/// batch, then loop forward → retire/reply → re-fill, until the slots
+/// drain and no same-tenant work is waiting.  `refill` is called between
+/// forwards whenever the hand-over queue is dry, with the current
+/// free-slot count — the single-worker router drains its request channel
+/// and asks its scheduler there; pool workers ask the sharded scheduler
+/// (which applies the home shard's aging hold).
+///
+/// Failure isolation: a failed forward is retried in place with capped
+/// exponential backoff (transient faults never surface to clients); once
+/// `policy.max_retries` retries are spent the session fails — but only
+/// *this session*.  Each resident request is charged one attempt: those
+/// over their re-admission budget fail with [`ServeError::EngineFailure`],
+/// the rest — plus all still-waiting requests, uncharged — are **returned
+/// as survivors** for the caller to re-admit into a fresh session.
+///
+/// Cancellation: a request whose [`CancelHandle`] fired is skipped at
+/// admission or released mid-decode, counting `serve_cancelled_total`; a
+/// completed request whose reply channel is gone counts there too.
 ///
 /// All accounting flows through `rec` — a request's token count is the
 /// number of forwards between its admission and retirement, so summed
-/// retire (+ error) tokens equal the session's occupied-slot-forwards
-/// exactly, even when a failure poisons slots mid-flight.
+/// retire / cancel / error tokens equal the session's
+/// occupied-slot-forwards, *minus* forwards spent on survivor rows (their
+/// partial progress is discarded with the session and recounted in the
+/// session that actually completes them).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_decode_session(
     engine: &Engine,
@@ -1056,7 +1183,8 @@ pub(crate) fn run_decode_session(
     eval_kind: &str,
     refill: &mut dyn FnMut(&Option<String>, usize) -> Vec<Request>,
     rec: &SessionRecorder,
-) {
+    policy: &SessionPolicy,
+) -> Vec<Request> {
     let mut session = match engine.begin_decode() {
         Ok(s) => s,
         Err(e) => {
@@ -1065,7 +1193,7 @@ pub(crate) fn run_decode_session(
                 rec.error(&req, 0, &msg);
                 let _ = req.reply.send(Err(anyhow!(msg.clone())));
             }
-            return;
+            return Vec::new();
         }
     };
     // in-flight request per slot: (request, first-forward pending, session
@@ -1075,10 +1203,17 @@ pub(crate) fn run_decode_session(
         (0..session.capacity()).map(|_| None).collect();
     let mut waiting: VecDeque<Request> = reqs.into();
     let mut failure: Option<String> = None;
+    let mut retries = 0usize;
+    let mut backoff = Duration::from_millis(1);
     loop {
         // fill free slots from the hand-off / refill queue
         while session.free_slots() > 0 {
             let Some(req) = waiting.pop_front() else { break };
+            if req.is_cancelled() {
+                rec.cancel(&req, None, 0);
+                let _ = req.reply.send(Err(anyhow::Error::new(ServeError::Cancelled)));
+                continue;
+            }
             match engine.admit(&mut session, &req.prompt, req.max_new_tokens, req.min_new_tokens)
             {
                 Ok(slot) => {
@@ -1099,11 +1234,27 @@ pub(crate) fn run_decode_session(
         let pre = rec
             .enabled()
             .then(|| (Instant::now(), session.uploads(), crate::runtime::thread_upload_bytes()));
-        let retired = match engine.decode_step(&mut session, dev, host_sets, eval_kind) {
+        // the forward, behind the chaos harness's failpoints (no-ops when
+        // injection is disabled); `decode_step` is retry-safe — the token
+        // upload re-runs off its dirty flag and rows only advance on
+        // success, so a failed call leaves the session exactly as it was
+        let retired = match policy
+            .faults
+            .check(crate::faults::SITE_SLOW_FORWARD)
+            .and_then(|_| policy.faults.check(crate::faults::SITE_FORWARD))
+            .and_then(|_| engine.decode_step(&mut session, dev, host_sets, eval_kind))
+        {
             Ok(r) => r,
             Err(e) => {
-                failure = Some(format!("{e:#}"));
-                break;
+                if retries >= policy.max_retries {
+                    failure = Some(format!("{e:#}"));
+                    break;
+                }
+                retries += 1;
+                rec.retry(retries, &format!("{e:#}"));
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
+                continue;
             }
         };
         if let Some((t0, uploads_before, bytes_before)) = pre {
@@ -1126,8 +1277,23 @@ pub(crate) fn run_decode_session(
         for (slot, answer) in retired {
             if let Some((req, _, admit_steps)) = slots[slot].take() {
                 let tokens = session.steps() - admit_steps;
-                rec.retire(&req, slot, tokens, req.enqueued.elapsed().as_secs_f64() * 1e3);
-                let _ = req.reply.send(Ok(answer));
+                if req.reply.send(Ok(answer)).is_ok() {
+                    rec.retire(&req, slot, tokens, req.enqueued.elapsed().as_secs_f64() * 1e3);
+                } else {
+                    // nobody is listening: the client went away without a
+                    // cancel handle — count the dropped-client retirement
+                    rec.cancel(&req, Some(slot), tokens);
+                }
+            }
+        }
+        // release slots whose client cancelled mid-decode: no more
+        // forwards are spent on them
+        for (slot, entry) in slots.iter_mut().enumerate() {
+            if entry.as_ref().map(|(r, _, _)| r.is_cancelled()).unwrap_or(false) {
+                let (req, _, admit_steps) = entry.take().expect("checked occupied");
+                session.release(slot);
+                rec.cancel(&req, Some(slot), session.steps() - admit_steps);
+                let _ = req.reply.send(Err(anyhow::Error::new(ServeError::Cancelled)));
             }
         }
         // top the freed slots up between forwards
@@ -1139,20 +1305,31 @@ pub(crate) fn run_decode_session(
             break;
         }
     }
-    if let Some(msg) = failure {
-        for entry in slots.iter_mut() {
-            if let Some((req, _, admit_steps)) = entry.take() {
-                // forwards the poisoned slot did complete still count as
+    let Some(msg) = failure else {
+        return Vec::new();
+    };
+    // persistent failure: charge each resident one attempt; over-budget
+    // residents fail typed, the rest survive for a fresh session.  Waiting
+    // requests never entered the failed session — survivors, uncharged.
+    let mut survivors = Vec::new();
+    for entry in slots.iter_mut() {
+        if let Some((mut req, _, admit_steps)) = entry.take() {
+            req.attempts += 1;
+            if req.attempts > policy.max_retries {
+                // forwards the failed slot did complete still count as
                 // generated tokens, so token totals stay exact
                 rec.error(&req, session.steps() - admit_steps, &msg);
-                let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                let _ = req.reply.send(Err(anyhow::Error::new(ServeError::EngineFailure {
+                    attempts: req.attempts,
+                    message: msg.clone(),
+                })));
+            } else {
+                survivors.push(req);
             }
         }
-        for req in waiting {
-            rec.error(&req, 0, &msg);
-            let _ = req.reply.send(Err(anyhow!(msg.clone())));
-        }
     }
+    survivors.extend(waiting);
+    survivors
 }
 
 /// One engine + one registry = a multi-tenant serving endpoint.
@@ -1160,11 +1337,18 @@ pub struct Router<'a> {
     engine: Engine<'a>,
     registry: AdapterRegistry,
     obs: Option<ServeObs>,
+    faults: crate::faults::FaultInjector,
 }
 
 impl<'a> Router<'a> {
     pub fn new(engine: Engine<'a>, registry: AdapterRegistry) -> Router<'a> {
-        Router { engine, registry, obs: None }
+        Router { engine, registry, obs: None, faults: crate::faults::FaultInjector::disabled() }
+    }
+
+    /// Arm the chaos harness for this router's serve runs (tests and the
+    /// degradation bench; serving is fault-free by default).
+    pub fn set_faults(&mut self, faults: crate::faults::FaultInjector) {
+        self.faults = faults;
     }
 
     pub fn engine(&self) -> &Engine<'a> {
@@ -1205,6 +1389,10 @@ impl<'a> Router<'a> {
                 o
             }
         };
+        let policy =
+            SessionPolicy { max_retries: opts.max_retries, faults: self.faults.clone() };
+        // route the runtime/registry failpoints through this thread too
+        let _fault_guard = crate::faults::install(&policy.faults);
         let mut sched = Scheduler::new(opts);
         sched.bind_obs(obs.registry(), 0);
         obs.set_worker_gauges(0, cap, self.engine.resident_weight_bytes());
@@ -1229,7 +1417,7 @@ impl<'a> Router<'a> {
                 continue;
             };
             obs.dispatch(&id, 0, &reqs, false);
-            self.run_session(id, reqs, &mut sched, &rx, &mut open, &obs);
+            self.run_session(id, reqs, &mut sched, &rx, &mut open, &obs, &policy);
         }
         let wall = start.elapsed().as_secs_f64();
         let mut stats = finish_multi_obs(&obs, wall, sched.metrics(), cap);
@@ -1241,7 +1429,10 @@ impl<'a> Router<'a> {
     /// loop forward → retire/reply → re-fill from the channel + the
     /// tenant's queue, until the slots drain and no same-tenant work is
     /// waiting.  Registered-resident tenants take the device-cached path;
-    /// host-only registrations fall back to per-forward upload.
+    /// host-only registrations fall back to per-forward upload.  Survivors
+    /// of a failed session are re-admitted at the front of the tenant's
+    /// queue for a fresh session (bounded by their per-request budget).
+    #[allow(clippy::too_many_arguments)]
     fn run_session(
         &mut self,
         id: Option<String>,
@@ -1250,6 +1441,7 @@ impl<'a> Router<'a> {
         rx: &Receiver<Request>,
         open: &mut bool,
         obs: &ServeObs,
+        policy: &SessionPolicy,
     ) {
         let rec = obs.recorder(&id, 0);
         obs.session_start(0, false);
@@ -1282,7 +1474,18 @@ impl<'a> Router<'a> {
             drain_channel(rx, sched, open, obs);
             sched.admit(current, Instant::now(), free)
         };
-        run_decode_session(engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec);
+        let survivors = run_decode_session(
+            engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec, policy,
+        );
+        if !survivors.is_empty() {
+            let n = survivors.len();
+            for req in survivors {
+                // front of the tenant's FIFO; an expired deadline replies
+                // DeadlineExceeded inside requeue
+                sched.requeue(req);
+            }
+            obs.session_rebuilt(0, n);
+        }
     }
 }
 

@@ -32,17 +32,23 @@
 //! last one drain the queues with errors, so nothing ever hangs and no
 //! request is failed while a healthy replica could have served it.
 
+use super::error::ServeError;
 use super::registry::{AdapterRegistry, SharedAdapterSource};
 use super::scheduler::{Request, SchedulerOpts, ShardedScheduler};
-use super::{finish_multi_obs, run_decode_session, Engine, MultiServeStats, ServeObs};
+use super::{
+    finish_multi_obs, run_decode_session, Engine, MultiServeStats, ServeObs, SessionPolicy,
+};
+use crate::faults::FaultInjector;
 use crate::model::ParamSet;
 use crate::runtime::{DeviceStore, Runtime};
+use crate::util::sync::lock_recover;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Barrier;
+use std::sync::{Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 /// Everything a worker thread needs to build its own engine replica.
@@ -69,11 +75,18 @@ pub struct PoolOpts {
     /// single-worker behavior over the pool plumbing
     pub workers: usize,
     pub sched: SchedulerOpts,
+    /// chaos-harness failpoints, threaded into every worker (disabled by
+    /// default: checks cost one branch)
+    pub faults: FaultInjector,
 }
 
 impl Default for PoolOpts {
     fn default() -> Self {
-        PoolOpts { workers: 1, sched: SchedulerOpts::default() }
+        PoolOpts {
+            workers: 1,
+            sched: SchedulerOpts::default(),
+            faults: FaultInjector::disabled(),
+        }
     }
 }
 
@@ -153,6 +166,8 @@ pub fn serve_pool_obs(
     obs: ServeObs,
 ) -> Result<PoolServeStats> {
     let workers = opts.workers.max(1);
+    let policy =
+        SessionPolicy { max_retries: opts.sched.max_retries, faults: opts.faults.clone() };
     let mut sched = ShardedScheduler::new(workers, opts.sched.clone());
     sched.bind_obs(obs.registry());
     let start = Instant::now();
@@ -164,15 +179,16 @@ pub fn serve_pool_obs(
     let ready = Barrier::new(workers);
     let failed = AtomicUsize::new(0);
     let outcomes: Vec<WorkerOutcome> = std::thread::scope(|scope| {
-        let (sched, ready, failed, obs) = (&sched, &ready, &failed, &obs);
+        let (sched, ready, failed, obs, policy) = (&sched, &ready, &failed, &obs, &policy);
         let handles: Vec<_> = (0..workers)
             .map(|wid| {
                 scope.spawn(move || {
-                    worker_main(wid, spec, source, sched, start, ready, failed, obs)
+                    worker_main(wid, spec, source, sched, start, ready, failed, obs, policy)
                 })
             })
             .collect();
         // dispatcher: feed the shards until the producer side closes
+        // (refused pushes — overload / expired deadline — replied inline)
         for req in rx.iter() {
             obs.enqueue(&req);
             sched.push(req);
@@ -180,7 +196,22 @@ pub fn serve_pool_obs(
         sched.close();
         handles
             .into_iter()
-            .map(|h| h.join().expect("worker thread panicked"))
+            .enumerate()
+            .map(|(wid, h)| {
+                h.join().unwrap_or_else(|_| {
+                    // the thread died outside the per-session unwind
+                    // boundary (setup-path panic): synthesize an outcome
+                    // so the pool report stays complete
+                    obs.worker_crash(wid);
+                    WorkerOutcome {
+                        worker: wid,
+                        capacity: 0,
+                        resident_weight_bytes: 0,
+                        setup_secs: 0.0,
+                        setup_error: Some("worker thread panicked".to_string()),
+                    }
+                })
+            })
             .collect()
     });
     let wall = start.elapsed().as_secs_f64();
@@ -244,6 +275,7 @@ fn worker_main(
     ready: &Barrier,
     failed: &AtomicUsize,
     obs: &ServeObs,
+    policy: &SessionPolicy,
 ) -> WorkerOutcome {
     let mut out = WorkerOutcome {
         worker: wid,
@@ -252,7 +284,7 @@ fn worker_main(
         setup_secs: 0.0,
         setup_error: None,
     };
-    match worker_serve(wid, spec, source, sched, epoch, ready, obs, &mut out) {
+    match worker_serve(wid, spec, source, sched, epoch, ready, obs, policy, &mut out) {
         Ok(()) => {}
         Err(e) => {
             let msg = format!("worker {wid} replica setup failed: {e:#}");
@@ -286,8 +318,12 @@ fn worker_serve(
     epoch: Instant,
     ready: &Barrier,
     obs: &ServeObs,
+    policy: &SessionPolicy,
     out: &mut WorkerOutcome,
 ) -> Result<()> {
+    // route the below-serve-layer failpoints (runtime upload, registry
+    // replication) through this worker's thread
+    let _fault_guard = crate::faults::install(&policy.faults);
     // the replica: everything below is thread-local, including the PJRT
     // client and every device buffer
     let rt = Runtime::new(&spec.artifacts)
@@ -335,30 +371,81 @@ fn worker_serve(
             continue;
         }
         obs.session_start(wid, stolen);
-        let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) = match &id
-        {
-            None => (
-                engine.default_sets.iter().collect(),
-                engine.default_kind.as_str(),
-                None,
-            ),
-            Some(tid) => match registry.get_for_serving(tid) {
-                Some((entry, dev)) => {
-                    (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
-                }
-                None => {
-                    let msg = format!("adapter '{tid}' is not registered");
-                    for req in reqs {
+        // the pen: the claimed batch lives outside the unwind boundary, so
+        // a session that panics before taking it leaves it recoverable.
+        // The injected crash point (`SITE_WORKER_PANIC`) fires before the
+        // take — modelling the realistic worst case of a worker dying
+        // right after claiming work — so chaos runs are deterministic.  A
+        // panic *after* the take unwinds the session's slot state, and
+        // those clients see their reply channel close (at-most-once).
+        let pen = Mutex::new(Some(reqs));
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let _ = policy.faults.check(crate::faults::SITE_WORKER_PANIC);
+            let reqs = lock_recover(&pen).take().expect("pen filled above");
+            let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) =
+                match &id {
+                    None => (
+                        engine.default_sets.iter().collect(),
+                        engine.default_kind.as_str(),
+                        None,
+                    ),
+                    Some(tid) => match registry.get_for_serving(tid) {
+                        Some((entry, dev)) => {
+                            (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
+                        }
+                        None => {
+                            let msg = format!("adapter '{tid}' is not registered");
+                            for req in reqs {
+                                rec.error(&req, 0, &msg);
+                                let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                            }
+                            return Vec::new();
+                        }
+                    },
+                };
+            let mut refill = |current: &Option<String>, free: usize| {
+                sched.admit(current, Instant::now(), free)
+            };
+            run_decode_session(
+                &engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec, policy,
+            )
+        }));
+        let survivors: Vec<Request> = match outcome {
+            Ok(survivors) => survivors,
+            Err(_) => {
+                // the session crashed; the worker itself lives on.  Charge
+                // every recovered request one attempt (at-most-once: a row
+                // that might have half-decoded is never silently re-run
+                // past its budget)
+                obs.worker_crash(wid);
+                let recovered = lock_recover(&pen).take().unwrap_or_default();
+                let msg = format!("worker {wid} crashed while serving this batch");
+                let mut live = Vec::new();
+                for mut req in recovered {
+                    req.attempts += 1;
+                    if req.attempts > policy.max_retries {
                         rec.error(&req, 0, &msg);
-                        let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                        let _ =
+                            req.reply.send(Err(anyhow::Error::new(ServeError::EngineFailure {
+                                attempts: req.attempts,
+                                message: msg.clone(),
+                            })));
+                    } else {
+                        live.push(req);
                     }
-                    continue;
                 }
-            },
+                live
+            }
         };
-        let mut refill =
-            |current: &Option<String>, free: usize| sched.admit(current, Instant::now(), free);
-        run_decode_session(&engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec);
+        if !survivors.is_empty() {
+            // back to the queue for a fresh session — possibly on a
+            // sibling worker (requeue wakes one); works even after close
+            let n = survivors.len();
+            for req in survivors {
+                sched.requeue(req);
+            }
+            obs.session_rebuilt(wid, n);
+        }
     }
     Ok(())
 }

@@ -18,6 +18,7 @@ use crate::model::ParamSet;
 use crate::obs::{Counter, Gauge, Registry};
 use crate::runtime::{DeviceStore, ModelHyper, Runtime};
 use crate::tensor::Tensor;
+use crate::util::sync::lock_recover;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -510,11 +511,11 @@ impl SharedAdapterSource {
     }
 
     pub fn capacity(&self) -> usize {
-        self.inner.lock().unwrap().capacity
+        lock_recover(&self.inner).capacity
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        lock_recover(&self.inner).entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -523,18 +524,18 @@ impl SharedAdapterSource {
 
     /// Monotonic change counter; bumps on every register/evict.
     pub fn version(&self) -> u64 {
-        self.inner.lock().unwrap().version
+        lock_recover(&self.inner).version
     }
 
     pub fn ids(&self) -> Vec<String> {
-        self.inner.lock().unwrap().entries.keys().cloned().collect()
+        lock_recover(&self.inner).entries.keys().cloned().collect()
     }
 
     /// Validate + record one tenant.  Same-id registration replaces the
     /// previous weights (workers pick the new ones up at next sync); a
     /// *new* id past capacity is an error — eviction is always explicit.
     pub fn register(&self, entry: AdapterEntry) -> Result<()> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         AdapterRegistry::validate(&inner.hyper, &entry)?;
         if !inner.entries.contains_key(&entry.id) && inner.entries.len() >= inner.capacity {
             bail!(
@@ -554,7 +555,7 @@ impl SharedAdapterSource {
     /// failures, and capacity overflow are checked before anything is
     /// recorded.  Returns the registered ids in order.
     pub fn register_all(&self, entries: Vec<AdapterEntry>) -> Result<Vec<String>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         let mut ids: Vec<String> = Vec::new();
         for entry in &entries {
             if inner.entries.contains_key(&entry.id) || ids.iter().any(|i| i == &entry.id) {
@@ -586,7 +587,7 @@ impl SharedAdapterSource {
     /// replica (host entry + device buffers) at its next sync.  True if
     /// the tenant was registered.
     pub fn evict(&self, id: &str) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if inner.entries.remove(id).is_none() {
             return false;
         }
@@ -621,7 +622,7 @@ impl SharedAdapterSource {
             Evict(String),
         }
         let (hyper, mut changes, head) = {
-            let inner = self.inner.lock().unwrap();
+            let inner = lock_recover(&self.inner);
             // steady-state fast path: one u64 compare under the lock —
             // per-session worker syncs must not pay a full log scan
             if inner.version == *cursor {
@@ -653,6 +654,10 @@ impl SharedAdapterSource {
         for (_, change) in changes.drain(..) {
             match change {
                 Change::Register(entry) => {
+                    // chaos-harness failpoint: a replication failure here
+                    // leaves the cursor unadvanced, so the worker retries
+                    // the same changes at its next per-session sync
+                    crate::faults::check_thread(crate::faults::SITE_REGISTER)?;
                     match rt {
                         Some(rt) => registry.register_resident(rt, &hyper, entry)?,
                         None => registry.register(&hyper, entry)?,

@@ -4,6 +4,7 @@ pub mod bench;
 pub mod cli;
 pub mod prop;
 pub mod json;
+pub mod sync;
 
 use std::time::Instant;
 

@@ -1,0 +1,70 @@
+//! Poison-recovering lock helpers.
+//!
+//! `std::sync::Mutex` poisons itself when a holder panics, and every
+//! subsequent `.lock().unwrap()` then panics too — one crashing worker
+//! cascades into the dispatcher and every sibling that touches the same
+//! shard.  All of this crate's shared state is counters, queues, and
+//! logs whose invariants hold between individual mutations (a panicking
+//! holder can at worst lose its own in-flight item), so the right policy
+//! is to *recover*: take the guard out of the `PoisonError` and keep
+//! serving.  The serve layer pairs this with `catch_unwind` around decode
+//! sessions, so a crashed session neither wedges the scheduler nor takes
+//! the process down.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// `Condvar::wait_timeout` with the same poison-recovery policy.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|p| p.into_inner())
+}
+
+/// `Mutex::get_mut` (exclusive access, no guard) with poison recovery.
+pub fn get_mut_recover<T>(m: &mut Mutex<T>) -> &mut T {
+    m.get_mut().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(0usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 1);
+    }
+
+    #[test]
+    fn get_mut_recover_survives_poison() {
+        let mut m = Mutex::new(5usize);
+        // poison via a scoped thread panicking while holding the guard
+        std::thread::scope(|s| {
+            let r = &m;
+            let _ = s
+                .spawn(move || {
+                    let _g = r.lock().unwrap();
+                    panic!("poison it");
+                })
+                .join();
+        });
+        assert_eq!(*get_mut_recover(&mut m), 5);
+    }
+}

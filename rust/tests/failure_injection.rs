@@ -1,13 +1,29 @@
 //! Failure-injection tests: the coordinator must fail loudly and precisely
 //! on corrupted artifacts, mismatched shapes, and invalid states — not
 //! produce silently-wrong science.
+//!
+//! The serve-path chaos suite at the bottom drives the deterministic
+//! failpoint harness (`sqft::faults`) through the worker pool: injected
+//! decode failures must stay inside one session, transient failures must
+//! be absorbed by the retry budget, worker panics must requeue their
+//! claimed batch, and shed/cancel paths must return *typed* errors
+//! ([`ServeError`]) with matching counters.
 
-use sqft::data::{Sample, Tokenizer};
-use sqft::model::{checkpoint, ParamSet};
+use sqft::data::{Dataset, Sample, Task, Tokenizer};
+use sqft::faults::{FaultInjector, FaultKind, FaultRule, SITE_FORWARD, SITE_WORKER_PANIC};
+use sqft::model::{checkpoint, init_base, ParamSet};
+use sqft::peft::Method;
+use sqft::pipeline;
 use sqft::runtime::{args::build_args, DeviceStore, HostValue, Manifest, Runtime};
+use sqft::serve::{
+    serve_pool_obs, AdapterEntry, EngineSpec, PoolOpts, Request, Scheduler, SchedulerOpts,
+    ServeError, ServeObs, SharedAdapterSource,
+};
 use sqft::tensor::{Rng, Tensor};
 use sqft::util::json::Json;
 use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -153,4 +169,288 @@ fn device_store_missing_key_is_clear() {
     };
     assert!(format!("{err:#}").contains("missing 'nope'"));
     let _ = HostValue::F32(Tensor::zeros(&[1])); // exercise the type
+}
+
+// --------------------------------------------------------------------
+// serve-path chaos suite: deterministic failpoints through the pool
+// --------------------------------------------------------------------
+
+struct ServeFixture {
+    hyper: sqft::runtime::ModelHyper,
+    spec: EngineSpec,
+    source: SharedAdapterSource,
+    entries: Vec<AdapterEntry>,
+}
+
+fn serve_fixture(rt: &Runtime, dir: &Path) -> ServeFixture {
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 71);
+    let base = init_base(&hyper, &mut Rng::new(33));
+    let prepared = pipeline::prepare(rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(34)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let entries = pipeline::tenant_adapters(rt, config, &prepared, 2,
+                                            &ds.train, &tok, 2, 800).unwrap();
+    let source = SharedAdapterSource::new(hyper.clone(), 8);
+    source.register_all(entries.clone()).unwrap();
+    let spec = EngineSpec {
+        artifacts: dir.to_path_buf(),
+        config: config.to_string(),
+        frozen,
+        eval_kind: "eval".to_string(),
+        max_new_tokens: 4,
+        registry_capacity: 8,
+    };
+    ServeFixture { hyper, spec, source, entries }
+}
+
+fn chaos_requests(f: &ServeFixture, n: usize) -> Vec<(Option<String>, String)> {
+    let task = Task::SynBoolq;
+    let mut grng = Rng::new(404);
+    (0..n)
+        .map(|i| {
+            (Some(f.entries[i % f.entries.len()].id.clone()), task.gen_sample(&mut grng).prompt)
+        })
+        .collect()
+}
+
+/// Run `reqs` through the pool under a fault plan; per-request results in
+/// request order plus the observability context (for counter asserts).
+fn run_pool_chaos(
+    f: &ServeFixture,
+    reqs: &[(Option<String>, String)],
+    workers: usize,
+    max_retries: usize,
+    faults: FaultInjector,
+) -> (Vec<anyhow::Result<String>>, ServeObs) {
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    for (id, p) in reqs {
+        let (rtx, rrx) = channel();
+        tx.send(Request::new(id.clone(), p.clone(), rtx)).unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let popts = PoolOpts {
+        workers,
+        sched: SchedulerOpts {
+            max_batch: f.hyper.batch,
+            aging: Duration::from_millis(20),
+            max_retries,
+            ..Default::default()
+        },
+        faults,
+    };
+    let obs = ServeObs::with_trace();
+    let kept = obs.clone();
+    serve_pool_obs(&f.spec, &f.source, rx, popts, obs).unwrap();
+    let results = replies.into_iter().map(|r| r.recv().unwrap()).collect();
+    (results, kept)
+}
+
+/// One persistent decode failure (retry budget 0) fails only its own
+/// session's residents — one tenant, at most one batch — while every
+/// other request's answer stays byte-identical to the fault-free run;
+/// a single transient failure under the default budget is absorbed
+/// entirely by the retry path.
+#[test]
+fn injected_forward_failure_is_isolated_and_transients_are_retried() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let f = serve_fixture(&rt, &dir);
+    let reqs = chaos_requests(&f, 12);
+    let tenant_of = |i: usize| f.entries[i % f.entries.len()].id.clone();
+
+    let (baseline, _) = run_pool_chaos(&f, &reqs, 1, 2, FaultInjector::disabled());
+    let baseline: Vec<String> =
+        baseline.into_iter().map(|r| r.expect("fault-free run must not error")).collect();
+
+    // persistent: the 2nd forward fails, no retries left
+    let inj = FaultInjector::seeded(5)
+        .with_rule(FaultRule::window(SITE_FORWARD, FaultKind::Error, 1, 1));
+    let (results, _obs) = run_pool_chaos(&f, &reqs, 1, 0, inj.clone());
+    assert_eq!(inj.fires(SITE_FORWARD), 1);
+    let mut failed_tenants: Vec<String> = Vec::new();
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(ans) => assert_eq!(ans, &baseline[i],
+                "unaffected request {i} diverged from the fault-free run"),
+            Err(e) => {
+                let se = ServeError::of(e).expect("typed error expected");
+                assert!(matches!(se, ServeError::EngineFailure { .. }), "got {se}");
+                failed_tenants.push(tenant_of(i));
+            }
+        }
+    }
+    failed_tenants.dedup();
+    let failed = results.iter().filter(|r| r.is_err()).count();
+    assert!(failed >= 1, "the persistent failure must fail its residents");
+    assert!(failed <= f.hyper.batch, "blast radius exceeded one session");
+    assert_eq!(failed_tenants.len(), 1, "failures crossed tenants: {failed_tenants:?}");
+
+    // transient: same site, but the default budget absorbs it — every
+    // answer identical, the retry counted
+    let inj = FaultInjector::seeded(5)
+        .with_rule(FaultRule::nth(SITE_FORWARD, FaultKind::Error, 1));
+    let (results, obs) = run_pool_chaos(&f, &reqs, 1, 2, inj.clone());
+    assert_eq!(inj.fires(SITE_FORWARD), 1);
+    for (i, r) in results.iter().enumerate() {
+        let ans = r.as_ref().expect("transient failure must be absorbed by retry");
+        assert_eq!(ans, &baseline[i], "request {i} diverged after an in-session retry");
+    }
+    let snap = obs.registry().snapshot();
+    assert!(snap.sum("serve_retries_total") >= 1.0, "the retry must be counted");
+    assert_eq!(snap.sum("serve_requests_total") as usize, reqs.len());
+
+    // session failure with budget left: two consecutive failures exhaust
+    // the in-session retry (budget 1), but every resident still has
+    // re-admission budget — the whole session is rebuilt and every
+    // request completes with baseline-identical bytes
+    let inj = FaultInjector::seeded(5)
+        .with_rule(FaultRule::window(SITE_FORWARD, FaultKind::Error, 1, 2));
+    let (results, obs) = run_pool_chaos(&f, &reqs, 1, 1, inj.clone());
+    assert_eq!(inj.fires(SITE_FORWARD), 2);
+    for (i, r) in results.iter().enumerate() {
+        let ans = r.as_ref().expect("re-admission must recover the session's residents");
+        assert_eq!(ans, &baseline[i], "request {i} diverged after session rebuild");
+    }
+    let snap = obs.registry().snapshot();
+    assert!(snap.sum("serve_sessions_rebuilt_total") >= 1.0,
+        "survivors must be re-admitted into a fresh session");
+    assert_eq!(snap.sum("serve_requests_total") as usize, reqs.len());
+}
+
+/// An injected worker panic (fired after the batch is claimed, while it
+/// is still in the recovery pen) loses nothing: the batch is requeued to
+/// surviving sessions, every answer matches the fault-free run, and the
+/// crash + rebuild are counted.
+#[test]
+fn worker_panic_requeues_the_claimed_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let f = serve_fixture(&rt, &dir);
+    let reqs = chaos_requests(&f, 12);
+
+    let (baseline, _) = run_pool_chaos(&f, &reqs, 2, 2, FaultInjector::disabled());
+    let baseline: Vec<String> =
+        baseline.into_iter().map(|r| r.expect("fault-free run must not error")).collect();
+
+    let inj = FaultInjector::seeded(5)
+        .with_rule(FaultRule::nth(SITE_WORKER_PANIC, FaultKind::Panic, 0));
+    let (results, obs) = run_pool_chaos(&f, &reqs, 2, 2, inj.clone());
+    assert_eq!(inj.fires(SITE_WORKER_PANIC), 1);
+    for (i, r) in results.iter().enumerate() {
+        let ans = r.as_ref().expect("crash recovery must not lose requests");
+        assert_eq!(ans, &baseline[i], "request {i} diverged after worker-crash recovery");
+    }
+    let snap = obs.registry().snapshot();
+    assert!(snap.sum("serve_worker_crashes_total") >= 1.0, "crash must be counted");
+    assert!(snap.sum("serve_sessions_rebuilt_total") >= 1.0, "requeue must be counted");
+}
+
+/// A client that goes away (drops its [`CancelHandle`]) gets a typed
+/// `Cancelled` reply instead of burning decode slots, and the drop is
+/// counted as `serve_cancelled_total`; every other request is unaffected.
+#[test]
+fn dropped_client_cancellation_is_typed_and_counted() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let f = serve_fixture(&rt, &dir);
+    let reqs = chaos_requests(&f, 8);
+
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    for (i, (id, p)) in reqs.iter().enumerate() {
+        let (rtx, rrx) = channel();
+        let mut req = Request::new(id.clone(), p.clone(), rtx);
+        if i == 3 {
+            drop(req.cancel_handle()); // the client vanishes immediately
+        }
+        tx.send(req).unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let obs = ServeObs::with_trace();
+    let kept = obs.clone();
+    serve_pool_obs(
+        &f.spec,
+        &f.source,
+        rx,
+        PoolOpts {
+            workers: 1,
+            sched: SchedulerOpts { max_batch: f.hyper.batch, ..Default::default() },
+            ..Default::default()
+        },
+        obs,
+    )
+    .unwrap();
+    for (i, rrx) in replies.into_iter().enumerate() {
+        let r = rrx.recv().unwrap();
+        if i == 3 {
+            let e = r.expect_err("cancelled request must not be served");
+            assert!(
+                matches!(ServeError::of(&e), Some(ServeError::Cancelled)),
+                "expected typed Cancelled, got {e:#}"
+            );
+        } else {
+            r.expect("other requests must be unaffected by the cancellation");
+        }
+    }
+    let snap = kept.registry().snapshot();
+    assert_eq!(snap.sum("serve_cancelled_total") as usize, 1);
+    assert_eq!(snap.sum("serve_requests_total") as usize, reqs.len() - 1);
+}
+
+/// Backpressure is a typed refusal, not a hang: pushes beyond
+/// `queue_cap` reply `Overloaded` inline, and the rejection is counted
+/// as an overload shed.  Pure scheduler policy — no artifacts needed.
+#[test]
+fn queue_cap_overflow_replies_typed_overloaded() {
+    let mut sched = Scheduler::new(SchedulerOpts {
+        queue_cap: Some(2),
+        ..Default::default()
+    });
+    let mut replies = Vec::new();
+    for i in 0..4 {
+        let (rtx, rrx) = channel();
+        let accepted =
+            sched.push(Request::new(Some("t".into()), format!("p{i}"), rtx));
+        assert_eq!(accepted, i < 2, "push {i} vs cap 2");
+        replies.push(rrx);
+    }
+    for (i, rrx) in replies.into_iter().enumerate() {
+        if i < 2 {
+            assert!(rrx.try_recv().is_err(), "accepted request must still be queued");
+        } else {
+            let e = rrx.recv().unwrap().expect_err("overflow must be refused");
+            match ServeError::of(&e) {
+                Some(ServeError::Overloaded { queue_cap }) => assert_eq!(*queue_cap, 2),
+                other => panic!("expected Overloaded, got {other:?}"),
+            }
+        }
+    }
+    assert_eq!(sched.metrics().shed, 2);
+    assert_eq!(sched.metrics().deadline_expired, 0);
+}
+
+/// Deadlines shed with their own typed error, distinct from overload:
+/// a request whose deadline has already passed is refused at push (DOA)
+/// and counted as a deadline shed.
+#[test]
+fn expired_deadline_replies_typed_deadline_exceeded() {
+    let mut sched = Scheduler::new(SchedulerOpts::default());
+    let (rtx, rrx) = channel();
+    let mut req = Request::new(Some("t".into()), "p".into(), rtx);
+    req.deadline = Some(Instant::now()); // already expired
+    assert!(!sched.push(req), "DOA request must be refused");
+    let e = rrx.recv().unwrap().expect_err("expired request must be shed");
+    assert!(
+        matches!(ServeError::of(&e), Some(ServeError::DeadlineExceeded { .. })),
+        "expected typed DeadlineExceeded, got {e:#}"
+    );
+    assert_eq!(sched.metrics().deadline_expired, 1);
+    assert_eq!(sched.metrics().shed, 1, "deadline sheds count into the shed total");
 }

@@ -20,13 +20,14 @@
 //!     gauge's peak watermark.
 
 use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::faults::{FaultInjector, FaultKind, FaultRule, SITE_FORWARD, SITE_WORKER_PANIC};
 use sqft::model::init_base;
 use sqft::peft::Method;
 use sqft::pipeline;
 use sqft::runtime::Runtime;
 use sqft::serve::{
-    serve_pool_obs, AdapterEntry, EngineSpec, PoolOpts, Request, SchedulerOpts, ServeObs,
-    SharedAdapterSource,
+    serve_pool_obs, AdapterEntry, EngineSpec, PoolOpts, Request, SchedulerOpts, ServeError,
+    ServeObs, SharedAdapterSource,
 };
 use sqft::tensor::Rng;
 use sqft::util::json::Json;
@@ -125,7 +126,10 @@ fn pool_counters_reconcile_with_trace_spans() {
         rx,
         PoolOpts {
             workers: 2,
-            sched: SchedulerOpts { max_batch: f.hyper.batch, aging: Duration::from_millis(20) },
+            sched: SchedulerOpts { max_batch: f.hyper.batch,
+                                   aging: Duration::from_millis(20),
+                                   ..Default::default() },
+            ..Default::default()
         },
         obs.clone(),
     )
@@ -224,4 +228,158 @@ fn pool_counters_reconcile_with_trace_spans() {
         let n: usize = snap.series_by(name, "tenant").values().map(Vec::len).sum();
         assert_eq!(n, served, "{name} must carry one sample per served request");
     }
+
+    // a fault-free run records *zero* on every fault-path counter, and
+    // the trace carries none of the fault-path events — the chaos
+    // instrumentation must be invisible until something actually fails
+    for name in [
+        "serve_retries_total",
+        "serve_cancelled_total",
+        "serve_shed_total",
+        "serve_deadline_exceeded_total",
+        "serve_worker_crashes_total",
+        "serve_sessions_rebuilt_total",
+    ] {
+        assert_eq!(snap.sum(name) as usize, 0, "{name} must be 0 in a clean run");
+    }
+    for ev in ["retry", "cancel", "worker_crash", "session_rebuilt"] {
+        assert!(events(&parsed, ev).is_empty(), "unexpected {ev} event in a clean run");
+    }
+    assert_eq!(sched.shed, 0);
+    assert_eq!(sched.deadline_expired, 0);
+}
+
+/// Fault-path reconciliation: under an injected chaos plan (one transient
+/// forward failure, one worker crash, one dropped client, one expired
+/// deadline, a tight queue cap), the retry/shed/deadline/cancel/crash
+/// counters must sum exactly against the trace events of the same run
+/// *and* against the typed errors clients actually received.
+#[test]
+fn fault_counters_reconcile_with_trace_and_typed_errors() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt);
+    let task = Task::SynBoolq;
+    let source = SharedAdapterSource::new(f.hyper.clone(), 8);
+    source.register_all(f.entries.clone()).unwrap();
+
+    let mut grng = Rng::new(191);
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    let mut sent = 0usize;
+    for i in 0..16 {
+        let id = Some(f.entries[i % f.entries.len()].id.clone());
+        let (rtx, rrx) = channel();
+        let mut req = Request::new(id, task.gen_sample(&mut grng).prompt, rtx);
+        if i == 0 {
+            // dropped client; first in, so the queue cap can never have
+            // shed it first — it must reach the fill path and be skipped
+            drop(req.cancel_handle());
+        }
+        tx.send(req).unwrap();
+        replies.push(rrx);
+        sent += 1;
+    }
+    // one request already past its deadline (shed at push, DOA)
+    let (rtx, rrx) = channel();
+    let mut doa = Request::new(Some(f.entries[0].id.clone()),
+                               task.gen_sample(&mut grng).prompt, rtx);
+    doa.deadline = Some(std::time::Instant::now());
+    tx.send(doa).unwrap();
+    replies.push(rrx);
+    sent += 1;
+    drop(tx);
+
+    // chaos plan: 2nd forward check errors once (transient, absorbed by
+    // the retry budget), first claimed batch panics its worker (batch
+    // requeued).  Everything is nth-pinned, so counts are exact.
+    let faults = FaultInjector::seeded(17)
+        .with_rule(FaultRule::nth(SITE_FORWARD, FaultKind::Error, 1))
+        .with_rule(FaultRule::nth(SITE_WORKER_PANIC, FaultKind::Panic, 0));
+    let obs = ServeObs::with_trace();
+    let stats = serve_pool_obs(
+        &spec(&f),
+        &source,
+        rx,
+        PoolOpts {
+            workers: 2,
+            sched: SchedulerOpts {
+                max_batch: f.hyper.batch,
+                aging: Duration::from_millis(20),
+                queue_cap: Some(4), // tight: pushes beyond 4/shard shed
+                ..Default::default()
+            },
+            faults: faults.clone(),
+        },
+        obs.clone(),
+    )
+    .unwrap();
+    assert_eq!(faults.fires(SITE_FORWARD), 1);
+    assert_eq!(faults.fires(SITE_WORKER_PANIC), 1);
+
+    // classify what clients actually got back
+    let (mut ok, mut overloaded, mut deadline, mut cancelled, mut other) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
+    for rrx in replies {
+        match rrx.recv().unwrap() {
+            Ok(_) => ok += 1,
+            Err(e) => match ServeError::of(&e) {
+                Some(ServeError::Overloaded { .. }) => overloaded += 1,
+                Some(ServeError::DeadlineExceeded { .. }) => deadline += 1,
+                Some(ServeError::Cancelled) => cancelled += 1,
+                _ => other += 1,
+            },
+        }
+    }
+    assert_eq!(ok + overloaded + deadline + cancelled + other, sent);
+    assert_eq!(other, 0, "no untyped failures expected under this plan");
+    assert_eq!(deadline, 1, "exactly the DOA request");
+    assert_eq!(cancelled, 1, "exactly the dropped client");
+    assert!(overloaded >= 1, "the tight queue cap must shed under an up-front burst");
+
+    let snap = obs.registry().snapshot();
+    let lines = obs.trace().expect("with_trace carries a log").lines();
+    let parsed: Vec<Json> = lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+
+    // counters == typed errors clients saw
+    let shed_by = snap.sum_by("serve_shed_total", "reason");
+    assert_eq!(shed_by.get("overload").copied().unwrap_or(0.0) as usize, overloaded);
+    assert_eq!(shed_by.get("deadline").copied().unwrap_or(0.0) as usize, deadline);
+    assert_eq!(snap.sum("serve_deadline_exceeded_total") as usize, deadline);
+    assert_eq!(snap.sum("serve_cancelled_total") as usize, cancelled);
+    assert_eq!(snap.sum("serve_requests_total") as usize, ok);
+    assert_eq!(snap.sum("serve_errors_total") as usize, 0);
+
+    // counters == trace events of the same run
+    assert_eq!(events(&parsed, "retry").len(), snap.sum("serve_retries_total") as usize);
+    assert_eq!(snap.sum("serve_retries_total") as usize, 1, "the pinned transient failure");
+    assert_eq!(events(&parsed, "cancel").len(), cancelled);
+    assert_eq!(events(&parsed, "worker_crash").len(),
+               snap.sum("serve_worker_crashes_total") as usize);
+    assert_eq!(snap.sum("serve_worker_crashes_total") as usize, 1);
+    assert_eq!(events(&parsed, "session_rebuilt").len(),
+               snap.sum("serve_sessions_rebuilt_total") as usize);
+    assert_eq!(snap.sum("serve_sessions_rebuilt_total") as usize, 1,
+        "the crashed worker's batch is requeued exactly once");
+
+    // the SchedulerMetrics view and the registry agree on sheds
+    let sched = &stats.serve.scheduler;
+    assert_eq!(sched.shed, overloaded + deadline);
+    assert_eq!(sched.deadline_expired, deadline);
+
+    // lifecycle closure under faults: every accepted request admits once
+    // and ends exactly one way; retries/rebuilds never double-count
+    let retires = events(&parsed, "retire");
+    assert_eq!(retires.len(), ok);
+    assert_eq!(events(&parsed, "enqueue").len(), sent);
+    assert_eq!(events(&parsed, "admit").len(), ok,
+        "admit events must match retires: retried steps and crash-requeued \
+batches admit their requests exactly once");
+    let retire_tokens: usize = retires.iter().map(|e| num(e, "tokens")).sum();
+    assert_eq!(retire_tokens, stats.serve.generated_tokens);
+    assert_eq!(snap.sum("serve_tokens_total") as usize, stats.serve.generated_tokens);
 }

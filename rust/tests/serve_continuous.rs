@@ -112,7 +112,7 @@ fn short_requests_refill_slots_while_long_request_decodes() {
         replies.push(rrx);
     }
     drop(tx);
-    let opts = SchedulerOpts { max_batch: b, aging: Duration::from_millis(20) };
+    let opts = SchedulerOpts { max_batch: b, aging: Duration::from_millis(20), ..Default::default() };
     let stats = router.serve(rx, opts).unwrap();
 
     // per-request answers byte-identical to the host-upload reference

@@ -95,7 +95,9 @@ fn multi_adapter_answers_match_single_adapter_generation() {
         }
     }
     drop(tx);
-    let opts = SchedulerOpts { max_batch: hyper.batch, aging: Duration::from_millis(20) };
+    let opts = SchedulerOpts { max_batch: hyper.batch,
+                               aging: Duration::from_millis(20),
+                               ..Default::default() };
     let stats = router.serve(rx, opts).unwrap();
 
     for (ti, pi, rrx) in replies {
@@ -159,7 +161,9 @@ fn merged_fast_path_and_unknown_adapter() {
     tx.send(Request::new(Some("nope".to_string()), prompts[0].clone(), rtx)).unwrap();
     drop(tx);
 
-    let opts = SchedulerOpts { max_batch: hyper.batch, aging: Duration::from_millis(20) };
+    let opts = SchedulerOpts { max_batch: hyper.batch,
+                               aging: Duration::from_millis(20),
+                               ..Default::default() };
     let stats = router.serve(rx, opts).unwrap();
 
     for (rrx, want) in replies.into_iter().zip(&expected) {

@@ -91,7 +91,9 @@ fn pool_answers_are_byte_identical_to_single_worker_reference() {
         };
         requests.push((id, task.gen_sample(&mut grng).prompt));
     }
-    let opts = SchedulerOpts { max_batch: f.hyper.batch, aging: Duration::from_millis(20) };
+    let opts = SchedulerOpts { max_batch: f.hyper.batch,
+                               aging: Duration::from_millis(20),
+                               ..Default::default() };
 
     // single-worker reference through the Router
     let engine = Engine::new(&rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
@@ -130,7 +132,7 @@ fn pool_answers_are_byte_identical_to_single_worker_reference() {
             &spec,
             &source,
             rx,
-            PoolOpts { workers, sched: opts.clone() },
+            PoolOpts { workers, sched: opts.clone(), ..Default::default() },
         )
         .unwrap();
         for (i, rrx) in replies.into_iter().enumerate() {
@@ -182,13 +184,15 @@ fn pool_serves_every_tenant_and_errors_unknown_ids() {
         requests.push((Some(f.entries[idx].id.clone()), task.gen_sample(&mut grng).prompt));
     }
     requests.push((Some("nope".to_string()), task.gen_sample(&mut grng).prompt));
-    let opts = SchedulerOpts { max_batch: f.hyper.batch, aging: Duration::from_millis(5) };
+    let opts = SchedulerOpts { max_batch: f.hyper.batch,
+                               aging: Duration::from_millis(5),
+                               ..Default::default() };
     let stats = benchmark_pool(
         &spec,
         &source,
         requests.clone(),
         Duration::from_millis(1),
-        PoolOpts { workers: 2, sched: opts },
+        PoolOpts { workers: 2, sched: opts, ..Default::default() },
     )
     .unwrap();
     assert_eq!(stats.serve.total.served + stats.serve.total.errors, requests.len());
@@ -240,7 +244,7 @@ fn coordinated_eviction_applies_across_pool_runs() {
         &source,
         requests,
         Duration::ZERO,
-        PoolOpts { workers: 2, sched: SchedulerOpts::default() },
+        PoolOpts { workers: 2, sched: SchedulerOpts::default(), ..Default::default() },
     )
     .unwrap();
     assert_eq!(stats.serve.total.errors, 1, "evicted tenant must error");
