@@ -9,6 +9,12 @@
 //! byte-identical to 1 worker, and full runs assert >1.5x aggregate
 //! tokens/s at 4 workers).
 //!
+//! The mixed-batch section measures the gathered adapter banks on the
+//! S-LoRA long tail (every tenant sends one request): one mixed session
+//! with per-row `adapter_idx` vs one session per tenant
+//! (`BENCH_mixed_batch.json`; answers asserted identical, and full runs
+//! assert >2x tokens/s for the mixed shape).
+//!
 //! Also measures the cost of the serving telemetry itself: the same
 //! closed-loop pool workload runs once fully instrumented (metrics
 //! registry + JSONL trace spans) and once through `ServeObs::disabled()`
@@ -510,6 +516,144 @@ tenant adapter payload = {} B)",
     ]);
     std::fs::write("BENCH_decode.json", report.to_string_pretty())?;
     println!("wrote BENCH_decode.json");
+
+    // --- mixed-tenant long tail: gathered banks vs same-tenant sessions --
+    // The S-LoRA long tail: every tenant sends exactly ONE request.
+    // Same-tenant serving pays one session per tenant (occupancy 1/b
+    // each); the gathered adapter banks decode every tenant's row in a
+    // single mixed session (per-row `adapter_idx` into the stacked
+    // banks), so the forward count drops ~Nx at identical per-forward
+    // cost.  Answers must not move between the two shapes.
+    let engine_g = Engine::new(&rt, config, &frozen, None, "eval", max_new)?;
+    if !engine_g.supports_gathered() {
+        println!("skipping mixed-batch bench: artifacts lack the gathered kind");
+    } else {
+        let tail_new = max_new; // min == max pins every row's length
+        let mut grng = Rng::new(41);
+        let tail: Vec<(String, String)> = entries
+            .iter()
+            .map(|e| (e.id.clone(), task.gen_sample(&mut grng).prompt))
+            .collect();
+        let reps = smoke_iters(3);
+
+        // same-tenant baseline: one device-cached session per tenant, so
+        // the comparison isolates batching structure, not upload traffic
+        let mut st_registry = AdapterRegistry::new(max_tenants);
+        for e in &entries {
+            st_registry.register_resident(&rt, &hyper, e.clone())?;
+        }
+        let (mut st_answers, mut st_forwards, mut st_tokens) = (Vec::new(), 0usize, 0usize);
+        let mut st_secs = f64::MAX;
+        for _ in 0..reps {
+            let (mut answers, mut forwards, mut tokens) = (Vec::new(), 0usize, 0usize);
+            let t0 = Instant::now();
+            for (e, (_, prompt)) in entries.iter().zip(&tail) {
+                let dev = st_registry.device_set(&e.id).expect("tenant is resident");
+                let mut s = engine_g.begin_decode()?;
+                engine_g.admit(&mut s, prompt, Some(tail_new), tail_new)?;
+                while s.active_slots() > 0 {
+                    for (_, ans) in engine_g.decode_step(&mut s, Some(dev), &[], &e.eval_kind)? {
+                        answers.push(ans);
+                    }
+                }
+                forwards += s.steps();
+                tokens += s.slot_steps();
+            }
+            st_secs = st_secs.min(t0.elapsed().as_secs_f64());
+            st_answers = answers;
+            st_forwards = forwards;
+            st_tokens = tokens;
+        }
+
+        // mixed: the same requests through the router's gathered session
+        let mut mx_stats: Option<sqft::serve::MultiServeStats> = None;
+        let mut mx_answers: Vec<String> = Vec::new();
+        for _ in 0..reps {
+            let engine = Engine::new(&rt, config, &frozen, None, "eval", max_new)?;
+            let mut registry = AdapterRegistry::new(max_tenants);
+            for e in &entries {
+                registry.register_resident(&rt, &hyper, e.clone())?;
+            }
+            let mut router = Router::new(engine, registry);
+            let (tx, rx) = channel::<Request>();
+            let mut replies = Vec::new();
+            for (id, p) in &tail {
+                let (rtx, rrx) = channel();
+                let mut req = Request::new(Some(id.clone()), p.clone(), rtx);
+                req.max_new_tokens = Some(tail_new);
+                req.min_new_tokens = tail_new;
+                let _ = tx.send(req);
+                replies.push(rrx);
+            }
+            drop(tx);
+            let opts = SchedulerOpts { max_batch: hyper.batch,
+                                       aging: Duration::from_millis(20),
+                                       ..Default::default() };
+            let stats = router.serve(rx, opts)?;
+            assert_eq!(stats.total.errors, 0, "mixed long-tail run had errors");
+            mx_answers = replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+            if mx_stats.as_ref().map_or(true, |b| stats.total.wall_secs < b.total.wall_secs) {
+                mx_stats = Some(stats);
+            }
+        }
+        let mx = mx_stats.expect("mixed rep ran");
+        assert_eq!(mx_answers, st_answers,
+            "mixed-session answers diverged from the same-tenant sessions");
+        assert!(mx.scheduler.mixed_batches >= 1, "long tail must dispatch mixed");
+        assert_eq!(mx.generated_tokens, st_tokens, "paths generated different token counts");
+        assert!(mx.decode_steps < st_forwards,
+            "one mixed session must need fewer forwards ({} vs {st_forwards})",
+            mx.decode_steps);
+        let st_occ = st_tokens as f64 / (st_forwards * hyper.batch) as f64;
+        let st_tps = st_tokens as f64 / st_secs.max(1e-12);
+        let mx_tps = mx.generated_tokens as f64 / mx.total.wall_secs.max(1e-12);
+        let speedup = mx_tps / st_tps.max(1e-12);
+        println!(
+            "bench serve_same_tenant_tail {st_tps:>10.1} tok/s  occupancy {st_occ:.2}  \
+({st_forwards} forwards)"
+        );
+        println!(
+            "bench serve_mixed_tail       {mx_tps:>10.1} tok/s  occupancy {:.2}  \
+({} forwards)",
+            mx.occupancy, mx.decode_steps
+        );
+        println!("mixed-batch speedup {speedup:.2}x on the {}-tenant long tail", tail.len());
+        // structural gain: N rows per forward instead of 1 — timing
+        // assert, so full runs only (smoke shares CI boxes)
+        if !sqft::util::bench::smoke() {
+            assert!(speedup > 2.0,
+                "mixed long-tail tokens/s must beat same-tenant sessions by >2x, \
+got {speedup:.2}x");
+        }
+        let mixed_report = Json::obj(vec![
+            ("bench", Json::Str("mixed_batch".into())),
+            ("config", Json::Str(config.into())),
+            ("batch", Json::Num(hyper.batch as f64)),
+            ("tenants", Json::Num(tail.len() as f64)),
+            ("requests", Json::Num(tail.len() as f64)),
+            ("new_tokens_per_request", Json::Num(tail_new as f64)),
+            ("reps", Json::Num(reps as f64)),
+            ("same_tenant", Json::obj(vec![
+                ("forwards", Json::Num(st_forwards as f64)),
+                ("generated_tokens", Json::Num(st_tokens as f64)),
+                ("slot_occupancy", Json::Num(st_occ)),
+                ("tokens_per_s", Json::Num(st_tps)),
+            ])),
+            ("mixed", Json::obj(vec![
+                ("forwards", Json::Num(mx.decode_steps as f64)),
+                ("generated_tokens", Json::Num(mx.generated_tokens as f64)),
+                ("slot_occupancy", Json::Num(mx.occupancy)),
+                ("tokens_per_s", Json::Num(mx_tps)),
+                ("mixed_batches", Json::Num(mx.scheduler.mixed_batches as f64)),
+            ])),
+            ("speedup_tokens_per_s", Json::Num(speedup)),
+            ("gate", Json::Num(2.0)),
+            ("gate_enforced", Json::Num(!sqft::util::bench::smoke() as u8 as f64)),
+            ("smoke", Json::Num(sqft::util::bench::smoke() as u8 as f64)),
+        ]);
+        std::fs::write("BENCH_mixed_batch.json", mixed_report.to_string_pretty())?;
+        println!("wrote BENCH_mixed_batch.json");
+    }
 
     // --- merged vs unmerged per-tenant serving cost ---------------------
     let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);

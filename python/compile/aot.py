@@ -98,6 +98,8 @@ def build_config(cfg: M.ModelConfig, out_dir: str, manifest: dict):
         M.eval_input_specs(cfg, qa=True), ["logits"])
     art("eval_int4", M.make_eval_int4_step(cfg),
         M.eval_int4_input_specs(cfg), ["logits"])
+    art("eval_gathered", M.make_eval_gathered_step(cfg),
+        M.eval_gathered_input_specs(cfg), ["logits"])
     art("calib", M.make_calib_step(cfg),
         M.calib_input_specs(cfg), M.calib_output_names())
     manifest["configs"][cfg.name] = entry

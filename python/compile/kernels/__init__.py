@@ -2,6 +2,7 @@
 
 Public surface consumed by the Layer-2 model:
   - sparse_lora_matmul / qa_sparse_lora_matmul  (fused adapted projections)
+  - gathered_sparse_lora_matmul                 (mixed-tenant adapter banks)
   - fake_quant / quantize_codes                 (paper Eq. 3-4 merge path)
   - wanda_score                                 (sparsification scoring)
   - int4_matmul                                 (packed serving path)
@@ -10,6 +11,7 @@ Reference semantics live in kernels.ref.
 
 from . import ref  # noqa: F401
 from .fake_quant import fake_quant, quantize_codes  # noqa: F401
+from .gathered_lora import gathered_sparse_lora_matmul  # noqa: F401
 from .int4 import int4_matmul  # noqa: F401
 from .sparse_lora import qa_sparse_lora_matmul, sparse_lora_matmul  # noqa: F401
 from .wanda import wanda_score  # noqa: F401

@@ -1,0 +1,88 @@
+"""Gathered (multi-tenant) SparsePEFT projection kernel (Pallas).
+
+The S-LoRA/punica-style serving hot-spot: one forward serves a *mixed*
+batch where every row may belong to a different tenant.  Per-tenant
+adapters are stacked into device-resident banks
+
+    A_bank: (T, r, K)    B_bank: (T, N, r)
+    rm_bank: (T, r)      scale_bank: (T,)
+
+and a per-row i32 ``adapter_idx`` selects which slice applies:
+
+    y[i] = x[i] @ (W + scale[t] * (B[t] diag(rm[t]) A[t]) .* M).T,
+    t = adapter_idx[i]
+
+Bank slot 0 is reserved for the **identity adapter** (B = 0), so rows
+with no tenant (``adapter_id: None`` / the merged path) batch together
+with adapted rows and still compute exactly ``x @ W.T``.
+
+The Wanda sparsity mask ``M`` is a property of the shared sparsified
+base, not of any tenant, so it stays a single (N, K) tensor rather than
+a bank — every tenant's delta is pruned by the same base mask (paper
+Eq. 1 semantics are unchanged).
+
+Like the per-tenant kernel (sparse_lora.py), the effective weight is
+rebuilt one VMEM tile at a time and never materialized in HBM; the only
+difference is that each row of a tile gathers its own (r-skinny) bank
+slice first.  The same reduction orders are used as in the per-tenant
+kernel — one r-contraction for the delta, one K-contraction for the
+output — so a mixed batch reproduces the per-tenant results exactly.
+
+Serving-only: no custom_vjp (tenants fine-tune on the per-tenant path;
+banks are frozen at registration).  Runs under ``interpret=True`` like
+every L1 kernel; BlockSpecs stay MXU/VMEM-shaped for a real lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .blocks import pick_block
+
+
+def _gathered_fwd_kernel(x_ref, w_ref, a_ref, b_ref, m_ref, rm_ref, s_ref,
+                         idx_ref, o_ref):
+    """One (bm, bn) output tile with a per-row effective weight."""
+    idx = idx_ref[...]                                  # (bm,) i32
+    a_g = jnp.take(a_ref[...], idx, axis=0)             # (bm, r, K)
+    b_g = jnp.take(b_ref[...], idx, axis=0)             # (bm, bn, r)
+    rm_g = jnp.take(rm_ref[...], idx, axis=0)           # (bm, r)
+    s_g = jnp.take(s_ref[...], idx, axis=0)             # (bm,)
+    bt = b_g * rm_g[:, None, :]                         # (bm, bn, r)  VPU
+    delta = jnp.einsum("xnr,xrk->xnk", bt, a_g)         # (bm, bn, K)  MXU
+    weff = w_ref[...][None, :, :] + s_g[:, None, None] * delta * m_ref[...][None, :, :]
+    o_ref[...] = jnp.einsum("xk,xnk->xn", x_ref[...], weff)  # (bm, bn)
+
+
+def gathered_sparse_lora_matmul(x, w, a_bank, b_bank, mask, rm_bank,
+                                scale_bank, adapter_idx):
+    """Mixed-batch SparsePEFT projection over stacked adapter banks.
+
+    x: (M, K), w: (N, K), a_bank: (T, r, K), b_bank: (T, N, r),
+    mask: (N, K), rm_bank: (T, r), scale_bank: (T,),
+    adapter_idx: (M,) int32 in [0, T)  ->  (M, N)
+    """
+    m_dim, k = x.shape
+    n = w.shape[0]
+    t, r = a_bank.shape[0], a_bank.shape[1]
+    bm = pick_block(m_dim)
+    bn = pick_block(n)
+    grid = (m_dim // bm, n // bn)
+    in_specs = [
+        pl.BlockSpec((bm, k), lambda i, j: (i, 0)),        # x
+        pl.BlockSpec((bn, k), lambda i, j: (j, 0)),        # w
+        pl.BlockSpec((t, r, k), lambda i, j: (0, 0, 0)),   # a_bank
+        pl.BlockSpec((t, bn, r), lambda i, j: (0, j, 0)),  # b_bank
+        pl.BlockSpec((bn, k), lambda i, j: (j, 0)),        # mask
+        pl.BlockSpec((t, r), lambda i, j: (0, 0)),         # rm_bank
+        pl.BlockSpec((t,), lambda i, j: (0,)),             # scale_bank
+        pl.BlockSpec((bm,), lambda i, j: (i,)),            # adapter_idx
+    ]
+    return pl.pallas_call(
+        _gathered_fwd_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, n), x.dtype),
+        interpret=True,
+    )(x, w, a_bank, b_bank, mask, rm_bank, scale_bank, adapter_idx)

@@ -47,6 +47,28 @@ def sparse_lora_matmul(x, w, a, b, mask, rank_mask, scale):
     return x @ effective_weight(w, a, b, mask, rank_mask, scale).T
 
 
+def gathered_sparse_lora_matmul(x, w, a_bank, b_bank, mask, rm_bank,
+                                scale_bank, adapter_idx):
+    """Mixed-batch SparsePEFT projection: row i uses bank slice
+    ``t = adapter_idx[i]``.
+
+    x: (M, K), w: (N, K), a_bank: (T, r, K), b_bank: (T, N, r),
+    mask: (N, K), rm_bank: (T, r), scale_bank: (T,),
+    adapter_idx: (M,) int32  ->  (M, N)
+
+    Bank slot 0 holds the identity adapter (B = 0), so index-0 rows
+    compute exactly ``x @ W.T`` (the merged / no-adapter path).
+    """
+    a_g = jnp.take(a_bank, adapter_idx, axis=0)          # (M, r, K)
+    b_g = jnp.take(b_bank, adapter_idx, axis=0)          # (M, N, r)
+    rm_g = jnp.take(rm_bank, adapter_idx, axis=0)        # (M, r)
+    s_g = jnp.take(scale_bank, adapter_idx, axis=0)      # (M,)
+    bt = b_g * rm_g[:, None, :]
+    delta = jnp.einsum("xnr,xrk->xnk", bt, a_g)
+    weff = w[None, :, :] + s_g[:, None, None] * delta * mask[None, :, :]
+    return jnp.einsum("xk,xnk->xn", x, weff)
+
+
 def fake_quant(w, scales, zeros, qmax):
     """Group-wise asymmetric fake quantization (paper Eq. 3 then Eq. 4).
 

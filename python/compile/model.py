@@ -600,6 +600,118 @@ def make_eval_int4_step(cfg: ModelConfig):
     return eval_fn
 
 
+# --- gathered multi-tenant serving path ------------------------------------
+#
+# One forward serves a *mixed* batch of tenants: per-tenant adapters are
+# stacked into device-resident banks with a leading slot axis T, and a
+# per-row i32 ``adapter_idx`` picks each row's slice inside the L1
+# gathered kernel (S-LoRA/punica style).  Bank slot 0 is reserved for
+# the identity adapter (B = 0), so rows with no tenant — the merged /
+# ``adapter_id: None`` path — batch together with adapted rows and still
+# compute the plain base projection.  The Wanda mask belongs to the
+# shared sparsified base (same for every tenant) and stays un-banked.
+
+# Adapter-bank slots per artifact (slot 0 = identity).  Static so the
+# lowered HLO has fixed shapes; the rust registry reads the slot count
+# back from the manifest input specs, never from this constant.
+GATHER_SLOTS = 9
+
+
+def gathered_bank_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Stacked adapter banks, slot-major so one tenant's slice is one
+    contiguous block the registry can overwrite on (re-)registration."""
+    l, r, t = cfg.n_layers, cfg.r_max, GATHER_SLOTS
+    specs = []
+    for m in MODS:
+        out, inp = cfg.mod_dims(m)
+        specs.append((f"a_bank_{m}", (t, l, r, inp)))
+    for m in MODS:
+        out, inp = cfg.mod_dims(m)
+        specs.append((f"b_bank_{m}", (t, l, out, r)))
+    for m in MODS:
+        specs.append((f"rankmask_bank_{m}", (t, l, r)))
+    for m in MODS:
+        specs.append((f"scale_bank_{m}", (t, l)))
+    return specs
+
+
+def forward_gathered(cfg: ModelConfig, params, tokens, adapter_idx):
+    """Mixed-tenant forward: row b of the batch uses bank slot
+    ``adapter_idx[b]`` in every adapted projection.
+
+    params: base stacks + shared ``mask_<mod>`` + the gathered banks
+    (see ``eval_gathered_input_specs``).  adapter_idx: (B,) int32.
+    """
+    bsz, seq = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]
+    positions = jnp.arange(seq)
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    # every activation row of a request carries that request's adapter
+    row_idx = jnp.repeat(adapter_idx, seq)  # (B*S,)
+
+    def proj(mod, l, x2d):
+        return K.gathered_sparse_lora_matmul(
+            x2d, params["w" + mod][l],
+            params[f"a_bank_{mod}"][:, l], params[f"b_bank_{mod}"][:, l],
+            params[f"mask_{mod}"][l], params[f"rankmask_bank_{mod}"][:, l],
+            params[f"scale_bank_{mod}"][:, l], row_idx,
+        )
+
+    for l in range(cfg.n_layers):
+        hln = rms_norm(x, params["ln1"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        q = proj("q", l, h2d).reshape(bsz, seq, h, dh)
+        k = proj("k", l, h2d).reshape(bsz, seq, h, dh)
+        v = proj("v", l, h2d).reshape(bsz, seq, h, dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+        att = jnp.where(causal[None, None, :, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz * seq, d)
+        x = x + (o @ params["wo"][l].T).reshape(bsz, seq, d)
+        hln = rms_norm(x, params["ln2"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        gate = h2d @ params["wgate"][l].T
+        up = proj("up", l, h2d)
+        act = jax.nn.silu(gate) * up
+        down = proj("down", l, act)
+        x = x + down.reshape(bsz, seq, d)
+    x = rms_norm(x, params["final_ln"])
+    return x @ params["embed"].T
+
+
+def eval_gathered_input_specs(cfg: ModelConfig):
+    """Canonical eval_gathered inputs: base, shared masks, banks, batch.
+
+    The batch is tokens plus the per-row ``adapter_idx`` vector — the
+    only two inputs the steady-state decode loop uploads per step.
+    """
+    l = cfg.n_layers
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    for m in MODS:
+        out, inp = cfg.mod_dims(m)
+        specs.append((f"mask_{m}", (l, out, inp), jnp.float32))
+    specs += [(n, s, jnp.float32) for n, s in gathered_bank_specs(cfg)]
+    specs += batch_specs(cfg, with_targets=False)
+    specs.append(("adapter_idx", (cfg.batch,), jnp.int32))
+    return specs
+
+
+def make_eval_gathered_step(cfg: ModelConfig):
+    names = [n for n, _, _ in eval_gathered_input_specs(cfg)[:-2]]
+
+    def eval_fn(*args):
+        params = dict(zip(names, args))
+        tokens = args[len(names)]
+        adapter_idx = args[len(names) + 1]
+        logits = forward_gathered(cfg, params, tokens, adapter_idx)
+        return (logits,)
+
+    return eval_fn
+
+
 # --- per-shape utility artifacts -------------------------------------------
 
 

@@ -232,6 +232,88 @@ class TestForwardInt4:
         np.testing.assert_allclose(logits, ref_logits, rtol=1e-5, atol=1e-5)
 
 
+class TestForwardGathered:
+    TENANTS = 3
+
+    def _banks(self, rng, cfg=CFG):
+        """Shared-base masks + per-tenant adapters stacked into banks.
+
+        Returns (mask dict, per-tenant adapter dicts, bank dict).  Bank
+        slot 0 is the identity adapter (B = 0); tenant t occupies slot
+        t + 1.  All tenants share one Wanda mask — it is a property of
+        the sparsified base, not of any adapter.
+        """
+        masks = {}
+        for m in M.MODS:
+            out, inp = cfg.mod_dims(m)
+            masks[f"mask_{m}"] = jnp.asarray(
+                rng.random(size=(cfg.n_layers, out, inp)) >= 0.5, jnp.float32)
+        ads = []
+        for _ in range(self.TENANTS):
+            ad = init_adapters(rng, cfg, zero_b=False)
+            ad.update(masks)
+            ads.append(ad)
+        banks = {n: np.zeros(s, np.float32)
+                 for n, s in M.gathered_bank_specs(cfg)}
+        for m in M.MODS:
+            banks[f"rankmask_bank_{m}"][0] = 1.0
+            banks[f"scale_bank_{m}"][0] = 1.0
+            for t, ad in enumerate(ads):
+                banks[f"a_bank_{m}"][t + 1] = ad[f"a_{m}"]
+                banks[f"b_bank_{m}"][t + 1] = ad[f"b_{m}"]
+                banks[f"rankmask_bank_{m}"][t + 1] = ad[f"rankmask_{m}"]
+                banks[f"scale_bank_{m}"][t + 1] = ad[f"scale_{m}"]
+        return masks, ads, {n: jnp.asarray(v) for n, v in banks.items()}
+
+    def test_mixed_rows_match_per_tenant_forward(self, rng):
+        """Row b of a mixed batch equals the same-tenant forward for that
+        row's adapter; identity-slot rows equal the plain base forward."""
+        base = init_base(rng)
+        masks, ads, banks = self._banks(rng)
+        tokens, _, _ = toy_batch(rng)
+        params = dict(base, **masks, **banks)
+        idx = jnp.asarray(
+            [b % (self.TENANTS + 1) for b in range(CFG.batch)], jnp.int32)
+        l_mixed = M.forward_gathered(CFG, params, tokens, idx)
+        refs = [M.forward_plain(CFG, base, tokens)]
+        refs += [M.forward(CFG, base, ad, tokens) for ad in ads]
+        for b in range(CFG.batch):
+            np.testing.assert_allclose(
+                l_mixed[b], refs[int(idx[b])][b], rtol=1e-4, atol=1e-4)
+
+    def test_uniform_batch_matches_single_tenant_forward(self, rng):
+        """All rows on one slot reproduces the per-tenant engine's answer —
+        the baseline the mixed scheduler must stay byte-identical to."""
+        base = init_base(rng)
+        masks, ads, banks = self._banks(rng)
+        tokens, _, _ = toy_batch(rng)
+        params = dict(base, **masks, **banks)
+        idx = jnp.full((CFG.batch,), 2, jnp.int32)
+        l_gathered = M.forward_gathered(CFG, params, tokens, idx)
+        l_tenant = M.forward(CFG, base, ads[1], tokens)
+        np.testing.assert_allclose(l_gathered, l_tenant, rtol=1e-4, atol=1e-4)
+
+    def test_eval_step_jits_with_i32_index(self, rng):
+        """The exact function aot.py lowers accepts the i32 index vector;
+        unregistered (all-zero) slots act as identity."""
+        base = init_base(rng)
+        masks, _, banks = self._banks(rng)
+        tokens, _, _ = toy_batch(rng)
+        params = dict(base, **masks, **banks)
+        idx = jnp.asarray(
+            rng.integers(0, M.GATHER_SLOTS, size=(CFG.batch,)), jnp.int32)
+        specs = M.eval_gathered_input_specs(CFG)
+        names = [n for n, _, _ in specs]
+        assert names[-2:] == ["tokens", "adapter_idx"]
+        assert len(names) == len(set(names))
+        for n, shape, dtype in specs[:-2]:
+            assert params[n].shape == shape and params[n].dtype == dtype, n
+        fn = jax.jit(M.make_eval_gathered_step(CFG))
+        (logits,) = fn(*[params[n] for n in names[:-2]], tokens, idx)
+        ref_logits = M.forward_gathered(CFG, params, tokens, idx)
+        np.testing.assert_allclose(logits, ref_logits, rtol=1e-5, atol=1e-5)
+
+
 class TestTrainStep:
     @pytest.mark.parametrize("qa", [False, True])
     def test_loss_decreases(self, rng, qa):
@@ -306,6 +388,7 @@ class TestSpecs:
         for specs in (M.train_input_specs(cfg, qa=False),
                       M.train_input_specs(cfg, qa=True),
                       M.eval_input_specs(cfg, qa=False),
+                      M.eval_gathered_input_specs(cfg),
                       M.calib_input_specs(cfg)):
             names = [n for n, _, _ in specs]
             assert len(names) == len(set(names)), "duplicate input name"

@@ -23,6 +23,10 @@ pub struct Batch {
     pub tokens: Vec<i32>,    // (batch, seq)
     pub targets: Vec<i32>,   // (batch, seq) next-token targets
     pub loss_mask: Vec<f32>, // (batch, seq) 1.0 where target is an answer char
+    /// (batch,) per-row adapter-bank slot for the gathered mixed-tenant
+    /// eval artifact; empty for the train/eval paths that don't use it
+    /// (slot 0 = identity adapter, so an all-zero vector is the base model)
+    pub adapter_idx: Vec<i32>,
     pub batch: usize,
     pub seq: usize,
     /// number of real (non-padding-duplicate) samples in this batch
@@ -130,6 +134,7 @@ impl<'a> Batcher<'a> {
             tokens: Vec::with_capacity(self.batch * self.seq),
             targets: Vec::with_capacity(self.batch * self.seq),
             loss_mask: Vec::with_capacity(self.batch * self.seq),
+            adapter_idx: Vec::new(),
             batch: self.batch,
             seq: self.seq,
             real,
@@ -151,6 +156,7 @@ impl<'a> Batcher<'a> {
             tokens: Vec::with_capacity(self.batch * self.seq),
             targets: Vec::with_capacity(self.batch * self.seq),
             loss_mask: Vec::with_capacity(self.batch * self.seq),
+            adapter_idx: Vec::new(),
             batch: self.batch,
             seq: self.seq,
             real: self.batch,

@@ -11,9 +11,9 @@
 //!   1. `devices`, earlier stores first — anything already resident on the
 //!      device crosses the PJRT boundary as a borrowed handle (zero bytes);
 //!   2. `host_sets`, first hit wins — uploaded per call without cloning;
-//!   3. batch fields (`tokens`/`targets`/`loss_mask`) — borrowed slices,
-//!      uploaded per call without cloning (the train loop calls this every
-//!      step);
+//!   3. batch fields (`tokens`/`targets`/`loss_mask`/`adapter_idx`) —
+//!      borrowed slices, uploaded per call without cloning (the train loop
+//!      calls this every step);
 //!   4. scalar knobs.
 
 use super::{Arg, ArtifactSpec, DeviceStore, DType, HostValue};
@@ -64,6 +64,13 @@ pub fn build_args<'a>(
                 }
                 "loss_mask" => {
                     out.push(Arg::F32Ref(vec![b.batch, b.seq], &b.loss_mask));
+                    continue 'next;
+                }
+                // per-row adapter-bank slots (eval_gathered); an empty vec
+                // means the caller didn't build a mixed batch — fall through
+                // so the bail below names the missing input
+                "adapter_idx" if !b.adapter_idx.is_empty() => {
+                    out.push(Arg::I32Ref(vec![b.batch], &b.adapter_idx));
                     continue 'next;
                 }
                 _ => {}

@@ -8,16 +8,33 @@
 //!
 //!   - [`registry::AdapterRegistry`] holds validated per-tenant adapter
 //!     state (hot registration/eviction, LRU-bounded); `register_resident`
-//!     uploads a tenant's adapters to the device once, so steady-state
-//!     decoding ships only the token batch across the PJRT boundary;
-//!   - [`scheduler::Scheduler`] groups pending requests into same-adapter
-//!     batches (one forward serves one adapter, cached or host-side, so a
-//!     batch must share one adapter) with an aging policy so low-traffic
-//!     tenants don't starve;
+//!     uploads a tenant's adapters to the device once, and with the
+//!     gathered bank enabled ([`registry::GatheredBank`]) also writes them
+//!     into stacked `(T, …)` bank tensors, so steady-state decoding ships
+//!     only the token batch and a per-row i32 slot vector across the PJRT
+//!     boundary;
+//!   - [`scheduler::Scheduler`] pops **mixed** batches: one slot-level
+//!     policy over every tenant's queue (fullest queue first, an aged
+//!     head anywhere wins outright), since the `eval_gathered` artifact
+//!     applies each row's own adapter — a batch no longer needs to share
+//!     one.  Aging is a fairness tie-break inside the pop, not an
+//!     admission hold;
 //!   - [`Engine`] owns the Runtime handles (PJRT is not Sync) and executes
-//!     batches for any registered adapter — or the merged no-adapter fast
-//!     path; [`Router`] ties the three together on one serving thread,
-//!     with request producers talking to it over channels.
+//!     batches for any mix of registered adapters — or the merged
+//!     no-adapter fast path via the bank's reserved identity slot 0;
+//!     [`Router`] ties the three together on one serving thread, with
+//!     request producers talking to it over channels.
+//!
+//! Engines that can't run the gathered artifact (packed-INT4 bases, whose
+//! artifact has no f32 weight inputs) and tenants it can't express
+//! (QA-kind adapters, which merge through the fake-quant path) fall back
+//! to per-tenant *uniform* sessions: the dispatcher splits a mixed batch
+//! by tenant and serves the groups sequentially, refilling each from its
+//! own queue only ([`Scheduler::admit_for`], which pauses when another
+//! tenant's head ages — the pre-gathered starvation bound).  Either way
+//! each request's answer is byte-identical: the gathered kernel computes
+//! the same masked adapter projection per row that the uniform artifact
+//! computes per batch.
 //!
 //! Greedy decoding is teacher-forcing-free: each generated token re-runs
 //! the batched forward with the answer-so-far appended (no KV cache in the
@@ -28,13 +45,14 @@
 //! persistent [`DecodeSession`] sized `(artifact batch) × seq` whose slots
 //! hold independent in-flight requests.  A slot is retired the forward its
 //! row emits the stop token (or hits its per-request cap) and can be
-//! re-filled with a waiting same-tenant request *between forwards* — short
-//! requests no longer pay for the longest row in their batch, and the
-//! device stays busy as long as the tenant's queue is non-empty.  The old
-//! run-to-completion path ([`Engine::generate_batch_cached`]) is a thin
-//! wrapper over the same session (admit everything up front, never
-//! re-fill), so the two paths are byte-identical per request by
-//! construction.
+//! re-filled with *any* waiting request *between forwards* — the session
+//! tracks a per-slot bank index, so a freed slot takes the next request
+//! regardless of tenant.  Short requests no longer pay for the longest
+//! row in their batch, and the device stays busy as long as any queue is
+//! non-empty.  The old run-to-completion path
+//! ([`Engine::generate_batch_cached`]) is a thin wrapper over the same
+//! session (admit everything up front, never re-fill), so the two paths
+//! are byte-identical per request by construction.
 //!
 //! Serving scales past one core with the **worker pool** ([`pool`]): N
 //! worker threads, each owning a full engine replica (its own `Runtime`,
@@ -56,7 +74,10 @@ pub use pool::{
     benchmark_pool, benchmark_pool_obs, serve_pool, serve_pool_obs, EngineSpec, PoolOpts,
     PoolServeStats, WorkerStats,
 };
-pub use registry::{load_adapter_dir, AdapterEntry, AdapterRegistry, SharedAdapterSource};
+pub use registry::{
+    gathered_slots, load_adapter_dir, AdapterEntry, AdapterRegistry, GatheredBank,
+    SharedAdapterSource,
+};
 pub use scheduler::{
     CancelHandle, Request, Scheduler, SchedulerMetrics, SchedulerOpts, ShardedScheduler,
 };
@@ -71,7 +92,7 @@ use crate::util::json::Json;
 use crate::util::{summarize, Summary};
 use anyhow::{anyhow, bail, Context, Result};
 use std::cell::Cell;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, TryRecvError};
@@ -80,6 +101,10 @@ use std::time::{Duration, Instant};
 
 /// Stats label for the merged / no-adapter fast path.
 pub const MERGED_ID: &str = "merged";
+
+/// Artifact kind of the gathered mixed-tenant eval (stacked adapter banks
+/// plus a per-row i32 `adapter_idx` input).
+pub const GATHERED_KIND: &str = "eval_gathered";
 
 /// Engine state: device-resident frozen weights + default host inputs for
 /// the merged / single-adapter compatibility path.
@@ -106,6 +131,10 @@ pub struct Engine<'a> {
     /// uploads, or packed u8 + f32 group params on the INT4 path) — the
     /// Table 7 inference-memory figure, reported through `ServeStats`
     resident_bytes: u64,
+    /// true when the no-adapter path is the merged model (no-op adapters,
+    /// B = 0) — exactly the case the gathered bank's identity slot 0
+    /// reproduces, so `adapter_id: None` requests may ride mixed batches
+    merged_default: bool,
 }
 
 impl<'a> Engine<'a> {
@@ -147,6 +176,7 @@ impl<'a> Engine<'a> {
                 default_sets.push(space.realize(&space.max_config())?);
             }
         }
+        let merged_default = adapters.is_none();
         let tok = Tokenizer::new();
         let stop_id = tok.encode(".")?[0];
         Ok(Engine {
@@ -161,6 +191,7 @@ impl<'a> Engine<'a> {
             last_decode_steps: Cell::new(0),
             last_decode_uploads: Cell::new(0),
             resident_bytes: frozen.total_bytes() as u64,
+            merged_default,
         })
     }
 
@@ -251,6 +282,7 @@ impl<'a> Engine<'a> {
             last_decode_steps: Cell::new(0),
             last_decode_uploads: Cell::new(0),
             resident_bytes: model.resident_bytes() as u64,
+            merged_default: true,
         })
     }
 
@@ -262,6 +294,21 @@ impl<'a> Engine<'a> {
     /// True when the merged/no-adapter path serves from packed INT4.
     pub fn is_int4(&self) -> bool {
         self.default_kind == "eval_int4"
+    }
+
+    /// True when this engine can run the gathered mixed-tenant artifact:
+    /// the frozen f32 base is device-resident (the INT4 path's artifact
+    /// has no dense weight inputs) and the manifest was generated with
+    /// `eval_gathered`.  Stale artifact directories simply fall back to
+    /// uniform sessions.
+    pub fn supports_gathered(&self) -> bool {
+        !self.is_int4()
+            && self
+                .rt
+                .manifest
+                .config(&self.config)
+                .map(|c| c.artifacts.contains_key(GATHERED_KIND))
+                .unwrap_or(false)
     }
 
     pub fn max_new_tokens(&self) -> usize {
@@ -321,8 +368,13 @@ impl<'a> Engine<'a> {
             answer: vec![String::new(); b],
             step_store: DeviceStore::new(),
             dirty: false,
+            // all-zero = every row on the identity slot; starts dirty so a
+            // gathered session's first forward has the vector resident
+            slot_idx: vec![0i32; b],
+            idx_dirty: true,
             steps: 0,
             uploads: 0,
+            idx_uploads: 0,
             slot_steps: 0,
         })
     }
@@ -366,6 +418,33 @@ impl<'a> Engine<'a> {
         s.answer[slot].clear();
         s.occupied[slot] = true;
         s.dirty = true;
+        // a recycled slot may still carry a previous tenant's bank index;
+        // plain admission means "the session's shared adapter state" =
+        // identity slot 0 on the gathered path
+        if s.slot_idx[slot] != 0 {
+            s.slot_idx[slot] = 0;
+            s.idx_dirty = true;
+        }
+        Ok(slot)
+    }
+
+    /// [`Engine::admit`] plus a gathered-bank slot index: the row's
+    /// forward gathers bank slice `bank_slot` (0 = identity adapter, the
+    /// merged path).  Only uploads the index vector when the slot's index
+    /// actually changed — same-tenant reuse of a slot costs nothing.
+    pub fn admit_indexed(
+        &self,
+        s: &mut DecodeSession,
+        prompt: &str,
+        max_new: Option<usize>,
+        min_new: usize,
+        bank_slot: i32,
+    ) -> Result<usize> {
+        let slot = self.admit(s, prompt, max_new, min_new)?;
+        if s.slot_idx[slot] != bank_slot {
+            s.slot_idx[slot] = bank_slot;
+            s.idx_dirty = true;
+        }
         Ok(slot)
     }
 
@@ -404,6 +483,14 @@ impl<'a> Engine<'a> {
                 .put_i32(&self.rt.client, "tokens", &[s.capacity, s.seq], &s.flat)?;
             s.dirty = false;
             s.uploads += 1;
+        }
+        // the gathered artifact also takes the per-row bank-slot vector;
+        // like the token batch it is re-uploaded only when an admission
+        // changed it (steady-state same-slot refills ship nothing extra)
+        if s.idx_dirty && exe.spec.inputs.iter().any(|i| i.name == "adapter_idx") {
+            s.step_store.put_i32(&self.rt.client, "adapter_idx", &[s.capacity], &s.slot_idx)?;
+            s.idx_dirty = false;
+            s.idx_uploads += 1;
         }
         let mut devices: Vec<&DeviceStore> = Vec::with_capacity(3);
         devices.push(&s.step_store);
@@ -508,8 +595,15 @@ pub struct DecodeSession {
     answer: Vec<String>,
     step_store: DeviceStore,
     dirty: bool,
+    /// per-slot gathered-bank index (`(capacity,)` i32; 0 = identity);
+    /// ignored by uniform artifacts, gathered forwards upload it behind
+    /// its own dirty flag
+    slot_idx: Vec<i32>,
+    idx_dirty: bool,
     steps: usize,
     uploads: usize,
+    /// `adapter_idx` uploads so far (gathered sessions only; `<= steps`)
+    idx_uploads: usize,
     /// sum over forwards of occupied slots — the occupancy numerator (and
     /// exactly the number of generated tokens: one per live slot per step)
     slot_steps: usize,
@@ -536,6 +630,11 @@ impl DecodeSession {
     /// Token-batch uploads so far (`<= steps`).
     pub fn uploads(&self) -> usize {
         self.uploads
+    }
+
+    /// `adapter_idx` vector uploads so far (0 on uniform sessions).
+    pub fn idx_uploads(&self) -> usize {
+        self.idx_uploads
     }
 
     /// Occupied-slot-forwards so far == generated tokens so far.
@@ -639,13 +738,13 @@ impl MultiServeStats {
         let mut out = t.render();
         let _ = writeln!(
             out,
-            "scheduler: {} batches, avg fill {:.2}, {} admitted mid-batch, {} aged, \
-{} aging holds, max queue depth {}",
+            "scheduler: {} batches ({} mixed), avg fill {:.2}, {} admitted mid-batch, \
+{} aged, max queue depth {}",
             self.scheduler.batches,
+            self.scheduler.mixed_batches,
             self.scheduler.avg_fill(),
             self.scheduler.admitted,
             self.scheduler.aged_batches,
-            self.scheduler.aging_holds,
             self.scheduler.max_queue_depth
         );
         let _ = writeln!(
@@ -752,14 +851,10 @@ impl ServeObs {
     }
 
     /// A scheduler batch was handed to `worker` (stolen = pulled from
-    /// another shard's queue).  One batch id covers all its requests.
-    pub(crate) fn dispatch(
-        &self,
-        id: &Option<String>,
-        worker: usize,
-        reqs: &[Request],
-        stolen: bool,
-    ) {
+    /// another shard's queue).  One batch id covers all its requests;
+    /// each span carries its own request's tenant, since mixed batches
+    /// routinely span tenants.
+    pub(crate) fn dispatch(&self, worker: usize, reqs: &[Request], stolen: bool) {
         if !self.enabled {
             return;
         }
@@ -770,7 +865,7 @@ impl ServeObs {
                     "dispatch",
                     vec![
                         ("req", Json::Num(req.id as f64)),
-                        ("tenant", Json::Str(Self::tenant_key(id).to_string())),
+                        ("tenant", Json::Str(Self::tenant_key(&req.adapter_id).to_string())),
                         ("worker", Json::Num(worker as f64)),
                         ("batch", Json::Num(batch as f64)),
                         ("stolen", Json::Bool(stolen)),
@@ -1147,13 +1242,64 @@ pub(crate) struct SessionPolicy {
 /// Cap on the exponential retry backoff (base 1ms, doubled per retry).
 const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(50);
 
-/// Drive one same-tenant continuous decode session: admit the handed-over
-/// batch, then loop forward → retire/reply → re-fill, until the slots
-/// drain and no same-tenant work is waiting.  `refill` is called between
-/// forwards whenever the hand-over queue is dry, with the current
-/// free-slot count — the single-worker router drains its request channel
-/// and asks its scheduler there; pool workers ask the sharded scheduler
-/// (which applies the home shard's aging hold).
+/// How one decode session resolves its adapter inputs.
+pub(crate) enum SessionMode<'s> {
+    /// Legacy single-tenant session: one tenant's host/device state serves
+    /// every row; requests for any other tenant are deferred back to the
+    /// queue.  The fallback for engines/tenants outside the gathered
+    /// artifact's reach (INT4 bases, QA-kind adapters).
+    Uniform {
+        id: Option<String>,
+        dev: Option<&'s DeviceStore>,
+        host_sets: Vec<&'s ParamSet>,
+        eval_kind: &'s str,
+    },
+    /// Mixed-tenant session over the gathered banks: every row carries a
+    /// bank-slot index, resolved per request by `slot_of` (0 = identity /
+    /// merged path; `None` = ineligible, deferred back to the queue).
+    Gathered {
+        bank: &'s DeviceStore,
+        slot_of: &'s dyn Fn(&Option<String>) -> Option<i32>,
+    },
+}
+
+/// Lazily-built per-tenant [`SessionRecorder`]s for one dispatched batch:
+/// mixed sessions touch several tenants' instruments, and resolving a
+/// recorder per *event* would re-do registry lookups on the hot path.
+pub(crate) struct RecorderCache<'o> {
+    obs: &'o ServeObs,
+    worker: usize,
+    map: BTreeMap<Option<String>, Arc<SessionRecorder>>,
+}
+
+impl<'o> RecorderCache<'o> {
+    pub(crate) fn new(obs: &'o ServeObs, worker: usize) -> RecorderCache<'o> {
+        RecorderCache { obs, worker, map: BTreeMap::new() }
+    }
+
+    pub(crate) fn get(&mut self, id: &Option<String>) -> Arc<SessionRecorder> {
+        if let Some(rec) = self.map.get(id) {
+            return Arc::clone(rec);
+        }
+        let rec = Arc::new(self.obs.recorder(id, self.worker));
+        self.map.insert(id.clone(), Arc::clone(&rec));
+        rec
+    }
+}
+
+/// Drive one continuous decode session: admit the handed-over batch, then
+/// loop forward → retire/reply → re-fill, until the slots drain and
+/// nothing admissible is waiting.  `refill` is called between forwards
+/// whenever the hand-over queue is dry, with the current free-slot count —
+/// the single-worker router drains its request channel and asks its
+/// scheduler there; pool workers ask the sharded scheduler.  Gathered
+/// sessions re-fill with *any* tenant's request (its adapter rides its own
+/// bank slot); uniform sessions re-fill same-tenant only.
+///
+/// A request the session can't serve — wrong tenant for a uniform session,
+/// no bank slot for a gathered one — is **deferred**: returned with the
+/// survivors, uncharged, for the caller to requeue (the next dispatch
+/// routes it through the fallback path).
 ///
 /// Failure isolation: a failed forward is retried in place with capped
 /// exponential backoff (transient faults never surface to clients); once
@@ -1167,30 +1313,40 @@ const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(50);
 /// admission or released mid-decode, counting `serve_cancelled_total`; a
 /// completed request whose reply channel is gone counts there too.
 ///
-/// All accounting flows through `rec` — a request's token count is the
-/// number of forwards between its admission and retirement, so summed
-/// retire / cancel / error tokens equal the session's
-/// occupied-slot-forwards, *minus* forwards spent on survivor rows (their
-/// partial progress is discarded with the session and recounted in the
-/// session that actually completes them).
-#[allow(clippy::too_many_arguments)]
+/// All accounting flows through `recs`, each request through its own
+/// tenant's recorder — a request's token count is the number of forwards
+/// between its admission and retirement, so summed retire / cancel /
+/// error tokens equal the session's occupied-slot-forwards, *minus*
+/// forwards spent on survivor rows (their partial progress is discarded
+/// with the session and recounted in the session that actually completes
+/// them).
 pub(crate) fn run_decode_session(
     engine: &Engine,
-    id: &Option<String>,
+    mode: &SessionMode,
     reqs: Vec<Request>,
-    dev: Option<&DeviceStore>,
-    host_sets: &[&ParamSet],
-    eval_kind: &str,
-    refill: &mut dyn FnMut(&Option<String>, usize) -> Vec<Request>,
-    rec: &SessionRecorder,
+    refill: &mut dyn FnMut(usize) -> Vec<Request>,
+    recs: &mut RecorderCache,
     policy: &SessionPolicy,
 ) -> Vec<Request> {
+    if reqs.is_empty() {
+        return Vec::new();
+    }
+    // worker-scoped instruments (decode steps, uploads, retries) dedupe in
+    // the registry by label, so any tenant's recorder records them
+    // identically; the first request's tenant labels the trace spans
+    let step_rec = recs.get(&reqs[0].adapter_id);
+    let (dev, host_sets, eval_kind): (Option<&DeviceStore>, &[&ParamSet], &str) = match mode {
+        SessionMode::Uniform { dev, host_sets, eval_kind, .. } => {
+            (*dev, host_sets.as_slice(), eval_kind)
+        }
+        SessionMode::Gathered { bank, .. } => (Some(*bank), &[], GATHERED_KIND),
+    };
     let mut session = match engine.begin_decode() {
         Ok(s) => s,
         Err(e) => {
             let msg = format!("{e:#}");
             for req in reqs {
-                rec.error(&req, 0, &msg);
+                recs.get(&req.adapter_id).error(&req, 0, &msg);
                 let _ = req.reply.send(Err(anyhow!(msg.clone())));
             }
             return Vec::new();
@@ -1202,6 +1358,7 @@ pub(crate) fn run_decode_session(
     let mut slots: Vec<Option<(Request, bool, usize)>> =
         (0..session.capacity()).map(|_| None).collect();
     let mut waiting: VecDeque<Request> = reqs.into();
+    let mut deferred: Vec<Request> = Vec::new();
     let mut failure: Option<String> = None;
     let mut retries = 0usize;
     let mut backoff = Duration::from_millis(1);
@@ -1210,12 +1367,41 @@ pub(crate) fn run_decode_session(
         while session.free_slots() > 0 {
             let Some(req) = waiting.pop_front() else { break };
             if req.is_cancelled() {
-                rec.cancel(&req, None, 0);
+                recs.get(&req.adapter_id).cancel(&req, None, 0);
                 let _ = req.reply.send(Err(anyhow::Error::new(ServeError::Cancelled)));
                 continue;
             }
-            match engine.admit(&mut session, &req.prompt, req.max_new_tokens, req.min_new_tokens)
-            {
+            // resolve how this row's adapter reaches the forward
+            let bank_slot = match mode {
+                SessionMode::Uniform { id, .. } => {
+                    if req.adapter_id != *id {
+                        deferred.push(req);
+                        continue;
+                    }
+                    None
+                }
+                SessionMode::Gathered { slot_of, .. } => match slot_of(&req.adapter_id) {
+                    Some(idx) => Some(idx),
+                    None => {
+                        deferred.push(req);
+                        continue;
+                    }
+                },
+            };
+            let rec = recs.get(&req.adapter_id);
+            let admitted = match bank_slot {
+                Some(idx) => engine.admit_indexed(
+                    &mut session,
+                    &req.prompt,
+                    req.max_new_tokens,
+                    req.min_new_tokens,
+                    idx,
+                ),
+                None => {
+                    engine.admit(&mut session, &req.prompt, req.max_new_tokens, req.min_new_tokens)
+                }
+            };
+            match admitted {
                 Ok(slot) => {
                     rec.admit(&req, slot, req.enqueued.elapsed().as_secs_f64() * 1e3);
                     slots[slot] = Some((req, true, session.steps()));
@@ -1228,10 +1414,10 @@ pub(crate) fn run_decode_session(
         }
         let active = session.active_slots();
         if active == 0 {
-            break; // nothing admitted and nothing same-tenant waiting
+            break; // nothing admitted and nothing admissible waiting
         }
         // pre-step state for the step record, captured only when recording
-        let pre = rec
+        let pre = step_rec
             .enabled()
             .then(|| (Instant::now(), session.uploads(), crate::runtime::thread_upload_bytes()));
         // the forward, behind the chaos harness's failpoints (no-ops when
@@ -1251,14 +1437,14 @@ pub(crate) fn run_decode_session(
                     break;
                 }
                 retries += 1;
-                rec.retry(retries, &format!("{e:#}"));
+                step_rec.retry(retries, &format!("{e:#}"));
                 std::thread::sleep(backoff);
                 backoff = (backoff * 2).min(RETRY_BACKOFF_CAP);
                 continue;
             }
         };
         if let Some((t0, uploads_before, bytes_before)) = pre {
-            rec.step(
+            step_rec.step(
                 t0.elapsed().as_secs_f64() * 1e3,
                 active,
                 session.uploads() > uploads_before,
@@ -1271,12 +1457,13 @@ pub(crate) fn run_decode_session(
             if entry.1 {
                 entry.1 = false;
                 let waited = now.saturating_duration_since(entry.0.enqueued);
-                rec.first_token(&entry.0, waited.as_secs_f64() * 1e3);
+                recs.get(&entry.0.adapter_id).first_token(&entry.0, waited.as_secs_f64() * 1e3);
             }
         }
         for (slot, answer) in retired {
             if let Some((req, _, admit_steps)) = slots[slot].take() {
                 let tokens = session.steps() - admit_steps;
+                let rec = recs.get(&req.adapter_id);
                 if req.reply.send(Ok(answer)).is_ok() {
                     rec.retire(&req, slot, tokens, req.enqueued.elapsed().as_secs_f64() * 1e3);
                 } else {
@@ -1292,44 +1479,155 @@ pub(crate) fn run_decode_session(
             if entry.as_ref().map(|(r, _, _)| r.is_cancelled()).unwrap_or(false) {
                 let (req, _, admit_steps) = entry.take().expect("checked occupied");
                 session.release(slot);
-                rec.cancel(&req, Some(slot), session.steps() - admit_steps);
+                recs.get(&req.adapter_id).cancel(&req, Some(slot), session.steps() - admit_steps);
                 let _ = req.reply.send(Err(anyhow::Error::new(ServeError::Cancelled)));
             }
         }
         // top the freed slots up between forwards
         let free = session.free_slots();
         if free > 0 && waiting.is_empty() {
-            waiting.extend(refill(id, free));
+            waiting.extend(refill(free));
         }
         if session.active_slots() == 0 && waiting.is_empty() {
             break;
         }
     }
-    let Some(msg) = failure else {
-        return Vec::new();
-    };
-    // persistent failure: charge each resident one attempt; over-budget
-    // residents fail typed, the rest survive for a fresh session.  Waiting
-    // requests never entered the failed session — survivors, uncharged.
     let mut survivors = Vec::new();
-    for entry in slots.iter_mut() {
-        if let Some((mut req, _, admit_steps)) = entry.take() {
-            req.attempts += 1;
-            if req.attempts > policy.max_retries {
-                // forwards the failed slot did complete still count as
-                // generated tokens, so token totals stay exact
-                rec.error(&req, session.steps() - admit_steps, &msg);
-                let _ = req.reply.send(Err(anyhow::Error::new(ServeError::EngineFailure {
-                    attempts: req.attempts,
-                    message: msg.clone(),
-                })));
-            } else {
-                survivors.push(req);
+    if let Some(msg) = failure {
+        // persistent failure: charge each resident one attempt;
+        // over-budget residents fail typed, the rest survive for a fresh
+        // session.  Waiting requests never entered the failed session —
+        // survivors, uncharged.
+        for entry in slots.iter_mut() {
+            if let Some((mut req, _, admit_steps)) = entry.take() {
+                req.attempts += 1;
+                if req.attempts > policy.max_retries {
+                    // forwards the failed slot did complete still count as
+                    // generated tokens, so token totals stay exact
+                    recs.get(&req.adapter_id).error(&req, session.steps() - admit_steps, &msg);
+                    let _ = req.reply.send(Err(anyhow::Error::new(ServeError::EngineFailure {
+                        attempts: req.attempts,
+                        message: msg.clone(),
+                    })));
+                } else {
+                    survivors.push(req);
+                }
+            }
+        }
+        survivors.extend(waiting);
+    }
+    // deferred requests ride back with the survivors (uncharged) so the
+    // caller requeues them for the fallback path
+    survivors.extend(deferred);
+    survivors
+}
+
+/// Serve one dispatched batch end-to-end — the driver shared by the
+/// single-worker [`Router`] and every pool worker.  When the engine and
+/// every request are gathered-eligible, the whole batch (mixed tenants
+/// and all) runs as **one** session over the bank; otherwise the batch is
+/// split by tenant, first-appearance order, into sequential uniform
+/// sessions.  `refill(None, free)` asks for mixed re-fill, `refill(
+/// Some(&tenant), free)` for same-tenant re-fill.  Returns the combined
+/// survivors for the caller to requeue.
+pub(crate) fn serve_batch(
+    engine: &Engine,
+    registry: &mut AdapterRegistry,
+    worker: usize,
+    reqs: Vec<Request>,
+    refill: &mut dyn FnMut(Option<&Option<String>>, usize) -> Vec<Request>,
+    obs: &ServeObs,
+    policy: &SessionPolicy,
+) -> Vec<Request> {
+    let mut recs = RecorderCache::new(obs, worker);
+    let gathered_ready = engine.supports_gathered() && registry.bank().is_some();
+    let mut eligible = gathered_ready;
+    if gathered_ready {
+        for req in &reqs {
+            if let Some(tid) = &req.adapter_id {
+                // serving counts as LRU use even though the gathered path
+                // reads through shared `peek`s from here on
+                let _ = registry.get(tid);
+            }
+            if bank_slot_for(engine, registry, &req.adapter_id).is_none() {
+                eligible = false;
             }
         }
     }
-    survivors.extend(waiting);
+    if eligible {
+        let registry = &*registry;
+        let bank = registry.bank().expect("eligibility implies a bank").device();
+        let slot_of = |id: &Option<String>| bank_slot_for(engine, registry, id);
+        let mode = SessionMode::Gathered { bank, slot_of: &slot_of };
+        let mut mixed_refill = |free: usize| refill(None, free);
+        return run_decode_session(engine, &mode, reqs, &mut mixed_refill, &mut recs, policy);
+    }
+    // fallback: split by tenant (first-appearance order, preserving each
+    // tenant's FIFO) and run sequential uniform sessions
+    let mut groups: Vec<(Option<String>, Vec<Request>)> = Vec::new();
+    for req in reqs {
+        match groups.iter_mut().find(|(gid, _)| *gid == req.adapter_id) {
+            Some((_, group)) => group.push(req),
+            None => groups.push((req.adapter_id.clone(), vec![req])),
+        }
+    }
+    let mut survivors = Vec::new();
+    for (gid, group) in groups {
+        let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) = match &gid
+        {
+            None => {
+                (engine.default_sets.iter().collect(), engine.default_kind.as_str(), None)
+            }
+            Some(tid) => match registry.get_for_serving(tid) {
+                Some((entry, dev)) => {
+                    (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
+                }
+                None => {
+                    let msg = format!("adapter '{tid}' is not registered");
+                    for req in group {
+                        recs.get(&req.adapter_id).error(&req, 0, &msg);
+                        let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                    }
+                    continue;
+                }
+            },
+        };
+        let mode = SessionMode::Uniform { id: gid.clone(), dev, host_sets, eval_kind };
+        let mut uniform_refill = |free: usize| refill(Some(&gid), free);
+        survivors.extend(run_decode_session(
+            engine,
+            &mode,
+            group,
+            &mut uniform_refill,
+            &mut recs,
+            policy,
+        ));
+    }
     survivors
+}
+
+/// The bank slot a request rides on in a gathered session: the reserved
+/// identity slot 0 for no-adapter requests when the engine's default path
+/// is the merged one, the tenant's slice for plain-eval registered
+/// tenants.  `None` marks the request gathered-ineligible — unknown
+/// tenant, QA-kind adapter (merges through fake-quant, which the gathered
+/// kernel doesn't model), or a bank without its slice — and routes it to
+/// a uniform fallback session.
+pub(crate) fn bank_slot_for(
+    engine: &Engine,
+    registry: &AdapterRegistry,
+    id: &Option<String>,
+) -> Option<i32> {
+    match id {
+        None => engine.merged_default.then_some(0),
+        Some(tid) => {
+            let entry = registry.peek(tid)?;
+            if entry.eval_kind != "eval" {
+                return None;
+            }
+            registry.bank_slot(tid).map(|slot| slot as i32)
+        }
+    }
 }
 
 /// One engine + one registry = a multi-tenant serving endpoint.
@@ -1369,15 +1667,49 @@ impl<'a> Router<'a> {
         self.obs = Some(obs);
     }
 
+    /// Enable the registry's gathered bank when the engine/artifacts
+    /// support it, and upload any backfilled tenant slices.  Quietly
+    /// leaves the uniform fallback in place when the artifact is absent,
+    /// the engine serves packed INT4, the registry's LRU bound outsizes
+    /// the bank, or a resident entry can't be banked.
+    fn setup_gathered(&mut self) -> Result<()> {
+        if !self.engine.supports_gathered() {
+            return Ok(());
+        }
+        if self.registry.bank().is_none() {
+            let Some(slots) = self
+                .engine
+                .rt
+                .manifest
+                .config(&self.engine.config)
+                .ok()
+                .and_then(|c| c.artifacts.get(GATHERED_KIND))
+                .and_then(gathered_slots)
+            else {
+                return Ok(());
+            };
+            if self.registry.capacity() > slots.saturating_sub(1) {
+                return Ok(());
+            }
+            let hyper = self.engine.rt.model(&self.engine.config)?.clone();
+            if self.registry.enable_gathered(&hyper, slots).is_err() {
+                return Ok(());
+            }
+        }
+        self.registry.flush_bank(self.engine.rt)?;
+        Ok(())
+    }
+
     /// Serve requests from a channel until it closes and all queues drain.
     ///
-    /// Continuous-batching loop: the [`Scheduler`]'s fill+aging policy
-    /// picks which tenant *starts* a decode session; while the session
-    /// runs, freed slots are re-filled with waiting same-tenant requests
-    /// between forwards ([`Scheduler::admit`]) instead of blocking until
-    /// the whole batch completes.  The session ends — and the device can
-    /// switch tenants — only when the tenant's queue is dry or an aging
-    /// override holds further admission.
+    /// Continuous-batching loop: the [`Scheduler`] pops slot-level
+    /// **mixed** batches — one policy across every tenant's queue — and
+    /// each batch runs as a single gathered session whenever the engine
+    /// and its requests allow ([`serve_batch`]); while a session runs,
+    /// freed slots re-fill with *any* waiting request between forwards
+    /// ([`Scheduler::admit`]).  Engines or tenants outside the gathered
+    /// artifact's reach fall back to sequential per-tenant uniform
+    /// sessions refilled same-tenant only ([`Scheduler::admit_for`]).
     pub fn serve(&mut self, rx: Receiver<Request>, opts: SchedulerOpts) -> Result<MultiServeStats> {
         let cap = self.engine.artifact_batch()?;
         let opts = SchedulerOpts { max_batch: opts.max_batch.min(cap).max(1), ..opts };
@@ -1393,11 +1725,14 @@ impl<'a> Router<'a> {
             SessionPolicy { max_retries: opts.max_retries, faults: self.faults.clone() };
         // route the runtime/registry failpoints through this thread too
         let _fault_guard = crate::faults::install(&policy.faults);
+        self.setup_gathered()?;
         let mut sched = Scheduler::new(opts);
         sched.bind_obs(obs.registry(), 0);
         obs.set_worker_gauges(0, cap, self.engine.resident_weight_bytes());
         let start = Instant::now();
         let mut open = true;
+        let engine = &self.engine;
+        let registry = &mut self.registry;
         while open || !sched.is_empty() {
             if sched.is_empty() {
                 // block for the first pending request
@@ -1413,79 +1748,36 @@ impl<'a> Router<'a> {
                 }
             }
             drain_channel(&rx, &mut sched, &mut open, &obs);
-            let Some((id, reqs)) = sched.next_batch(Instant::now()) else {
+            let Some(reqs) = sched.next_batch(Instant::now()) else {
                 continue;
             };
-            obs.dispatch(&id, 0, &reqs, false);
-            self.run_session(id, reqs, &mut sched, &rx, &mut open, &obs, &policy);
+            obs.dispatch(0, &reqs, false);
+            obs.session_start(0, false);
+            // between forwards: pick up new channel arrivals, then top
+            // freed slots up — mixed from every queue, uniform from the
+            // session tenant's own
+            let mut refill = |filter: Option<&Option<String>>, free: usize| {
+                drain_channel(&rx, &mut sched, &mut open, &obs);
+                match filter {
+                    None => sched.admit(Instant::now(), free),
+                    Some(id) => sched.admit_for(id, Instant::now(), free),
+                }
+            };
+            let survivors = serve_batch(engine, registry, 0, reqs, &mut refill, &obs, &policy);
+            if !survivors.is_empty() {
+                let n = survivors.len();
+                for req in survivors {
+                    // front of the tenant's FIFO; an expired deadline
+                    // replies DeadlineExceeded inside requeue
+                    sched.requeue(req);
+                }
+                obs.session_rebuilt(0, n);
+            }
         }
         let wall = start.elapsed().as_secs_f64();
         let mut stats = finish_multi_obs(&obs, wall, sched.metrics(), cap);
         stats.total.resident_weight_bytes = Some(self.engine.resident_weight_bytes());
         Ok(stats)
-    }
-
-    /// One same-tenant decode session: admit the handed-over batch, then
-    /// loop forward → retire/reply → re-fill from the channel + the
-    /// tenant's queue, until the slots drain and no same-tenant work is
-    /// waiting.  Registered-resident tenants take the device-cached path;
-    /// host-only registrations fall back to per-forward upload.  Survivors
-    /// of a failed session are re-admitted at the front of the tenant's
-    /// queue for a fresh session (bounded by their per-request budget).
-    #[allow(clippy::too_many_arguments)]
-    fn run_session(
-        &mut self,
-        id: Option<String>,
-        reqs: Vec<Request>,
-        sched: &mut Scheduler,
-        rx: &Receiver<Request>,
-        open: &mut bool,
-        obs: &ServeObs,
-        policy: &SessionPolicy,
-    ) {
-        let rec = obs.recorder(&id, 0);
-        obs.session_start(0, false);
-        // resolve the tenant's serving state once for the whole session
-        let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) =
-            match &id {
-                None => (
-                    self.engine.default_sets.iter().collect(),
-                    self.engine.default_kind.as_str(),
-                    None,
-                ),
-                Some(tid) => match self.registry.get_for_serving(tid) {
-                    Some((entry, dev)) => {
-                        (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
-                    }
-                    None => {
-                        let msg = format!("adapter '{tid}' is not registered");
-                        for req in reqs {
-                            rec.error(&req, 0, &msg);
-                            let _ = req.reply.send(Err(anyhow!(msg.clone())));
-                        }
-                        return;
-                    }
-                },
-            };
-        // between forwards: pick up new channel arrivals, then top freed
-        // slots up from the tenant's own queue under the aging hold
-        let engine = &self.engine;
-        let mut refill = |current: &Option<String>, free: usize| {
-            drain_channel(rx, sched, open, obs);
-            sched.admit(current, Instant::now(), free)
-        };
-        let survivors = run_decode_session(
-            engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec, policy,
-        );
-        if !survivors.is_empty() {
-            let n = survivors.len();
-            for req in survivors {
-                // front of the tenant's FIFO; an expired deadline replies
-                // DeadlineExceeded inside requeue
-                sched.requeue(req);
-            }
-            obs.session_rebuilt(0, n);
-        }
     }
 }
 

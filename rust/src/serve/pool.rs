@@ -14,9 +14,10 @@
 //!     are replayed from a [`SharedAdapterSource`] — the host-side source
 //!     of truth that also coordinates eviction across replicas;
 //!   - a [`ShardedScheduler`] assigns each tenant a home worker (keeps
-//!     one tenant's traffic forming full batches on one replica) and lets
-//!     idle workers steal whole same-tenant batches from overloaded
-//!     shards, preserving the per-shard fill+aging fairness policy;
+//!     one tenant's traffic on one replica — better bank-slot locality)
+//!     and lets idle workers steal whole **mixed** batches from
+//!     overloaded shards; each shard runs the slot-level mixed policy
+//!     its single-worker counterpart uses;
 //!   - a **dispatcher** on the calling thread feeds the shards from the
 //!     public request channel, so producers see the same API as
 //!     [`Router::serve`](super::Router::serve).
@@ -33,14 +34,15 @@
 //! request is failed while a healthy replica could have served it.
 
 use super::error::ServeError;
-use super::registry::{AdapterRegistry, SharedAdapterSource};
+use super::registry::{gathered_slots, AdapterRegistry, SharedAdapterSource};
 use super::scheduler::{Request, SchedulerOpts, ShardedScheduler};
 use super::{
-    finish_multi_obs, run_decode_session, Engine, MultiServeStats, ServeObs, SessionPolicy,
+    finish_multi_obs, serve_batch, Engine, MultiServeStats, RecorderCache, ServeObs,
+    SessionPolicy, GATHERED_KIND,
 };
 use crate::faults::FaultInjector;
 use crate::model::ParamSet;
-use crate::runtime::{DeviceStore, Runtime};
+use crate::runtime::Runtime;
 use crate::util::sync::lock_recover;
 use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
@@ -296,11 +298,11 @@ fn worker_main(
             if !all_failed {
                 return out; // a healthy sibling serves (and steals) instead
             }
-            while let Some((id, reqs, stolen)) = sched.next_work(wid, Instant::now()) {
-                obs.dispatch(&id, wid, &reqs, stolen);
-                let rec = obs.recorder(&id, wid);
+            while let Some((reqs, stolen)) = sched.next_work(wid, Instant::now()) {
+                obs.dispatch(wid, &reqs, stolen);
+                let mut recs = RecorderCache::new(obs, wid);
                 for req in reqs {
-                    rec.error(&req, 0, &msg);
+                    recs.get(&req.adapter_id).error(&req, 0, &msg);
                     let _ = req.reply.send(Err(anyhow!(msg.clone())));
                 }
             }
@@ -349,6 +351,27 @@ fn worker_serve(
         .with_context(|| format!("worker {wid}: compiling '{}'", spec.eval_kind))?;
     let mut registry = AdapterRegistry::new(spec.registry_capacity.max(source.capacity()));
     registry.bind_obs(obs.registry(), wid);
+    // gathered banks, same eligibility rule as `Router::setup_gathered`:
+    // enable *before* the first sync so replicated tenants land in bank
+    // slots as they register (each resident registration flushes its
+    // slices), and compile the gathered executable inside the setup
+    // window like the uniform kind above
+    if engine.supports_gathered() {
+        if let Some(slots) = rt
+            .manifest
+            .config(&spec.config)
+            .ok()
+            .and_then(|c| c.artifacts.get(GATHERED_KIND))
+            .and_then(gathered_slots)
+        {
+            if registry.capacity() <= slots.saturating_sub(1)
+                && registry.enable_gathered(rt.model(&spec.config)?, slots).is_ok()
+            {
+                rt.executable(&spec.config, GATHERED_KIND)
+                    .with_context(|| format!("worker {wid}: compiling '{GATHERED_KIND}'"))?;
+            }
+        }
+    }
     let mut cursor = 0u64;
     source
         .sync(&mut registry, Some(&rt), &mut cursor)
@@ -356,16 +379,16 @@ fn worker_serve(
     out.setup_secs = epoch.elapsed().as_secs_f64();
     obs.set_worker_gauges(wid, out.capacity, out.resident_weight_bytes);
     ready.wait(); // go live together (see serve_pool)
-    while let Some((id, reqs, stolen)) = sched.next_work(wid, Instant::now()) {
-        obs.dispatch(&id, wid, &reqs, stolen);
-        let rec = obs.recorder(&id, wid);
-        // pick up registrations/evictions before resolving the tenant; a
+    while let Some((reqs, stolen)) = sched.next_work(wid, Instant::now()) {
+        obs.dispatch(wid, &reqs, stolen);
+        // pick up registrations/evictions before resolving tenants; a
         // failed sync fails this batch but keeps the worker serving (the
         // unchanged cursor retries the same changes next session)
         if let Err(e) = source.sync(&mut registry, Some(&rt), &mut cursor) {
             let msg = format!("worker {wid}: syncing tenant changes: {e:#}");
+            let mut recs = RecorderCache::new(obs, wid);
             for req in reqs {
-                rec.error(&req, 0, &msg);
+                recs.get(&req.adapter_id).error(&req, 0, &msg);
                 let _ = req.reply.send(Err(anyhow!(msg.clone())));
             }
             continue;
@@ -382,33 +405,14 @@ fn worker_serve(
         let outcome = catch_unwind(AssertUnwindSafe(|| {
             let _ = policy.faults.check(crate::faults::SITE_WORKER_PANIC);
             let reqs = lock_recover(&pen).take().expect("pen filled above");
-            let (host_sets, eval_kind, dev): (Vec<&ParamSet>, &str, Option<&DeviceStore>) =
-                match &id {
-                    None => (
-                        engine.default_sets.iter().collect(),
-                        engine.default_kind.as_str(),
-                        None,
-                    ),
-                    Some(tid) => match registry.get_for_serving(tid) {
-                        Some((entry, dev)) => {
-                            (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
-                        }
-                        None => {
-                            let msg = format!("adapter '{tid}' is not registered");
-                            for req in reqs {
-                                rec.error(&req, 0, &msg);
-                                let _ = req.reply.send(Err(anyhow!(msg.clone())));
-                            }
-                            return Vec::new();
-                        }
-                    },
-                };
-            let mut refill = |current: &Option<String>, free: usize| {
-                sched.admit(current, Instant::now(), free)
+            // mid-session refill: mixed sessions take any shard work
+            // (home first, then steal); uniform fallback sessions stay on
+            // their tenant so device buffers never switch mid-flight
+            let mut refill = |filter: Option<&Option<String>>, free: usize| match filter {
+                None => sched.admit(wid, Instant::now(), free),
+                Some(gid) => sched.admit_for(gid, Instant::now(), free),
             };
-            run_decode_session(
-                &engine, &id, reqs, dev, &host_sets, eval_kind, &mut refill, &rec, policy,
-            )
+            serve_batch(&engine, &mut registry, wid, reqs, &mut refill, obs, policy)
         }));
         let survivors: Vec<Request> = match outcome {
             Ok(survivors) => survivors,
@@ -420,11 +424,12 @@ fn worker_serve(
                 obs.worker_crash(wid);
                 let recovered = lock_recover(&pen).take().unwrap_or_default();
                 let msg = format!("worker {wid} crashed while serving this batch");
+                let mut recs = RecorderCache::new(obs, wid);
                 let mut live = Vec::new();
                 for mut req in recovered {
                     req.attempts += 1;
                     if req.attempts > policy.max_retries {
-                        rec.error(&req, 0, &msg);
+                        recs.get(&req.adapter_id).error(&req, 0, &msg);
                         let _ =
                             req.reply.send(Err(anyhow::Error::new(ServeError::EngineFailure {
                                 attempts: req.attempts,

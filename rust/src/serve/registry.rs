@@ -85,10 +85,180 @@ pub fn load_adapter_dir(dir: &Path, config: &str) -> Result<Vec<AdapterCkpt>> {
     Ok(out)
 }
 
+/// Slot count of the `eval_gathered` artifact's adapter banks, read back
+/// from the manifest input specs (never from the Python-side constant):
+/// the leading dimension of any `a_bank_*` input.
+pub fn gathered_slots(spec: &crate::runtime::ArtifactSpec) -> Option<usize> {
+    spec.inputs
+        .iter()
+        .find(|i| i.name.starts_with("a_bank_"))
+        .map(|i| i.shape[0])
+}
+
+/// Gathered adapter banks for mixed-tenant decode (S-LoRA/punica style):
+/// every tenant's LoRA/NLS tensors stacked along a leading slot axis `T`
+/// (`a_bank_<mod>: (T, L, r, in)` etc., matching the `eval_gathered`
+/// artifact inputs), so one forward serves a *mixed* batch by picking
+/// per-row slices with an i32 index vector instead of switching device
+/// buffer sets between sessions.
+///
+/// Slot 0 is reserved for the identity adapter (`B = 0`): rows with no
+/// tenant — the merged / `adapter_id: None` path — batch together with
+/// adapted rows and still compute the plain base projection.  Tenants
+/// occupy slots `1..T`, lowest free slot first.
+///
+/// Registration overwrites the tenant's contiguous host-side slice and
+/// marks the bank tensor dirty; `flush` re-uploads dirty tensors (PJRT
+/// buffers are immutable, so a slice write costs one whole-bank upload
+/// at registration time — never on the decode hot path, which ships only
+/// tokens + indices).  Eviction just recycles the slot: no live row
+/// indexes a freed slot, and re-registration overwrites the full slice
+/// before the slot is handed out again.  The Wanda masks are *not*
+/// banked — they belong to the shared sparsified base and stay resident
+/// with it.
+pub struct GatheredBank {
+    slots: usize,
+    host: ParamSet,
+    device: DeviceStore,
+    assign: BTreeMap<String, usize>,
+    /// recycled tenant slots, descending so `pop()` hands out the lowest
+    free: Vec<usize>,
+    /// bank tensor names written on the host but not yet re-uploaded
+    dirty: std::collections::BTreeSet<String>,
+}
+
+fn bank_specs(hyper: &ModelHyper, slots: usize) -> Vec<(String, Vec<usize>)> {
+    let (l, r, t) = (hyper.n_layers, hyper.r_max, slots);
+    let mut specs = Vec::new();
+    for m in &hyper.mods {
+        let (out, inp) = hyper.mod_dims(m);
+        specs.push((format!("a_bank_{m}"), vec![t, l, r, inp]));
+        specs.push((format!("b_bank_{m}"), vec![t, l, out, r]));
+        specs.push((format!("rankmask_bank_{m}"), vec![t, l, r]));
+        specs.push((format!("scale_bank_{m}"), vec![t, l]));
+    }
+    specs
+}
+
+impl GatheredBank {
+    /// Zero-initialized banks: slot 0 (identity, `B = 0`) is correct by
+    /// construction, and unassigned slots behave as identity too.
+    pub fn new(hyper: &ModelHyper, slots: usize) -> Result<GatheredBank> {
+        if slots < 2 {
+            bail!("gathered bank needs >= 2 slots (slot 0 is the identity adapter), got {slots}");
+        }
+        let mut host = ParamSet::new();
+        let mut dirty = std::collections::BTreeSet::new();
+        for (name, shape) in bank_specs(hyper, slots) {
+            host.insert(&name, Tensor::zeros(&shape));
+            dirty.insert(name);
+        }
+        Ok(GatheredBank {
+            slots,
+            host,
+            device: DeviceStore::new(),
+            assign: BTreeMap::new(),
+            free: (1..slots).rev().collect(),
+            dirty,
+        })
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Tenants the bank can hold (slot 0 is never assigned).
+    pub fn tenant_capacity(&self) -> usize {
+        self.slots - 1
+    }
+
+    pub fn assigned(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// The tenant's bank slot, if registered.
+    pub fn slot(&self, id: &str) -> Option<usize> {
+        self.assign.get(id).copied()
+    }
+
+    /// Host-side bank tensors (tests and host-only callers).
+    pub fn host(&self) -> &ParamSet {
+        &self.host
+    }
+
+    /// Device-resident bank buffers (populated by `flush`).
+    pub fn device(&self) -> &DeviceStore {
+        &self.device
+    }
+
+    /// Write a validated entry into its slot (existing tenants keep their
+    /// slot — a replace overwrites the same slice) and return the slot.
+    pub fn register(&mut self, entry: &AdapterEntry) -> Result<usize> {
+        let slot = match self.assign.get(&entry.id) {
+            Some(&s) => s,
+            None => match self.free.pop() {
+                Some(s) => {
+                    self.assign.insert(entry.id.clone(), s);
+                    s
+                }
+                None => bail!(
+                    "no free adapter-bank slot for '{}' ({} tenant slots; \
+                     evict a tenant or lower the registry capacity)",
+                    entry.id,
+                    self.slots - 1
+                ),
+            },
+        };
+        let names: Vec<String> = self.host.names().cloned().collect();
+        for bank_name in names {
+            let src_name = bank_name.replace("_bank_", "_");
+            let src = find(&entry.host_sets, &src_name).with_context(|| {
+                format!("adapter '{}': missing tensor '{src_name}' for bank write", entry.id)
+            })?;
+            let dst = self.host.get_mut(&bank_name)?;
+            let n = src.data().len();
+            dst.data_mut()[slot * n..(slot + 1) * n].copy_from_slice(src.data());
+            self.dirty.insert(bank_name);
+        }
+        Ok(slot)
+    }
+
+    /// Recycle the tenant's slot (device untouched — see type docs).
+    /// True if the tenant was banked.
+    pub fn evict(&mut self, id: &str) -> bool {
+        match self.assign.remove(id) {
+            Some(slot) => {
+                self.free.push(slot);
+                self.free.sort_unstable_by(|a, b| b.cmp(a));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Upload every dirty bank tensor; returns how many were uploaded.
+    pub fn flush(&mut self, rt: &Runtime) -> Result<usize> {
+        let names = std::mem::take(&mut self.dirty);
+        let n = names.len();
+        for name in names {
+            let t = self.host.get(&name)?;
+            self.device
+                .put_tensor(&rt.client, &name, t)
+                .with_context(|| format!("uploading bank tensor '{name}'"))?;
+        }
+        Ok(n)
+    }
+}
+
 /// LRU-bounded map from adapter id to validated host state, plus (for
 /// tenants registered through `register_resident`) the device-resident
 /// copy of that state keyed by the same id.  Dropping a `DeviceStore`
 /// drops its `PjRtBuffer`s, so eviction releases device memory.
+///
+/// With [`AdapterRegistry::enable_gathered`] the registry additionally
+/// maintains a [`GatheredBank`]: every registration writes the tenant's
+/// slice and every eviction/replacement recycles it, so the bank always
+/// mirrors the resident set.
 pub struct AdapterRegistry {
     capacity: usize,
     clock: u64,
@@ -96,6 +266,7 @@ pub struct AdapterRegistry {
     device_sets: BTreeMap<String, DeviceStore>,
     evictions: Vec<String>,
     obs: Option<RegistryObs>,
+    bank: Option<GatheredBank>,
 }
 
 /// Registry instruments (bound per worker replica): registration and
@@ -128,7 +299,59 @@ impl AdapterRegistry {
             device_sets: BTreeMap::new(),
             evictions: Vec::new(),
             obs: None,
+            bank: None,
         }
+    }
+
+    /// Attach a [`GatheredBank`] with `slots` slots (read from the
+    /// `eval_gathered` manifest specs via [`gathered_slots`]).  Tenants
+    /// already resident are backfilled in id order; from here on every
+    /// registration/eviction keeps the bank in lockstep.  The bank must
+    /// hold at least `capacity` tenants so bank exhaustion can never
+    /// strand a registration the LRU bound admitted.
+    pub fn enable_gathered(&mut self, hyper: &ModelHyper, slots: usize) -> Result<()> {
+        let mut bank = GatheredBank::new(hyper, slots)?;
+        if self.capacity > bank.tenant_capacity() {
+            bail!(
+                "registry capacity {} exceeds the {} tenant slots of the gathered bank; \
+                 lower the capacity or regenerate artifacts with more slots",
+                self.capacity,
+                bank.tenant_capacity()
+            );
+        }
+        for (_, entry) in self.entries.values() {
+            bank.register(entry)?;
+        }
+        self.bank = Some(bank);
+        Ok(())
+    }
+
+    /// The gathered bank, if enabled.
+    pub fn bank(&self) -> Option<&GatheredBank> {
+        self.bank.as_ref()
+    }
+
+    /// The tenant's bank slot, if the bank is enabled and the tenant is
+    /// registered.
+    pub fn bank_slot(&self, id: &str) -> Option<usize> {
+        self.bank.as_ref().and_then(|b| b.slot(id))
+    }
+
+    /// Upload dirty bank tensors (no-op without a bank); returns how many
+    /// tensors went up.
+    pub fn flush_bank(&mut self, rt: &Runtime) -> Result<usize> {
+        match self.bank.as_mut() {
+            Some(b) => b.flush(rt),
+            None => Ok(0),
+        }
+    }
+
+    /// Mirror a just-inserted entry into the bank (no-op without one).
+    fn bank_write(&mut self, id: &str) -> Result<()> {
+        let Some(bank) = self.bank.as_mut() else { return Ok(()) };
+        let Some((_, entry)) = self.entries.get(id) else { return Ok(()) };
+        bank.register(entry)?;
+        Ok(())
     }
 
     /// Export this registry's state into a metrics registry (labelled by
@@ -243,7 +466,17 @@ impl AdapterRegistry {
     /// must never shadow freshly registered weights.
     pub fn register(&mut self, hyper: &ModelHyper, entry: AdapterEntry) -> Result<Option<String>> {
         Self::validate(hyper, &entry)?;
-        Ok(self.insert_validated(entry))
+        let id = entry.id.clone();
+        let evicted = self.insert_validated(entry);
+        if let Err(e) = self.bank_write(&id) {
+            // bank exhaustion (capacity misconfiguration): roll the insert
+            // back so registry and bank never disagree on the resident set
+            self.entries.remove(&id);
+            self.device_sets.remove(&id);
+            self.refresh_obs();
+            return Err(e);
+        }
+        Ok(evicted)
     }
 
     /// Insert an already-validated entry: bump the clock, drop any stale
@@ -270,6 +503,9 @@ impl AdapterRegistry {
         if let Some(v) = victim {
             self.entries.remove(&v);
             self.device_sets.remove(&v);
+            if let Some(b) = self.bank.as_mut() {
+                b.evict(&v);
+            }
             self.evictions.push(v.clone());
             if let Some(o) = &self.obs {
                 o.evictions.inc();
@@ -310,7 +546,14 @@ impl AdapterRegistry {
         let dev = Self::upload_entry(rt, &entry)?;
         let id = entry.id.clone();
         let evicted = self.insert_validated(entry);
-        self.device_sets.insert(id, dev);
+        self.device_sets.insert(id.clone(), dev);
+        if let Err(e) = self.bank_write(&id) {
+            self.entries.remove(&id);
+            self.device_sets.remove(&id);
+            self.refresh_obs();
+            return Err(e);
+        }
+        self.flush_bank(rt)?;
         Ok(evicted)
     }
 
@@ -318,6 +561,15 @@ impl AdapterRegistry {
     /// `register_resident` and not since evicted/replaced.
     pub fn device_set(&self, id: &str) -> Option<&DeviceStore> {
         self.device_sets.get(id)
+    }
+
+    /// Shared-borrow lookup that does *not* touch the LRU stamp.  For
+    /// eligibility checks inside a running gathered session, where the
+    /// bank's device buffers are already borrowed; the dispatcher
+    /// touches each batch's tenants via [`AdapterRegistry::get`] up
+    /// front so serving still counts as LRU use.
+    pub fn peek(&self, id: &str) -> Option<&AdapterEntry> {
+        self.entries.get(id).map(|(_, entry)| entry)
     }
 
     /// Look up an adapter for serving; touches its LRU stamp.
@@ -352,6 +604,9 @@ impl AdapterRegistry {
     /// it was resident.
     pub fn evict(&mut self, id: &str) -> bool {
         self.device_sets.remove(id);
+        if let Some(b) = self.bank.as_mut() {
+            b.evict(id);
+        }
         let evicted = self.entries.remove(id).is_some();
         if evicted {
             if let Some(o) = &self.obs {
@@ -375,8 +630,11 @@ impl AdapterRegistry {
     ) -> Result<Vec<String>> {
         let ids = self.precheck_batch(hyper, &entries)?;
         for entry in entries {
-            // pre-validated and within capacity: no eviction possible
+            // pre-validated and within capacity: no eviction possible,
+            // and the bank (capped at >= capacity slots) cannot fill up
+            let id = entry.id.clone();
             self.insert_validated(entry);
+            self.bank_write(&id)?;
         }
         Ok(ids)
     }
@@ -402,12 +660,16 @@ impl AdapterRegistry {
                     let id = entry.id.clone();
                     self.insert_validated(entry);
                     self.device_sets.insert(id.clone(), dev);
+                    self.bank_write(&id)?;
                     inserted.push(id);
                 }
                 Err(e) => {
                     for done in &inserted {
                         self.entries.remove(done);
                         self.device_sets.remove(done);
+                        if let Some(b) = self.bank.as_mut() {
+                            b.evict(done);
+                        }
                     }
                     // rollback removals are not evictions, but the
                     // resident gauges must re-level
@@ -418,6 +680,7 @@ impl AdapterRegistry {
                 }
             }
         }
+        self.flush_bank(rt)?;
         Ok(ids)
     }
 
@@ -896,6 +1159,125 @@ mod tests {
         source.sync(&mut fresh, None, &mut fc).unwrap();
         assert!(fresh.contains("keep") && fresh.contains("late"));
         assert_eq!(fresh.len(), 2);
+    }
+
+    /// The tenant's `a_q` slice inside the bank's `a_bank_q` tensor.
+    fn bank_slice<'r>(reg: &'r AdapterRegistry, slot: usize, h: &ModelHyper) -> &'r [f32] {
+        let (_, inp) = h.mod_dims("q");
+        let n = h.n_layers * h.r_max * inp;
+        let t = reg.bank().unwrap().host().get("a_bank_q").unwrap();
+        &t.data()[slot * n..(slot + 1) * n]
+    }
+
+    #[test]
+    fn gathered_bank_recycles_slots_on_evict_and_replace() {
+        let h = hyper();
+        let mut reg = AdapterRegistry::new(3);
+        reg.enable_gathered(&h, 4).unwrap(); // 3 tenant slots + identity
+        reg.register(&h, entry(&h, "a", 1)).unwrap();
+        reg.register(&h, entry(&h, "b", 2)).unwrap();
+        // lowest free slot first; slot 0 is never assigned
+        assert_eq!(reg.bank_slot("a"), Some(1));
+        assert_eq!(reg.bank_slot("b"), Some(2));
+        // the slice holds the tenant's weights; the identity slot stays 0
+        let want_a = entry(&h, "a", 1);
+        let src = find(&want_a.host_sets, "a_q").unwrap();
+        assert_eq!(bank_slice(&reg, 1, &h), src.data());
+        assert!(bank_slice(&reg, 0, &h).iter().all(|&x| x == 0.0));
+        // eviction recycles the slot for the next registration
+        assert!(reg.evict("a"));
+        assert_eq!(reg.bank_slot("a"), None);
+        reg.register(&h, entry(&h, "c", 3)).unwrap();
+        assert_eq!(reg.bank_slot("c"), Some(1));
+        let want_c = entry(&h, "c", 3);
+        let src = find(&want_c.host_sets, "a_q").unwrap();
+        assert_eq!(bank_slice(&reg, 1, &h), src.data(), "new tenant overwrites the slice");
+        // same-id re-registration keeps the slot, new weights land in it
+        reg.register(&h, entry(&h, "b", 9)).unwrap();
+        assert_eq!(reg.bank_slot("b"), Some(2));
+        let want_b = entry(&h, "b", 9);
+        let src = find(&want_b.host_sets, "a_q").unwrap();
+        assert_eq!(bank_slice(&reg, 2, &h), src.data());
+        assert_eq!(reg.bank().unwrap().assigned(), 2);
+    }
+
+    #[test]
+    fn gathered_bank_follows_lru_eviction() {
+        let h = hyper();
+        let mut reg = AdapterRegistry::new(2);
+        reg.enable_gathered(&h, 4).unwrap();
+        reg.register(&h, entry(&h, "a", 1)).unwrap();
+        reg.register(&h, entry(&h, "b", 2)).unwrap();
+        assert!(reg.get("a").is_some()); // touch a → b is the LRU victim
+        let evicted = reg.register(&h, entry(&h, "c", 3)).unwrap();
+        assert_eq!(evicted.as_deref(), Some("b"));
+        assert_eq!(reg.bank_slot("b"), None, "LRU victim's slot must be freed");
+        assert_eq!(reg.bank_slot("c"), Some(2), "victim's slot is recycled");
+        assert_eq!(reg.bank_slot("a"), Some(1));
+    }
+
+    #[test]
+    fn enable_gathered_backfills_and_bounds_capacity() {
+        let h = hyper();
+        // capacity above the bank's tenant slots is a config error: the
+        // LRU bound could admit a tenant the bank cannot hold
+        let mut reg = AdapterRegistry::new(8);
+        let e = reg.enable_gathered(&h, 4).unwrap_err();
+        assert!(format!("{e:#}").contains("tenant slots"), "{e:#}");
+        // tenants registered before the bank exists get backfilled
+        let mut reg = AdapterRegistry::new(3);
+        reg.register(&h, entry(&h, "x", 1)).unwrap();
+        reg.register(&h, entry(&h, "y", 2)).unwrap();
+        reg.enable_gathered(&h, 4).unwrap();
+        assert_eq!(reg.bank_slot("x"), Some(1));
+        assert_eq!(reg.bank_slot("y"), Some(2));
+        let want = entry(&h, "y", 2);
+        let src = find(&want.host_sets, "a_q").unwrap();
+        assert_eq!(bank_slice(&reg, 2, &h), src.data());
+        // a bank without an identity slot is rejected outright
+        assert!(GatheredBank::new(&h, 1).is_err());
+    }
+
+    #[test]
+    fn gathered_bank_exhaustion_is_a_hard_error() {
+        let h = hyper();
+        let mut bank = GatheredBank::new(&h, 3).unwrap(); // 2 tenant slots
+        bank.register(&entry(&h, "a", 1)).unwrap();
+        bank.register(&entry(&h, "b", 2)).unwrap();
+        let e = bank.register(&entry(&h, "c", 3)).unwrap_err();
+        assert!(format!("{e:#}").contains("no free adapter-bank slot"), "{e:#}");
+        // replace of a banked tenant still works at full occupancy
+        assert_eq!(bank.register(&entry(&h, "a", 9)).unwrap(), 1);
+    }
+
+    #[test]
+    fn shared_source_sync_fills_replica_banks_identically() {
+        let h = hyper();
+        let source = SharedAdapterSource::new(h.clone(), 3);
+        source.register_all(vec![entry(&h, "a", 1), entry(&h, "b", 2)]).unwrap();
+        // two replicas enable the bank before their first sync (the pool
+        // worker startup order) and must converge on identical slots
+        let mk = || {
+            let mut r = AdapterRegistry::new(3);
+            r.enable_gathered(&h, 4).unwrap();
+            r
+        };
+        let (mut r0, mut r1) = (mk(), mk());
+        let (mut c0, mut c1) = (0u64, 0u64);
+        source.sync(&mut r0, None, &mut c0).unwrap();
+        source.sync(&mut r1, None, &mut c1).unwrap();
+        for id in ["a", "b"] {
+            assert_eq!(r0.bank_slot(id), r1.bank_slot(id), "replicas diverged on '{id}'");
+            assert!(r0.bank_slot(id).is_some());
+        }
+        // churn: evict + register reaches both replicas with the same slot
+        source.evict("a");
+        source.register(entry(&h, "c", 3)).unwrap();
+        source.sync(&mut r0, None, &mut c0).unwrap();
+        source.sync(&mut r1, None, &mut c1).unwrap();
+        assert_eq!(r0.bank_slot("a"), None);
+        assert_eq!(r0.bank_slot("c"), r1.bank_slot("c"));
+        assert_eq!(r0.bank_slot("c"), Some(1), "recycled slot must be deterministic");
     }
 
     #[test]

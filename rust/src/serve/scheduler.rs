@@ -1,34 +1,38 @@
-//! Adapter-aware batch scheduler — replaces the FIFO coalescing loop.
+//! Slot-level mixed-tenant batch scheduler.
 //!
-//! Adapters are per-forward host inputs, so one forward pass can serve only
-//! requests that share an adapter.  The scheduler keeps a FIFO queue per
-//! adapter id and, each dispatch, picks the queue with the best
-//! `fill + wait/aging` score:
+//! The `eval_gathered` artifact applies each batch row's *own* adapter via
+//! device-resident banks and a per-row index vector, so one forward pass
+//! serves requests from **any** mix of tenants (the merged / no-adapter
+//! path rides along on the reserved identity bank slot 0).  Scheduling is
+//! therefore slot-level: a free decode slot takes the best waiting request
+//! regardless of tenant, and batches are routinely mixed.
 //!
-//!   - `fill` (0..=1) favors full batches — maximum device utilization;
-//!   - `wait/aging` grows without bound for a waiting queue, so a
-//!     low-traffic tenant whose oldest request has waited longer than
-//!     `aging` outranks even a completely full queue from a hot tenant
-//!     (no starvation).
+//! The scheduler still keeps a FIFO queue per adapter id — per-tenant
+//! FIFO order is a client-visible property, and queue shape drives the
+//! admission policy — but both dispatch granularities pull across all
+//! queues with one age-ordered policy (`pop_mixed`):
 //!
-//! Two dispatch granularities share those queues:
+//!   - a queue whose oldest request has waited past the `aging` bound is
+//!     served first, oldest head first — the same starvation bound as
+//!     same-tenant scheduling, now a fairness tie-break rather than a
+//!     batch-switch trigger;
+//!   - otherwise the fullest queue wins (keeps a hot tenant's rows
+//!     together for upload locality), with the older head breaking ties.
 //!
-//!   - [`Scheduler::next_batch`] starts a batch: it picks the winning
-//!     tenant under the fill+aging score and hands over up to `max_batch`
-//!     of its requests;
-//!   - [`Scheduler::admit`] runs *between decode forwards* of an already
-//!     running batch: it tops freed slots up with more requests from the
-//!     **same** tenant (one forward serves one adapter, so cross-tenant
-//!     admission is impossible), unless another tenant's oldest request
-//!     has aged out — then admission is held so the running batch drains
-//!     and `next_batch` can hand the device over (no starvation, same
-//!     aging bound as before).
+//! [`Scheduler::next_batch`] starts a batch (up to `max_batch` requests);
+//! [`Scheduler::admit`] runs *between decode forwards* and tops freed
+//! slots up with waiting requests from any tenant — there is no
+//! admission hold anymore, because the device never needs to "switch
+//! tenants": an aged request is simply admitted into the running batch.
+//! Backpressure (`queue_cap` → `Overloaded`), deadlines (queued requests
+//! are shed with `DeadlineExceeded` before any slot is spent on them),
+//! and the re-admission retry budget carry over unchanged.
 //!
 //! The scheduler is pure bookkeeping (no runtime handles), so the policy is
 //! unit-testable without artifacts; `now` is passed in rather than sampled.
 
 use super::error::ServeError;
-use crate::obs::{Counter, FloatCounter, Gauge, Registry};
+use crate::obs::{Counter, FloatCounter, Gauge, Histogram, Registry};
 use crate::util::sync::{get_mut_recover, lock_recover, wait_timeout_recover};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
@@ -152,8 +156,8 @@ pub struct SchedulerOpts {
     /// Upper bound on requests per dispatched batch (clamped to the
     /// artifact batch by the router).
     pub max_batch: usize,
-    /// A queue whose oldest request has waited this long outranks a full
-    /// batch from another tenant.
+    /// A request that has waited this long is admitted ahead of fuller
+    /// queues (the fairness tie-break in the mixed admission policy).
     pub aging: Duration,
     /// Pending-request bound per scheduler (per *shard* in the pool):
     /// pushes beyond it are rejected with [`ServeError::Overloaded`]
@@ -194,14 +198,14 @@ pub struct SchedulerMetrics {
     pub fill_sum: f64,
     /// highest total pending count observed across all queues
     pub max_queue_depth: usize,
-    /// batches where the aging term overrode the fill preference
+    /// batches where the aging bound promoted a request past fuller queues
     pub aged_batches: usize,
     /// requests admitted into an already-running batch (freed slots
     /// re-filled between forwards, the continuous-batching win)
     pub admitted: usize,
-    /// admissions refused because another tenant's oldest request aged
-    /// out (the running batch drains so the device can switch tenants)
-    pub aging_holds: usize,
+    /// dispatched batches containing more than one distinct adapter id
+    /// (the gathered mixed-tenant path; same-tenant batches don't count)
+    pub mixed_batches: usize,
     /// requests refused or dropped before dispatch: overload rejections
     /// plus deadline sheds (`shed == overloaded + deadline_expired`)
     pub shed: usize,
@@ -227,7 +231,7 @@ impl SchedulerMetrics {
             max_queue_depth: obs.queue_depth.peak() as usize,
             aged_batches: obs.aged_batches.get() as usize,
             admitted: obs.admitted.get() as usize,
-            aging_holds: obs.aging_holds.get() as usize,
+            mixed_batches: obs.mixed_batches.get() as usize,
             shed: (obs.shed_overload.get() + obs.shed_deadline.get()) as usize,
             deadline_expired: obs.deadline_exceeded.get() as usize,
         }
@@ -244,7 +248,7 @@ impl SchedulerMetrics {
         self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
         self.aged_batches += other.aged_batches;
         self.admitted += other.admitted;
-        self.aging_holds += other.aging_holds;
+        self.mixed_batches += other.mixed_batches;
         self.shed += other.shed;
         self.deadline_expired += other.deadline_expired;
     }
@@ -263,7 +267,13 @@ struct SchedInstruments {
     queue_depth: Arc<Gauge>,
     aged_batches: Arc<Counter>,
     admitted: Arc<Counter>,
-    aging_holds: Arc<Counter>,
+    /// dispatched batches spanning more than one adapter id
+    /// (`sched_mixed_batches_total`)
+    mixed_batches: Arc<Counter>,
+    /// distinct adapter ids per dispatched batch
+    /// (`sched_batch_distinct_tenants`; observed once per batch, so its
+    /// count reconciles exactly with `sched_batches_total`)
+    distinct_tenants: Arc<Histogram>,
     /// overload rejections at push (`serve_shed_total{reason=overload}`)
     shed_overload: Arc<Counter>,
     /// deadline sheds (`serve_shed_total{reason=deadline}`)
@@ -272,6 +282,10 @@ struct SchedInstruments {
     /// aging/deadline dashboards key on (`serve_deadline_exceeded_total`)
     deadline_exceeded: Arc<Counter>,
 }
+
+/// Buckets for `sched_batch_distinct_tenants` (a batch has at least one
+/// tenant, so bucket 1 is the same-tenant / singleton case).
+const DISTINCT_TENANTS_BOUNDS: &[f64] = &[1.0, 2.0, 4.0, 8.0, 16.0];
 
 impl SchedInstruments {
     fn standalone() -> SchedInstruments {
@@ -282,7 +296,8 @@ impl SchedInstruments {
             queue_depth: Arc::new(Gauge::new()),
             aged_batches: Arc::new(Counter::new()),
             admitted: Arc::new(Counter::new()),
-            aging_holds: Arc::new(Counter::new()),
+            mixed_batches: Arc::new(Counter::new()),
+            distinct_tenants: Arc::new(Histogram::new(DISTINCT_TENANTS_BOUNDS)),
             shed_overload: Arc::new(Counter::new()),
             shed_deadline: Arc::new(Counter::new()),
             deadline_exceeded: Arc::new(Counter::new()),
@@ -299,7 +314,12 @@ impl SchedInstruments {
             queue_depth: reg.gauge("sched_queue_depth", &labels),
             aged_batches: reg.counter("sched_aged_batches_total", &labels),
             admitted: reg.counter("sched_admitted_total", &labels),
-            aging_holds: reg.counter("sched_aging_holds_total", &labels),
+            mixed_batches: reg.counter("sched_mixed_batches_total", &labels),
+            distinct_tenants: reg.histogram(
+                "sched_batch_distinct_tenants",
+                &labels,
+                DISTINCT_TENANTS_BOUNDS,
+            ),
             shed_overload: reg.counter(
                 "serve_shed_total",
                 &[("reason", "overload"), ("shard", shard.as_str())],
@@ -313,15 +333,12 @@ impl SchedInstruments {
     }
 }
 
-/// Per-adapter FIFO queues + the dispatch policy.
+/// Per-adapter FIFO queues + the mixed slot-level dispatch policy.
 pub struct Scheduler {
     opts: SchedulerOpts,
     queues: BTreeMap<Option<String>, VecDeque<Request>>,
     pending: usize,
     obs: SchedInstruments,
-    /// an aging hold is in effect (dedupes `aging_holds`: the router polls
-    /// `admit` after every forward, but one sustained hold is one event)
-    holding: bool,
     /// queued requests carrying a deadline — the expired-sweep runs only
     /// while this is nonzero, so deadline-free workloads pay nothing
     deadlined: usize,
@@ -339,7 +356,6 @@ impl Scheduler {
             queues: BTreeMap::new(),
             pending: 0,
             obs: SchedInstruments::standalone(),
-            holding: false,
             deadlined: 0,
             recent_shed: 0,
         }
@@ -500,63 +516,136 @@ impl Scheduler {
         self.opts.max_batch = self.opts.max_batch.min(cap).max(1);
     }
 
-    /// Pop the next same-adapter batch under the fill+aging policy, FIFO
-    /// within the chosen tenant.  None iff nothing is pending.
-    pub fn next_batch(&mut self, now: Instant) -> Option<(Option<String>, Vec<Request>)> {
-        self.holding = false; // a new batch starts a new hold episode
+    /// Pop up to `limit` requests across all queues under the mixed
+    /// slot-level policy, one head at a time:
+    ///
+    ///   - if any queue's oldest request has waited past the `aging`
+    ///     bound, the oldest such head goes next (fairness first);
+    ///   - otherwise the fullest queue's head goes next (keeps a hot
+    ///     tenant's rows together), the older head breaking ties.
+    ///
+    /// Per-tenant FIFO order is preserved by construction (only heads are
+    /// popped).  Returns the requests plus whether the aging bound ever
+    /// promoted a head past a fuller queue.  Bookkeeping (pending,
+    /// deadlined, queue-depth gauge, counters) is the *caller's* job.
+    fn pop_mixed(&mut self, now: Instant, limit: usize) -> (Vec<Request>, bool) {
+        let aging = self.opts.aging;
+        let mut out = Vec::with_capacity(limit.min(self.pending));
+        let mut aged_hit = false;
+        while out.len() < limit && !self.queues.is_empty() {
+            // head wait per queue; aged pick = oldest aged head, full
+            // pick = fullest queue (tie-break: older head)
+            let mut aged_pick: Option<(Option<String>, Duration)> = None;
+            let mut full_pick: Option<(Option<String>, usize, Duration)> = None;
+            let mut max_len = 0usize;
+            for (id, q) in &self.queues {
+                let wait = q
+                    .front()
+                    .map(|r| now.saturating_duration_since(r.enqueued))
+                    .unwrap_or(Duration::ZERO);
+                if wait >= aging
+                    && aged_pick.as_ref().map(|(_, w)| wait > *w).unwrap_or(true)
+                {
+                    aged_pick = Some((id.clone(), wait));
+                }
+                if full_pick
+                    .as_ref()
+                    .map(|(_, n, w)| q.len() > *n || (q.len() == *n && wait > *w))
+                    .unwrap_or(true)
+                {
+                    full_pick = Some((id.clone(), q.len(), wait));
+                }
+                max_len = max_len.max(q.len());
+            }
+            let id = match (aged_pick, full_pick) {
+                (Some((id, _)), _) => {
+                    // only count a *promotion*: the aged head jumped a
+                    // strictly fuller queue (an aged head that would have
+                    // won on fill anyway is not a fairness event)
+                    if self.queues.get(&id).map(|q| q.len()).unwrap_or(0) < max_len {
+                        aged_hit = true;
+                    }
+                    id
+                }
+                (None, Some((id, _, _))) => id,
+                (None, None) => break,
+            };
+            let q = self.queues.get_mut(&id).expect("picked from live queues");
+            out.push(q.pop_front().expect("queues are never left empty"));
+            if q.is_empty() {
+                self.queues.remove(&id);
+            }
+        }
+        (out, aged_hit)
+    }
+
+    /// Pop the next batch (up to `max_batch` requests) under the mixed
+    /// policy — routinely spanning tenants; the gathered artifact applies
+    /// each row's own adapter.  None iff nothing is pending.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<Request>> {
         self.shed_expired(now);
         if self.queues.is_empty() {
             return None;
         }
-        let aging = self.opts.aging.as_secs_f64().max(1e-9);
-        // (score, fill, wait) of the winner + the best fill seen anywhere
-        let mut chosen: Option<(Option<String>, f64, f64, f64)> = None;
-        let mut max_fill = 0.0f64;
-        for (id, q) in &self.queues {
-            let fill = q.len().min(self.opts.max_batch) as f64 / self.opts.max_batch as f64;
-            let wait = q
-                .front()
-                .map(|r| now.saturating_duration_since(r.enqueued).as_secs_f64())
-                .unwrap_or(0.0);
-            let score = fill + wait / aging;
-            if chosen.as_ref().map(|(_, s, _, _)| score > *s).unwrap_or(true) {
-                chosen = Some((id.clone(), score, fill, wait));
-            }
-            max_fill = max_fill.max(fill);
+        let limit = self.opts.max_batch;
+        let (reqs, aged) = self.pop_mixed(now, limit);
+        if reqs.is_empty() {
+            return None;
         }
-        let (id, _, fill, wait) = chosen?;
-        // a genuine aging override: a less-full queue won because its
-        // oldest request exceeded the aging bound (microsecond wait
-        // differences between equally-full queues don't count)
-        if fill < max_fill && wait >= aging {
+        if aged {
             self.obs.aged_batches.inc();
-        }
-        let q = self.queues.get_mut(&id)?;
-        let n = q.len().min(self.opts.max_batch);
-        let reqs: Vec<Request> = q.drain(..n).collect();
-        if q.is_empty() {
-            self.queues.remove(&id);
         }
         self.pending -= reqs.len();
         self.note_removed(&reqs);
         self.obs.queue_depth.set(self.pending as f64);
         self.obs.batches.inc();
         self.obs.scheduled.add(reqs.len() as u64);
-        self.obs.fill_sum.add(reqs.len() as f64 / self.opts.max_batch as f64);
-        Some((id, reqs))
+        self.obs.fill_sum.add(reqs.len() as f64 / limit as f64);
+        let distinct = reqs
+            .iter()
+            .map(|r| &r.adapter_id)
+            .collect::<std::collections::BTreeSet<_>>()
+            .len();
+        self.obs.distinct_tenants.observe(distinct as f64);
+        if distinct > 1 {
+            self.obs.mixed_batches.inc();
+        }
+        Some(reqs)
     }
 
     /// Step-level admission for a *running* batch: pop up to `free_slots`
-    /// more requests from `current`'s queue (FIFO), so freed decode slots
-    /// re-fill between forwards instead of idling until the batch drains.
-    ///
-    /// Returns an empty vec when the current tenant's queue is dry — or
-    /// when another tenant's oldest request has waited past the aging
-    /// bound, in which case admission is *held*: the running batch drains
-    /// naturally and the next `next_batch` call hands the device to the
-    /// aged tenant.  This is the same starvation bound `next_batch`
-    /// enforces, applied at step granularity.
-    pub fn admit(
+    /// requests from **any** queue under the same mixed policy, so freed
+    /// decode slots re-fill between forwards instead of idling until the
+    /// batch drains.  There is no aging hold: an aged request is admitted
+    /// straight into the running batch (its adapter rides on its own bank
+    /// slot, so the device never switches tenants).
+    pub fn admit(&mut self, now: Instant, free_slots: usize) -> Vec<Request> {
+        if free_slots == 0 {
+            return Vec::new();
+        }
+        self.shed_expired(now);
+        let (reqs, _) = self.pop_mixed(now, free_slots);
+        if reqs.is_empty() {
+            return reqs;
+        }
+        self.pending -= reqs.len();
+        self.note_removed(&reqs);
+        self.obs.queue_depth.set(self.pending as f64);
+        self.obs.admitted.add(reqs.len() as u64);
+        self.obs.scheduled.add(reqs.len() as u64);
+        reqs
+    }
+
+    /// Step-level admission for a *uniform* session — the fallback path
+    /// for engines/tenants the gathered artifact can't serve (INT4
+    /// bases, QA-kind tenants): FIFO from `current`'s own queue only,
+    /// since the running session is compiled against one tenant's
+    /// adapter.  Admission pauses — returns empty — once another
+    /// tenant's head has waited past the aging bound, so the session
+    /// drains at its natural length and the aged tenant gets the next
+    /// dispatch.  That re-creates the pre-gathered starvation bound for
+    /// uniform sessions; mixed sessions never need it.
+    pub fn admit_for(
         &mut self,
         current: &Option<String>,
         now: Instant,
@@ -566,8 +655,7 @@ impl Scheduler {
             return Vec::new();
         }
         self.shed_expired(now);
-        let has_current = self.queues.get(current).map(|q| !q.is_empty()).unwrap_or(false);
-        if !has_current {
+        if !self.queues.contains_key(current) {
             return Vec::new();
         }
         let aging = self.opts.aging;
@@ -578,15 +666,9 @@ impl Scheduler {
                     .unwrap_or(false)
         });
         if aged_elsewhere {
-            // count the hold once per episode, not once per forward polled
-            if !self.holding {
-                self.obs.aging_holds.inc();
-                self.holding = true;
-            }
             return Vec::new();
         }
-        self.holding = false;
-        let q = self.queues.get_mut(current).expect("checked non-empty above");
+        let q = self.queues.get_mut(current).expect("checked above");
         let n = q.len().min(free_slots);
         let reqs: Vec<Request> = q.drain(..n).collect();
         if q.is_empty() {
@@ -618,18 +700,20 @@ fn shard_of(id: &Option<String>, shards: usize) -> usize {
 /// Thread-safe front-end for the worker pool: one [`Scheduler`] shard per
 /// worker, tenants assigned to shards by stable hash, so each worker has
 /// a *home* set of tenants (keeps one tenant's traffic on one worker —
-/// full batches — instead of splitting it across replicas).
+/// better bank-slot locality — instead of splitting it across replicas).
 ///
-/// Work stealing: a worker whose home shard is dry scans the other
-/// shards, home-first order, and takes a whole same-tenant batch from
-/// the fullest-scoring queue there (`steals` counts those).  Stealing is
-/// what bounds cross-shard starvation: the per-shard fill+aging policy
-/// only sees its own tenants, so an aged tenant on a busy worker's shard
-/// is picked up by whichever worker idles first.
+/// Batches are mixed *within* a shard: each shard runs the slot-level
+/// policy over its own tenants.  A worker whose home shard is dry scans
+/// the other shards, home-first order, and takes a whole mixed batch
+/// from the first non-empty one (`steals` counts those).  Stealing is
+/// what bounds cross-shard starvation: a shard's aging bound only sees
+/// its own tenants, so an aged tenant on a busy worker's shard is picked
+/// up by whichever worker idles first.
 ///
-/// Step-level admission ([`ShardedScheduler::admit`]) locks the running
-/// tenant's home shard, so the same-shard aging hold fires exactly as in
-/// single-worker serving regardless of which worker runs the session.
+/// Step-level admission ([`ShardedScheduler::admit`]) tops freed slots
+/// up from the calling worker's home shard first, then its siblings —
+/// any tenant, any shard; the gathered artifact decodes them in one
+/// batch regardless of origin.
 pub struct ShardedScheduler {
     shards: Vec<Mutex<Scheduler>>,
     /// queued requests across all shards (fast idle check without locks)
@@ -722,17 +806,13 @@ impl ShardedScheduler {
         self.work_ready.notify_all();
     }
 
-    /// Blocking dispatch for worker `home`: pop the next same-tenant batch
-    /// under each shard's fill+aging policy, scanning the home shard
+    /// Blocking dispatch for worker `home`: pop the next mixed batch
+    /// under each shard's slot-level policy, scanning the home shard
     /// first, then stealing from siblings.  Blocks while every queue is
     /// empty but the producer is still open; `None` means shutdown (closed
     /// and drained).  `stolen` in the return is true when the batch came
     /// from a non-home shard.
-    pub fn next_work(
-        &self,
-        home: usize,
-        now: Instant,
-    ) -> Option<(Option<String>, Vec<Request>, bool)> {
+    pub fn next_work(&self, home: usize, now: Instant) -> Option<(Vec<Request>, bool)> {
         let n = self.shards.len();
         let home = home % n;
         // `now` seeds the first scan (testability); it is resampled after
@@ -752,12 +832,12 @@ impl ShardedScheduler {
                     if shed > 0 {
                         self.pending.fetch_sub(shed, Ordering::SeqCst);
                     }
-                    if let Some((id, reqs)) = batch {
+                    if let Some(reqs) = batch {
                         self.pending.fetch_sub(reqs.len(), Ordering::SeqCst);
                         if k > 0 {
                             self.steal_obs[home].inc();
                         }
-                        return Some((id, reqs, k > 0));
+                        return Some((reqs, k > 0));
                     }
                 }
                 // raced with another worker's pop; rescan
@@ -778,14 +858,56 @@ impl ShardedScheduler {
         }
     }
 
-    /// Step-level admission for a running session: top up `free_slots`
-    /// from `current`'s home shard, FIFO, under that shard's aging hold
-    /// (see [`Scheduler::admit`]).  Safe to call from any worker — the
-    /// shard is chosen by tenant, not by caller.
-    pub fn admit(&self, current: &Option<String>, now: Instant, free_slots: usize) -> Vec<Request> {
+    /// Step-level admission for worker `home`'s running session: top up
+    /// `free_slots` with waiting requests from any tenant, scanning the
+    /// home shard first, then its siblings (see [`Scheduler::admit`] —
+    /// the per-shard policy is the same mixed one `next_batch` uses).
+    /// Home-first keeps a worker mostly on its own tenants; the sibling
+    /// sweep keeps freed slots from idling while other shards queue.
+    pub fn admit(&self, home: usize, now: Instant, free_slots: usize) -> Vec<Request> {
+        let n = self.shards.len();
+        let home = home % n;
+        let mut out = Vec::new();
+        if free_slots == 0 || self.pending.load(Ordering::SeqCst) == 0 {
+            return out;
+        }
+        for k in 0..n {
+            if out.len() >= free_slots {
+                break;
+            }
+            let mut shard = lock_recover(&self.shards[(home + k) % n]);
+            let got = shard.admit(now, free_slots - out.len());
+            let shed = shard.take_shed();
+            drop(shard);
+            if shed > 0 {
+                self.pending.fetch_sub(shed, Ordering::SeqCst);
+            }
+            if !got.is_empty() {
+                self.pending.fetch_sub(got.len(), Ordering::SeqCst);
+                out.extend(got);
+            }
+        }
+        out
+    }
+
+    /// Same-tenant step-level admission for a fallback *uniform*
+    /// session (see [`Scheduler::admit_for`]).  Only the tenant's home
+    /// shard is consulted: its queue is the only place `current`'s
+    /// requests live, and the aged-elsewhere pause deliberately scopes
+    /// to that shard's tenants (siblings are drained by their own
+    /// workers / the steal path).
+    pub fn admit_for(
+        &self,
+        current: &Option<String>,
+        now: Instant,
+        free_slots: usize,
+    ) -> Vec<Request> {
+        if free_slots == 0 || self.pending.load(Ordering::SeqCst) == 0 {
+            return Vec::new();
+        }
         let shard_idx = shard_of(current, self.shards.len());
         let mut shard = lock_recover(&self.shards[shard_idx]);
-        let got = shard.admit(current, now, free_slots);
+        let got = shard.admit_for(current, now, free_slots);
         let shed = shard.take_shed();
         drop(shard);
         if shed > 0 {
@@ -843,7 +965,7 @@ mod tests {
     }
 
     #[test]
-    fn batches_share_one_adapter_and_keep_fifo_order() {
+    fn mixed_batch_interleaves_tenants_and_keeps_fifo_order() {
         let mut s = Scheduler::new(opts(8, 50));
         let mut keep = Vec::new();
         for (id, p) in [("a", "a0"), ("b", "b0"), ("a", "a1"), ("b", "b1"), ("a", "a2")] {
@@ -852,16 +974,18 @@ mod tests {
             keep.push(rx);
         }
         assert_eq!(s.pending(), 5);
-        let (id1, batch1) = s.next_batch(Instant::now()).unwrap();
-        // a is fuller, so it goes first; FIFO inside the tenant
-        assert_eq!(id1.as_deref(), Some("a"));
-        let prompts: Vec<&str> = batch1.iter().map(|r| r.prompt.as_str()).collect();
-        assert_eq!(prompts, vec!["a0", "a1", "a2"]);
-        let (id2, batch2) = s.next_batch(Instant::now()).unwrap();
-        assert_eq!(id2.as_deref(), Some("b"));
-        assert_eq!(batch2.len(), 2);
+        // one mixed batch takes everything: fullest queue first, ties
+        // broken by the older head, FIFO within each tenant
+        let batch = s.next_batch(Instant::now()).unwrap();
+        let prompts: Vec<&str> = batch.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["a0", "b0", "a1", "b1", "a2"]);
         assert!(s.next_batch(Instant::now()).is_none());
         assert!(s.is_empty());
+        let m = s.metrics();
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.mixed_batches, 1, "two tenants in one batch is mixed");
+        assert_eq!(s.obs.distinct_tenants.count(), 1, "one observation per batch");
+        assert!((s.obs.distinct_tenants.sum() - 2.0).abs() < 1e-9, "two distinct tenants");
     }
 
     #[test]
@@ -874,7 +998,7 @@ mod tests {
             keep.push(rx);
         }
         let sizes: Vec<usize> = std::iter::from_fn(|| s.next_batch(Instant::now()))
-            .map(|(_, b)| b.len())
+            .map(|b| b.len())
             .collect();
         assert_eq!(sizes, vec![2, 2, 1]);
         let m = s.metrics();
@@ -882,14 +1006,15 @@ mod tests {
         assert_eq!(m.scheduled, 5);
         assert_eq!(m.max_queue_depth, 5);
         assert!((m.avg_fill() - (1.0 + 1.0 + 0.5) / 3.0).abs() < 1e-9);
+        assert_eq!(m.mixed_batches, 0, "single-tenant batches are not mixed");
     }
 
     #[test]
-    fn aging_prevents_starvation_of_low_traffic_tenant() {
+    fn aged_request_is_admitted_first_not_starved() {
         let mut s = Scheduler::new(opts(8, 50));
         let mut keep = Vec::new();
-        // hot tenant: a full, fresh batch
-        for i in 0..8 {
+        // hot tenant: a full, fresh batch's worth plus one
+        for i in 0..9 {
             let (r, rx) = req(Some("hot"), &format!("h{i}"), Duration::ZERO);
             s.push(r);
             keep.push(rx);
@@ -898,12 +1023,17 @@ mod tests {
         let (r, rx) = req(Some("cold"), "c0", Duration::from_millis(500));
         s.push(r);
         keep.push(rx);
-        let (id, batch) = s.next_batch(Instant::now()).unwrap();
-        assert_eq!(id.as_deref(), Some("cold"), "aged request must not starve");
-        assert_eq!(batch.len(), 1);
-        assert_eq!(s.metrics().aged_batches, 1);
-        let (id2, _) = s.next_batch(Instant::now()).unwrap();
-        assert_eq!(id2.as_deref(), Some("hot"));
+        let batch = s.next_batch(Instant::now()).unwrap();
+        // the aged request leads the batch and the hot tenant fills the
+        // remaining slots — no batch-switch, no hold, no starvation
+        assert_eq!(batch[0].prompt, "c0", "aged request must go first");
+        assert_eq!(batch.len(), 8);
+        assert!(batch[1..].iter().all(|r| r.adapter_id.as_deref() == Some("hot")));
+        let m = s.metrics();
+        assert_eq!(m.aged_batches, 1, "aging promoted past a fuller queue");
+        assert_eq!(m.mixed_batches, 1);
+        let batch2 = s.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch2.len(), 2, "leftover hot requests drain next");
     }
 
     #[test]
@@ -918,13 +1048,16 @@ mod tests {
         let (r, rx) = req(Some("small"), "s0", Duration::ZERO);
         s.push(r);
         keep.push(rx);
-        let (id, _) = s.next_batch(Instant::now()).unwrap();
-        assert_eq!(id.as_deref(), Some("big"));
+        let batch = s.next_batch(Instant::now()).unwrap();
+        // the fuller queue leads; the straggler still rides along in the
+        // same mixed batch (slots are free) — but never ahead of "big"
+        let prompts: Vec<&str> = batch.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["b0", "b1", "b2", "b3", "s0"]);
         assert_eq!(s.metrics().aged_batches, 0);
     }
 
     #[test]
-    fn admit_refills_from_current_tenant_fifo() {
+    fn admit_refills_fifo_and_counts_separately() {
         let mut s = Scheduler::new(opts(8, 50));
         let mut keep = Vec::new();
         for p in ["a0", "a1", "a2"] {
@@ -932,38 +1065,38 @@ mod tests {
             s.push(r);
             keep.push(rx);
         }
-        let current = Some("a".to_string());
         // zero free slots admits nothing
-        assert!(s.admit(&current, Instant::now(), 0).is_empty());
-        let got = s.admit(&current, Instant::now(), 2);
+        assert!(s.admit(Instant::now(), 0).is_empty());
+        let got = s.admit(Instant::now(), 2);
         let prompts: Vec<&str> = got.iter().map(|r| r.prompt.as_str()).collect();
         assert_eq!(prompts, vec!["a0", "a1"]);
         assert_eq!(s.pending(), 1);
         // draining the queue removes it
-        let got = s.admit(&current, Instant::now(), 4);
+        let got = s.admit(Instant::now(), 4);
         assert_eq!(got.len(), 1);
         assert!(s.is_empty());
-        assert!(s.admit(&current, Instant::now(), 4).is_empty());
+        assert!(s.admit(Instant::now(), 4).is_empty());
         let m = s.metrics();
         assert_eq!(m.admitted, 3);
         assert_eq!(m.scheduled, 3);
         assert_eq!(m.batches, 0, "admit must not count as a new batch");
+        assert_eq!(s.obs.distinct_tenants.count(), 0, "histogram counts batches only");
     }
 
     #[test]
-    fn admit_never_crosses_tenants_and_holds_for_aged_queues() {
+    fn admit_crosses_tenants_and_takes_aged_requests_first() {
         let mut s = Scheduler::new(opts(8, 50));
         let mut keep = Vec::new();
+        // a running batch's freed slot takes whatever tenant is waiting —
+        // cross-tenant admission is the point of the gathered path
         let (r, rx) = req(Some("other"), "o0", Duration::ZERO);
         s.push(r);
         keep.push(rx);
-        // current tenant has no queue: nothing is admitted (and the other
-        // tenant's request is NOT leaked into the running batch)
-        let current = Some("a".to_string());
-        assert!(s.admit(&current, Instant::now(), 8).is_empty());
-        assert_eq!(s.pending(), 1);
-        // current tenant queued, but another tenant aged out: admission is
-        // held so the running batch drains and the device switches
+        let got = s.admit(Instant::now(), 8);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].prompt, "o0", "any tenant fills a free slot");
+        // an aged request is admitted ahead of a fuller fresh queue —
+        // straight into the running batch, with no hold
         for p in ["a0", "a1"] {
             let (r, rx) = req(Some("a"), p, Duration::ZERO);
             s.push(r);
@@ -972,16 +1105,42 @@ mod tests {
         let (r, rx) = req(Some("cold"), "c0", Duration::from_millis(500));
         s.push(r);
         keep.push(rx);
-        assert!(s.admit(&current, Instant::now(), 8).is_empty());
-        // polled every forward while the hold persists: still one event
-        assert!(s.admit(&current, Instant::now(), 8).is_empty());
-        assert!(s.admit(&current, Instant::now(), 8).is_empty());
-        assert_eq!(s.metrics().aging_holds, 1, "one sustained hold is one event");
-        // the aged tenant wins the next batch
-        let (id, _) = s.next_batch(Instant::now()).unwrap();
-        assert_eq!(id.as_deref(), Some("cold"));
-        // with the aged request served, admission flows again
-        assert_eq!(s.admit(&current, Instant::now(), 8).len(), 2);
+        let got = s.admit(Instant::now(), 8);
+        let prompts: Vec<&str> = got.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["c0", "a0", "a1"]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn admit_for_stays_on_tenant_and_pauses_for_aged_siblings() {
+        let mut s = Scheduler::new(opts(8, 50));
+        let mut keep = Vec::new();
+        for p in ["a0", "a1"] {
+            let (r, rx) = req(Some("a"), p, Duration::ZERO);
+            s.push(r);
+            keep.push(rx);
+        }
+        let (r, rx) = req(Some("b"), "b0", Duration::ZERO);
+        s.push(r);
+        keep.push(rx);
+        // a uniform session on tenant "a" only ever refills from "a"
+        let got = s.admit_for(&Some("a".into()), Instant::now(), 8);
+        let prompts: Vec<&str> = got.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["a0", "a1"], "same-tenant FIFO only");
+        assert_eq!(s.pending(), 1, "the other tenant stays queued");
+        // once another tenant's head has aged past the bound, admission
+        // pauses even though the session's own tenant has work waiting
+        let (r, rx) = req(Some("a"), "a2", Duration::ZERO);
+        s.push(r);
+        keep.push(rx);
+        let (r, rx) = req(Some("c"), "c0", Duration::from_millis(500));
+        s.push(r);
+        keep.push(rx);
+        assert!(
+            s.admit_for(&Some("a".into()), Instant::now(), 8).is_empty(),
+            "aged sibling pauses uniform refill"
+        );
+        assert_eq!(s.pending(), 3);
     }
 
     #[test]
@@ -995,9 +1154,9 @@ mod tests {
         s.push(r);
         assert_eq!(s.pending(), 1);
         // the home worker pops it without stealing
-        let (id, batch, stolen) = s.next_work(home, Instant::now()).unwrap();
-        assert_eq!(id, a);
+        let (batch, stolen) = s.next_work(home, Instant::now()).unwrap();
         assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].adapter_id, a);
         assert!(!stolen);
         assert_eq!(s.steals(), 0);
         assert_eq!(s.pending(), 0);
@@ -1016,40 +1175,44 @@ mod tests {
             keep.push(k);
         }
         // a non-home worker finds the batch by scanning past its own shard
-        let (id, batch, stolen) = s.next_work(thief, Instant::now()).unwrap();
-        assert_eq!(id, a);
-        assert_eq!(batch.len(), 2, "steals take the whole same-tenant batch");
+        let (batch, stolen) = s.next_work(thief, Instant::now()).unwrap();
+        assert_eq!(batch.len(), 2, "steals take the whole batch");
+        assert!(batch.iter().all(|r| r.adapter_id == a));
         assert!(stolen);
         assert_eq!(s.steals(), 1);
     }
 
     #[test]
-    fn sharded_admit_targets_home_shard_and_holds_for_aged_tenants() {
-        // regardless of which worker runs the session, admit() must hit
-        // the tenant's home shard and respect its aging hold
+    fn sharded_admit_scans_home_shard_first_then_siblings() {
         let s = ShardedScheduler::new(2, opts(8, 50));
-        let current = Some("tenant-a".to_string());
+        let a = Some("tenant-a".to_string());
+        let home = s.shard_of(&a);
         let mut keep = Vec::new();
         for p in ["a0", "a1"] {
             let (r, k) = req(Some("tenant-a"), p, Duration::ZERO);
             s.push(r);
             keep.push(k);
         }
-        assert_eq!(s.admit(&current, Instant::now(), 1).len(), 1);
-        // an aged tenant on the SAME shard halts further admission; use a
-        // same-shard sibling so the hold is observable
-        let sibling = (0..1000)
-            .map(|i| format!("cold{i}"))
-            .find(|c| shard_of(&Some(c.clone()), 2) == s.shard_of(&current))
-            .expect("some id lands on the same shard");
-        let (r, k) = req(Some(sibling.as_str()), "c0", Duration::from_millis(500));
+        // a tenant whose queue lives on the OTHER shard
+        let other = (0..1000)
+            .map(|i| format!("other{i}"))
+            .find(|c| shard_of(&Some(c.clone()), 2) != home)
+            .expect("some id lands on the other shard");
+        let (r, k) = req(Some(other.as_str()), "o0", Duration::ZERO);
         s.push(r);
         keep.push(k);
-        assert!(s.admit(&current, Instant::now(), 8).is_empty());
-        assert_eq!(s.metrics().aging_holds, 1);
-        // the aged tenant wins the next dispatch on that shard
-        let (id, _, _) = s.next_work(s.shard_of(&current), Instant::now()).unwrap();
-        assert_eq!(id.as_deref(), Some(sibling.as_str()));
+        assert_eq!(s.pending(), 3);
+        // one free slot: the home shard's head wins
+        let got = s.admit(home, Instant::now(), 1);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].prompt, "a0");
+        // plenty of slots: home drains first, then the sibling shard's
+        // tenant tops the batch up — cross-shard, cross-tenant admission
+        let got = s.admit(home, Instant::now(), 8);
+        let prompts: Vec<&str> = got.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["a1", "o0"]);
+        assert_eq!(s.pending(), 0);
+        assert!(s.admit(home, Instant::now(), 8).is_empty());
     }
 
     #[test]
@@ -1067,7 +1230,7 @@ mod tests {
                 let s = s.clone();
                 let served = served.clone();
                 scope.spawn(move || {
-                    while let Some((_, batch, _)) = s.next_work(w, Instant::now()) {
+                    while let Some((batch, _)) = s.next_work(w, Instant::now()) {
                         let mut got = served.lock().unwrap();
                         for r in batch {
                             got.push(r.prompt.clone());
@@ -1152,10 +1315,25 @@ mod tests {
         assert_eq!(snap.sum("sched_scheduled_total") as usize, m.scheduled);
         assert_eq!(snap.gauge_peak_max("sched_queue_depth") as usize, m.max_queue_depth);
         assert_eq!(snap.sum("sched_steals_total") as usize, s.steals());
+        assert_eq!(snap.sum("sched_mixed_batches_total") as usize, m.mixed_batches);
+        // the distinct-tenants histogram sees exactly one observation per
+        // dispatched batch, across every shard
+        let hist_count: u64 = snap
+            .samples
+            .iter()
+            .filter(|sm| sm.name == "sched_batch_distinct_tenants")
+            .map(|sm| match &sm.value {
+                crate::obs::Value::Histogram { count, .. } => *count,
+                _ => panic!("expected a histogram"),
+            })
+            .sum();
+        assert_eq!(hist_count as usize, m.batches);
     }
 
     #[test]
-    fn merged_path_is_its_own_queue() {
+    fn merged_path_mixes_with_adapted_tenants() {
+        // the no-adapter queue rides on the identity bank slot, so it
+        // batches together with adapted tenants like any other queue
         let mut s = Scheduler::new(opts(4, 50));
         let (r1, _k1) = req(None, "m0", Duration::ZERO);
         let (r2, _k2) = req(Some("a"), "a0", Duration::ZERO);
@@ -1163,11 +1341,10 @@ mod tests {
         s.push(r1);
         s.push(r2);
         s.push(r3);
-        let (id, batch) = s.next_batch(Instant::now()).unwrap();
-        assert_eq!(id, None);
-        assert_eq!(batch.len(), 2);
-        let (id2, _) = s.next_batch(Instant::now()).unwrap();
-        assert_eq!(id2.as_deref(), Some("a"));
+        let batch = s.next_batch(Instant::now()).unwrap();
+        let prompts: Vec<&str> = batch.iter().map(|r| r.prompt.as_str()).collect();
+        assert_eq!(prompts, vec!["m0", "a0", "m1"]);
+        assert_eq!(s.metrics().mixed_batches, 1);
     }
 
     fn kind_of(rx: &std::sync::mpsc::Receiver<Result<String>>) -> &'static str {
@@ -1242,7 +1419,7 @@ mod tests {
         // dispatch with a clock past the deadline: the doomed request is
         // shed before batching, the undeadlined one is served
         let later = Instant::now() + Duration::from_millis(50);
-        let (_, batch) = s.next_batch(later).unwrap();
+        let batch = s.next_batch(later).unwrap();
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].prompt, "fine");
         assert_eq!(kind_of(&rx), "deadline_exceeded");
@@ -1266,7 +1443,7 @@ mod tests {
         rq.attempts = 1;
         assert!(s.requeue(rq));
         assert_eq!(s.pending(), 3);
-        let (_, batch) = s.next_batch(Instant::now()).unwrap();
+        let batch = s.next_batch(Instant::now()).unwrap();
         assert_eq!(batch[0].prompt, "survivor");
         assert_eq!(batch[0].attempts, 1);
         assert_eq!(batch[1].prompt, "first");
@@ -1300,7 +1477,7 @@ mod tests {
         rq.attempts = 2;
         assert!(s.requeue(rq));
         assert_eq!(s.pending(), 2);
-        let (_, batch, _) = s.next_work(0, Instant::now()).unwrap();
+        let (batch, _) = s.next_work(0, Instant::now()).unwrap();
         assert_eq!(batch[0].prompt, "recovered");
     }
 

@@ -41,6 +41,7 @@ fn random_tokens(hyper: &ModelHyper, rng: &mut Rng) -> sqft::data::Batch {
         tokens: (0..n).map(|_| rng.below(hyper.vocab) as i32).collect(),
         targets: vec![0; n],
         loss_mask: vec![0.0; n],
+        adapter_idx: Vec::new(),
         batch: hyper.batch,
         seq: hyper.seq_len,
         real: hyper.batch,

@@ -1,0 +1,207 @@
+//! Mixed-tenant gathered-decode integration (ISSUE 8 acceptance).
+//!
+//! What must hold:
+//!   - a long-tail workload of 8 tenants x 1 request each decodes in ONE
+//!     mixed session over the gathered banks: a single dispatched batch,
+//!     `decode_steps` == the per-request length, and slot occupancy ~= 8
+//!     of 8 — not 8 sequential single-row sessions;
+//!   - every answer is byte-identical to the same-tenant baseline (each
+//!     tenant decoded alone through the uniform host-upload path);
+//!   - an interleaved 4-tenant workload with mixed lengths also matches
+//!     the per-tenant reference answer-for-answer, with per-tenant FIFO
+//!     order preserved and freed slots re-filled across tenants;
+//!   - the mixed-batch counters fire (`sched_mixed_batches_total`).
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::{init_base, ParamSet};
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::serve::{AdapterEntry, AdapterRegistry, Engine, Request, Router, SchedulerOpts};
+use sqft::tensor::Rng;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+/// (tenant index, prompt, per-request max_new, per-request min_new)
+type Spec = (usize, String, Option<usize>, usize);
+
+struct Fixture {
+    hyper: sqft::runtime::ModelHyper,
+    frozen: ParamSet,
+    entries: Vec<AdapterEntry>,
+}
+
+fn fixture(rt: &Runtime, tenants: usize) -> Fixture {
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 221);
+    let base = init_base(&hyper, &mut Rng::new(223));
+    let prepared = pipeline::prepare(rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(224)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let entries = pipeline::tenant_adapters(rt, config, &prepared, tenants,
+                                            &ds.train, &tok, 2, 700).unwrap();
+    Fixture { hyper, frozen, entries }
+}
+
+/// Same-tenant baseline: each tenant's requests decoded alone through the
+/// uniform host-upload path (adapter host sets re-uploaded per forward —
+/// the reference the gathered kernel must reproduce byte-for-byte).
+fn uniform_reference(engine: &Engine, entries: &[AdapterEntry], specs: &[Spec]) -> Vec<String> {
+    let cap = engine.artifact_batch().unwrap();
+    let mut answers = vec![String::new(); specs.len()];
+    for (t, entry) in entries.iter().enumerate() {
+        let mine: Vec<(usize, &Spec)> =
+            specs.iter().enumerate().filter(|(_, s)| s.0 == t).collect();
+        let sets: Vec<&ParamSet> = entry.host_sets.iter().collect();
+        for chunk in mine.chunks(cap) {
+            let mut s = engine.begin_decode().unwrap();
+            let mut slot_to_req = Vec::new();
+            for (i, (_, prompt, max_new, min_new)) in chunk {
+                engine.admit(&mut s, prompt, *max_new, *min_new).unwrap();
+                slot_to_req.push(*i);
+            }
+            while s.active_slots() > 0 {
+                for (slot, ans) in
+                    engine.decode_step(&mut s, None, &sets, &entry.eval_kind).unwrap()
+                {
+                    answers[slot_to_req[slot]] = ans;
+                }
+            }
+        }
+    }
+    answers
+}
+
+/// Queue every spec up front (tagged with its tenant), serve through the
+/// router, and return (per-request answers, stats).
+fn serve_specs(
+    engine: Engine,
+    registry: AdapterRegistry,
+    entries: &[AdapterEntry],
+    specs: &[Spec],
+    max_batch: usize,
+) -> (Vec<String>, sqft::serve::MultiServeStats) {
+    let mut router = Router::new(engine, registry);
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    for (t, prompt, max_new, min_new) in specs {
+        let (rtx, rrx) = channel();
+        let mut req = Request::new(Some(entries[*t].id.clone()), prompt.clone(), rtx);
+        req.max_new_tokens = *max_new;
+        req.min_new_tokens = *min_new;
+        tx.send(req).unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let opts = SchedulerOpts {
+        max_batch,
+        aging: Duration::from_millis(20),
+        ..Default::default()
+    };
+    let stats = router.serve(rx, opts).unwrap();
+    let answers: Vec<String> =
+        replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+    (answers, stats)
+}
+
+#[test]
+fn eight_tenant_long_tail_decodes_in_one_mixed_session() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt, 8);
+    let new_tokens = 3usize;
+    let engine = Engine::new(&rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+    if !engine.supports_gathered() {
+        eprintln!("skipping: artifacts lack the eval_gathered kind");
+        return;
+    }
+    let b = engine.artifact_batch().unwrap();
+    assert_eq!(b, 8, "the long-tail acceptance shape needs an 8-slot artifact");
+
+    // the S-LoRA long tail: 8 tenants, one request each, equal length
+    // (min == max pins every row to exactly `new_tokens` forwards)
+    let task = Task::SynBoolq;
+    let mut grng = Rng::new(229);
+    let specs: Vec<Spec> = (0..8)
+        .map(|t| (t, task.gen_sample(&mut grng).prompt, Some(new_tokens), new_tokens))
+        .collect();
+    let expected = uniform_reference(&engine, &f.entries, &specs);
+
+    let mut registry = AdapterRegistry::new(8);
+    for e in &f.entries {
+        registry.register_resident(&rt, &f.hyper, e.clone()).unwrap();
+    }
+    let (answers, stats) = serve_specs(engine, registry, &f.entries, &specs, b);
+
+    // byte-identical to the same-tenant baseline, tenant by tenant
+    for (i, ans) in answers.iter().enumerate() {
+        assert_eq!(ans, &expected[i], "tenant {} diverged from its baseline", specs[i].0);
+    }
+    assert_eq!(stats.total.served, 8);
+    assert_eq!(stats.total.errors, 0);
+
+    // ONE mixed session served all 8 tenants: a single dispatched batch,
+    // exactly `new_tokens` forwards total (not 8 x new_tokens), and all
+    // 8 slots occupied on every forward
+    assert_eq!(stats.scheduler.batches, 1, "one dispatch must cover all 8 tenants");
+    assert_eq!(stats.scheduler.mixed_batches, 1);
+    assert_eq!(stats.decode_steps, new_tokens,
+        "8 tenants must share every forward, not decode sequentially");
+    let occupied = stats.occupancy * b as f64;
+    assert!(occupied > 7.9,
+        "mean occupied slots {occupied:.2} must be ~8 of 8 on the long tail");
+}
+
+#[test]
+fn interleaved_four_tenant_workload_matches_per_tenant_reference() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt, 4);
+    let engine = Engine::new(&rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+    if !engine.supports_gathered() {
+        eprintln!("skipping: artifacts lack the eval_gathered kind");
+        return;
+    }
+    let b = engine.artifact_batch().unwrap();
+
+    // 3 interleaved rounds over 4 tenants with mixed lengths, so the
+    // second wave can only ride slots freed mid-session — across tenants
+    let task = Task::SynBoolq;
+    let mut grng = Rng::new(233);
+    let lens: [(Option<usize>, usize); 3] = [(Some(1), 0), (Some(4), 4), (Some(2), 1)];
+    let mut specs: Vec<Spec> = Vec::new();
+    for (max_new, min_new) in lens {
+        for t in 0..4 {
+            specs.push((t, task.gen_sample(&mut grng).prompt, max_new, min_new));
+        }
+    }
+    let expected = uniform_reference(&engine, &f.entries, &specs);
+
+    let mut registry = AdapterRegistry::new(4);
+    for e in &f.entries {
+        registry.register_resident(&rt, &f.hyper, e.clone()).unwrap();
+    }
+    let (answers, stats) = serve_specs(engine, registry, &f.entries, &specs, b);
+
+    for (i, ans) in answers.iter().enumerate() {
+        assert_eq!(ans, &expected[i],
+            "request {i} (tenant {}) diverged from the per-tenant reference", specs[i].0);
+    }
+    assert_eq!(stats.total.served, specs.len());
+    assert_eq!(stats.total.errors, 0);
+    assert!(stats.scheduler.mixed_batches >= 1, "batches must span tenants");
+    assert!(stats.scheduler.admitted >= specs.len() - b,
+        "the overflow wave must be admitted into the running session");
+}

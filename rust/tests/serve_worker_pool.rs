@@ -5,10 +5,10 @@
 //!     the same artifacts and rows decode independently, so worker
 //!     count, batch composition, and steal schedule may change only the
 //!     timing, never the bytes;
-//!   - no tenant starves under concurrent admission, and the per-shard
-//!     aging policy still holds admission for aged same-shard tenants
-//!     (`aging_holds` fires when one tenant's long decode would
-//!     otherwise monopolize its home worker);
+//!   - no tenant starves under concurrent admission: mixed batches span
+//!     tenants inside one gathered session, and the uniform fallback
+//!     pauses same-tenant refill whenever an aged sibling queue is
+//!     waiting, so no long decode monopolizes its home worker;
 //!   - the merged / no-adapter path and unknown-tenant errors behave as
 //!     in single-worker serving.
 
