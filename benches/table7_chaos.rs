@@ -83,6 +83,8 @@ fn main() -> anyhow::Result<()> {
         eval_kind: "eval".to_string(),
         max_new_tokens: 4,
         registry_capacity: tenants,
+        device_budget: 0,
+        degrade_ranks: Vec::new(),
     };
 
     let n_requests = if sqft::util::bench::smoke() { 18usize } else { 48 };

@@ -143,6 +143,8 @@ fn main() -> anyhow::Result<()> {
         eval_kind: "eval".to_string(),
         max_new_tokens: 4,
         registry_capacity: max_tenants,
+        device_budget: 0,
+        degrade_ranks: Vec::new(),
     };
     let n_scale = if sqft::util::bench::smoke() { 16usize } else { 96 };
     let mut grng = Rng::new(31);

@@ -1,0 +1,256 @@
+//! Tiered-residency bench (`BENCH_cold_start.json`): what the host tier
+//! buys on the promotion path, and the degradation ladder under a tight
+//! device budget.
+//!
+//! Two legs:
+//!
+//!   1. **Cold-start latency** — p50/p99 of making one tenant
+//!      device-serveable, starting from the disk tier (catalog →
+//!      `prefetch_host` → `ensure_device`: file read, integrity check,
+//!      validation, upload) vs the host tier (`demote_device` →
+//!      `ensure_device`: upload only).  The host tier exists so device
+//!      eviction does not send re-promotion back to disk, so host must
+//!      beat disk on p99.
+//!   2. **Degradation smoke** — a 3-tenant pool under a device budget
+//!      that cannot hold everyone at full rank (`degrade_ranks 4,2`):
+//!      every request must still be answered and
+//!      `registry_degraded_total` must move.
+//!
+//! `SQFT_BENCH_SMOKE=1` shrinks iteration counts (CI smoke);
+//! `-- --metrics-out PATH` writes the degradation run's metrics
+//! snapshot — what the CI degradation-smoke job greps for the
+//! `registry_degraded_total` sentinel.
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::model::checkpoint::save_adapter;
+use sqft::model::init_base;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::report::Table;
+use sqft::runtime::Runtime;
+use sqft::serve::{
+    serve_pool_obs, AdapterRegistry, EngineSpec, PoolOpts, Request, SchedulerOpts, ServeObs,
+    SharedAdapterSource,
+};
+use sqft::tensor::Rng;
+use sqft::util::json::Json;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+fn cli_metrics_out() -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter().position(|a| a == "--metrics-out").and_then(|i| argv.get(i + 1)).cloned()
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn leg_stats(mut ms: Vec<f64>) -> (f64, f64, f64) {
+    ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = ms.iter().sum::<f64>() / ms.len() as f64;
+    (percentile(&ms, 0.5), percentile(&ms, 0.99), mean)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let config = "sqft-tiny";
+    let hyper = rt.model(config)?.clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 600, 0, 50, 7);
+    let base = init_base(&hyper, &mut Rng::new(7));
+
+    println!("# table7 tiering bench: cold-start latency by residency tier");
+    let tenant_steps = sqft::util::bench::smoke_iters(5);
+    let prepared = pipeline::prepare(&rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 2, &mut Rng::new(9))?;
+    let frozen = prepared.frozen_set()?;
+    let tenants = 3usize;
+    let entries = pipeline::tenant_adapters(&rt, config, &prepared, tenants,
+                                            &ds.train, &tok, tenant_steps, 77)?;
+
+    // disk tier fixture: each tenant's checkpoint under a temp catalog dir
+    let ckpt_dir = std::env::temp_dir().join("sqft_bench_tiering");
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    std::fs::create_dir_all(&ckpt_dir)?;
+    let mut paths = Vec::new();
+    for e in &entries {
+        let path = ckpt_dir.join(format!("{}.ckpt", e.id));
+        save_adapter(&path, &e.host_sets[0], &e.host_sets[1], config, &e.eval_kind,
+                     &e.id, "lora", 0.0)?;
+        paths.push((e.id.clone(), path));
+    }
+
+    // one observability context spans every leg, so the final snapshot
+    // carries the quarantine + degradation sentinels CI greps for
+    let obs = ServeObs::with_trace();
+    let kept = obs.clone();
+
+    // --- leg 1: cold-start latency, disk vs host -----------------------
+    let iters = if sqft::util::bench::smoke() { 12usize } else { 40 };
+    let subject = entries[0].id.clone();
+    let mut reg = AdapterRegistry::new(tenants + 1);
+    reg.bind_obs(kept.registry(), 0);
+    for (id, path) in &paths {
+        reg.catalog_disk(id, path.clone());
+    }
+    let mut disk_ms = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        reg.evict(&subject); // back to the disk tier: host copy dropped
+        let t0 = Instant::now();
+        reg.prefetch_host(&hyper, &subject)?;
+        reg.ensure_device(&rt, &subject)?;
+        disk_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert!(reg.device_set(&subject).is_some());
+    }
+    let mut host_ms = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        assert!(reg.demote_device(&subject)); // host copy survives
+        let t0 = Instant::now();
+        reg.ensure_device(&rt, &subject)?;
+        host_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert!(reg.device_set(&subject).is_some());
+    }
+    let (disk_p50, disk_p99, disk_mean) = leg_stats(disk_ms);
+    let (host_p50, host_p99, host_mean) = leg_stats(host_ms);
+    let mut table = Table::new(
+        "Cold-start latency by starting tier (one tenant, ms)",
+        &["tier", "p50", "p99", "mean", "iters"],
+    );
+    table.row(vec!["disk".into(), format!("{disk_p50:.3}"), format!("{disk_p99:.3}"),
+                   format!("{disk_mean:.3}"), iters.to_string()]);
+    table.row(vec!["host".into(), format!("{host_p50:.3}"), format!("{host_p99:.3}"),
+                   format!("{host_mean:.3}"), iters.to_string()]);
+    print!("{}", table.render());
+    assert!(
+        host_p99 < disk_p99,
+        "host re-promotion (p99 {host_p99:.3} ms) must beat disk re-registration \
+(p99 {disk_p99:.3} ms) — the host tier is pure upload, disk adds read+verify+validate"
+    );
+
+    // --- leg 2: corrupt checkpoint quarantines exactly one tenant -------
+    // a bit-flipped copy of tenant0's checkpoint, cataloged as a fourth
+    // tenant: the integrity check must refuse it at prefetch, quarantine
+    // it, and leave every intact sibling untouched
+    let torn_path = ckpt_dir.join("torn.ckpt");
+    let mut torn_bytes = std::fs::read(&paths[0].1)?;
+    let n = torn_bytes.len();
+    torn_bytes[n - 8] ^= 0x10;
+    std::fs::write(&torn_path, &torn_bytes)?;
+    reg.catalog_disk("torn", torn_path);
+    assert!(reg.prefetch_host(&hyper, "torn").is_err(),
+        "corrupt checkpoint must refuse to load");
+    assert!(reg.is_quarantined("torn"));
+    for (id, _) in &paths {
+        assert!(!reg.is_quarantined(id), "quarantine must not spread to '{id}'");
+    }
+    println!("quarantine: 1 torn checkpoint -> 1 tenant refused, {} intact", paths.len());
+
+    // --- leg 3: degradation smoke under a tight budget ------------------
+    let full = AdapterRegistry::entry_logical_bytes(&entries[0], None);
+    let at4 = AdapterRegistry::entry_logical_bytes(&entries[0], Some(4));
+    let budget = (2 * full).max(tenants * at4);
+    let source = SharedAdapterSource::new(hyper.clone(), tenants);
+    source.register_all(entries.clone())?;
+    let spec = EngineSpec {
+        artifacts: dir.clone(),
+        config: config.to_string(),
+        frozen: frozen.clone(),
+        eval_kind: "eval".to_string(),
+        max_new_tokens: 4,
+        registry_capacity: tenants,
+        device_budget: budget,
+        degrade_ranks: vec![4, 2],
+    };
+    let n_requests = if sqft::util::bench::smoke() { 12usize } else { 30 };
+    let mut grng = Rng::new(131);
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    for i in 0..n_requests {
+        let (rtx, rrx) = channel();
+        let id = Some(entries[i % tenants].id.clone());
+        let _ = tx.send(Request::new(id, task.gen_sample(&mut grng).prompt, rtx));
+        replies.push(rrx);
+    }
+    drop(tx);
+    let stats = serve_pool_obs(
+        &spec,
+        &source,
+        rx,
+        PoolOpts {
+            workers: 1,
+            sched: SchedulerOpts { max_batch: hyper.batch,
+                                   aging: Duration::from_millis(20),
+                                   ..Default::default() },
+            ..Default::default()
+        },
+        obs,
+    )?;
+    let served = replies.iter().filter(|r| matches!(r.recv(), Ok(Ok(_)))).count();
+    assert_eq!(served, n_requests, "a tight budget must degrade, never refuse");
+    assert_eq!(stats.serve.total.errors, 0);
+    let snap = kept.registry().snapshot();
+    let degraded = snap.sum("registry_degraded_total");
+    let restored = snap.sum("registry_restored_total");
+    let quarantined = snap.sum("registry_quarantined_total");
+    assert!(
+        degraded >= 1.0,
+        "budget {budget} cannot hold {tenants} tenants at full rank ({full} B each); \
+registry_degraded_total must move"
+    );
+    assert!(quarantined >= 1.0, "the torn-checkpoint leg must be counted");
+    println!(
+        "degradation: budget {budget} B, {served}/{n_requests} served, \
+{degraded:.0} degrades, {restored:.0} restores, {quarantined:.0} quarantines"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("cold_start".into())),
+        ("config", Json::Str(config.into())),
+        ("tenants", Json::Num(tenants as f64)),
+        ("iters", Json::Num(iters as f64)),
+        ("smoke", Json::Num(sqft::util::bench::smoke() as u8 as f64)),
+        ("disk", Json::obj(vec![
+            ("p50_ms", Json::Num(disk_p50)),
+            ("p99_ms", Json::Num(disk_p99)),
+            ("mean_ms", Json::Num(disk_mean)),
+        ])),
+        ("host", Json::obj(vec![
+            ("p50_ms", Json::Num(host_p50)),
+            ("p99_ms", Json::Num(host_p99)),
+            ("mean_ms", Json::Num(host_mean)),
+        ])),
+        ("host_speedup_p99", Json::Num(disk_p99 / host_p99.max(1e-9))),
+        ("degradation", Json::obj(vec![
+            ("device_budget_bytes", Json::Num(budget as f64)),
+            ("full_rank_bytes", Json::Num(full as f64)),
+            ("rank4_bytes", Json::Num(at4 as f64)),
+            ("requests", Json::Num(n_requests as f64)),
+            ("served", Json::Num(served as f64)),
+            ("degraded_total", Json::Num(degraded)),
+            ("restored_total", Json::Num(restored)),
+            ("quarantined_total", Json::Num(quarantined)),
+        ])),
+    ]);
+    std::fs::write("BENCH_cold_start.json", report.to_string_pretty())?;
+    println!("wrote BENCH_cold_start.json");
+
+    if let Some(path) = cli_metrics_out() {
+        let trace = kept.trace().map(|t| t.as_ref());
+        sqft::obs::expose::write_files(kept.registry(), trace, Path::new(&path))?;
+        println!("wrote metrics snapshot to {path} (+ .json, .trace.jsonl)");
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    Ok(())
+}

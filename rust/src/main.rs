@@ -52,6 +52,8 @@ fn usage() -> &'static str {
                     [--merged-ckpt CKPT] [--max-new-tokens N]\n\
                     [--registry-cap K] [--aging-ms MS] [--merged]\n\
                     [--deadline-ms MS] [--queue-cap N] [--max-retries N]\n\
+                    [--host-tier-cap K] [--device-budget-kb N]\n\
+                    [--degrade-ranks R1,R2,...]\n\
                     [--metrics-out PATH [--metrics-interval-ms N]]\n\
      \n\
      serve: one engine holds the frozen base device-resident; requests are\n\
@@ -79,7 +81,16 @@ fn usage() -> &'static str {
      SQFT_FAULTS=\"site=rate[:error|panic|delay<ms>],...\" with\n\
      SQFT_FAULT_SEED=N injects deterministic faults (sites:\n\
      engine.forward, engine.slow_forward, runtime.upload,\n\
-     pool.worker_panic, registry.register).\n"
+     pool.worker_panic, registry.register).\n\
+     Tiered residency: --host-tier-cap K keeps up to K validated tenant\n\
+     copies host-resident (default --registry-cap) so re-promotion skips\n\
+     the disk re-read; --device-budget-kb N bounds device-resident\n\
+     adapter bytes per worker (0 = unbounded) and --degrade-ranks\n\
+     R1,R2,... is the elastic ladder tried, highest first, when a tenant\n\
+     does not fit at full rank — degraded tenants keep serving and are\n\
+     restored when pressure drops.  A corrupt adapter checkpoint in\n\
+     --adapters quarantines that tenant (typed tenant_unavailable\n\
+     replies); siblings serve normally.\n"
 }
 
 fn run(argv: &[String]) -> Result<()> {
@@ -452,6 +463,20 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
     let n_tenants = args.get_usize("tenants", 3)?;
     let tenant_steps = args.get_usize("tenant-steps", 30)?;
     let registry_cap = args.get_usize("registry-cap", 8)?;
+    let host_tier_cap = args.get_usize("host-tier-cap", registry_cap)?;
+    let device_budget = args.get_usize("device-budget-kb", 0)?.saturating_mul(1024);
+    let degrade_ranks: Vec<usize> = match args.get("degrade-ranks") {
+        Some(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(|x| {
+                x.parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("--degrade-ranks: bad rank '{x}': {e}"))
+            })
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
     let seed = args.get_u64("seed", 7)?;
     // a packed-INT4 merged checkpoint serves through its own engine: no
     // base prep, no adapters — the model is already in final form
@@ -467,8 +492,23 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
     // when serving exported adapters, the base must be prepared exactly
     // like the export run prepared it (method + sparsity from the
     // checkpoint metadata; same --ckpt/--task/--seed as the export)
+    // fault-tolerant load: a corrupt/mismatched checkpoint quarantines
+    // that one tenant (typed tenant_unavailable replies) while its
+    // siblings load and serve normally
+    let mut quarantined: Vec<(String, String)> = Vec::new();
     let ckpts = match args.get("adapters") {
-        Some(dir) => sqft::serve::load_adapter_dir(Path::new(dir), &config)?,
+        Some(dir) => {
+            let (good, bad) =
+                sqft::serve::load_adapter_dir_tolerant(Path::new(dir), &config)?;
+            for (id, path, reason) in bad {
+                eprintln!(
+                    "quarantining adapter '{id}' ({}): {reason}",
+                    path.display()
+                );
+                quarantined.push((id, reason));
+            }
+            good
+        }
         None => Vec::new(),
     };
     let (method, sparsity) = match ckpts.first() {
@@ -536,13 +576,18 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
         let source = sqft::serve::SharedAdapterSource::new(hyper.clone(), registry_cap);
         source.register_all(entries)
             .context("registering tenants (see --registry-cap / --adapter-id)")?;
+        for (id, reason) in &quarantined {
+            source.quarantine(id, reason.clone());
+        }
         let spec = sqft::serve::EngineSpec {
             artifacts: artifacts.to_path_buf(),
             config: config.clone(),
             frozen,
             eval_kind: "eval".to_string(),
             max_new_tokens,
-            registry_capacity: registry_cap,
+            registry_capacity: registry_cap.max(host_tier_cap),
+            device_budget,
+            degrade_ranks: degrade_ranks.clone(),
         };
         let popts = sqft::serve::PoolOpts {
             workers,
@@ -566,9 +611,15 @@ fn cmd_serve(artifacts: &Path, args: &Args) -> Result<()> {
     } else {
         let engine = sqft::serve::Engine::new(&rt, &config, &frozen, None, "eval",
                                               max_new_tokens)?;
-        let mut registry = sqft::serve::AdapterRegistry::new(registry_cap);
+        let mut registry =
+            sqft::serve::AdapterRegistry::new(registry_cap.max(host_tier_cap));
+        registry.set_device_budget(device_budget);
+        registry.set_degrade_ranks(&degrade_ranks);
         registry.register_all_resident(&rt, &hyper, entries)
             .context("registering tenants (see --registry-cap / --adapter-id)")?;
+        for (id, reason) in &quarantined {
+            registry.quarantine(id, reason.clone());
+        }
         let (obs, writer) = serve_obs(args)?;
         let mut router = sqft::serve::Router::new(engine, registry);
         router.set_obs(obs);

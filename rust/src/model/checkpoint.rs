@@ -1,14 +1,26 @@
 //! Binary checkpoint format for ParamSets.
 //!
-//! Layout: magic "SQFTCKP1" | u64 header_len | JSON header | raw f32 data
-//! | packed u8 data.  The header maps each tensor name to {shape, offset}
-//! (offsets in f32 elements into the data section, in header order), and —
-//! for checkpoints carrying true-INT4 weights — a `packed` section mapping
-//! each packed-tensor name to {shape, group_size, offset} with byte offsets
-//! into the trailing u8 region (`packed_bytes` records its total length, so
-//! the f32/u8 boundary is explicit).  Endianness: little (the only platform
-//! we target); the magic encodes the version.  Checkpoints without packed
-//! tensors are byte-identical to the pre-packed format.
+//! Layout (v2): magic "SQFTCKP2" | u64 header_len | u32 header_crc |
+//! JSON header | raw f32 data | packed u8 data.  The header maps each
+//! tensor name to {shape, offset} (offsets in f32 elements into the data
+//! section, in header order), and — for checkpoints carrying true-INT4
+//! weights — a `packed` section mapping each packed-tensor name to
+//! {shape, group_size, offset} with byte offsets into the trailing u8
+//! region (`packed_bytes` records its total length, so the f32/u8 boundary
+//! is explicit).  v2 adds per-section integrity: the u32 after header_len
+//! is the CRC32 of the raw header bytes, and the header's `integrity`
+//! object records `f32_bytes` plus CRC32s of the f32 and packed payloads
+//! (`f32_crc` / `packed_crc`), so torn writes and bit-flips surface as
+//! typed [`CorruptCheckpoint`] errors naming the damaged section instead
+//! of confusing parse errors or silently wrong weights.
+//!
+//! Legacy v1 files (magic "SQFTCKP1", no header_crc word, no integrity
+//! object) still load — without checksum verification.  Saves always
+//! write v2, and always atomically: the container is written to a temp
+//! sibling, fsynced, then renamed over the destination, so a crash
+//! mid-save can't leave a truncated file and a failed overwrite leaves
+//! the original intact.  Endianness: little (the only platform we
+//! target); the magic encodes the version.
 //!
 //! Three metadata flavors share the container: base/merged model checkpoints
 //! (free-form meta), adapter checkpoints (`kind: "adapter"` plus the
@@ -20,17 +32,69 @@
 
 use super::ParamSet;
 use crate::tensor::Tensor;
+use crate::util::hash::{crc32, Crc32};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::fmt;
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"SQFTCKP1";
+const MAGIC_V1: &[u8; 8] = b"SQFTCKP1";
+const MAGIC_V2: &[u8; 8] = b"SQFTCKP2";
 
 /// Upper bound on the JSON header; anything larger is a corrupt or hostile
 /// file, not a checkpoint (headers are a few KB in practice).
 const MAX_HEADER_BYTES: usize = 64 << 20;
+
+/// The container section a corruption was detected in (see
+/// [`CorruptCheckpoint`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptSection {
+    /// The 8-byte magic/version prefix.
+    Magic,
+    /// The length-prefixed JSON header (incl. its CRC word and contents).
+    Header,
+    /// The raw f32 tensor payload.
+    F32Data,
+    /// The trailing packed-INT4 u8 payload.
+    PackedData,
+}
+
+impl CkptSection {
+    /// Stable machine-readable section name (used in error text and tests).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CkptSection::Magic => "magic",
+            CkptSection::Header => "header",
+            CkptSection::F32Data => "f32 payload",
+            CkptSection::PackedData => "packed payload",
+        }
+    }
+}
+
+/// Typed checkpoint-corruption error: which section is damaged, and how.
+/// Loads return this (never panic) so callers — the serving registry in
+/// particular — can quarantine exactly the tenant whose file is corrupt
+/// while siblings keep serving.  Downcast through `anyhow` with
+/// `err.downcast_ref::<CorruptCheckpoint>()`.
+#[derive(Debug, Clone)]
+pub struct CorruptCheckpoint {
+    pub section: CkptSection,
+    pub detail: String,
+}
+
+impl fmt::Display for CorruptCheckpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "corrupt checkpoint ({} section): {}", self.section.name(), self.detail)
+    }
+}
+
+impl std::error::Error for CorruptCheckpoint {}
+
+fn corrupt(section: CkptSection, detail: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(CorruptCheckpoint { section, detail: detail.into() })
+}
 
 /// One true-INT4 tensor as stored on disk: the *logical* (unpacked) shape,
 /// the quantization group size along the trailing in-dim, and the packed
@@ -72,23 +136,61 @@ impl PackedTensor {
     }
 }
 
+fn tensor_bytes(t: &Tensor) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4) }
+}
+
+/// Write a file atomically: the body streams into a temp sibling which is
+/// flushed, fsynced, and renamed over `path` — a crash mid-save can't
+/// leave a truncated checkpoint, and a failed overwrite leaves the
+/// original intact.
+fn atomic_write(
+    path: &Path,
+    body: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut tmp_name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("ckpt"));
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let written = (|| -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        body(&mut w)?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = written {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e).with_context(|| format!("renaming {tmp:?} into place"));
+    }
+    Ok(())
+}
+
 pub fn save(params: &ParamSet, path: &Path, meta: Json) -> Result<()> {
     save_packed(params, &BTreeMap::new(), path, meta)
 }
 
-/// Save a ParamSet plus true-INT4 packed tensors.  With an empty `packed`
-/// map this writes the exact legacy format.
+/// Save a ParamSet plus true-INT4 packed tensors in the v2 (checksummed)
+/// container.  With an empty `packed` map the packed section is simply
+/// absent; the integrity object is always written.
 pub fn save_packed(
     params: &ParamSet,
     packed: &BTreeMap<String, PackedTensor>,
     path: &Path,
     meta: Json,
 ) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
     let mut tensors = Vec::new();
     let mut offset = 0u64;
+    let mut f32_crc = Crc32::new();
     for (name, t) in params.iter() {
         tensors.push((
             name.clone(),
@@ -98,11 +200,14 @@ pub fn save_packed(
             ]),
         ));
         offset += t.len() as u64;
+        f32_crc.update(tensor_bytes(t));
     }
+    let f32_bytes = offset * 4;
     let mut header_fields = vec![("meta", meta)];
     let tensors_json = Json::Obj(tensors.into_iter().collect());
     header_fields.push(("tensors", tensors_json));
     let mut packed_bytes = 0u64;
+    let mut packed_crc = Crc32::new();
     if !packed.is_empty() {
         let mut entries = Vec::new();
         for (name, p) in packed {
@@ -119,37 +224,48 @@ pub fn save_packed(
                 ]),
             ));
             packed_bytes += p.data.len() as u64;
+            packed_crc.update(&p.data);
         }
         header_fields.push(("packed", Json::Obj(entries.into_iter().collect())));
         header_fields.push(("packed_bytes", Json::Num(packed_bytes as f64)));
     }
+    header_fields.push((
+        "integrity",
+        Json::obj(vec![
+            ("f32_bytes", Json::Num(f32_bytes as f64)),
+            ("f32_crc", Json::Num(f32_crc.finish() as f64)),
+            ("packed_crc", Json::Num(packed_crc.finish() as f64)),
+        ]),
+    ));
     let header = Json::obj(header_fields).to_string();
 
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&(header.len() as u64).to_le_bytes())?;
-    f.write_all(header.as_bytes())?;
-    for (_, t) in params.iter() {
-        let bytes: &[u8] = unsafe {
-            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
-        };
-        f.write_all(bytes)?;
-    }
-    for p in packed.values() {
-        f.write_all(&p.data)?;
-    }
-    f.flush()?;
-    Ok(())
+    atomic_write(path, |f| {
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(&crc32(header.as_bytes()).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, t) in params.iter() {
+            f.write_all(tensor_bytes(t))?;
+        }
+        for p in packed.values() {
+            f.write_all(&p.data)?;
+        }
+        Ok(())
+    })
 }
 
 /// Parse one header number that must be a non-negative integer (tensor
-/// dimensions and offsets).  Malformed headers are an `Err`, never a panic.
+/// dimensions, offsets, checksums).  Malformed headers are a typed
+/// [`CorruptCheckpoint`] `Err`, never a panic.
 fn header_uint(name: &str, what: &str, x: &Json) -> Result<usize> {
-    let f = x
-        .as_f64()
-        .with_context(|| format!("corrupt checkpoint: tensor '{name}': non-numeric {what}"))?;
+    let f = x.as_f64().map_err(|_| {
+        corrupt(CkptSection::Header, format!("tensor '{name}': non-numeric {what}"))
+    })?;
     if !f.is_finite() || f < 0.0 || f.fract() != 0.0 || f > 2f64.powi(53) {
-        bail!("corrupt checkpoint: tensor '{name}': invalid {what} {f}");
+        return Err(corrupt(
+            CkptSection::Header,
+            format!("tensor '{name}': invalid {what} {f}"),
+        ));
     }
     Ok(f as usize)
 }
@@ -170,26 +286,60 @@ pub fn load(path: &Path) -> Result<(ParamSet, Json)> {
 }
 
 /// Load a checkpoint including its packed-tensor section (empty map for
-/// legacy files).
+/// legacy files).  v2 files have every section checksum-verified; legacy
+/// v1 files load without integrity checks.  All corruption outcomes are
+/// typed [`CorruptCheckpoint`] errors naming the damaged section.
 pub fn load_packed(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTensor>, Json)> {
+    load_packed_inner(path).with_context(|| format!("loading checkpoint {path:?}"))
+}
+
+fn load_packed_inner(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTensor>, Json)> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
     );
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?} is not a SQFT checkpoint (bad magic)");
-    }
+    f.read_exact(&mut magic)
+        .map_err(|_| corrupt(CkptSection::Magic, "file shorter than the magic prefix"))?;
+    let v2 = match &magic {
+        m if m == MAGIC_V2 => true,
+        m if m == MAGIC_V1 => false,
+        _ => return Err(corrupt(CkptSection::Magic, "not a SQFT checkpoint (bad magic)")),
+    };
     let mut lenb = [0u8; 8];
-    f.read_exact(&mut lenb)?;
+    f.read_exact(&mut lenb)
+        .map_err(|_| corrupt(CkptSection::Header, "truncated header length"))?;
     let hlen = u64::from_le_bytes(lenb) as usize;
     if hlen == 0 || hlen > MAX_HEADER_BYTES {
-        bail!("corrupt checkpoint: implausible header length {hlen}");
+        return Err(corrupt(CkptSection::Header, format!("implausible header length {hlen}")));
     }
+    let header_crc = if v2 {
+        let mut crcb = [0u8; 4];
+        f.read_exact(&mut crcb)
+            .map_err(|_| corrupt(CkptSection::Header, "truncated header checksum"))?;
+        Some(u32::from_le_bytes(crcb))
+    } else {
+        None
+    };
     let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf)?;
-    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
-    let meta = header.req("meta")?.clone();
+    f.read_exact(&mut hbuf)
+        .map_err(|_| corrupt(CkptSection::Header, "truncated header"))?;
+    if let Some(want) = header_crc {
+        let got = crc32(&hbuf);
+        if got != want {
+            return Err(corrupt(
+                CkptSection::Header,
+                format!("header checksum mismatch (stored {want:#010x}, computed {got:#010x})"),
+            ));
+        }
+    }
+    let htext = std::str::from_utf8(&hbuf)
+        .map_err(|e| corrupt(CkptSection::Header, format!("header is not UTF-8: {e}")))?;
+    let header = Json::parse(htext)
+        .map_err(|e| corrupt(CkptSection::Header, format!("header is not valid JSON: {e}")))?;
+    let meta = header
+        .req("meta")
+        .map_err(|_| corrupt(CkptSection::Header, "header missing 'meta'"))?
+        .clone();
 
     let mut rest = Vec::new();
     f.read_to_end(&mut rest)?;
@@ -199,12 +349,59 @@ pub fn load_packed(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTens
         Some(x) => header_uint("<packed>", "packed_bytes", x)?,
         None => 0,
     };
-    if packed_bytes > rest.len() {
-        bail!("corrupt checkpoint: packed section ({packed_bytes} B) exceeds data");
-    }
-    let f32_end = rest.len() - packed_bytes;
+    let f32_end = if v2 {
+        // v2 headers record the exact f32 payload length, so truncation is
+        // attributed to the section the missing bytes belong to
+        let integ = header
+            .req("integrity")
+            .map_err(|_| corrupt(CkptSection::Header, "v2 header missing 'integrity'"))?;
+        let f32_bytes = header_uint("<integrity>", "f32_bytes", integ.req("f32_bytes")
+            .map_err(|_| corrupt(CkptSection::Header, "integrity missing 'f32_bytes'"))?)?;
+        let f32_crc = header_uint("<integrity>", "f32_crc", integ.req("f32_crc")
+            .map_err(|_| corrupt(CkptSection::Header, "integrity missing 'f32_crc'"))?)?;
+        let packed_crc = header_uint("<integrity>", "packed_crc", integ.req("packed_crc")
+            .map_err(|_| corrupt(CkptSection::Header, "integrity missing 'packed_crc'"))?)?;
+        if rest.len() < f32_bytes {
+            return Err(corrupt(
+                CkptSection::F32Data,
+                format!("truncated: {} of {f32_bytes} f32-payload bytes present", rest.len()),
+            ));
+        }
+        let total = f32_bytes + packed_bytes;
+        if rest.len() != total {
+            let sec =
+                if packed_bytes > 0 { CkptSection::PackedData } else { CkptSection::F32Data };
+            return Err(corrupt(
+                sec,
+                format!("payload is {} bytes, header declares {total}", rest.len()),
+            ));
+        }
+        let got = crc32(&rest[..f32_bytes]);
+        if got as usize != f32_crc {
+            return Err(corrupt(
+                CkptSection::F32Data,
+                format!("checksum mismatch (stored {f32_crc:#010x}, computed {got:#010x})"),
+            ));
+        }
+        let got = crc32(&rest[f32_bytes..]);
+        if got as usize != packed_crc {
+            return Err(corrupt(
+                CkptSection::PackedData,
+                format!("checksum mismatch (stored {packed_crc:#010x}, computed {got:#010x})"),
+            ));
+        }
+        f32_bytes
+    } else {
+        if packed_bytes > rest.len() {
+            return Err(corrupt(
+                CkptSection::PackedData,
+                format!("packed section ({packed_bytes} B) exceeds data"),
+            ));
+        }
+        rest.len() - packed_bytes
+    };
     if f32_end % 4 != 0 {
-        bail!("corrupt checkpoint: data section not f32-aligned");
+        return Err(corrupt(CkptSection::F32Data, "data section not f32-aligned"));
     }
     let floats: Vec<f32> = rest[..f32_end]
         .chunks_exact(4)
@@ -214,23 +411,41 @@ pub fn load_packed(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTens
     let mut params = ParamSet::new();
     // (start, end, name) spans for the overlap check below
     let mut spans: Vec<(usize, usize, String)> = Vec::new();
-    for (name, desc) in header.req("tensors")?.as_obj()? {
+    let tensors = header
+        .req("tensors")
+        .map_err(|_| corrupt(CkptSection::Header, "header missing 'tensors'"))?;
+    for (name, desc) in tensors
+        .as_obj()
+        .map_err(|_| corrupt(CkptSection::Header, "'tensors' is not an object"))?
+    {
         let shape: Vec<usize> = desc
-            .req("shape")?
-            .as_arr()?
+            .req("shape")
+            .map_err(|_| corrupt(CkptSection::Header, format!("tensor '{name}' missing shape")))?
+            .as_arr()
+            .map_err(|_| {
+                corrupt(CkptSection::Header, format!("tensor '{name}' shape is not an array"))
+            })?
             .iter()
             .map(|x| header_uint(name, "shape dimension", x))
             .collect::<Result<_>>()?;
-        let offset = header_uint(name, "offset", desc.req("offset")?)?;
-        let n = shape
-            .iter()
-            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-            .with_context(|| format!("corrupt checkpoint: tensor '{name}' shape overflows"))?;
-        let end = offset
-            .checked_add(n)
-            .with_context(|| format!("corrupt checkpoint: tensor '{name}' offset overflows"))?;
+        let offset = header_uint(
+            name,
+            "offset",
+            desc.req("offset").map_err(|_| {
+                corrupt(CkptSection::Header, format!("tensor '{name}' missing offset"))
+            })?,
+        )?;
+        let n = shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d)).ok_or_else(|| {
+            corrupt(CkptSection::Header, format!("tensor '{name}' shape overflows"))
+        })?;
+        let end = offset.checked_add(n).ok_or_else(|| {
+            corrupt(CkptSection::Header, format!("tensor '{name}' offset overflows"))
+        })?;
         if end > floats.len() {
-            bail!("corrupt checkpoint: tensor '{name}' overruns data section");
+            return Err(corrupt(
+                CkptSection::Header,
+                format!("tensor '{name}' overruns data section"),
+            ));
         }
         if n > 0 {
             spans.push((offset, end, name.clone()));
@@ -242,7 +457,10 @@ pub fn load_packed(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTens
     spans.sort();
     for w in spans.windows(2) {
         if w[1].0 < w[0].1 {
-            bail!("corrupt checkpoint: tensors '{}' and '{}' overlap", w[0].2, w[1].2);
+            return Err(corrupt(
+                CkptSection::Header,
+                format!("tensors '{}' and '{}' overlap", w[0].2, w[1].2),
+            ));
         }
     }
 
@@ -250,26 +468,48 @@ pub fn load_packed(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTens
     if let Some(pj) = header.get("packed") {
         let region = &rest[f32_end..];
         let mut pspans: Vec<(usize, usize, String)> = Vec::new();
-        for (name, desc) in pj.as_obj()? {
+        for (name, desc) in pj
+            .as_obj()
+            .map_err(|_| corrupt(CkptSection::Header, "'packed' is not an object"))?
+        {
             let shape: Vec<usize> = desc
-                .req("shape")?
-                .as_arr()?
+                .req("shape")
+                .map_err(|_| {
+                    corrupt(CkptSection::Header, format!("packed '{name}' missing shape"))
+                })?
+                .as_arr()
+                .map_err(|_| {
+                    corrupt(CkptSection::Header, format!("packed '{name}' shape is not an array"))
+                })?
                 .iter()
                 .map(|x| header_uint(name, "shape dimension", x))
                 .collect::<Result<_>>()?;
-            let group_size = header_uint(name, "group_size", desc.req("group_size")?)?;
-            let offset = header_uint(name, "offset", desc.req("offset")?)?;
-            let elems: usize = shape
-                .iter()
-                .try_fold(1usize, |a, &d| a.checked_mul(d))
-                .with_context(|| {
-                    format!("corrupt checkpoint: packed '{name}' shape overflows")
+            let group_size = header_uint(
+                name,
+                "group_size",
+                desc.req("group_size").map_err(|_| {
+                    corrupt(CkptSection::Header, format!("packed '{name}' missing group_size"))
+                })?,
+            )?;
+            let offset = header_uint(
+                name,
+                "offset",
+                desc.req("offset").map_err(|_| {
+                    corrupt(CkptSection::Header, format!("packed '{name}' missing offset"))
+                })?,
+            )?;
+            let elems: usize =
+                shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d)).ok_or_else(|| {
+                    corrupt(CkptSection::Header, format!("packed '{name}' shape overflows"))
                 })?;
-            let end = offset.checked_add(elems / 2).with_context(|| {
-                format!("corrupt checkpoint: packed '{name}' offset overflows")
+            let end = offset.checked_add(elems / 2).ok_or_else(|| {
+                corrupt(CkptSection::Header, format!("packed '{name}' offset overflows"))
             })?;
             if end > region.len() {
-                bail!("corrupt checkpoint: packed '{name}' overruns packed section");
+                return Err(corrupt(
+                    CkptSection::Header,
+                    format!("packed '{name}' overruns packed section"),
+                ));
             }
             let p = PackedTensor { shape, group_size, data: region[offset..end].to_vec() };
             p.validate(name)?;
@@ -281,9 +521,10 @@ pub fn load_packed(path: &Path) -> Result<(ParamSet, BTreeMap<String, PackedTens
         pspans.sort();
         for w in pspans.windows(2) {
             if w[1].0 < w[0].1 {
-                bail!(
-                    "corrupt checkpoint: packed '{}' and '{}' overlap", w[0].2, w[1].2
-                );
+                return Err(corrupt(
+                    CkptSection::Header,
+                    format!("packed '{}' and '{}' overlap", w[0].2, w[1].2),
+                ));
             }
         }
     }
@@ -392,6 +633,11 @@ mod tests {
     use super::*;
     use crate::tensor::Rng;
 
+    /// Section a typed corruption error names, or None for untyped errors.
+    fn section_of(e: &anyhow::Error) -> Option<CkptSection> {
+        e.downcast_ref::<CorruptCheckpoint>().map(|c| c.section)
+    }
+
     #[test]
     fn roundtrip() {
         let mut rng = Rng::new(3);
@@ -407,6 +653,11 @@ mod tests {
         assert_eq!(q.len(), 2);
         assert_eq!(q.get("w1").unwrap(), p.get("w1").unwrap());
         assert_eq!(q.get("w2").unwrap(), p.get("w2").unwrap());
+        // saves are atomic: no temp sibling survives a successful write
+        assert!(!dir.join("test.ckpt.tmp").exists());
+        // and the container is v2
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V2);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -416,14 +667,20 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("junk.ckpt");
         std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
-        assert!(load(&path).is_err());
+        let e = load(&path).unwrap_err();
+        assert_eq!(section_of(&e), Some(CkptSection::Magic), "{e:#}");
+        // short files are a magic-section truncation, not a panic
+        std::fs::write(&path, b"SQ").unwrap();
+        let e = load(&path).unwrap_err();
+        assert_eq!(section_of(&e), Some(CkptSection::Magic), "{e:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
-    /// Hand-write a checkpoint container around an arbitrary header.
+    /// Hand-write a *legacy v1* container around an arbitrary header (the
+    /// malformed-header tolerance below must hold for un-checksummed files).
     fn write_raw(path: &Path, header: &str, floats: &[f32]) {
         let mut buf = Vec::new();
-        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(MAGIC_V1);
         buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
         buf.extend_from_slice(header.as_bytes());
         for f in floats {
@@ -453,7 +710,12 @@ mod tests {
         ];
         for header in cases {
             write_raw(&path, header, &[1.0, 2.0, 3.0, 4.0]);
-            assert!(load(&path).is_err(), "accepted malformed header: {header}");
+            let e = load(&path).unwrap_err();
+            assert_eq!(
+                section_of(&e),
+                Some(CkptSection::Header),
+                "malformed header not typed: {header} -> {e:#}"
+            );
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -509,11 +771,42 @@ mod tests {
         // dropping the INT4 weights
         let e = load(&path).unwrap_err();
         assert!(format!("{e:#}").contains("packed"), "{e:#}");
-        // legacy (no packed section) files read back through both loaders
+        // legacy v1 (no packed section, no integrity) files still read back
+        // through both loaders, unchecked
         let legacy = dir.join("legacy.ckpt");
-        save(&p, &legacy, Json::obj(vec![])).unwrap();
+        {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(MAGIC_V1);
+            let mut tensors = Vec::new();
+            let mut offset = 0usize;
+            let mut payload = Vec::new();
+            for (name, t) in p.iter() {
+                tensors.push((
+                    name.clone(),
+                    Json::obj(vec![
+                        (
+                            "shape",
+                            Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+                        ),
+                        ("offset", Json::Num(offset as f64)),
+                    ]),
+                ));
+                offset += t.len();
+                payload.extend_from_slice(tensor_bytes(t));
+            }
+            let header = Json::obj(vec![
+                ("meta", Json::obj(vec![])),
+                ("tensors", Json::Obj(tensors.into_iter().collect())),
+            ])
+            .to_string();
+            buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
+            buf.extend_from_slice(header.as_bytes());
+            buf.extend_from_slice(&payload);
+            std::fs::write(&legacy, buf).unwrap();
+        }
         let (q2, m2) = load(&legacy).unwrap();
         assert_eq!(q2.len(), 2);
+        assert_eq!(q2.get("embed").unwrap(), p.get("embed").unwrap());
         let _ = m2;
         let (_, pk2, _) = load_packed(&legacy).unwrap();
         assert!(pk2.is_empty());
@@ -543,7 +836,10 @@ mod tests {
         p2.insert("x", Tensor::zeros(&[2]));
         m.insert("x".to_string(), ok);
         assert!(save_packed(&p2, &m, &path, Json::obj(vec![])).is_err());
+        // failed saves leave no temp sibling behind
+        assert!(!dir.join("bad.ckpt.tmp").exists());
         // load-side validation: overruns and overlaps in the packed header
+        // (legacy container so the structural checks run without checksums)
         let cases = [
             // overruns the 4-byte packed region
             (r#"{"meta":{},"tensors":{},"packed":{"w":{"shape":[2,8],"group_size":4,"offset":0}},"packed_bytes":4}"#,
@@ -556,13 +852,50 @@ mod tests {
         ];
         for (header, nbytes) in cases {
             let mut buf = Vec::new();
-            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(MAGIC_V1);
             buf.extend_from_slice(&(header.len() as u64).to_le_bytes());
             buf.extend_from_slice(header.as_bytes());
             buf.extend_from_slice(&vec![0u8; nbytes]);
             std::fs::write(&path, buf).unwrap();
             assert!(load_packed(&path).is_err(), "accepted: {header}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checksums_catch_payload_bitflips() {
+        let mut rng = Rng::new(11);
+        let mut p = ParamSet::new();
+        p.insert("w", Tensor::randn(&mut rng, &[4, 4], 1.0));
+        let mut packed = BTreeMap::new();
+        packed.insert(
+            "packed_w".to_string(),
+            PackedTensor { shape: vec![1, 2, 8], group_size: 4, data: (0..8u8).collect() },
+        );
+        let dir = std::env::temp_dir().join("sqft_ckpt_crc");
+        let path = dir.join("crc.ckpt");
+        save_packed(&p, &packed, &path, Json::obj(vec![])).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // locate sections: magic 8 | hlen 8 | hcrc 4 | header | f32 | packed
+        let hlen = u64::from_le_bytes(good[8..16].try_into().unwrap()) as usize;
+        let header_start = 20;
+        let f32_start = header_start + hlen;
+        let packed_start = good.len() - 8;
+        let flips = [
+            (header_start + hlen / 2, CkptSection::Header),
+            (f32_start + 5, CkptSection::F32Data),
+            (packed_start + 3, CkptSection::PackedData),
+        ];
+        for (at, want) in flips {
+            let mut bad = good.clone();
+            bad[at] ^= 0x10;
+            std::fs::write(&path, &bad).unwrap();
+            let e = load_packed(&path).unwrap_err();
+            assert_eq!(section_of(&e), Some(want), "flip at {at}: {e:#}");
+        }
+        // pristine bytes still load
+        std::fs::write(&path, &good).unwrap();
+        load_packed(&path).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 

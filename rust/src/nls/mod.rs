@@ -152,6 +152,58 @@ impl SearchSpace {
     }
 }
 
+/// Clamp a realized rank configuration (`rankmask_`/`scale_` tensors) to at
+/// most `rank` active rows per (layer, module) instance — the serving-side
+/// half of rank elasticity.  Each rankmask row keeps the first
+/// `min(r_l, rank)` ones of its prefix; the paired scale is rebuilt from the
+/// instance's recovered alpha (`scale_l * r_l`, the inverse of
+/// [`SearchSpace::realize`]) so the degraded adapter keeps the same
+/// alpha-over-rank semantics the training space used.  Rows already at or
+/// below `rank` pass through bit-identical, so degrading to `r_max` is the
+/// identity.
+pub fn degrade_rank_params(rank_params: &ParamSet, rank: usize) -> Result<ParamSet> {
+    if rank == 0 {
+        bail!("cannot degrade to rank 0");
+    }
+    let mut out = ParamSet::new();
+    for (name, t) in rank_params.iter() {
+        if let Some(m) = name.strip_prefix("rankmask_") {
+            let shape = t.shape();
+            if shape.len() != 2 {
+                bail!("rankmask '{name}' is not [n_layers, r_max]: {shape:?}");
+            }
+            let (n_layers, r_max) = (shape[0], shape[1]);
+            let scale_name = format!("scale_{m}");
+            let scale = rank_params
+                .get(&scale_name)
+                .ok_or_else(|| anyhow::anyhow!("'{name}' has no paired '{scale_name}'"))?;
+            if scale.shape() != [n_layers] {
+                bail!("'{scale_name}' is not [n_layers]: {:?}", scale.shape());
+            }
+            let mut rm = Tensor::zeros(&[n_layers, r_max]);
+            let mut sc = Tensor::zeros(&[n_layers]);
+            for l in 0..n_layers {
+                let row = &t.data()[l * r_max..(l + 1) * r_max];
+                let r_full = row.iter().take_while(|&&x| x == 1.0).count();
+                if row[r_full..].iter().any(|&x| x != 0.0) || r_full == 0 {
+                    bail!("rankmask '{name}' layer {l} is not a non-empty prefix mask");
+                }
+                let r_new = r_full.min(rank);
+                for j in 0..r_new {
+                    rm.data_mut()[l * r_max + j] = 1.0;
+                }
+                let alpha = scale.data()[l] * r_full as f32;
+                sc.data_mut()[l] = alpha / r_new as f32;
+            }
+            out.insert(name, rm);
+            out.insert(&scale_name, sc);
+        } else if !name.starts_with("scale_") {
+            bail!("'{name}' is not a rank parameter");
+        }
+    }
+    Ok(out)
+}
+
 /// Paper Algorithm 1: hill-climbing sub-network search.
 /// `eval` scores a configuration on the validation proxy set (higher=better).
 pub struct HillClimbResult {
@@ -241,6 +293,35 @@ mod tests {
         let sc = p.get("scale_q").unwrap();
         assert_eq!(sc.data()[0], 4.0);
         assert_eq!(sc.data()[1], 2.0);
+    }
+
+    #[test]
+    fn degrade_clamps_prefix_and_rescales() {
+        let s = SearchSpace::new(&hyper(), vec![4, 8], 16.0).unwrap();
+        let mut cfg = s.max_config();
+        cfg[0] = 0; // layer 0, module q already at rank 4
+        let full = s.realize(&cfg).unwrap();
+        let d = degrade_rank_params(&full, 2).unwrap();
+        let rm = d.get("rankmask_q").unwrap();
+        // every row clamps to a 2-one prefix
+        assert_eq!(&rm.data()[..8], &[1., 1., 0., 0., 0., 0., 0., 0.]);
+        assert_eq!(&rm.data()[8..], &[1., 1., 0., 0., 0., 0., 0., 0.]);
+        // scale rebuilt from the recovered alpha: 16/2 = 8 in both layers
+        let sc = d.get("scale_q").unwrap();
+        assert_eq!(&sc.data()[..], &[8.0, 8.0]);
+        // degrading to a rank at/above every row is the identity
+        let same = degrade_rank_params(&full, 8).unwrap();
+        assert_eq!(same.get("rankmask_q").unwrap(), full.get("rankmask_q").unwrap());
+        assert_eq!(same.get("scale_q").unwrap(), full.get("scale_q").unwrap());
+        assert_eq!(d.len(), full.len());
+        // rank 0 and non-prefix masks are rejected
+        assert!(degrade_rank_params(&full, 0).is_err());
+        let mut bad = ParamSet::new();
+        let mut t = Tensor::zeros(&[1, 4]);
+        t.data_mut()[2] = 1.0; // hole in the prefix
+        bad.insert("rankmask_q", t);
+        bad.insert("scale_q", Tensor::full(&[1], 4.0));
+        assert!(degrade_rank_params(&bad, 2).is_err());
     }
 
     #[test]

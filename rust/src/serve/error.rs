@@ -17,10 +17,16 @@
 //!     slot was retired early;
 //!   - [`ServeError::EngineFailure`]: a decode session failed persistently
 //!     (step retries exhausted) or its worker crashed, and this request's
-//!     re-admission budget (`serve --max-retries`) is spent.
+//!     re-admission budget (`serve --max-retries`) is spent;
+//!   - [`ServeError::TenantUnavailable`]: the request names a tenant the
+//!     registry cannot serve — never registered, or quarantined because
+//!     its adapter checkpoint failed integrity/validation checks (the
+//!     `reason` says which).  Quarantine is per-tenant: siblings keep
+//!     serving, and the quarantined id stays refused until re-registered
+//!     from a good checkpoint.
 //!
 //! Use [`ServeError::of`] to classify a reply error; `None` means an
-//! untyped failure (setup errors, unknown tenants, prompt validation).
+//! untyped failure (setup errors, prompt validation).
 
 use std::fmt;
 
@@ -35,6 +41,9 @@ pub enum ServeError {
     Cancelled,
     /// Decode failed persistently; `attempts` re-admissions were spent.
     EngineFailure { attempts: usize, message: String },
+    /// The tenant can't serve: unregistered, or quarantined after its
+    /// checkpoint failed integrity/validation (`reason` says which).
+    TenantUnavailable { tenant: String, reason: String },
 }
 
 impl ServeError {
@@ -46,6 +55,7 @@ impl ServeError {
             ServeError::DeadlineExceeded { .. } => "deadline_exceeded",
             ServeError::Cancelled => "cancelled",
             ServeError::EngineFailure { .. } => "engine_failure",
+            ServeError::TenantUnavailable { .. } => "tenant_unavailable",
         }
     }
 
@@ -67,6 +77,9 @@ impl fmt::Display for ServeError {
             ServeError::Cancelled => write!(f, "cancelled by client"),
             ServeError::EngineFailure { attempts, message } => {
                 write!(f, "engine failure after {attempts} attempt(s): {message}")
+            }
+            ServeError::TenantUnavailable { tenant, reason } => {
+                write!(f, "tenant '{tenant}' unavailable: {reason}")
             }
         }
     }
@@ -97,5 +110,12 @@ mod tests {
         assert!(s.contains("3") && s.contains("boom"));
         assert_eq!(ServeError::DeadlineExceeded { waited_ms: 12 }.kind(), "deadline_exceeded");
         assert_eq!(ServeError::Cancelled.kind(), "cancelled");
+        let t = ServeError::TenantUnavailable {
+            tenant: "t3".into(),
+            reason: "quarantined: corrupt checkpoint (f32 payload section)".into(),
+        };
+        assert_eq!(t.kind(), "tenant_unavailable");
+        let s = t.to_string();
+        assert!(s.contains("t3") && s.contains("quarantined"), "{s}");
     }
 }

@@ -75,8 +75,8 @@ pub use pool::{
     PoolServeStats, WorkerStats,
 };
 pub use registry::{
-    gathered_slots, load_adapter_dir, AdapterEntry, AdapterRegistry, GatheredBank,
-    SharedAdapterSource,
+    gathered_slots, load_adapter_dir, load_adapter_dir_tolerant, AdapterEntry, AdapterRegistry,
+    GatheredBank, SharedAdapterSource,
 };
 pub use scheduler::{
     CancelHandle, Request, Scheduler, SchedulerMetrics, SchedulerOpts, ShardedScheduler,
@@ -1540,6 +1540,29 @@ pub(crate) fn serve_batch(
     policy: &SessionPolicy,
 ) -> Vec<Request> {
     let mut recs = RecorderCache::new(obs, worker);
+    // tiered residency (opt-in): pull cold cataloged tenants up the
+    // ladder before dispatch — disk → host if needed, then host → device
+    // within the byte budget (degrading ranks under pressure).  Failures
+    // are not fatal here: a quarantined tenant gets its typed refusal in
+    // the per-group branch below, and a tenant that can't be placed on
+    // the device still serves host-resident via per-forward uploads.
+    if registry.tiering_enabled() {
+        let mut tenants: Vec<String> = Vec::new();
+        for req in &reqs {
+            if let Some(tid) = &req.adapter_id {
+                if !tenants.iter().any(|t| t == tid) {
+                    tenants.push(tid.clone());
+                }
+            }
+        }
+        if let Ok(hyper) = engine.rt.model(&engine.config) {
+            let hyper = hyper.clone();
+            for tid in &tenants {
+                let _ = registry.prefetch_host(&hyper, tid);
+                let _ = registry.ensure_device(engine.rt, tid);
+            }
+        }
+    }
     let gathered_ready = engine.supports_gathered() && registry.bank().is_some();
     let mut eligible = gathered_ready;
     if gathered_ready {
@@ -1583,10 +1606,14 @@ pub(crate) fn serve_batch(
                     (entry.host_sets.iter().collect(), entry.eval_kind.as_str(), dev)
                 }
                 None => {
-                    let msg = format!("adapter '{tid}' is not registered");
+                    // typed refusal: quarantined carries the corruption
+                    // reason, otherwise plain not-registered — siblings in
+                    // this same dispatch keep serving either way
+                    let err = registry.unavailable_error(tid);
+                    let msg = err.to_string();
                     for req in group {
                         recs.get(&req.adapter_id).error(&req, 0, &msg);
-                        let _ = req.reply.send(Err(anyhow!(msg.clone())));
+                        let _ = req.reply.send(Err(anyhow::Error::new(err.clone())));
                     }
                     continue;
                 }
@@ -1664,6 +1691,9 @@ impl<'a> Router<'a> {
     /// instruments immediately so registrations from now on are counted.
     pub fn set_obs(&mut self, obs: ServeObs) {
         self.registry.bind_obs(obs.registry(), 0);
+        if let Some(t) = obs.trace() {
+            self.registry.bind_trace(t.clone());
+        }
         self.obs = Some(obs);
     }
 
@@ -1748,6 +1778,17 @@ impl<'a> Router<'a> {
                 }
             }
             drain_channel(&rx, &mut sched, &mut open, &obs);
+            // queue arrival warms the disk tier: cold cataloged tenants
+            // get validated host copies while they wait, so their first
+            // dispatch pays a host → device upload instead of a disk read
+            if registry.tiering_enabled() {
+                if let Ok(hyper) = engine.rt.model(&engine.config) {
+                    let hyper = hyper.clone();
+                    for tid in sched.pending_tenants() {
+                        let _ = registry.prefetch_host(&hyper, &tid);
+                    }
+                }
+            }
             let Some(reqs) = sched.next_batch(Instant::now()) else {
                 continue;
             };

@@ -68,6 +68,14 @@ pub struct EngineSpec {
     /// capacity so replica LRU never fires on its own (eviction stays
     /// coordinated through the source)
     pub registry_capacity: usize,
+    /// per-worker device residency budget in logical adapter bytes
+    /// (0 = unbounded, the flat legacy behavior); see
+    /// [`AdapterRegistry::set_device_budget`]
+    pub device_budget: usize,
+    /// rank-elastic degradation ladder offered under device pressure
+    /// (empty = never degrade); see
+    /// [`AdapterRegistry::set_degrade_ranks`]
+    pub degrade_ranks: Vec<usize>,
 }
 
 /// Worker-pool serving knobs.
@@ -351,6 +359,11 @@ fn worker_serve(
         .with_context(|| format!("worker {wid}: compiling '{}'", spec.eval_kind))?;
     let mut registry = AdapterRegistry::new(spec.registry_capacity.max(source.capacity()));
     registry.bind_obs(obs.registry(), wid);
+    if let Some(t) = obs.trace() {
+        registry.bind_trace(t.clone());
+    }
+    registry.set_device_budget(spec.device_budget);
+    registry.set_degrade_ranks(&spec.degrade_ranks);
     // gathered banks, same eligibility rule as `Router::setup_gathered`:
     // enable *before* the first sync so replicated tenants land in bank
     // slots as they register (each resident registration flushes its

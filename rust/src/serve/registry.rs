@@ -12,17 +12,43 @@
 //! dropping its device buffers along with the host entry.  The host-only
 //! `register` path is kept for callers without a runtime handle; those
 //! tenants serve through the per-forward host-upload fallback.
+//!
+//! # Residency tiers and rank-elastic degradation
+//!
+//! Beyond the flat LRU, the registry models a **disk → host → device**
+//! residency ladder.  Validated host entries survive device demotion, so
+//! re-promoting a warm tenant re-uploads from host instead of re-reading
+//! and re-validating disk; [`AdapterRegistry::catalog_disk`] records where
+//! a cold tenant's checkpoint lives so [`AdapterRegistry::prefetch_host`]
+//! can pull it into the host tier when its traffic arrives.  Device
+//! residency is bounded by a *logical byte budget*
+//! ([`AdapterRegistry::set_device_budget`], modeling HBM on
+//! rank-specialized hardware: a tenant served at rank d is charged the
+//! bytes of its rank-d adapter slices even though the XLA artifact inputs
+//! stay r_max-shaped with a zeroed tail).  Under budget pressure
+//! [`AdapterRegistry::ensure_device`] degrades tenants down the elastic
+//! rank ladder ([`AdapterRegistry::set_degrade_ranks`], reusing the NLS
+//! realize semantics via [`crate::nls::degrade_rank_params`]) instead of
+//! refusing them, and restores full rank when pressure drops; every
+//! transition is counted (`registry_degraded_total` /
+//! `registry_restored_total`) and traced.  A checkpoint that fails
+//! integrity or validation **quarantines only that tenant**
+//! ([`AdapterRegistry::quarantine`]): its id serves typed
+//! `TenantUnavailable` refusals while siblings keep serving.
 
 use crate::model::checkpoint::{self, AdapterCkpt};
 use crate::model::ParamSet;
-use crate::obs::{Counter, Gauge, Registry};
+use crate::obs::{Counter, Gauge, Registry, Series, TraceLog};
 use crate::runtime::{DeviceStore, ModelHyper, Runtime};
+use crate::serve::error::ServeError;
 use crate::tensor::Tensor;
+use crate::util::json::Json;
 use crate::util::sync::lock_recover;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// One registered tenant: id, eval artifact kind, and the host-side
 /// per-forward input sets (`[adapters (a_/b_), rank params]`, resolved in
@@ -83,6 +109,59 @@ pub fn load_adapter_dir(dir: &Path, config: &str) -> Result<Vec<AdapterCkpt>> {
         out.push(ck);
     }
     Ok(out)
+}
+
+/// Fault-tolerant variant of [`load_adapter_dir`]: a checkpoint that fails
+/// to load (corrupt container, wrong kind, config mismatch) is returned as
+/// a `(tenant_id, path, reason)` casualty instead of failing the whole
+/// directory, so one torn file quarantines one tenant while siblings keep
+/// serving.  The tenant id of a casualty is the file stem (the metadata is
+/// unreadable by definition).  An empty directory is still an error — a
+/// serve fleet with zero loadable adapters is a misconfiguration, not a
+/// degraded state.
+pub fn load_adapter_dir_tolerant(
+    dir: &Path,
+    config: &str,
+) -> Result<(Vec<AdapterCkpt>, Vec<(String, PathBuf, String)>)> {
+    let mut files: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading adapter dir {dir:?}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "ckpt").unwrap_or(false))
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        bail!("no *.ckpt adapter checkpoints in {dir:?}");
+    }
+    let mut good = Vec::new();
+    let mut bad = Vec::new();
+    for path in files {
+        let stem =
+            path.file_stem().and_then(|s| s.to_str()).unwrap_or("adapter").to_string();
+        match checkpoint::load_adapter(&path) {
+            Ok(mut ck) => {
+                if ck.config != config {
+                    bad.push((
+                        stem,
+                        path.clone(),
+                        format!("tuned for config '{}', engine runs '{config}'", ck.config),
+                    ));
+                    continue;
+                }
+                if ck.adapter_id.is_empty() {
+                    ck.adapter_id = stem;
+                }
+                good.push(ck);
+            }
+            Err(e) => bad.push((stem, path.clone(), format!("{e:#}"))),
+        }
+    }
+    if good.is_empty() {
+        bail!(
+            "no loadable adapter checkpoints in {dir:?} ({} corrupt/mismatched)",
+            bad.len()
+        );
+    }
+    Ok((good, bad))
 }
 
 /// Slot count of the `eval_gathered` artifact's adapter banks, read back
@@ -267,15 +346,39 @@ pub struct AdapterRegistry {
     evictions: Vec<String>,
     obs: Option<RegistryObs>,
     bank: Option<GatheredBank>,
+    /// logical device-byte budget; 0 = unbounded (the legacy flat path)
+    device_budget: usize,
+    /// elastic degradation ladder, descending ranks (empty = never degrade)
+    degrade_ladder: Vec<usize>,
+    /// logical bytes charged per device-resident tenant (at serving rank)
+    device_bytes: BTreeMap<String, usize>,
+    /// id → reduced serving rank for currently-degraded tenants
+    degraded: BTreeMap<String, usize>,
+    /// disk catalog for the cold tier: id → checkpoint path
+    disk: BTreeMap<String, PathBuf>,
+    /// id → reason for tenants refused after a corrupt/invalid checkpoint
+    quarantined: BTreeMap<String, String>,
+    trace: Option<Arc<TraceLog>>,
 }
 
 /// Registry instruments (bound per worker replica): registration and
-/// eviction event counters plus resident-state level gauges.
+/// eviction event counters plus resident-state level gauges, and — for
+/// the tiered-residency path — quarantine/degrade/restore transition
+/// counters, per-tier resident gauges, and cold-start latency series
+/// keyed by the tier the promotion started from.
 struct RegistryObs {
     registrations: Arc<Counter>,
     evictions: Arc<Counter>,
     resident: Arc<Gauge>,
     resident_bytes: Arc<Gauge>,
+    quarantined: Arc<Counter>,
+    degraded: Arc<Counter>,
+    restored: Arc<Counter>,
+    tier_disk: Arc<Gauge>,
+    tier_host: Arc<Gauge>,
+    tier_device: Arc<Gauge>,
+    cold_start_disk: Arc<Series>,
+    cold_start_host: Arc<Series>,
 }
 
 fn find<'s>(sets: &'s [ParamSet], name: &str) -> Option<&'s Tensor> {
@@ -300,6 +403,13 @@ impl AdapterRegistry {
             evictions: Vec::new(),
             obs: None,
             bank: None,
+            device_budget: 0,
+            degrade_ladder: Vec::new(),
+            device_bytes: BTreeMap::new(),
+            degraded: BTreeMap::new(),
+            disk: BTreeMap::new(),
+            quarantined: BTreeMap::new(),
+            trace: None,
         }
     }
 
@@ -366,13 +476,34 @@ impl AdapterRegistry {
             evictions: reg.counter("registry_evictions_total", &l),
             resident: reg.gauge("registry_resident_adapters", &l),
             resident_bytes: reg.gauge("registry_resident_adapter_bytes", &l),
+            quarantined: reg.counter("registry_quarantined_total", &l),
+            degraded: reg.counter("registry_degraded_total", &l),
+            restored: reg.counter("registry_restored_total", &l),
+            tier_disk: reg.gauge("registry_tier_residents", &[("tier", "disk"), ("worker", w.as_str())]),
+            tier_host: reg.gauge("registry_tier_residents", &[("tier", "host"), ("worker", w.as_str())]),
+            tier_device: reg
+                .gauge("registry_tier_residents", &[("tier", "device"), ("worker", w.as_str())]),
+            cold_start_disk: reg
+                .series("registry_cold_start_ms", &[("tier", "disk"), ("worker", w.as_str())]),
+            cold_start_host: reg
+                .series("registry_cold_start_ms", &[("tier", "host"), ("worker", w.as_str())]),
         });
         self.refresh_obs();
     }
 
+    /// Attach a trace log so tier transitions (quarantine, degrade,
+    /// restore) land in the per-request trace stream.
+    pub fn bind_trace(&mut self, trace: Arc<TraceLog>) {
+        self.trace = Some(trace);
+    }
+
     /// Re-level the resident gauges after any mutation: tenant count and
     /// total host-state bytes of the registered entries (the same tensors
-    /// `register_resident` keeps device-resident).
+    /// `register_resident` keeps device-resident), plus the per-tier
+    /// occupancy ladder — `device` counts tenants with resident device
+    /// buffers, `host` counts validated entries *not* on device, and
+    /// `disk` counts cataloged checkpoints not yet loaded (quarantined
+    /// ids count in no tier).
     fn refresh_obs(&self) {
         if let Some(o) = &self.obs {
             o.resident.set(self.entries.len() as f64);
@@ -382,6 +513,18 @@ impl AdapterRegistry {
                 .map(|(_, e)| e.host_sets.iter().map(|s| s.total_bytes()).sum::<usize>())
                 .sum();
             o.resident_bytes.set(bytes as f64);
+            let device = self.device_sets.len();
+            let host = self.entries.keys().filter(|id| !self.device_sets.contains_key(*id)).count();
+            let disk = self
+                .disk
+                .keys()
+                .filter(|id| {
+                    !self.entries.contains_key(*id) && !self.quarantined.contains_key(*id)
+                })
+                .count();
+            o.tier_device.set(device as f64);
+            o.tier_host.set(host as f64);
+            o.tier_disk.set(disk as f64);
         }
     }
 
@@ -486,6 +629,11 @@ impl AdapterRegistry {
         self.clock += 1;
         let id = entry.id.clone();
         self.device_sets.remove(&id);
+        self.device_bytes.remove(&id);
+        self.degraded.remove(&id);
+        // a fresh registration is the cure for quarantine: the new entry
+        // passed validation, so the tenant serves again
+        self.quarantined.remove(&id);
         self.entries.insert(id.clone(), (self.clock, entry));
         if let Some(o) = &self.obs {
             o.registrations.inc();
@@ -503,6 +651,8 @@ impl AdapterRegistry {
         if let Some(v) = victim {
             self.entries.remove(&v);
             self.device_sets.remove(&v);
+            self.device_bytes.remove(&v);
+            self.degraded.remove(&v);
             if let Some(b) = self.bank.as_mut() {
                 b.evict(&v);
             }
@@ -545,11 +695,14 @@ impl AdapterRegistry {
         Self::validate(hyper, &entry)?;
         let dev = Self::upload_entry(rt, &entry)?;
         let id = entry.id.clone();
+        let bytes = Self::entry_logical_bytes(&entry, None);
         let evicted = self.insert_validated(entry);
         self.device_sets.insert(id.clone(), dev);
+        self.device_bytes.insert(id.clone(), bytes);
         if let Err(e) = self.bank_write(&id) {
             self.entries.remove(&id);
             self.device_sets.remove(&id);
+            self.device_bytes.remove(&id);
             self.refresh_obs();
             return Err(e);
         }
@@ -604,6 +757,8 @@ impl AdapterRegistry {
     /// it was resident.
     pub fn evict(&mut self, id: &str) -> bool {
         self.device_sets.remove(id);
+        self.device_bytes.remove(id);
+        self.degraded.remove(id);
         if let Some(b) = self.bank.as_mut() {
             b.evict(id);
         }
@@ -658,8 +813,10 @@ impl AdapterRegistry {
             match Self::upload_entry(rt, &entry) {
                 Ok(dev) => {
                     let id = entry.id.clone();
+                    let bytes = Self::entry_logical_bytes(&entry, None);
                     self.insert_validated(entry);
                     self.device_sets.insert(id.clone(), dev);
+                    self.device_bytes.insert(id.clone(), bytes);
                     self.bank_write(&id)?;
                     inserted.push(id);
                 }
@@ -667,6 +824,7 @@ impl AdapterRegistry {
                     for done in &inserted {
                         self.entries.remove(done);
                         self.device_sets.remove(done);
+                        self.device_bytes.remove(done);
                         if let Some(b) = self.bank.as_mut() {
                             b.evict(done);
                         }
@@ -713,6 +871,452 @@ impl AdapterRegistry {
         }
         Ok(ids)
     }
+
+    // ------------------------------------------------------------------
+    // Tiered residency: disk → host → device, rank-elastic degradation
+    // ------------------------------------------------------------------
+
+    /// Bound device residency to `bytes` logical adapter bytes (0 =
+    /// unbounded, the legacy flat behavior).
+    pub fn set_device_budget(&mut self, bytes: usize) {
+        self.device_budget = bytes;
+    }
+
+    pub fn device_budget(&self) -> usize {
+        self.device_budget
+    }
+
+    /// Elastic degradation ladder: ranks to offer a tenant whose
+    /// full-rank view does not fit the device budget.  Stored descending
+    /// (the least-degraded fitting rank wins); zero ranks are dropped.
+    pub fn set_degrade_ranks(&mut self, ranks: &[usize]) {
+        let mut l: Vec<usize> = ranks.iter().copied().filter(|&r| r > 0).collect();
+        l.sort_unstable_by(|a, b| b.cmp(a));
+        l.dedup();
+        self.degrade_ladder = l;
+    }
+
+    pub fn degrade_ranks(&self) -> &[usize] {
+        &self.degrade_ladder
+    }
+
+    /// Whether any tiering feature is configured.  When false the serve
+    /// path must behave exactly like the flat legacy registry (no
+    /// auto-promotion, no budgets), so full-rank serving stays
+    /// byte-identical to the pre-tiering stack.
+    pub fn tiering_enabled(&self) -> bool {
+        self.device_budget > 0 || !self.degrade_ladder.is_empty() || !self.disk.is_empty()
+    }
+
+    /// Record where a cold tenant's checkpoint lives (the disk tier of
+    /// the residency ladder); [`AdapterRegistry::prefetch_host`] loads it
+    /// on demand.
+    pub fn catalog_disk(&mut self, id: &str, path: PathBuf) {
+        self.disk.insert(id.to_string(), path);
+        self.refresh_obs();
+    }
+
+    /// Ids cataloged on disk but neither loaded nor quarantined — the
+    /// cold tenants a queue-arrival prefetch should warm.
+    pub fn cold_ids(&self) -> Vec<String> {
+        self.disk
+            .keys()
+            .filter(|id| !self.entries.contains_key(*id) && !self.quarantined.contains_key(*id))
+            .cloned()
+            .collect()
+    }
+
+    /// Refuse a tenant: drop every copy of its state (host entry, device
+    /// buffers, byte charge, bank slot) and remember why.  Until
+    /// re-registered from a good checkpoint its requests get typed
+    /// `TenantUnavailable` replies; siblings are untouched.
+    pub fn quarantine(&mut self, id: &str, reason: impl Into<String>) {
+        let reason = reason.into();
+        self.device_sets.remove(id);
+        self.device_bytes.remove(id);
+        self.degraded.remove(id);
+        if let Some(b) = self.bank.as_mut() {
+            b.evict(id);
+        }
+        self.entries.remove(id);
+        self.quarantined.insert(id.to_string(), reason.clone());
+        if let Some(o) = &self.obs {
+            o.quarantined.inc();
+        }
+        if let Some(t) = &self.trace {
+            t.event(
+                "tenant_quarantine",
+                vec![("tenant", Json::Str(id.to_string())), ("reason", Json::Str(reason))],
+            );
+        }
+        self.refresh_obs();
+    }
+
+    pub fn is_quarantined(&self, id: &str) -> bool {
+        self.quarantined.contains_key(id)
+    }
+
+    /// Idempotently mirror a quarantine decision replicated from a
+    /// [`SharedAdapterSource`] (counts and traces only the first time).
+    pub fn note_quarantined(&mut self, id: &str, reason: &str) {
+        if self.quarantined.contains_key(id) {
+            return;
+        }
+        self.quarantine(id, reason);
+    }
+
+    pub fn quarantine_reason(&self, id: &str) -> Option<&str> {
+        self.quarantined.get(id).map(|s| s.as_str())
+    }
+
+    /// The typed refusal for an id this registry cannot serve.
+    pub fn unavailable_error(&self, id: &str) -> ServeError {
+        match self.quarantined.get(id) {
+            Some(reason) => ServeError::TenantUnavailable {
+                tenant: id.to_string(),
+                reason: format!("quarantined: {reason}"),
+            },
+            None => ServeError::TenantUnavailable {
+                tenant: id.to_string(),
+                reason: "not registered".to_string(),
+            },
+        }
+    }
+
+    /// The tenant's reduced serving rank, if currently degraded.
+    pub fn degraded_rank(&self, id: &str) -> Option<usize> {
+        self.degraded.get(id).copied()
+    }
+
+    /// Logical adapter bytes of `entry` served at `rank` (None = full):
+    /// `a_` `[l, r, in]` / `b_` `[l, out, r]` / `rankmask_` `[l, r]`
+    /// slices are charged at the serving rank; `scale_` and the sparsity
+    /// masks are rank-independent.  This is the unit
+    /// [`AdapterRegistry::set_device_budget`] is denominated in — the XLA
+    /// artifact inputs stay r_max-shaped (zero tail), so the budget
+    /// models HBM on rank-specialized hardware, not PJRT buffer sizes.
+    pub fn entry_logical_bytes(entry: &AdapterEntry, rank: Option<usize>) -> usize {
+        let mut elems = 0usize;
+        for set in &entry.host_sets {
+            for (name, t) in set.iter() {
+                let s = t.shape();
+                let n = match rank {
+                    Some(d) if name.starts_with("a_") && s.len() == 3 => s[0] * d.min(s[1]) * s[2],
+                    Some(d) if name.starts_with("b_") && s.len() == 3 => s[0] * s[1] * d.min(s[2]),
+                    Some(d) if name.starts_with("rankmask_") && s.len() == 2 => s[0] * d.min(s[1]),
+                    _ => t.len(),
+                };
+                elems += n;
+            }
+        }
+        elems * 4
+    }
+
+    /// Rank-sliced copy of an entry: `a_` rows and `b_` columns beyond
+    /// `rank` zeroed, and the rank configuration clamped through
+    /// [`crate::nls::degrade_rank_params`] (prefix masks shortened, scale
+    /// rebuilt from the recovered alpha).  The artifact input shapes stay
+    /// at r_max, so the view uploads through the same executables and the
+    /// clamped rankmask guarantees the zeroed tail never contributes.
+    pub fn degraded_view(entry: &AdapterEntry, rank: usize) -> Result<AdapterEntry> {
+        let mut sets = Vec::with_capacity(entry.host_sets.len());
+        for set in &entry.host_sets {
+            let mut rank_part = ParamSet::new();
+            let mut out = ParamSet::new();
+            for (name, t) in set.iter() {
+                if name.starts_with("rankmask_") || name.starts_with("scale_") {
+                    rank_part.insert(name, t.clone());
+                } else if name.starts_with("a_") && t.shape().len() == 3 {
+                    let mut t2 = t.clone();
+                    let s = t2.shape().to_vec();
+                    let (r_n, in_n) = (s[1], s[2]);
+                    for l in 0..s[0] {
+                        for j in rank.min(r_n)..r_n {
+                            let off = (l * r_n + j) * in_n;
+                            t2.data_mut()[off..off + in_n].fill(0.0);
+                        }
+                    }
+                    out.insert(name, t2);
+                } else if name.starts_with("b_") && t.shape().len() == 3 {
+                    let mut t2 = t.clone();
+                    let s = t2.shape().to_vec();
+                    let r_n = s[2];
+                    for row in 0..s[0] * s[1] {
+                        for j in rank.min(r_n)..r_n {
+                            t2.data_mut()[row * r_n + j] = 0.0;
+                        }
+                    }
+                    out.insert(name, t2);
+                } else {
+                    out.insert(name, t.clone());
+                }
+            }
+            if !rank_part.is_empty() {
+                let clamped = crate::nls::degrade_rank_params(&rank_part, rank)?;
+                for (n, t) in clamped.iter() {
+                    out.insert(n, t.clone());
+                }
+            }
+            sets.push(out);
+        }
+        Ok(AdapterEntry {
+            id: entry.id.clone(),
+            eval_kind: entry.eval_kind.clone(),
+            host_sets: sets,
+        })
+    }
+
+    /// Drop a tenant's device residency back to the host tier (validated
+    /// entry kept, buffers and byte charge dropped); true if it was
+    /// device-resident.  The *whole point* of the host tier: a later
+    /// re-promotion re-uploads from here instead of re-reading disk.
+    pub fn demote_device(&mut self, id: &str) -> bool {
+        let was = self.device_sets.remove(id).is_some();
+        self.device_bytes.remove(id);
+        self.degraded.remove(id);
+        if was {
+            if let Some(t) = &self.trace {
+                t.event("tenant_demote", vec![("tenant", Json::Str(id.to_string()))]);
+            }
+            self.refresh_obs();
+        }
+        was
+    }
+
+    /// Pull a cold tenant's checkpoint from the disk catalog into the
+    /// validated host tier (no device work).  `Ok(true)` if a load
+    /// happened; `Ok(false)` if the tenant is already resident, unknown
+    /// to the catalog, or quarantined.  A corrupt or invalid checkpoint
+    /// quarantines the tenant and returns its typed refusal.
+    pub fn prefetch_host(&mut self, hyper: &ModelHyper, id: &str) -> Result<bool> {
+        if self.entries.contains_key(id) || self.quarantined.contains_key(id) {
+            return Ok(false);
+        }
+        let Some(path) = self.disk.get(id).cloned() else { return Ok(false) };
+        let t0 = Instant::now();
+        let loaded = checkpoint::load_adapter(&path)
+            .map(|ck| AdapterEntry::from_ckpt(ck, id))
+            .and_then(|entry| {
+                if entry.id != id {
+                    bail!(
+                        "checkpoint {path:?} carries adapter id '{}', cataloged as '{id}'",
+                        entry.id
+                    );
+                }
+                Self::validate(hyper, &entry)?;
+                Ok(entry)
+            });
+        let entry = match loaded {
+            Ok(e) => e,
+            Err(e) => {
+                self.quarantine(id, format!("{e:#}"));
+                return Err(anyhow::Error::new(self.unavailable_error(id)));
+            }
+        };
+        self.insert_validated(entry);
+        if let Err(e) = self.bank_write(id) {
+            self.entries.remove(id);
+            self.refresh_obs();
+            return Err(e);
+        }
+        if let Some(o) = &self.obs {
+            o.cold_start_disk.record(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        self.refresh_obs();
+        Ok(true)
+    }
+
+    /// Make the tenant serveable from the device within the byte budget:
+    /// full rank when it fits, else the highest degrade-ladder rank that
+    /// fits; under pressure the biggest shrinkable sibling is degraded
+    /// one ladder step at a time to make room (so the fleet converges on
+    /// everyone-resident-at-reduced-rank instead of thrashing whole
+    /// tenants in and out), then least-recently-used siblings are demoted
+    /// to host, and as a last resort the tenant itself stays
+    /// host-resident — serving falls back to per-forward host uploads,
+    /// so **no request is ever refused for residency alone**.  Restores
+    /// (full rank or a higher ladder rank) happen the same way when
+    /// pressure drops.  No-op for unknown or quarantined ids.
+    pub fn ensure_device(&mut self, rt: &Runtime, id: &str) -> Result<()> {
+        if !self.entries.contains_key(id) || self.quarantined.contains_key(id) {
+            return Ok(());
+        }
+        loop {
+            if self.try_place(rt, id)? {
+                return Ok(());
+            }
+            if let Some((v, r, bytes)) = self.shrink_candidate(id) {
+                let entry = match self.entries.get(&v) {
+                    Some((_, e)) => e.clone(),
+                    None => continue,
+                };
+                self.place(rt, &v, &entry, Some(r), bytes)?;
+                continue;
+            }
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(k, _)| k.as_str() != id && self.device_sets.contains_key(k.as_str()))
+                .min_by_key(|(_, (used, _))| *used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(v) => {
+                    self.demote_device(&v);
+                }
+                None => return Ok(()),
+            }
+        }
+    }
+
+    /// Place the tenant at the best rank that fits the available budget
+    /// without touching siblings; false if nothing fits.
+    fn try_place(&mut self, rt: &Runtime, id: &str) -> Result<bool> {
+        let entry = match self.entries.get(id) {
+            Some((_, e)) => e.clone(),
+            None => return Ok(true),
+        };
+        let full = Self::entry_logical_bytes(&entry, None);
+        let mine = self.device_bytes.get(id).copied().unwrap_or(0);
+        let charged: usize = self.device_bytes.values().sum();
+        let avail = if self.device_budget == 0 {
+            usize::MAX
+        } else {
+            self.device_budget.saturating_sub(charged - mine)
+        };
+        if full <= avail {
+            self.place(rt, id, &entry, None, full)?;
+            return Ok(true);
+        }
+        for r in self.degrade_ladder.clone() {
+            let bytes = Self::entry_logical_bytes(&entry, Some(r));
+            if bytes <= avail {
+                self.place(rt, id, &entry, Some(r), bytes)?;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// The device-resident sibling with the largest byte charge that can
+    /// still shrink one ladder step *and actually free bytes by doing so*
+    /// (deterministic tie-break by id).  Returns (id, next rank, bytes at
+    /// that rank).
+    fn shrink_candidate(&self, id: &str) -> Option<(String, usize, usize)> {
+        let mut best: Option<(String, usize, usize, usize)> = None;
+        for (k, &old) in &self.device_bytes {
+            if k == id {
+                continue;
+            }
+            let Some((_, entry)) = self.entries.get(k) else { continue };
+            let cur = self.degraded.get(k).copied();
+            let next = self
+                .degrade_ladder
+                .iter()
+                .copied()
+                .find(|&r| cur.map(|c| r < c).unwrap_or(true));
+            let Some(r) = next else { continue };
+            let nb = Self::entry_logical_bytes(entry, Some(r));
+            if nb >= old {
+                continue;
+            }
+            let better = match &best {
+                Some((bk, _, _, bo)) => old > *bo || (old == *bo && k < bk),
+                None => true,
+            };
+            if better {
+                best = Some((k.clone(), r, nb, old));
+            }
+        }
+        best.map(|(k, r, nb, _)| (k, r, nb))
+    }
+
+    /// Upload (or keep) the tenant's device view at `rank` (None = full),
+    /// maintaining the byte ledger, degrade/restore accounting, the
+    /// cold-start series, and the gathered-bank slice.
+    fn place(
+        &mut self,
+        rt: &Runtime,
+        id: &str,
+        entry: &AdapterEntry,
+        rank: Option<usize>,
+        bytes: usize,
+    ) -> Result<()> {
+        let current = self.degraded.get(id).copied();
+        let resident = self.device_sets.contains_key(id);
+        if resident && current == rank {
+            return Ok(());
+        }
+        let view = match rank {
+            Some(r) => Self::degraded_view(entry, r)?,
+            None => entry.clone(),
+        };
+        let t0 = Instant::now();
+        let dev = Self::upload_entry(rt, &view)?;
+        let promote_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.device_sets.insert(id.to_string(), dev);
+        self.device_bytes.insert(id.to_string(), bytes);
+        match rank {
+            Some(r) => {
+                self.degraded.insert(id.to_string(), r);
+            }
+            None => {
+                self.degraded.remove(id);
+            }
+        }
+        // a banked tenant's slot must serve the same view as its uniform
+        // sessions: rewrite the slice and re-upload before the slot is
+        // used again (in-flight sessions hold the *previous* bank buffers
+        // borrowed, so they finish with the weights they started with)
+        let banked = matches!(self.bank.as_ref(), Some(b) if b.slot(id).is_some());
+        if banked {
+            if let Some(b) = self.bank.as_mut() {
+                b.register(&view)?;
+            }
+            self.flush_bank(rt)?;
+        }
+        if !resident {
+            // host → device promotion: the warm-tier cold start
+            if let Some(o) = &self.obs {
+                o.cold_start_host.record(promote_ms);
+            }
+        }
+        let degrade_to = match (current, rank) {
+            (None, Some(r)) => Some(r),
+            (Some(from), Some(r)) if r < from => Some(r),
+            _ => None,
+        };
+        let restore_to = match (current, rank) {
+            (Some(_), None) => Some(None),
+            (Some(from), Some(r)) if r > from => Some(Some(r)),
+            _ => None,
+        };
+        if let Some(r) = degrade_to {
+            if let Some(o) = &self.obs {
+                o.degraded.inc();
+            }
+            if let Some(t) = &self.trace {
+                t.event(
+                    "tenant_degrade",
+                    vec![("tenant", Json::Str(id.to_string())), ("rank", Json::Num(r as f64))],
+                );
+            }
+        } else if let Some(r) = restore_to {
+            if let Some(o) = &self.obs {
+                o.restored.inc();
+            }
+            if let Some(t) = &self.trace {
+                t.event(
+                    "tenant_restore",
+                    vec![
+                        ("tenant", Json::Str(id.to_string())),
+                        ("rank", Json::Num(r.map(|x| x as f64).unwrap_or(-1.0))),
+                    ],
+                );
+            }
+        }
+        self.refresh_obs();
+        Ok(())
+    }
 }
 
 /// Host-side source of truth for multi-worker serving: validated tenant
@@ -757,6 +1361,10 @@ struct SourceInner {
     /// evictions at or below this version have been compacted away;
     /// cursors below it cannot replay the log and snapshot-resync instead
     floor: u64,
+    /// id → reason for tenants pulled for bad checkpoints; replicated
+    /// into every worker registry at sync so the whole fleet refuses the
+    /// tenant with the same typed error
+    quarantined: BTreeMap<String, String>,
 }
 
 impl SharedAdapterSource {
@@ -769,6 +1377,7 @@ impl SharedAdapterSource {
                 entries: BTreeMap::new(),
                 evictions: Vec::new(),
                 floor: 0,
+                quarantined: BTreeMap::new(),
             }),
         }
     }
@@ -809,6 +1418,8 @@ impl SharedAdapterSource {
         }
         inner.version += 1;
         let v = inner.version;
+        // a fresh validated registration cures quarantine fleet-wide
+        inner.quarantined.remove(&entry.id);
         inner.entries.insert(entry.id.clone(), (v, entry));
         Ok(())
     }
@@ -841,9 +1452,43 @@ impl SharedAdapterSource {
         for entry in entries {
             inner.version += 1;
             let v = inner.version;
+            inner.quarantined.remove(&entry.id);
             inner.entries.insert(entry.id.clone(), (v, entry));
         }
         Ok(ids)
+    }
+
+    /// Pull a tenant fleet-wide for a bad checkpoint: removed from the
+    /// source of truth like [`SharedAdapterSource::evict`], but every
+    /// worker also records the reason at its next sync, so the tenant's
+    /// requests draw typed `TenantUnavailable` refusals on every shard
+    /// until it is re-registered from a good checkpoint.  True if the
+    /// tenant was registered or newly quarantined.
+    pub fn quarantine(&self, id: &str, reason: impl Into<String>) -> bool {
+        let mut inner = lock_recover(&self.inner);
+        let fresh = inner.quarantined.insert(id.to_string(), reason.into()).is_none();
+        if inner.entries.remove(id).is_none() {
+            if fresh {
+                // reason replication still needs a version bump so synced
+                // workers wake up and record it
+                inner.version += 1;
+            }
+            return fresh;
+        }
+        inner.version += 1;
+        let v = inner.version;
+        inner.evictions.push((v, id.to_string()));
+        if inner.evictions.len() > EVICTION_LOG_CAP {
+            let drop_n = inner.evictions.len() / 2;
+            inner.floor = inner.evictions[drop_n - 1].0;
+            inner.evictions.drain(..drop_n);
+        }
+        true
+    }
+
+    /// The fleet-wide quarantine reason for `id`, if any.
+    pub fn quarantine_reason(&self, id: &str) -> Option<String> {
+        lock_recover(&self.inner).quarantined.get(id).cloned()
     }
 
     /// Remove a tenant from the source of truth; every worker drops its
@@ -884,7 +1529,7 @@ impl SharedAdapterSource {
             Register(AdapterEntry),
             Evict(String),
         }
-        let (hyper, mut changes, head) = {
+        let (hyper, mut changes, head, quarantined) = {
             let inner = lock_recover(&self.inner);
             // steady-state fast path: one u64 compare under the lock —
             // per-session worker syncs must not pay a full log scan
@@ -910,7 +1555,9 @@ impl SharedAdapterSource {
             for (v, entry) in inner.entries.values().filter(|(v, _)| *v > *cursor) {
                 changes.push((*v, Change::Register(entry.clone())));
             }
-            (inner.hyper.clone(), changes, inner.version)
+            let quarantined: Vec<(String, String)> =
+                inner.quarantined.iter().map(|(k, r)| (k.clone(), r.clone())).collect();
+            (inner.hyper.clone(), changes, inner.version, quarantined)
         };
         changes.sort_by_key(|(v, _)| *v);
         let applied = changes.len();
@@ -930,6 +1577,12 @@ impl SharedAdapterSource {
                     registry.evict(&id);
                 }
             }
+        }
+        // replicate quarantine reasons so this worker's refusals carry
+        // the same typed detail as the shard that found the corruption
+        // (idempotent: already-noted ids are skipped)
+        for (id, reason) in quarantined {
+            registry.note_quarantined(&id, &reason);
         }
         *cursor = head;
         Ok(applied)
@@ -1320,5 +1973,189 @@ mod tests {
         // config mismatch is an error at load time
         assert!(load_adapter_dir(&dir, "other-config").is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+\n
+    #[test]
+    fn degrade_ladder_config_and_tiering_gate() {
+        let mut reg = AdapterRegistry::new(4);
+        assert!(!reg.tiering_enabled());
+        reg.set_degrade_ranks(&[2, 8, 0, 4, 8]);
+        assert_eq!(reg.degrade_ranks(), &[8, 4, 2]);
+        assert!(reg.tiering_enabled());
+        reg.set_degrade_ranks(&[]);
+        assert!(!reg.tiering_enabled());
+        reg.set_device_budget(1024);
+        assert!(reg.tiering_enabled());
+        reg.set_device_budget(0);
+        reg.catalog_disk("cold", std::env::temp_dir().join("cold.ckpt"));
+        assert!(reg.tiering_enabled());
+        assert_eq!(reg.cold_ids(), vec!["cold".to_string()]);
+    }
+
+    #[test]
+    fn logical_bytes_shrink_with_rank() {
+        let h = hyper();
+        let e = entry(&h, "t", 1);
+        let full = AdapterRegistry::entry_logical_bytes(&e, None);
+        let half = AdapterRegistry::entry_logical_bytes(&e, Some(4));
+        let quarter = AdapterRegistry::entry_logical_bytes(&e, Some(2));
+        assert!(full > half && half > quarter, "{full} {half} {quarter}");
+        // rank >= r_max clamps to full
+        assert_eq!(AdapterRegistry::entry_logical_bytes(&e, Some(64)), full);
+        // exact delta going 8 -> 4: per mod, a_ loses l*(8-4)*in elems,
+        // b_ loses l*out*(8-4), rankmask_ loses l*(8-4); scale_ and the
+        // sparsity masks are rank-independent (4 bytes/elem)
+        let delta_elems: usize = [(64, 64), (64, 64), (64, 64), (128, 64), (64, 128)]
+            .iter()
+            .map(|&(out, inp): &(usize, usize)| 2 * 4 * inp + 2 * out * 4 + 2 * 4)
+            .sum();
+        assert_eq!(full - half, delta_elems * 4);
+    }
+
+    #[test]
+    fn degraded_view_zeroes_tail_and_still_validates() {
+        let h = hyper();
+        let e = entry(&h, "t", 3);
+        let view = AdapterRegistry::degraded_view(&e, 2).unwrap();
+        AdapterRegistry::validate(&h, &view).unwrap();
+        // a_q rows >= 2 are zeroed per layer, b_q cols >= 2 likewise
+        let a = view.host_sets[0].get("a_q").unwrap();
+        let (l_n, r_n, in_n) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+        for l in 0..l_n {
+            for j in 2..r_n {
+                let off = (l * r_n + j) * in_n;
+                assert!(a.data()[off..off + in_n].iter().all(|&x| x == 0.0));
+            }
+            // the kept rows carry the original weights
+            let off = l * r_n * in_n;
+            let orig = e.host_sets[0].get("a_q").unwrap();
+            assert_eq!(&a.data()[off..off + 2 * in_n], &orig.data()[off..off + 2 * in_n]);
+        }
+        let b = view.host_sets[0].get("b_q").unwrap();
+        let rb = b.shape()[2];
+        for row in 0..b.shape()[0] * b.shape()[1] {
+            for j in 2..rb {
+                assert_eq!(b.data()[row * rb + j], 0.0);
+            }
+        }
+        // rank params clamp to a 2-prefix and rescale to the same alpha
+        let mask = view.host_sets[1].get("rankmask_q").unwrap();
+        for l in 0..l_n {
+            let row = &mask.data()[l * r_n..(l + 1) * r_n];
+            assert_eq!(row.iter().sum::<f32>(), 2.0, "layer {l}: {row:?}");
+        }
+        let sc_old = e.host_sets[1].get("scale_q").unwrap();
+        let mask_old = e.host_sets[1].get("rankmask_q").unwrap();
+        let sc_new = view.host_sets[1].get("scale_q").unwrap();
+        for l in 0..l_n {
+            let r_full: f32 = mask_old.data()[l * r_n..(l + 1) * r_n].iter().sum();
+            let alpha = sc_old.data()[l] * r_full;
+            assert!((sc_new.data()[l] - alpha / 2.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn quarantine_isolates_one_tenant_and_reregistration_cures() {
+        let h = hyper();
+        let mut reg = AdapterRegistry::new(4);
+        reg.register(&h, entry(&h, "good", 1)).unwrap();
+        reg.register(&h, entry(&h, "bad", 2)).unwrap();
+        reg.quarantine("bad", "corrupt checkpoint (f32 payload section)");
+        assert!(!reg.contains("bad") && reg.contains("good"));
+        assert!(reg.is_quarantined("bad"));
+        assert_eq!(
+            reg.quarantine_reason("bad"),
+            Some("corrupt checkpoint (f32 payload section)")
+        );
+        let err = reg.unavailable_error("bad");
+        assert_eq!(err.kind(), "tenant_unavailable");
+        assert!(err.to_string().contains("quarantined"));
+        // unknown ids refuse with the plain reason
+        assert!(reg.unavailable_error("nobody").to_string().contains("not registered"));
+        // a fresh validated registration cures the quarantine
+        reg.register(&h, entry(&h, "bad", 5)).unwrap();
+        assert!(reg.contains("bad") && !reg.is_quarantined("bad"));
+    }
+
+    #[test]
+    fn prefetch_host_loads_cataloged_tenants_and_quarantines_corruption() {
+        let h = hyper();
+        let dir = std::env::temp_dir().join("sqft_registry_prefetch");
+        std::fs::remove_dir_all(&dir).ok();
+        let e = entry(&h, "warm", 1);
+        let good = dir.join("warm.ckpt");
+        checkpoint::save_adapter(
+            &good,
+            &e.host_sets[0],
+            &e.host_sets[1],
+            "test",
+            &e.eval_kind,
+            "warm",
+            "lora",
+            0.0,
+        )
+        .unwrap();
+        // corrupt sibling: flip one payload byte of a valid checkpoint
+        let torn = dir.join("torn.ckpt");
+        let e2 = entry(&h, "torn", 2);
+        checkpoint::save_adapter(
+            &torn,
+            &e2.host_sets[0],
+            &e2.host_sets[1],
+            "test",
+            &e2.eval_kind,
+            "torn",
+            "lora",
+            0.0,
+        )
+        .unwrap();
+        let mut bytes = std::fs::read(&torn).unwrap();
+        let n = bytes.len();
+        bytes[n - 200] ^= 0x40;
+        std::fs::write(&torn, bytes).unwrap();
+
+        let mut reg = AdapterRegistry::new(4);
+        reg.catalog_disk("warm", good);
+        reg.catalog_disk("torn", torn);
+        assert_eq!(reg.cold_ids().len(), 2);
+        // cold -> host: loads, validates, becomes serveable (host tier)
+        assert!(reg.prefetch_host(&h, "warm").unwrap());
+        assert!(reg.contains("warm"));
+        assert!(!reg.prefetch_host(&h, "warm").unwrap(), "already resident");
+        assert!(!reg.prefetch_host(&h, "unknown").unwrap(), "not cataloged");
+        // corruption quarantines exactly that tenant with a typed refusal
+        let err = reg.prefetch_host(&h, "torn").unwrap_err();
+        let serr = ServeError::of(&err).expect("typed TenantUnavailable");
+        assert_eq!(serr.kind(), "tenant_unavailable");
+        assert!(reg.is_quarantined("torn") && reg.contains("warm"));
+        assert!(reg.quarantine_reason("torn").unwrap().contains("checksum"));
+        // quarantined ids are not re-prefetched
+        assert!(!reg.prefetch_host(&h, "torn").unwrap());
+        assert!(reg.cold_ids().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_source_replicates_quarantine_and_cure() {
+        let h = hyper();
+        let source = SharedAdapterSource::new(h.clone(), 4);
+        source.register(entry(&h, "t0", 1)).unwrap();
+        source.register(entry(&h, "t1", 2)).unwrap();
+        let mut reg = AdapterRegistry::new(4);
+        let mut cursor = 0u64;
+        source.sync(&mut reg, None, &mut cursor).unwrap();
+        assert!(reg.contains("t0") && reg.contains("t1"));
+        // quarantine replicates: the replica drops the tenant and records
+        // the reason, siblings untouched
+        assert!(source.quarantine("t0", "corrupt checkpoint"));
+        source.sync(&mut reg, None, &mut cursor).unwrap();
+        assert!(!reg.contains("t0") && reg.contains("t1"));
+        assert!(reg.is_quarantined("t0"));
+        assert_eq!(source.quarantine_reason("t0").as_deref(), Some("corrupt checkpoint"));
+        // re-registration cures fleet-wide
+        source.register(entry(&h, "t0", 9)).unwrap();
+        source.sync(&mut reg, None, &mut cursor).unwrap();
+        assert!(reg.contains("t0") && !reg.is_quarantined("t0"));
+        assert!(source.quarantine_reason("t0").is_none());
     }
 }

@@ -501,6 +501,13 @@ impl Scheduler {
         self.pending == 0
     }
 
+    /// Distinct tenant ids with requests waiting in queue.  The tiered
+    /// registry prefetches these into its validated host tier while they
+    /// wait, so a cold tenant's dispatch doesn't pay the disk read.
+    pub fn pending_tenants(&self) -> Vec<String> {
+        self.queues.keys().filter_map(|id| id.clone()).collect()
+    }
+
     /// Snapshot of the scheduler counters (see
     /// [`SchedulerMetrics::from_instruments`]).
     pub fn metrics(&self) -> SchedulerMetrics {
@@ -765,6 +772,14 @@ impl ShardedScheduler {
 
     pub fn pending(&self) -> usize {
         self.pending.load(Ordering::SeqCst)
+    }
+
+    /// Distinct tenant ids waiting on `home`'s shard (see
+    /// [`Scheduler::pending_tenants`]); workers use it to warm their
+    /// registry replica's host tier between batches.
+    pub fn pending_tenants(&self, home: usize) -> Vec<String> {
+        let home = home % self.shards.len();
+        lock_recover(&self.shards[home]).pending_tenants()
     }
 
     /// Batches taken by non-home workers so far (all workers summed).

@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod prop;
 pub mod json;
 pub mod sync;

@@ -1,0 +1,196 @@
+//! Corrupt-checkpoint corpus (ISSUE 9 satellite): truncations and single
+//! bit-flips at every section boundary of the v2 container must come back
+//! as typed [`CorruptCheckpoint`] errors naming the damaged section —
+//! never a panic, never a silently wrong ParamSet.  Also pins the
+//! version-compat contract: a legacy v1 container still loads (without
+//! integrity checks), which is exactly why saves write v2.
+
+use sqft::model::checkpoint::{
+    load_adapter, load_packed, save_adapter, save_packed, CkptSection, CorruptCheckpoint,
+    PackedTensor,
+};
+use sqft::model::ParamSet;
+use sqft::tensor::{Rng, Tensor};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn section_of(err: &anyhow::Error) -> Option<CkptSection> {
+    err.downcast_ref::<CorruptCheckpoint>().map(|c| c.section)
+}
+
+struct Fixture {
+    dir: PathBuf,
+    /// pristine v2 container bytes (f32 params + one packed tensor)
+    bytes: Vec<u8>,
+    header_len: usize,
+    f32_bytes: usize,
+}
+
+impl Fixture {
+    fn new(name: &str) -> Fixture {
+        let dir = std::env::temp_dir().join(format!("sqft_ckpt_corpus_{name}"));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(5);
+        let mut p = ParamSet::new();
+        p.insert("w", Tensor::randn(&mut rng, &[4, 8], 1.0));
+        p.insert("v", Tensor::randn(&mut rng, &[8], 1.0));
+        let mut packed = BTreeMap::new();
+        packed.insert(
+            "pw".to_string(),
+            PackedTensor { shape: vec![2, 8], group_size: 4, data: vec![0x21; 8] },
+        );
+        let path = dir.join("pristine.ckpt");
+        save_packed(&p, &packed, &path, sqft::util::json::Json::parse("{}").unwrap())
+            .unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header_len =
+            u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let f32_bytes = (4 * 8 + 8) * 4;
+        // layout sanity: magic(8) + hlen(8) + hcrc(4) + header + f32 + packed(8)
+        assert_eq!(bytes.len(), 20 + header_len + f32_bytes + 8);
+        assert_eq!(&bytes[..8], b"SQFTCKP2");
+        Fixture { dir, bytes, header_len, f32_bytes }
+    }
+
+    fn load_variant(&self, tag: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        let path = self.dir.join(format!("{tag}.ckpt"));
+        std::fs::write(&path, bytes).unwrap();
+        load_packed(&path).map(|_| ())
+    }
+}
+
+#[test]
+fn truncation_at_every_boundary_names_the_right_section() {
+    let f = Fixture::new("trunc");
+    let hdr_end = 20 + f.header_len;
+    let f32_end = hdr_end + f.f32_bytes;
+    let cases: Vec<(usize, CkptSection)> = vec![
+        (0, CkptSection::Magic),
+        (4, CkptSection::Magic),              // mid-magic
+        (8, CkptSection::Header),             // header length word missing
+        (12, CkptSection::Header),            // mid-length
+        (18, CkptSection::Header),            // mid header-CRC word
+        (20, CkptSection::Header),            // header bytes missing
+        (20 + f.header_len / 2, CkptSection::Header),
+        (hdr_end, CkptSection::F32Data),      // whole f32 payload missing
+        (hdr_end + f.f32_bytes / 2, CkptSection::F32Data),
+        (f32_end, CkptSection::PackedData),   // whole packed payload missing
+        (f32_end + 4, CkptSection::PackedData), // half the packed bytes
+    ];
+    for (cut, want) in cases {
+        let err = f
+            .load_variant(&format!("cut{cut}"), &f.bytes[..cut])
+            .expect_err("truncated checkpoint must not load");
+        assert_eq!(
+            section_of(&err),
+            Some(want),
+            "truncation at {cut}: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn single_bitflip_at_every_boundary_names_the_right_section() {
+    let f = Fixture::new("flip");
+    let hdr_end = 20 + f.header_len;
+    let f32_end = hdr_end + f.f32_bytes;
+    let cases: Vec<(usize, CkptSection)> = vec![
+        (0, CkptSection::Magic),            // magic first byte
+        (7, CkptSection::Magic),            // magic/version last byte
+        (8, CkptSection::Header),           // header length LSB
+        (16, CkptSection::Header),          // stored header CRC
+        (20, CkptSection::Header),          // first header byte
+        (hdr_end - 1, CkptSection::Header), // last header byte
+        (hdr_end, CkptSection::F32Data),    // first f32 byte
+        (f32_end - 1, CkptSection::F32Data),
+        (f32_end, CkptSection::PackedData), // first packed byte
+        (f.bytes.len() - 1, CkptSection::PackedData),
+    ];
+    for (pos, want) in cases {
+        let mut bytes = f.bytes.clone();
+        bytes[pos] ^= 0x04;
+        let err = f
+            .load_variant(&format!("flip{pos}"), &bytes)
+            .expect_err("bit-flipped checkpoint must not load");
+        assert_eq!(section_of(&err), Some(want), "flip at {pos}: {err:#}");
+    }
+    // the pristine file still loads after all that
+    f.load_variant("pristine2", &f.bytes).unwrap();
+}
+
+#[test]
+fn legacy_v1_loads_without_integrity_and_v2_catches_what_v1_cannot() {
+    let f = Fixture::new("legacy");
+    // splice a v1 container out of the v2 bytes: v1 magic, same header
+    // length, no CRC word, same header/payloads (the extra `integrity`
+    // object in the header is ignored by the legacy path)
+    let mut v1 = Vec::new();
+    v1.extend_from_slice(b"SQFTCKP1");
+    v1.extend_from_slice(&f.bytes[8..16]);
+    v1.extend_from_slice(&f.bytes[20..]);
+    f.load_variant("v1", &v1).expect("legacy v1 container must still load");
+    // the same payload bit-flip a v2 load rejects sails through v1 —
+    // the integrity gap that motivated the version bump
+    let hdr_end_v1 = 16 + f.header_len;
+    let mut v1_flip = v1.clone();
+    v1_flip[hdr_end_v1] ^= 0x04;
+    f.load_variant("v1flip", &v1_flip)
+        .expect("v1 has no checksums; structural load succeeds");
+    let mut v2_flip = f.bytes.clone();
+    v2_flip[20 + f.header_len] ^= 0x04;
+    let err = f.load_variant("v2flip", &v2_flip).unwrap_err();
+    assert_eq!(section_of(&err), Some(CkptSection::F32Data));
+}
+
+#[test]
+fn corrupt_adapter_checkpoint_is_typed_through_the_adapter_loader() {
+    let dir = std::env::temp_dir().join("sqft_ckpt_corpus_adapter");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut rng = Rng::new(9);
+    let mut adapters = ParamSet::new();
+    adapters.insert("a_q", Tensor::randn(&mut rng, &[2, 4, 8], 0.1));
+    adapters.insert("b_q", Tensor::randn(&mut rng, &[2, 8, 4], 0.1));
+    let mut rank = ParamSet::new();
+    rank.insert("rankmask_q", Tensor::ones(&[2, 4]));
+    rank.insert("scale_q", Tensor::full(&[2], 2.0));
+    let path = dir.join("t.ckpt");
+    save_adapter(&path, &adapters, &rank, "test", "eval", "t", "lora", 0.0).unwrap();
+    load_adapter(&path).expect("pristine adapter loads");
+    // flip one payload byte: the registry-facing loader reports a typed
+    // f32-section corruption (this is what quarantines exactly one tenant)
+    let mut bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n - 40] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = load_adapter(&path).unwrap_err();
+    assert_eq!(section_of(&err), Some(CkptSection::F32Data), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn saves_are_atomic_no_tmp_left_and_overwrite_preserves_or_replaces() {
+    let dir = std::env::temp_dir().join("sqft_ckpt_corpus_atomic");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut rng = Rng::new(3);
+    let mut p = ParamSet::new();
+    p.insert("w", Tensor::randn(&mut rng, &[4], 1.0));
+    let path = dir.join("a.ckpt");
+    save_packed(&p, &BTreeMap::new(), &path, sqft::util::json::Json::parse("{}").unwrap())
+        .unwrap();
+    // no temp sibling survives a successful save
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().map(|x| x == "tmp").unwrap_or(false))
+        .collect();
+    assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
+    // overwriting with new contents fully replaces the old container
+    let mut p2 = ParamSet::new();
+    p2.insert("w", Tensor::full(&[4], 7.0));
+    save_packed(&p2, &BTreeMap::new(), &path, sqft::util::json::Json::parse("{}").unwrap())
+        .unwrap();
+    let (loaded, _, _) = load_packed(&path).unwrap();
+    assert_eq!(&loaded.get("w").unwrap().data()[..], &[7.0; 4]);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -203,6 +203,8 @@ fn serve_fixture(rt: &Runtime, dir: &Path) -> ServeFixture {
         eval_kind: "eval".to_string(),
         max_new_tokens: 4,
         registry_capacity: 8,
+        device_budget: 0,
+        degrade_ranks: Vec::new(),
     };
     ServeFixture { hyper, spec, source, entries }
 }

@@ -69,6 +69,8 @@ fn spec(f: &Fixture) -> EngineSpec {
         eval_kind: "eval".to_string(),
         max_new_tokens: 4,
         registry_capacity: 8,
+        device_budget: 0,
+        degrade_ranks: Vec::new(),
     }
 }
 

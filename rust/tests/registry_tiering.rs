@@ -1,0 +1,394 @@
+//! Tiered adapter residency (ISSUE 9 acceptance): disk → host → device
+//! promotion, rank-elastic degradation under a device byte budget, and
+//! corruption quarantine that isolates exactly one tenant.
+//!
+//!   - with a device budget fitting only half the registered tenants,
+//!     ALL tenants still serve (degraded ranks, zero residency
+//!     refusals);
+//!   - full-rank answers through the tiered path are byte-identical to
+//!     the flat pre-tiering registry;
+//!   - one corrupt checkpoint quarantines exactly one tenant with a
+//!     typed `TenantUnavailable` refusal while siblings keep serving;
+//!   - degrading or evicting a tenant that occupies a `GatheredBank`
+//!     slot rewrites/backfills the slot slice before it is used again.
+//!
+//! Host-only tests run everywhere; device tests skip without artifacts.
+
+use sqft::data::{Task, Tokenizer};
+use sqft::model::checkpoint::save_adapter;
+use sqft::model::{init_base, ParamSet};
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::Runtime;
+use sqft::serve::{
+    load_adapter_dir_tolerant, AdapterEntry, AdapterRegistry, Engine, Request, Router,
+    SchedulerOpts,
+};
+use sqft::tensor::{Rng, Tensor};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+struct Fixture {
+    hyper: sqft::runtime::ModelHyper,
+    frozen: ParamSet,
+    entries: Vec<AdapterEntry>,
+}
+
+fn fixture(rt: &Runtime, tenants: usize) -> Fixture {
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let ds = sqft::data::Dataset::generate(Task::SynBoolq, 300, 0, 30, 71);
+    let base = init_base(&hyper, &mut Rng::new(33));
+    let prepared = pipeline::prepare(rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(34)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let mut entries = pipeline::tenant_adapters(rt, config, &prepared, tenants,
+                                                &ds.train, &tok, 2, 800).unwrap();
+    // large per-tenant deltas so answers depend on which adapter (and at
+    // which rank) served the request
+    for (i, e) in entries.iter_mut().enumerate() {
+        let mut rng = Rng::new(900 + i as u64);
+        let a_shape = e.host_sets[0].get("a_q").unwrap().shape().to_vec();
+        let b_shape = e.host_sets[0].get("b_q").unwrap().shape().to_vec();
+        e.host_sets[0].insert("a_q", Tensor::randn(&mut rng, &a_shape, 1.0));
+        e.host_sets[0].insert("b_q", Tensor::randn(&mut rng, &b_shape, 1.0));
+    }
+    Fixture { hyper, frozen, entries }
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+/// Write each entry's checkpoint as `<id>.ckpt` under `dir` (fresh dir).
+fn save_entries(dir: &Path, entries: &[AdapterEntry]) -> Vec<(String, PathBuf)> {
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::create_dir_all(dir).unwrap();
+    entries
+        .iter()
+        .map(|e| {
+            let path = dir.join(format!("{}.ckpt", e.id));
+            save_adapter(&path, &e.host_sets[0], &e.host_sets[1], "sqft-tiny",
+                         &e.eval_kind, &e.id, "lora", 0.0)
+                .unwrap();
+            (e.id.clone(), path)
+        })
+        .collect()
+}
+
+/// Serve one request per (tenant, prompt) through a fresh Router and
+/// collect per-request results in order.
+fn serve_once(
+    rt: &Runtime,
+    frozen: &ParamSet,
+    registry: AdapterRegistry,
+    requests: &[(Option<String>, String)],
+) -> (Vec<Result<String, String>>, sqft::serve::MultiServeStats, AdapterRegistry) {
+    let engine = Engine::new(rt, "sqft-tiny", frozen, None, "eval", 4).unwrap();
+    let mut router = Router::new(engine, registry);
+    let (tx, rx) = channel::<Request>();
+    let mut replies = Vec::new();
+    for (id, p) in requests {
+        let (rtx, rrx) = channel();
+        tx.send(Request::new(id.clone(), p.clone(), rtx)).unwrap();
+        replies.push(rrx);
+    }
+    drop(tx);
+    let opts = SchedulerOpts { aging: Duration::from_millis(5), ..Default::default() };
+    let stats = router.serve(rx, opts).unwrap();
+    let out = replies
+        .into_iter()
+        .map(|r| r.recv().unwrap().map_err(|e| format!("{e:#}")))
+        .collect();
+    (out, stats, std::mem::replace(router.registry_mut(), AdapterRegistry::new(1)))
+}
+
+// ---------------------------------------------------------------------
+// host-only: the tolerant directory loader (no artifacts needed)
+// ---------------------------------------------------------------------
+
+#[test]
+fn tolerant_dir_load_isolates_corrupt_checkpoints_as_casualties() {
+    let dir = std::env::temp_dir().join("sqft_tiering_tolerant");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(11);
+    for id in ["good0", "good1", "torn"] {
+        let mut adapters = ParamSet::new();
+        adapters.insert("a_q", Tensor::randn(&mut rng, &[2, 4, 8], 0.1));
+        let mut rank = ParamSet::new();
+        rank.insert("rankmask_q", Tensor::ones(&[2, 4]));
+        rank.insert("scale_q", Tensor::full(&[2], 2.0));
+        save_adapter(&dir.join(format!("{id}.ckpt")), &adapters, &rank, "cfgX",
+                     "eval", id, "lora", 0.0)
+            .unwrap();
+    }
+    // flip one payload byte of `torn`: checksum catches it at load
+    let torn = dir.join("torn.ckpt");
+    let mut bytes = std::fs::read(&torn).unwrap();
+    let n = bytes.len();
+    bytes[n - 8] ^= 0x20;
+    std::fs::write(&torn, &bytes).unwrap();
+
+    let (good, bad) = load_adapter_dir_tolerant(&dir, "cfgX").unwrap();
+    assert_eq!(good.len(), 2, "both intact tenants load");
+    let mut ids: Vec<&str> = good.iter().map(|c| c.adapter_id.as_str()).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, ["good0", "good1"]);
+    assert_eq!(bad.len(), 1, "exactly the torn checkpoint is a casualty");
+    assert_eq!(bad[0].0, "torn");
+    assert!(bad[0].2.contains("checksum"), "reason names the integrity failure: {}", bad[0].2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// device tests (artifacts-guarded)
+// ---------------------------------------------------------------------
+
+/// Budget pressure degrades a sibling instead of refusing the newcomer,
+/// and lifting the budget restores full rank from the host tier.
+#[test]
+fn budget_pressure_degrades_then_restores() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt, 2);
+    let full = AdapterRegistry::entry_logical_bytes(&f.entries[0], None);
+    let at4 = AdapterRegistry::entry_logical_bytes(&f.entries[1], Some(4));
+    assert!(at4 < full, "rank-4 view must be cheaper than full rank");
+
+    let mut reg = AdapterRegistry::new(8);
+    reg.set_device_budget(full + at4);
+    reg.set_degrade_ranks(&[4, 2]);
+    for e in &f.entries {
+        reg.register(&f.hyper, e.clone()).unwrap();
+    }
+    let (t0, t1) = (f.entries[0].id.clone(), f.entries[1].id.clone());
+    reg.ensure_device(&rt, &t0).unwrap();
+    reg.ensure_device(&rt, &t1).unwrap();
+    assert!(reg.device_set(&t0).is_some() && reg.device_set(&t1).is_some(),
+        "both tenants device-resident under pressure");
+    assert_eq!(reg.degraded_rank(&t0), None, "first tenant keeps full rank");
+    assert_eq!(reg.degraded_rank(&t1), Some(4), "second tenant degrades one ladder step");
+
+    // pressure drops: the degraded tenant is restored to full rank from
+    // its host copy (no disk catalog entries exist to re-read)
+    reg.set_device_budget(0);
+    reg.ensure_device(&rt, &t1).unwrap();
+    assert_eq!(reg.degraded_rank(&t1), None, "restored to full rank");
+    assert!(reg.device_set(&t1).is_some());
+}
+
+/// ISSUE 9 acceptance: a device budget fitting only half the tenants at
+/// full rank still serves every tenant — degraded, never refused.
+#[test]
+fn half_budget_serves_all_tenants_with_zero_refusals() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt, 4);
+    let full = AdapterRegistry::entry_logical_bytes(&f.entries[0], None);
+    let at4 = AdapterRegistry::entry_logical_bytes(&f.entries[0], Some(4));
+
+    let mut reg = AdapterRegistry::new(8);
+    // half the fleet fits at full rank; the whole fleet fits at rank 4
+    reg.set_device_budget((2 * full).max(4 * at4));
+    reg.set_degrade_ranks(&[4, 2]);
+    for e in &f.entries {
+        reg.register(&f.hyper, e.clone()).unwrap();
+    }
+
+    let mut grng = Rng::new(91);
+    let task = Task::SynBoolq;
+    let mut requests: Vec<(Option<String>, String)> = Vec::new();
+    for i in 0..2 * f.entries.len() {
+        let e = &f.entries[i % f.entries.len()];
+        requests.push((Some(e.id.clone()), task.gen_sample(&mut grng).prompt));
+    }
+    let (out, stats, reg) = serve_once(&rt, &f.frozen, reg, &requests);
+    assert_eq!(stats.total.errors, 0, "zero residency refusals");
+    assert_eq!(stats.total.served, requests.len());
+    assert!(out.iter().all(|r| r.is_ok()), "every tenant answered");
+    // the budget cannot hold everyone at full rank, so at least one
+    // tenant must be serving degraded — and nobody was quarantined
+    let degraded = f.entries.iter().filter(|e| reg.degraded_rank(&e.id).is_some()).count();
+    assert!(degraded >= 1, "budget pressure must have degraded someone");
+    for e in &f.entries {
+        assert!(!reg.is_quarantined(&e.id));
+        assert!(reg.contains(&e.id), "tenant {} must stay registered", e.id);
+    }
+}
+
+/// Disk-cataloged tenants promote through host to device on first
+/// traffic, and their full-rank answers are byte-identical to the flat
+/// pre-tiering registry serving the same entries.
+#[test]
+fn disk_promotion_answers_match_flat_reference() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt, 3);
+    let ckpt_dir = std::env::temp_dir().join("sqft_tiering_promote");
+    let cataloged = save_entries(&ckpt_dir, &f.entries);
+
+    let mut grng = Rng::new(92);
+    let task = Task::SynBoolq;
+    let mut requests: Vec<(Option<String>, String)> = Vec::new();
+    for i in 0..9 {
+        let id = if i % 4 == 3 {
+            None // merged / no-adapter path rides along
+        } else {
+            Some(f.entries[i % f.entries.len()].id.clone())
+        };
+        requests.push((id, task.gen_sample(&mut grng).prompt));
+    }
+
+    // flat pre-tiering reference: everything resident up front
+    let mut flat = AdapterRegistry::new(8);
+    flat.register_all_resident(&rt, &f.hyper, f.entries.clone()).unwrap();
+    assert!(!flat.tiering_enabled(), "reference runs the legacy flat path");
+    let (expected, ref_stats, _) = serve_once(&rt, &f.frozen, flat, &requests);
+    assert_eq!(ref_stats.total.errors, 0);
+
+    // tiered path: empty registry, disk catalog only — unbounded budget,
+    // so every promotion lands at full rank
+    let mut reg = AdapterRegistry::new(8);
+    for (id, path) in &cataloged {
+        reg.catalog_disk(id, path.clone());
+    }
+    assert!(reg.tiering_enabled());
+    let (got, stats, reg) = serve_once(&rt, &f.frozen, reg, &requests);
+    assert_eq!(stats.total.errors, 0, "cold tenants promote instead of erroring");
+    for (i, (want, have)) in expected.iter().zip(got.iter()).enumerate() {
+        assert_eq!(want.as_ref().unwrap(), have.as_ref().unwrap(),
+            "request {i} diverged from the flat-registry reference");
+    }
+    for e in &f.entries {
+        assert!(reg.device_set(&e.id).is_some(), "{} promoted to device", e.id);
+        assert_eq!(reg.degraded_rank(&e.id), None, "unbounded budget → full rank");
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
+
+/// One corrupt checkpoint quarantines exactly one tenant: its requests
+/// get the typed refusal, siblings' answers don't move.
+#[test]
+fn corrupt_checkpoint_quarantines_exactly_one_tenant() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt, 3);
+    let ckpt_dir = std::env::temp_dir().join("sqft_tiering_quarantine");
+    let cataloged = save_entries(&ckpt_dir, &f.entries);
+
+    // reference answers from the flat registry (all three intact)
+    let mut grng = Rng::new(93);
+    let task = Task::SynBoolq;
+    let requests: Vec<(Option<String>, String)> = f
+        .entries
+        .iter()
+        .map(|e| (Some(e.id.clone()), task.gen_sample(&mut grng).prompt))
+        .collect();
+    let mut flat = AdapterRegistry::new(8);
+    flat.register_all_resident(&rt, &f.hyper, f.entries.clone()).unwrap();
+    let (expected, _, _) = serve_once(&rt, &f.frozen, flat, &requests);
+
+    // flip one payload byte of the middle tenant's checkpoint
+    let victim = f.entries[1].id.clone();
+    let victim_path = &cataloged[1].1;
+    let mut bytes = std::fs::read(victim_path).unwrap();
+    let n = bytes.len();
+    bytes[n - 8] ^= 0x10;
+    std::fs::write(victim_path, &bytes).unwrap();
+
+    let mut reg = AdapterRegistry::new(8);
+    for (id, path) in &cataloged {
+        reg.catalog_disk(id, path.clone());
+    }
+    let (got, stats, reg) = serve_once(&rt, &f.frozen, reg, &requests);
+    assert_eq!(stats.total.errors, 1, "exactly the corrupt tenant errors");
+    assert_eq!(stats.total.served, requests.len() - 1);
+    for (i, e) in f.entries.iter().enumerate() {
+        if e.id == victim {
+            let err = got[i].as_ref().unwrap_err();
+            assert!(err.contains("unavailable") && err.contains("quarantined"),
+                "typed refusal names the quarantine: {err}");
+        } else {
+            assert_eq!(got[i].as_ref().unwrap(), expected[i].as_ref().unwrap(),
+                "sibling {} must serve the reference answer", e.id);
+        }
+    }
+    assert!(reg.is_quarantined(&victim));
+    assert!(reg.quarantine_reason(&victim).unwrap().contains("checksum"));
+    for e in &f.entries {
+        if e.id != victim {
+            assert!(!reg.is_quarantined(&e.id), "quarantine must not spread");
+        }
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
+
+/// ISSUE 9 satellite: a tenant occupying a `GatheredBank` slot that gets
+/// degraded has its slot slice rewritten to the degraded view before the
+/// bank serves again, and an evicted tenant's recycled slot is fully
+/// backfilled by the next registration before it is handed out.
+#[test]
+fn bank_slot_is_rewritten_on_degrade_and_backfilled_on_reuse() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let f = fixture(&rt, 3);
+    let full = AdapterRegistry::entry_logical_bytes(&f.entries[0], None);
+    let at4 = AdapterRegistry::entry_logical_bytes(&f.entries[1], Some(4));
+
+    let mut reg = AdapterRegistry::new(3);
+    reg.enable_gathered(&f.hyper, 4).unwrap();
+    reg.set_device_budget(full + at4);
+    reg.set_degrade_ranks(&[4]);
+    let (t0, t1) = (f.entries[0].id.clone(), f.entries[1].id.clone());
+    reg.register(&f.hyper, f.entries[0].clone()).unwrap();
+    reg.register(&f.hyper, f.entries[1].clone()).unwrap();
+    let slot1 = reg.bank_slot(&t1).expect("t1 holds a bank slot");
+    reg.ensure_device(&rt, &t0).unwrap();
+    reg.ensure_device(&rt, &t1).unwrap();
+    assert_eq!(reg.degraded_rank(&t1), Some(4));
+
+    // the bank slice must now carry the degraded view, not the full-rank
+    // tensors it was registered with
+    let view = AdapterRegistry::degraded_view(&f.entries[1], 4).unwrap();
+    for name in ["a_q", "rankmask_q", "scale_q"] {
+        let want = view
+            .host_sets
+            .iter()
+            .find_map(|s| s.get(name).ok())
+            .unwrap_or_else(|| panic!("degraded view missing {name}"));
+        let bank_name = match name.split_once('_') {
+            Some((kind, m)) => format!("{kind}_bank_{m}"),
+            None => unreachable!(),
+        };
+        let bank = reg.bank().unwrap().host().get(&bank_name).unwrap();
+        let n = want.len();
+        let got = &bank.data()[slot1 * n..(slot1 + 1) * n];
+        assert_eq!(got, want.data(), "bank slice '{bank_name}' must match the degraded view");
+    }
+
+    // eviction recycles the slot; the next registration overwrites the
+    // whole slice before the slot is handed out again
+    assert!(reg.evict(&t1));
+    assert_eq!(reg.bank_slot(&t1), None);
+    reg.register(&f.hyper, f.entries[2].clone()).unwrap();
+    let t2 = f.entries[2].id.clone();
+    assert_eq!(reg.bank_slot(&t2), Some(slot1), "recycled slot is reused lowest-first");
+    let want = f.entries[2]
+        .host_sets
+        .iter()
+        .find_map(|s| s.get("a_q").ok())
+        .unwrap();
+    let bank = reg.bank().unwrap().host().get("a_bank_q").unwrap();
+    let n = want.len();
+    assert_eq!(&bank.data()[slot1 * n..(slot1 + 1) * n], want.data(),
+        "stale degraded bytes must be gone after backfill");
+}
