@@ -3,7 +3,7 @@
 //! workload as the Table 7 serving bench, run under a seeded
 //! fault-injection plan (`sqft::faults`).
 //!
-//! Three legs, all deterministic under the plan seed:
+//! Four legs, all deterministic under the plan seed:
 //!
 //!   1. **Isolation** — exactly one persistent decode-forward failure
 //!      (retry budget 0, `FaultRule::window`) must fail at most one
@@ -11,15 +11,23 @@
 //!      other request's answer stays byte-identical to the fault-free
 //!      baseline.  The failed/total ratio is asserted and recorded as
 //!      the error-isolation ratio.
-//!   2. **Crash recovery** — an injected worker panic
+//!   2. **Prefill isolation** — one persistent cache-page prefill
+//!      failure (`SITE_PREFILL`, fired at a mid-session refill rebuild,
+//!      retry budget 0) must fail only the requests being admitted:
+//!      in-flight rows keep their resident K/V pages and answer
+//!      baseline bytes.  Skipped against artifact dirs that predate the
+//!      KV-cache split.
+//!   3. **Crash recovery** — an injected worker panic
 //!      (`SITE_WORKER_PANIC`) must lose no requests: the crashed
 //!      worker's claimed batch is requeued to siblings and every answer
 //!      still matches the baseline.
-//!   3. **Degradation sweep** — goodput (delivered answers / requests)
+//!   4. **Degradation sweep** — goodput (delivered answers / requests)
 //!      vs forward fault rate 0% / 1% / 5% with the default retry
 //!      budget; each nonzero rate also pins one guaranteed transient
-//!      failure (`FaultRule::nth`) so `serve_retries_total > 0` is a
-//!      deterministic assertion, not a coin flip.
+//!      forward failure (`FaultRule::nth`) — plus one transient
+//!      cached-decode upload failure (`SITE_CACHE_UPLOAD`) when the KV
+//!      split is live — so `serve_retries_total > 0` is a deterministic
+//!      assertion, not a coin flip.
 //!
 //! `SQFT_BENCH_SMOKE=1` shrinks the request counts (CI smoke);
 //! `-- --metrics-out PATH` writes the final sweep run's metrics
@@ -27,14 +35,17 @@
 //! chaos-smoke job greps for a nonzero `serve_retries_total`.
 
 use sqft::data::{Dataset, Task, Tokenizer};
-use sqft::faults::{FaultInjector, FaultKind, FaultRule, SITE_FORWARD, SITE_WORKER_PANIC};
+use sqft::faults::{
+    FaultInjector, FaultKind, FaultRule, SITE_CACHE_UPLOAD, SITE_FORWARD, SITE_PREFILL,
+    SITE_WORKER_PANIC,
+};
 use sqft::model::init_base;
 use sqft::peft::Method;
 use sqft::pipeline;
 use sqft::report::Table;
 use sqft::runtime::Runtime;
 use sqft::serve::{
-    serve_pool_obs, EngineSpec, PoolOpts, Request, SchedulerOpts, ServeError, ServeObs,
+    serve_pool_obs, Engine, EngineSpec, PoolOpts, Request, SchedulerOpts, ServeError, ServeObs,
     SharedAdapterSource,
 };
 use sqft::tensor::Rng;
@@ -177,7 +188,58 @@ fn main() -> anyhow::Result<()> {
         failed_tenants[0]
     );
 
-    // --- leg 2: worker crash loses nothing ------------------------------
+    // --- leg 2: prefill failure fails only the admitted requests --------
+    // The 2nd prefill of the run is a mid-session refill rebuild (the
+    // overflow wave beyond the first dispatched batch is admitted into
+    // freed slots); failing it with budget 0 must error exactly the
+    // requests being admitted while every in-flight row keeps its
+    // resident K/V pages and answers baseline bytes.
+    let kv_active =
+        Engine::new(&rt, config, &frozen, None, "eval", 4)?.kv_cache_active("eval");
+    let prefill_isolation = if kv_active {
+        let inj = FaultInjector::seeded(43)
+            .with_rule(FaultRule::nth(SITE_PREFILL, FaultKind::Error, 1));
+        let (results, _, _) = run(1, 0, inj.clone())?;
+        assert_eq!(inj.fires(SITE_PREFILL), 1, "exactly one prefill fault must fire");
+        let mut pf_failed = 0usize;
+        for (i, r) in results.iter().enumerate() {
+            match r {
+                Ok(ans) => assert_eq!(
+                    ans, &baseline[i],
+                    "in-flight request {i} diverged after a refill-prefill failure"
+                ),
+                Err(e) => {
+                    let se = ServeError::of(e).expect("failure must carry a typed ServeError");
+                    assert!(
+                        matches!(se, ServeError::EngineFailure { .. }),
+                        "prefill fault must surface as EngineFailure, got {se}"
+                    );
+                    pf_failed += 1;
+                }
+            }
+        }
+        assert!(pf_failed >= 1, "the faulted prefill must fail its admitted requests");
+        assert!(
+            pf_failed <= hyper.batch,
+            "prefill blast radius exceeded one admission wave: {pf_failed} > batch {}",
+            hyper.batch
+        );
+        println!(
+            "prefill isolation: 1 injected prefill failure -> {pf_failed}/{n_requests} \
+failed, every in-flight row byte-identical"
+        );
+        Json::obj(vec![
+            ("injected_failures", Json::Num(1.0)),
+            ("failed_requests", Json::Num(pf_failed as f64)),
+            ("session_capacity", Json::Num(hyper.batch as f64)),
+            ("in_flight_byte_identical", Json::Num(1.0)),
+        ])
+    } else {
+        println!("prefill isolation: skipped (artifacts predate the KV-cache split)");
+        Json::Null
+    };
+
+    // --- leg 3: worker crash loses nothing ------------------------------
     // The panic fires after the worker claims its batch and before the
     // batch leaves the recovery pen, so the claimed requests are requeued
     // to the surviving session path and every answer still matches.
@@ -199,7 +261,7 @@ fn main() -> anyhow::Result<()> {
         results.len()
     );
 
-    // --- leg 3: goodput vs fault rate -----------------------------------
+    // --- leg 4: goodput vs fault rate -----------------------------------
     let rates = [0.0f64, 0.01, 0.05];
     let mut table = Table::new(
         "Goodput vs injected forward fault rate (retry budget 2)",
@@ -209,12 +271,18 @@ fn main() -> anyhow::Result<()> {
     let mut last_obs: Option<ServeObs> = None;
     for &rate in &rates {
         let inj = if rate > 0.0 {
-            // the rate rule models background flakiness; the nth rule
-            // pins one guaranteed transient failure so the retry path is
-            // exercised (and asserted) at every nonzero rate
-            FaultInjector::seeded(1234)
+            // the rate rule models background flakiness; the nth rules
+            // pin guaranteed transient failures (one mid-forward, and —
+            // when the KV split is live — one cached-decode frontier
+            // upload) so the retry path is exercised (and asserted) at
+            // every nonzero rate
+            let mut inj = FaultInjector::seeded(1234)
                 .with_rule(FaultRule::new(SITE_FORWARD, FaultKind::Error, rate))
-                .with_rule(FaultRule::nth(SITE_FORWARD, FaultKind::Error, 2))
+                .with_rule(FaultRule::nth(SITE_FORWARD, FaultKind::Error, 2));
+            if kv_active {
+                inj = inj.with_rule(FaultRule::nth(SITE_CACHE_UPLOAD, FaultKind::Error, 3));
+            }
+            inj
         } else {
             FaultInjector::disabled()
         };
@@ -255,6 +323,7 @@ fn main() -> anyhow::Result<()> {
             ("retries", Json::Num(retries)),
             ("sessions_rebuilt", Json::Num(rebuilt)),
             ("forward_fires", Json::Num(inj.fires(SITE_FORWARD) as f64)),
+            ("cache_upload_fires", Json::Num(inj.fires(SITE_CACHE_UPLOAD) as f64)),
             ("wall_secs", Json::Num(wall)),
         ]));
         last_obs = Some(obs);
@@ -276,6 +345,7 @@ fn main() -> anyhow::Result<()> {
             ("isolation_ratio", Json::Num(isolation_ratio)),
             ("unaffected_byte_identical", Json::Num(1.0)),
         ])),
+        ("prefill_isolation", prefill_isolation),
         ("crash_recovery", Json::obj(vec![
             ("worker_crashes", Json::Num(crashes)),
             ("sessions_rebuilt", Json::Num(rebuilt)),

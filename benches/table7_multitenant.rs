@@ -3,7 +3,11 @@
 //! → engine), the merged-vs-unmerged per-tenant serving cost the paper's
 //! §2.5 argument turns on, the decode hot path (device-cached tenant
 //! adapters vs per-step host upload, with thread-scoped PJRT upload-byte
-//! accounting → `BENCH_decode.json`), and the worker-pool scaling sweep
+//! accounting, plus a KV-cache seq-length sweep over the
+//! sqft-tiny-s96/-s192 serve variants — `kv_cached` vs `full_forward`
+//! legs with exact byte ledgers; full runs assert the cached curve stays
+//! ~flat while full forward degrades — all → `BENCH_decode.json`), and
+//! the worker-pool scaling sweep
 //! (1/2/4/8 per-thread engine replicas over the sharded work-stealing
 //! scheduler → `BENCH_serve_scaling.json`; answers asserted
 //! byte-identical to 1 worker, and full runs assert >1.5x aggregate
@@ -328,6 +332,13 @@ fn main() -> anyhow::Result<()> {
     // the token batch across the PJRT boundary (asserted below, exactly).
     let max_new = 4usize;
     let engine = Engine::new(&rt, config, &frozen, None, "eval", max_new)?;
+    // This section (and the continuous-batching one below) measures
+    // ADAPTER residency, so pin the legacy full-forward decode: its
+    // upload contract is exactly one token batch per step, and every
+    // forward costs the same whether a slot was just refilled or not.
+    // The KV split's prefill/frontier ledger is asserted in
+    // tests/serve_kv_cache.rs and measured in the seq sweep below.
+    engine.set_full_forward(true);
     let mut registry = AdapterRegistry::new(max_tenants);
     registry.register_resident(&rt, &hyper, entries[0].clone())?;
     let tenant = &entries[0];
@@ -481,6 +492,102 @@ tenant adapter payload = {} B)",
         n_mixed
     );
 
+    // --- KV-cache split: tokens/s vs artifact sequence length -----------
+    // The resident-cache claim: after prefill, a cached decode step does
+    // O(1) fresh work per row (one-token frontier attending against the
+    // device-resident K/V pages), so tokens/s stays ~flat as the compiled
+    // sequence length grows; the legacy full forward re-runs the whole
+    // O(S) prefix every step and degrades.  The sqft-tiny-s96/-s192
+    // serve-only variants share sqft-tiny's weight shapes (RoPE carries
+    // the positions — there is no learned positional table), so the one
+    // frozen set and resident tenant entry above serve all three configs;
+    // configs or prefill kinds absent from the artifact dir are skipped.
+    let sweep_iters = smoke_iters(4);
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    let mut curve: Vec<(usize, f64, f64)> = Vec::new(); // (seq, kv tok/s, full tok/s)
+    for sweep_cfg in ["sqft-tiny", "sqft-tiny-s96", "sqft-tiny-s192"] {
+        let Ok(h) = rt.model(sweep_cfg) else {
+            println!("seq sweep: {sweep_cfg} not in the artifact dir, skipping");
+            continue;
+        };
+        let h = h.clone();
+        let eng = Engine::new(&rt, sweep_cfg, &frozen, None, "eval", max_new)?;
+        if !eng.kv_cache_active("eval") {
+            println!("seq sweep: {sweep_cfg} has no prefill/decode artifacts, skipping");
+            continue;
+        }
+        let mut prng = Rng::new(31);
+        let sweep_prompts: Vec<String> =
+            (0..h.batch).map(|_| task.gen_sample(&mut prng).prompt).collect();
+        let time_leg = |full: bool| -> anyhow::Result<(f64, u64, usize, usize)> {
+            eng.set_full_forward(full);
+            eng.generate_batch_cached(
+                Some(dev), &[], &tenant.eval_kind, &sweep_prompts)?; // warmup
+            let scope = UploadScope::begin();
+            let t0 = Instant::now();
+            let (mut toks, mut steps, mut prefills) = (0usize, 0usize, 0usize);
+            for _ in 0..sweep_iters {
+                let ans = eng.generate_batch_cached(
+                    Some(dev), &[], &tenant.eval_kind, &sweep_prompts)?;
+                toks += gen_tokens(&ans);
+                steps += eng.last_decode_steps();
+                prefills += eng.last_decode_prefills();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            Ok((toks as f64 / secs.max(1e-12), scope.bytes(), steps, prefills))
+        };
+        let (full_tps, full_bytes, full_steps, full_prefills) = time_leg(true)?;
+        let (kv_tps, kv_bytes, kv_steps, kv_prefills) = time_leg(false)?;
+        let tok_bytes = (h.batch * h.seq_len * 4) as u64;
+        let vec_bytes = (h.batch * 4) as u64;
+        // exact byte ledgers, independent of timing noise
+        assert_eq!(full_prefills, 0, "{sweep_cfg}: legacy leg must not prefill");
+        assert_eq!(full_bytes, full_steps as u64 * tok_bytes,
+            "{sweep_cfg}: legacy leg must upload one token batch per step");
+        assert!(kv_prefills >= sweep_iters,
+            "{sweep_cfg}: every generate must prefill its admitted rows");
+        assert_eq!(
+            kv_bytes,
+            kv_prefills as u64 * (tok_bytes + vec_bytes)
+                + (kv_steps - kv_prefills) as u64 * 2 * vec_bytes,
+            "{sweep_cfg}: cached decode must ship only the one-token frontier \
+after prefill"
+        );
+        println!(
+            "bench kv_seq_sweep {sweep_cfg:<14} S={:>3}  kv_cached {kv_tps:>9.1} tok/s  \
+full_forward {full_tps:>9.1} tok/s",
+            h.seq_len
+        );
+        sweep_rows.push(Json::obj(vec![
+            ("config", Json::Str(sweep_cfg.into())),
+            ("seq_len", Json::Num(h.seq_len as f64)),
+            ("kv_cached", Json::obj(vec![
+                ("tokens_per_s", Json::Num(kv_tps)),
+                ("upload_bytes_total", Json::Num(kv_bytes as f64)),
+                ("decode_steps", Json::Num(kv_steps as f64)),
+                ("prefills", Json::Num(kv_prefills as f64)),
+            ])),
+            ("full_forward", Json::obj(vec![
+                ("tokens_per_s", Json::Num(full_tps)),
+                ("upload_bytes_total", Json::Num(full_bytes as f64)),
+                ("decode_steps", Json::Num(full_steps as f64)),
+            ])),
+        ]));
+        curve.push((h.seq_len, kv_tps, full_tps));
+    }
+    if curve.len() >= 2 && !sqft::util::bench::smoke() {
+        let (s0, kv0, full0) = curve[0];
+        let (s1, kv1, full1) = *curve.last().unwrap();
+        let kv_drop = kv0 / kv1.max(1e-12);
+        let full_drop = full0 / full1.max(1e-12);
+        assert!(kv_drop < 2.0,
+            "kv_cached curve must stay ~flat across sequence lengths: \
+{kv0:.1} tok/s @S{s0} vs {kv1:.1} @S{s1}");
+        assert!(full_drop > kv_drop,
+            "full forward must degrade faster with S than cached decode \
+(full {full_drop:.2}x vs cached {kv_drop:.2}x over S{s0}->S{s1})");
+    }
+
     let report = Json::obj(vec![
         ("bench", Json::Str("decode_hot_path".into())),
         ("config", Json::Str(config.into())),
@@ -515,6 +622,7 @@ tenant adapter payload = {} B)",
             ("tokens_per_s", Json::Num(cont_tps)),
         ])),
         ("continuous_speedup_tokens_per_s", Json::Num(cont_tps / rtc_tps.max(1e-12))),
+        ("kv_cache_seq_sweep", Json::Arr(sweep_rows)),
     ]);
     std::fs::write("BENCH_decode.json", report.to_string_pretty())?;
     println!("wrote BENCH_decode.json");

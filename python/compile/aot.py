@@ -25,11 +25,18 @@ from . import model as M
 DTYPES = {jnp.float32: "f32", jnp.int32: "i32", jnp.uint8: "u8"}
 
 
-def to_hlo_text(lowered) -> str:
-    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+def to_hlo_text(lowered, tuple_out: bool = True) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    tuple_out=False lowers a single-result function with an *array* root
+    instead of a one-element tuple: the rust runtime keeps such outputs
+    device-resident (the KV state) and feeds them straight back into the
+    next step, with no tuple decomposition — which would force a host
+    download — in between.
+    """
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=tuple_out
     )
     return comp.as_hlo_text()
 
@@ -49,10 +56,10 @@ def _shape_structs(specs):
     return [jax.ShapeDtypeStruct(s, d) for _, s, d in specs]
 
 
-def lower_artifact(fn, specs, path):
+def lower_artifact(fn, specs, path, tuple_out: bool = True):
     t0 = time.time()
     lowered = jax.jit(fn).lower(*_shape_structs(specs))
-    text = to_hlo_text(lowered)
+    text = to_hlo_text(lowered, tuple_out=tuple_out)
     with open(path, "w") as f:
         f.write(text)
     digest = hashlib.sha256(text.encode()).hexdigest()[:16]
@@ -76,9 +83,10 @@ def build_config(cfg: M.ModelConfig, out_dir: str, manifest: dict):
         "artifacts": {},
     }
 
-    def art(kind, fn, specs, out_names):
+    def art(kind, fn, specs, out_names, tuple_out=True):
         fname = f"{kind}_{cfg.name}.hlo.txt"
-        digest = lower_artifact(fn, specs, os.path.join(out_dir, fname))
+        digest = lower_artifact(fn, specs, os.path.join(out_dir, fname),
+                                tuple_out=tuple_out)
         entry["artifacts"][kind] = {
             "file": fname,
             "inputs": _specs_to_json(specs),
@@ -86,26 +94,48 @@ def build_config(cfg: M.ModelConfig, out_dir: str, manifest: dict):
             "sha256_16": digest,
         }
 
-    art("pretrain", M.make_pretrain_step(cfg),
-        M.pretrain_input_specs(cfg), M.pretrain_output_names(cfg))
-    art("train", M.make_train_step(cfg, qa=False),
-        M.train_input_specs(cfg, qa=False), M.train_output_names(cfg))
-    art("train_qa", M.make_train_step(cfg, qa=True),
-        M.train_input_specs(cfg, qa=True), M.train_output_names(cfg))
+    if not cfg.serve_only:
+        art("pretrain", M.make_pretrain_step(cfg),
+            M.pretrain_input_specs(cfg), M.pretrain_output_names(cfg))
+        art("train", M.make_train_step(cfg, qa=False),
+            M.train_input_specs(cfg, qa=False), M.train_output_names(cfg))
+        art("train_qa", M.make_train_step(cfg, qa=True),
+            M.train_input_specs(cfg, qa=True), M.train_output_names(cfg))
     art("eval", M.make_eval_step(cfg, qa=False),
         M.eval_input_specs(cfg, qa=False), ["logits"])
-    art("eval_qa", M.make_eval_step(cfg, qa=True),
-        M.eval_input_specs(cfg, qa=True), ["logits"])
-    art("eval_int4", M.make_eval_int4_step(cfg),
-        M.eval_int4_input_specs(cfg), ["logits"])
-    art("eval_gathered", M.make_eval_gathered_step(cfg),
-        M.eval_gathered_input_specs(cfg), ["logits"])
-    art("calib", M.make_calib_step(cfg),
-        M.calib_input_specs(cfg), M.calib_output_names())
+    if not cfg.serve_only:
+        art("eval_qa", M.make_eval_step(cfg, qa=True),
+            M.eval_input_specs(cfg, qa=True), ["logits"])
+        art("eval_int4", M.make_eval_int4_step(cfg),
+            M.eval_int4_input_specs(cfg), ["logits"])
+        art("eval_gathered", M.make_eval_gathered_step(cfg),
+            M.eval_gathered_input_specs(cfg), ["logits"])
+        art("calib", M.make_calib_step(cfg),
+            M.calib_input_specs(cfg), M.calib_output_names())
+
+    # KV-cached decode split: single-array-result artifacts (tuple_out=False)
+    # whose packed state output stays device-resident between steps.
+    art("prefill", M.make_prefill_step(cfg),
+        M.prefill_input_specs(cfg), ["kv_state"], tuple_out=False)
+    art("decode", M.make_decode_step(cfg),
+        M.decode_input_specs(cfg), ["kv_state"], tuple_out=False)
+    art("decode_out", M.make_decode_out_step(cfg),
+        M.decode_out_input_specs(cfg), ["logits"], tuple_out=False)
+    if not cfg.serve_only:
+        art("prefill_gathered", M.make_prefill_gathered_step(cfg),
+            M.prefill_gathered_input_specs(cfg), ["kv_state"],
+            tuple_out=False)
+        art("decode_gathered", M.make_decode_gathered_step(cfg),
+            M.decode_gathered_input_specs(cfg), ["kv_state"],
+            tuple_out=False)
+        art("prefill_int4", M.make_prefill_int4_step(cfg),
+            M.prefill_int4_input_specs(cfg), ["kv_state"], tuple_out=False)
+        art("decode_int4", M.make_decode_int4_step(cfg),
+            M.decode_int4_input_specs(cfg), ["kv_state"], tuple_out=False)
     manifest["configs"][cfg.name] = entry
 
     # per-shape utility artifacts, deduped across configs
-    for (m, n) in cfg.layer_shapes():
+    for (m, n) in [] if cfg.serve_only else cfg.layer_shapes():
         wkey = f"wanda_{m}x{n}"
         if wkey not in manifest["shape_artifacts"]:
             specs = [("w", (m, n), jnp.float32), ("act_norm", (n,), jnp.float32)]
@@ -138,7 +168,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="../artifacts")
     ap.add_argument("--configs",
-                    default="sqft-tiny,sqft-small,sqft-base,sqft-large")
+                    default="sqft-tiny,sqft-small,sqft-base,sqft-large,"
+                            "sqft-tiny-s96,sqft-tiny-s192")
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
     manifest = {"version": 1, "configs": {}, "shape_artifacts": {}}

@@ -53,6 +53,10 @@ class ModelConfig:
     batch: int
     r_max: int
     group_size: int = 32  # INT4 quantization group size along in-features
+    # serve_only configs get just the serving artifacts (eval + the
+    # prefill/decode pair) — used by the seq-length sweep variants so the
+    # bench can scale context without paying for train/calib lowering.
+    serve_only: bool = False
 
     @property
     def head_dim(self) -> int:
@@ -95,6 +99,12 @@ CONFIGS: Dict[str, ModelConfig] = {
         ModelConfig("sqft-base", 64, 512, 8, 8, 1536, 64, 8, 32),
         # ~100M params — scale reference config
         ModelConfig("sqft-large", 64, 768, 12, 12, 2560, 128, 8, 32),
+        # seq-length sweep variants of sqft-tiny (serving artifacts only)
+        # — same weights shapes, longer context, for BENCH_decode.json
+        ModelConfig("sqft-tiny-s96", 64, 64, 2, 2, 128, 96, 8, 8,
+                    serve_only=True),
+        ModelConfig("sqft-tiny-s192", 64, 64, 2, 2, 128, 192, 8, 8,
+                    serve_only=True),
     ]
 }
 
@@ -688,12 +698,7 @@ def eval_gathered_input_specs(cfg: ModelConfig):
     The batch is tokens plus the per-row ``adapter_idx`` vector — the
     only two inputs the steady-state decode loop uploads per step.
     """
-    l = cfg.n_layers
-    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
-    for m in MODS:
-        out, inp = cfg.mod_dims(m)
-        specs.append((f"mask_{m}", (l, out, inp), jnp.float32))
-    specs += [(n, s, jnp.float32) for n, s in gathered_bank_specs(cfg)]
+    specs = gathered_param_specs(cfg)
     specs += batch_specs(cfg, with_targets=False)
     specs.append(("adapter_idx", (cfg.batch,), jnp.int32))
     return specs
@@ -710,6 +715,336 @@ def make_eval_gathered_step(cfg: ModelConfig):
         return (logits,)
 
     return eval_fn
+
+
+# --- KV-cached serving path: prefill / decode_step split --------------------
+#
+# The serving hot loop used to re-run the full causal forward over the whole
+# flattened (slots, seq) token buffer on every step — O(seq) per token.  The
+# cached split lowers two artifacts per eval kind instead:
+#
+#   prefill      full causal forward over the token buffer that *also* emits
+#                every layer's post-RoPE K and raw V, packed per slot into a
+#                single device-resident state tensor (slots, kv_state_elems);
+#                ``seq_lens`` picks each row's frontier logits (len-1).
+#   decode_step  one token per row + the resident state: single-position
+#                RoPE/attention against the cached K/V, writing the new K/V
+#                at the row's current length — O(1) in sequence length.
+#   decode_out   cheap readout slicing the frontier logits (slots, V) off the
+#                state tail, so the per-step host download stays tiny.
+#
+# The state is ONE tensor (not per-layer outputs) so the artifact has a
+# single array result that the rust runtime can keep on device between calls
+# and feed back as the next step's input without a host round-trip; packed
+# layout per slot: [K (L,S,H,Dh) | V (L,S,H,Dh) | frontier logits (V,)].
+# Positions >= the row's length hold garbage (padding-token K/V) — decode
+# masks attention to 0..pos and overwrites position pos, so they are never
+# read, which is also what makes slot refill a pure prefill with no explicit
+# page-clearing step.  The QA path keeps the legacy full-forward loop.
+
+
+def kv_state_elems(cfg: ModelConfig) -> int:
+    """Per-slot packed-state width: K + V caches + frontier logits."""
+    return 2 * cfg.n_layers * cfg.seq_len * cfg.d_model + cfg.vocab
+
+
+def rope_rows(x, positions):
+    """Rotary embedding at one per-row position (decode-step form).
+
+    x: (B, H, Dh), positions: (B,) int32 — same rotate-half math as
+    ``rope`` so cached K entries are bitwise those of the full forward.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (B, half)
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _transformer_prefill(cfg: ModelConfig, params, lin, tokens, lens):
+    """Full causal forward emitting the packed KV state.
+
+    ``lin(kind, l, x2d)`` dispatches one linear site — kind is one of
+    q/k/v/o/gate/up/down — so each eval path (adapter, gathered, INT4)
+    plugs in its own projection while the attention math stays identical
+    to that path's full forward.  Returns the packed state (B, P).
+    """
+    bsz, seq = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]
+    positions = jnp.arange(seq)
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        hln = rms_norm(x, params["ln1"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        q = lin("q", l, h2d).reshape(bsz, seq, h, dh)
+        k = lin("k", l, h2d).reshape(bsz, seq, h, dh)
+        v = lin("v", l, h2d).reshape(bsz, seq, h, dh)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+        att = jnp.where(causal[None, None, :, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz * seq, d)
+        x = x + lin("o", l, o).reshape(bsz, seq, d)
+        hln = rms_norm(x, params["ln2"][l])
+        h2d = hln.reshape(bsz * seq, d)
+        act = jax.nn.silu(lin("gate", l, h2d)) * lin("up", l, h2d)
+        x = x + lin("down", l, act).reshape(bsz, seq, d)
+        ks.append(k)
+        vs.append(v)
+    x = rms_norm(x, params["final_ln"])
+    logits = x @ params["embed"].T  # (B, S, V)
+    sel = jnp.clip(lens - 1, 0, seq - 1)
+    frontier_logits = jnp.take_along_axis(
+        logits, sel[:, None, None], axis=1)[:, 0, :]
+    kc = jnp.stack(ks, axis=1)  # (B, L, S, H, Dh)
+    vc = jnp.stack(vs, axis=1)
+    return jnp.concatenate(
+        [kc.reshape(bsz, -1), vc.reshape(bsz, -1), frontier_logits], axis=1)
+
+
+def _transformer_decode(cfg: ModelConfig, params, lin, state, frontier, pos):
+    """Single-position cached forward over the resident KV state.
+
+    Consumes one frontier token per row at absolute position ``pos``,
+    writes its post-RoPE K / raw V into the cache at that position, and
+    attends over 0..pos with the same -1e30 masking as the full forward
+    (masked exponentials underflow to exactly 0.0, so the softmax
+    denominator matches the causal reference).  Returns the updated
+    packed state with the new frontier logits in the tail.
+    """
+    bsz = frontier.shape[0]
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    seq = cfg.seq_len
+    n = cfg.n_layers * seq * d
+    kc = state[:, :n].reshape(bsz, cfg.n_layers, seq, h, dh)
+    vc = state[:, n:2 * n].reshape(bsz, cfg.n_layers, seq, h, dh)
+    x = params["embed"][frontier]  # (B, d)
+    write = jnp.arange(seq)[None, :] == pos[:, None]   # (B, S)
+    attend = jnp.arange(seq)[None, :] <= pos[:, None]  # (B, S)
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        hln = rms_norm(x, params["ln1"][l])
+        q = lin("q", l, hln).reshape(bsz, h, dh)
+        k = lin("k", l, hln).reshape(bsz, h, dh)
+        v = lin("v", l, hln).reshape(bsz, h, dh)
+        q = rope_rows(q, pos)
+        k = rope_rows(k, pos)
+        kl = jnp.where(write[:, :, None, None], k[:, None, :, :], kc[:, l])
+        vl = jnp.where(write[:, :, None, None], v[:, None, :, :], vc[:, l])
+        att = jnp.einsum("bhd,bshd->bhs", q, kl) / math.sqrt(dh)
+        att = jnp.where(attend[:, None, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhs,bshd->bhd", att, vl).reshape(bsz, d)
+        x = x + lin("o", l, o)
+        hln = rms_norm(x, params["ln2"][l])
+        act = jax.nn.silu(lin("gate", l, hln)) * lin("up", l, hln)
+        x = x + lin("down", l, act)
+        ks.append(kl)
+        vs.append(vl)
+    x = rms_norm(x, params["final_ln"])
+    logits = x @ params["embed"].T  # (B, V)
+    kc2 = jnp.stack(ks, axis=1)
+    vc2 = jnp.stack(vs, axis=1)
+    return jnp.concatenate(
+        [kc2.reshape(bsz, -1), vc2.reshape(bsz, -1), logits], axis=1)
+
+
+def _adapted_lin(cfg: ModelConfig, base, adapters):
+    """Linear-site dispatch for the plain/adapter serving path."""
+
+    def lin(kind, l, x2d):
+        if kind in ("o", "gate"):
+            return x2d @ base["w" + kind][l].T
+        return adapted_proj(
+            x2d, base["w" + kind][l],
+            adapters["a_" + kind][l], adapters["b_" + kind][l],
+            adapters["mask_" + kind][l], adapters["rankmask_" + kind][l],
+            adapters["scale_" + kind][l:l + 1], None,
+        )
+
+    return lin
+
+
+def _gathered_lin(cfg: ModelConfig, params, row_idx):
+    """Linear-site dispatch for the mixed-tenant gathered path."""
+
+    def lin(kind, l, x2d):
+        if kind in ("o", "gate"):
+            return x2d @ params["w" + kind][l].T
+        return K.gathered_sparse_lora_matmul(
+            x2d, params["w" + kind][l],
+            params[f"a_bank_{kind}"][:, l], params[f"b_bank_{kind}"][:, l],
+            params[f"mask_{kind}"][l], params[f"rankmask_bank_{kind}"][:, l],
+            params[f"scale_bank_{kind}"][:, l], row_idx,
+        )
+
+    return lin
+
+
+def _int4_lin(params):
+    """Linear-site dispatch for the packed-INT4 merged path."""
+
+    def lin(kind, l, x2d):
+        wkey = "w" + kind
+        return K.int4_matmul(
+            x2d, params[f"packed_{wkey}"][l],
+            params[f"qscales_{wkey}"][l], params[f"qzeros_{wkey}"][l],
+        )
+
+    return lin
+
+
+def kv_batch_specs(cfg: ModelConfig, prefill: bool):
+    """Hot-loop inputs of the cached pair.
+
+    prefill re-ships the whole token buffer (it reruns every slot, so
+    admission cost equals one legacy decode step); decode_step ships only
+    the per-row frontier token and absolute position — O(1) in seq_len.
+    """
+    b, s = cfg.batch, cfg.seq_len
+    if prefill:
+        return [("tokens", (b, s), jnp.int32), ("seq_lens", (b,), jnp.int32)]
+    return [
+        ("kv_state", (b, kv_state_elems(cfg)), jnp.float32),
+        ("frontier", (b,), jnp.int32),
+        ("positions", (b,), jnp.int32),
+    ]
+
+
+def prefill_input_specs(cfg: ModelConfig):
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    specs += [(n, s, jnp.float32) for n, s in adapter_param_specs(cfg)]
+    specs += kv_batch_specs(cfg, prefill=True)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig):
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    specs += [(n, s, jnp.float32) for n, s in adapter_param_specs(cfg)]
+    specs += kv_batch_specs(cfg, prefill=False)
+    return specs
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def fn(*args):
+        base, adapters, _, i = _unflatten(cfg, args, qa=False)
+        tokens, lens = args[i], args[i + 1]
+        lin = _adapted_lin(cfg, base, adapters)
+        return (_transformer_prefill(cfg, base, lin, tokens, lens),)
+
+    return fn
+
+
+def make_decode_step(cfg: ModelConfig):
+    def fn(*args):
+        base, adapters, _, i = _unflatten(cfg, args, qa=False)
+        state, frontier, pos = args[i], args[i + 1], args[i + 2]
+        lin = _adapted_lin(cfg, base, adapters)
+        return (_transformer_decode(cfg, base, lin, state, frontier, pos),)
+
+    return fn
+
+
+def gathered_param_specs(cfg: ModelConfig):
+    """Base + shared masks + banks — everything but the batch inputs."""
+    l = cfg.n_layers
+    specs = [(n, s, jnp.float32) for n, s in base_param_specs(cfg)]
+    for m in MODS:
+        out, inp = cfg.mod_dims(m)
+        specs.append((f"mask_{m}", (l, out, inp), jnp.float32))
+    specs += [(n, s, jnp.float32) for n, s in gathered_bank_specs(cfg)]
+    return specs
+
+
+def prefill_gathered_input_specs(cfg: ModelConfig):
+    specs = gathered_param_specs(cfg)
+    specs += kv_batch_specs(cfg, prefill=True)
+    specs.append(("adapter_idx", (cfg.batch,), jnp.int32))
+    return specs
+
+
+def decode_gathered_input_specs(cfg: ModelConfig):
+    specs = gathered_param_specs(cfg)
+    specs += kv_batch_specs(cfg, prefill=False)
+    specs.append(("adapter_idx", (cfg.batch,), jnp.int32))
+    return specs
+
+
+def make_prefill_gathered_step(cfg: ModelConfig):
+    names = [n for n, _, _ in gathered_param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args))
+        tokens, lens, adapter_idx = args[len(names):len(names) + 3]
+        row_idx = jnp.repeat(adapter_idx, cfg.seq_len)
+        lin = _gathered_lin(cfg, params, row_idx)
+        return (_transformer_prefill(cfg, params, lin, tokens, lens),)
+
+    return fn
+
+
+def make_decode_gathered_step(cfg: ModelConfig):
+    names = [n for n, _, _ in gathered_param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args))
+        state, frontier, pos, adapter_idx = args[len(names):len(names) + 4]
+        lin = _gathered_lin(cfg, params, adapter_idx)
+        return (_transformer_decode(cfg, params, lin, state, frontier, pos),)
+
+    return fn
+
+
+def prefill_int4_input_specs(cfg: ModelConfig):
+    return int4_param_specs(cfg) + kv_batch_specs(cfg, prefill=True)
+
+
+def decode_int4_input_specs(cfg: ModelConfig):
+    return int4_param_specs(cfg) + kv_batch_specs(cfg, prefill=False)
+
+
+def make_prefill_int4_step(cfg: ModelConfig):
+    names = [n for n, _, _ in int4_param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args))
+        tokens, lens = args[len(names):len(names) + 2]
+        return (_transformer_prefill(cfg, params, _int4_lin(params),
+                                     tokens, lens),)
+
+    return fn
+
+
+def make_decode_int4_step(cfg: ModelConfig):
+    names = [n for n, _, _ in int4_param_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(names, args))
+        state, frontier, pos = args[len(names):len(names) + 3]
+        return (_transformer_decode(cfg, params, _int4_lin(params),
+                                    state, frontier, pos),)
+
+    return fn
+
+
+def decode_out_input_specs(cfg: ModelConfig):
+    return [("kv_state", (cfg.batch, kv_state_elems(cfg)), jnp.float32)]
+
+
+def make_decode_out_step(cfg: ModelConfig):
+    """Frontier-logits readout: the only per-step device->host transfer."""
+    off = 2 * cfg.n_layers * cfg.seq_len * cfg.d_model
+
+    def fn(state):
+        return (state[:, off:],)
+
+    return fn
 
 
 # --- per-shape utility artifacts -------------------------------------------

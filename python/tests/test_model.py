@@ -407,3 +407,141 @@ class TestSpecs:
                 n *= d
             total += n
         assert total == cfg.param_count()
+
+
+class TestKvCache:
+    """Prefill/decode_step split vs the full-forward reference.
+
+    The rust engine's cached session is a straight transliteration of the
+    chain below (prefill -> greedy append -> decode_step ...), so these
+    are the ground-truth equivalence tests for serve_kv_cache.rs.
+    """
+
+    STEPS = 4
+
+    def _chain(self, cfg, prefill_fn, decode_fn, full_fn, tokens, lens):
+        """Greedy-extend every row STEPS tokens through the cached pair,
+        checking frontier logits/argmax against the full forward over the
+        growing buffer at every step."""
+        off = 2 * cfg.n_layers * cfg.seq_len * cfg.d_model
+        flat = np.array(tokens)
+        lens = np.array(lens, np.int64)
+        state = prefill_fn(jnp.asarray(flat, jnp.int32),
+                           jnp.asarray(lens, jnp.int32))
+        assert state.shape == (cfg.batch, M.kv_state_elems(cfg))
+        for _ in range(self.STEPS):
+            logits_c = np.asarray(state[:, off:])
+            ref = np.asarray(full_fn(jnp.asarray(flat, jnp.int32)))
+            for b in range(cfg.batch):
+                row = ref[b, lens[b] - 1]
+                np.testing.assert_allclose(logits_c[b], row,
+                                           rtol=2e-4, atol=2e-4)
+                assert int(np.argmax(logits_c[b])) == int(np.argmax(row))
+            nxt = np.argmax(logits_c, axis=1).astype(np.int32)
+            pos = lens.astype(np.int32)  # the new token's absolute position
+            for b in range(cfg.batch):
+                flat[b, lens[b]] = nxt[b]
+            lens += 1
+            state = decode_fn(state, jnp.asarray(nxt),
+                              jnp.asarray(pos))
+
+    def _prompts(self, rng, cfg=CFG):
+        tokens = np.asarray(
+            rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len)),
+            np.int32)
+        # staggered prompt lengths so per-row positions genuinely differ
+        lens = np.asarray(
+            [3 + (b % 5) for b in range(cfg.batch)], np.int64)
+        return tokens, lens
+
+    def test_adapter_path_matches_full_forward(self, rng):
+        base = init_base(rng)
+        ad = init_adapters(rng, zero_b=False, mask_sparsity=0.5)
+        tokens, lens = self._prompts(rng)
+        lin = M._adapted_lin(CFG, base, ad)
+        self._chain(
+            CFG,
+            lambda t, n: M._transformer_prefill(CFG, base, lin, t, n),
+            lambda s, f, p: M._transformer_decode(CFG, base, lin, s, f, p),
+            lambda t: M.forward(CFG, base, ad, t),
+            tokens, lens)
+
+    def test_gathered_path_matches_full_forward(self, rng):
+        base = init_base(rng)
+        g = TestForwardGathered()
+        masks, _, banks = g._banks(rng)
+        params = dict(base, **masks, **banks)
+        idx = jnp.asarray(
+            [b % (g.TENANTS + 1) for b in range(CFG.batch)], jnp.int32)
+        tokens, lens = self._prompts(rng)
+        self._chain(
+            CFG,
+            lambda t, n: M._transformer_prefill(
+                CFG, params,
+                M._gathered_lin(CFG, params,
+                                jnp.repeat(idx, CFG.seq_len)), t, n),
+            lambda s, f, p: M._transformer_decode(
+                CFG, params, M._gathered_lin(CFG, params, idx), s, f, p),
+            lambda t: M.forward_gathered(CFG, params, t, idx),
+            tokens, lens)
+
+    def test_int4_path_matches_full_forward(self, rng):
+        params, _ = TestForwardInt4()._int4_params(rng)
+        lin = M._int4_lin(params)
+        tokens, lens = self._prompts(rng)
+        self._chain(
+            CFG,
+            lambda t, n: M._transformer_prefill(CFG, params, lin, t, n),
+            lambda s, f, p: M._transformer_decode(CFG, params, lin, s, f, p),
+            lambda t: M.forward_int4(CFG, params, t),
+            tokens, lens)
+
+    def test_step_builders_jit_and_agree(self, rng):
+        """The exact functions aot.py lowers: spec shapes line up and the
+        jitted prefill/decode/decode_out agree with the raw chain."""
+        base = init_base(rng)
+        ad = init_adapters(rng, zero_b=False)
+        tokens, lens = self._prompts(rng)
+        pspecs = M.prefill_input_specs(CFG)
+        dspecs = M.decode_input_specs(CFG)
+        for specs in (pspecs, dspecs, M.prefill_gathered_input_specs(CFG),
+                      M.decode_gathered_input_specs(CFG),
+                      M.prefill_int4_input_specs(CFG),
+                      M.decode_int4_input_specs(CFG)):
+            names = [n for n, _, _ in specs]
+            assert len(names) == len(set(names)), "duplicate input name"
+        assert [n for n, _, _ in pspecs[-2:]] == ["tokens", "seq_lens"]
+        assert [n for n, _, _ in dspecs[-3:]] == [
+            "kv_state", "frontier", "positions"]
+        args = flat_args(CFG, base, ad)
+        (state,) = jax.jit(M.make_prefill_step(CFG))(
+            *args, jnp.asarray(tokens), jnp.asarray(lens, jnp.int32))
+        (logits,) = jax.jit(M.make_decode_out_step(CFG))(state)
+        ref = M.forward(CFG, base, ad, jnp.asarray(tokens))
+        for b in range(CFG.batch):
+            np.testing.assert_allclose(
+                logits[b], ref[b, int(lens[b]) - 1], rtol=2e-4, atol=2e-4)
+        nxt = jnp.argmax(logits, axis=1).astype(jnp.int32)
+        (state2,) = jax.jit(M.make_decode_step(CFG))(
+            *args, state, nxt, jnp.asarray(lens, jnp.int32))
+        assert state2.shape == (CFG.batch, M.kv_state_elems(CFG))
+        assert bool(jnp.all(jnp.isfinite(state2[:, -CFG.vocab:])))
+
+    def test_free_slot_rows_are_inert(self, rng):
+        """len == 0 rows (free slots) must not disturb live rows — the
+        engine prefills the whole slot bank, occupied or not."""
+        base = init_base(rng)
+        ad = init_adapters(rng, zero_b=False)
+        tokens, lens = self._prompts(rng)
+        lin = M._adapted_lin(CFG, base, ad)
+        s1 = M._transformer_prefill(
+            CFG, base, lin, jnp.asarray(tokens), jnp.asarray(lens, jnp.int32))
+        tokens2 = np.array(tokens)
+        tokens2[CFG.batch - 1] = 0
+        lens2 = np.array(lens)
+        lens2[CFG.batch - 1] = 0
+        s2 = M._transformer_prefill(
+            CFG, base, lin, jnp.asarray(tokens2),
+            jnp.asarray(lens2, jnp.int32))
+        np.testing.assert_allclose(s1[: CFG.batch - 1], s2[: CFG.batch - 1],
+                                   rtol=1e-5, atol=1e-5)

@@ -47,6 +47,17 @@ pub const SITE_SLOW_FORWARD: &str = "engine.slow_forward";
 pub const SITE_WORKER_PANIC: &str = "pool.worker_panic";
 /// An adapter registration is about to replay into a worker's replica.
 pub const SITE_REGISTER: &str = "registry.register";
+/// A KV-cache prefill forward is about to run (checked per prefill, via
+/// the thread-local injector).  A fired prefill fault fails only the
+/// requests that prefill was admitting — never the session's in-flight
+/// rows, whose resident cache pages the failed (functional) update left
+/// untouched.
+pub const SITE_PREFILL: &str = "engine.prefill";
+/// The cached-decode frontier/position vectors are about to upload
+/// (checked per cached step, via the thread-local injector).  Plain
+/// transient error: the decode step is retry-safe, so the session's
+/// normal retry budget absorbs it.
+pub const SITE_CACHE_UPLOAD: &str = "runtime.cache_upload";
 
 /// What happens when a rule fires at its site.
 #[derive(Clone, Debug, PartialEq, Eq)]

@@ -15,6 +15,14 @@
 //!      borrowed slices, uploaded per call without cloning (the train loop
 //!      calls this every step);
 //!   4. scalar knobs.
+//!
+//! The KV-cached decode path rides rule 1: the packed state produced by a
+//! `prefill`/`decode` artifact goes straight back into the session's
+//! device store under its input name (`kv_state`), and the per-step
+//! `frontier`/`positions`/`seq_lens` vectors are `put_i32` into the same
+//! store right before the call — so a decode step resolves every hot input
+//! as a resident handle and the only host→device traffic is two
+//! `(slots,)` i32 vectors.
 
 use super::{Arg, ArtifactSpec, DeviceStore, DType, HostValue};
 use crate::data::Batch;

@@ -148,10 +148,40 @@ impl Executable {
     }
 
     /// Execute with a mix of device-resident buffers (frozen base weights)
-    /// and host values (adapter state, batch).  All artifacts are lowered
-    /// with `return_tuple=True`, so PJRT hands back one tuple buffer which
-    /// we decompose on the host.
+    /// and host values (adapter state, batch).  The classic artifacts are
+    /// lowered with `return_tuple=True`, so PJRT hands back one tuple
+    /// buffer which we decompose on the host.
     pub fn run_mixed(&self, client: &xla::PjRtClient, inputs: &[Arg]) -> Result<Vec<Tensor>> {
+        let outs = self.execute_raw(client, inputs)?;
+        let buf = outs.into_iter().next().context("no output buffer")?;
+        let mut lit = buf.to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!("{}: got {} tuple elements for {} declared outputs",
+                self.spec.file, parts.len(), self.spec.outputs.len());
+        }
+        parts.into_iter().map(literal_to_tensor).collect()
+    }
+
+    /// Execute and hand back the raw replica-0 output buffers *without*
+    /// downloading them.  This is the cached-decode hot path: the KV-state
+    /// artifacts are lowered with an array root (`tuple_out=False` in
+    /// aot.py), so the single returned buffer is the packed per-slot state
+    /// itself and stays device-resident — the caller re-feeds it as the
+    /// next step's `Arg::Buf` input with zero host traffic in between.
+    pub fn run_device(
+        &self,
+        client: &xla::PjRtClient,
+        inputs: &[Arg],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.execute_raw(client, inputs)
+    }
+
+    fn execute_raw(
+        &self,
+        client: &xla::PjRtClient,
+        inputs: &[Arg],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
         let shapes: Vec<(Vec<usize>, DType)> = inputs
             .iter()
             .map(|a| match a {
@@ -241,15 +271,18 @@ impl Executable {
             }
         }
         let out = self.exe.execute_b(&refs)?;
-        let outs = out.into_iter().next().context("no output replica")?;
-        let buf = outs.into_iter().next().context("no output buffer")?;
-        let mut lit = buf.to_literal_sync()?;
-        let parts = lit.decompose_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!("{}: got {} tuple elements for {} declared outputs",
-                self.spec.file, parts.len(), self.spec.outputs.len());
-        }
-        parts.into_iter().map(literal_to_tensor).collect()
+        out.into_iter().next().context("no output replica")
+    }
+}
+
+/// Dims of an array-shaped device buffer; errors on tuple shapes.  The
+/// engine probes a freshly produced KV-state buffer through this before
+/// trusting it — a stale artifact set lowered with a tuple root fails the
+/// probe and the session falls back to the full-forward path.
+pub fn buffer_array_dims(buf: &xla::PjRtBuffer) -> Result<Vec<usize>> {
+    match buf.on_device_shape()? {
+        xla::Shape::Array(arr) => Ok(arr.dims().iter().map(|&d| d as usize).collect()),
+        _ => bail!("tuple-shaped buffer (artifact lowered without an array root)"),
     }
 }
 

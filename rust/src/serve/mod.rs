@@ -135,6 +135,31 @@ pub struct Engine<'a> {
     /// B = 0) — exactly the case the gathered bank's identity slot 0
     /// reproduces, so `adapter_id: None` requests may ride mixed batches
     merged_default: bool,
+    /// force the legacy full-forward decode path even when cache
+    /// artifacts exist — the reference leg for equivalence tests and the
+    /// `full_forward` bench comparison
+    full_forward: Cell<bool>,
+    /// latched when a cache-artifact probe fails (missing file, tuple
+    /// root, wrong state shape): the engine permanently falls back to
+    /// full forwards — correctness over speed, never mid-session mixing
+    cache_broken: Cell<bool>,
+    /// prefill forwards executed by the most recent generate call
+    last_decode_prefills: Cell<usize>,
+}
+
+/// Artifact kinds for one eval kind's KV-cached decode split, resolved
+/// once per forward by [`Engine::cache_plan`].
+struct CachePlan {
+    prefill: &'static str,
+    decode: &'static str,
+}
+
+/// Packed per-slot KV-state row length in f32 elements: per-layer K and V
+/// `(seq, d_model)` panes plus the row's frontier logits.  Must match
+/// `kv_state_elems` in `python/compile/model.py` — the probe in
+/// `cached_forward` enforces it at runtime.
+fn kv_state_elems(h: &crate::runtime::ModelHyper) -> usize {
+    2 * h.n_layers * h.seq_len * h.d_model + h.vocab
 }
 
 impl<'a> Engine<'a> {
@@ -192,6 +217,9 @@ impl<'a> Engine<'a> {
             last_decode_uploads: Cell::new(0),
             resident_bytes: frozen.total_bytes() as u64,
             merged_default,
+            full_forward: Cell::new(false),
+            cache_broken: Cell::new(false),
+            last_decode_prefills: Cell::new(0),
         })
     }
 
@@ -283,6 +311,9 @@ impl<'a> Engine<'a> {
             last_decode_uploads: Cell::new(0),
             resident_bytes: model.resident_bytes() as u64,
             merged_default: true,
+            full_forward: Cell::new(false),
+            cache_broken: Cell::new(false),
+            last_decode_prefills: Cell::new(0),
         })
     }
 
@@ -326,8 +357,61 @@ impl<'a> Engine<'a> {
     }
 
     /// Token-batch uploads performed by the most recent generate call.
+    /// On the KV-cached path tokens upload only at prefills, so this
+    /// equals [`Engine::last_decode_prefills`] there; on the full-forward
+    /// path it counts steps where a live slot changed.
     pub fn last_decode_uploads(&self) -> usize {
         self.last_decode_uploads.get()
+    }
+
+    /// Prefill forwards executed by the most recent generate call (0 when
+    /// the legacy full-forward path ran).
+    pub fn last_decode_prefills(&self) -> usize {
+        self.last_decode_prefills.get()
+    }
+
+    /// Force (`true`) or re-allow (`false`) the legacy full-forward decode
+    /// path.  With cache artifacts present the engine defaults to the
+    /// prefill/decode split; tests and benches flip this to pin the
+    /// reference leg.
+    pub fn set_full_forward(&self, on: bool) {
+        self.full_forward.set(on);
+    }
+
+    /// True when the next decode session for `eval_kind` will run the
+    /// KV-cached prefill/decode split (artifacts present, not forced or
+    /// broken back to full forwards).
+    pub fn kv_cache_active(&self, eval_kind: &str) -> bool {
+        self.cache_plan(eval_kind).is_some()
+    }
+
+    /// The artifact kinds the KV-cached split for `eval_kind` executes
+    /// (prefill, decode, readout), or `None` when it runs full forwards —
+    /// what pool workers pre-compile inside the setup window.
+    pub fn cache_kinds(&self, eval_kind: &str) -> Option<[&'static str; 3]> {
+        self.cache_plan(eval_kind).map(|p| [p.prefill, p.decode, "decode_out"])
+    }
+
+    /// Resolve the KV-cached artifact pair for `eval_kind`, or `None` when
+    /// the session must run legacy full forwards: the knob forces it, a
+    /// probe latched `cache_broken`, the kind has no cached split
+    /// (`eval_qa` merges through fake-quant and stays legacy), or the
+    /// artifact directory predates the split.
+    fn cache_plan(&self, eval_kind: &str) -> Option<CachePlan> {
+        if self.full_forward.get() || self.cache_broken.get() {
+            return None;
+        }
+        let (prefill, decode) = match eval_kind {
+            "eval" => ("prefill", "decode"),
+            GATHERED_KIND => ("prefill_gathered", "decode_gathered"),
+            "eval_int4" => ("prefill_int4", "decode_int4"),
+            _ => return None,
+        };
+        let arts = &self.rt.manifest.config(&self.config).ok()?.artifacts;
+        [prefill, decode, "decode_out"]
+            .iter()
+            .all(|k| arts.contains_key(*k))
+            .then_some(CachePlan { prefill, decode })
     }
 
     /// Greedy-decode a batch of prompts with the engine's default adapter
@@ -372,9 +456,14 @@ impl<'a> Engine<'a> {
             // gathered session's first forward has the vector resident
             slot_idx: vec![0i32; b],
             idx_dirty: true,
+            cache: DeviceStore::new(),
+            pending: vec![false; b],
+            primed: false,
+            kv_elems: kv_state_elems(hyper),
             steps: 0,
             uploads: 0,
             idx_uploads: 0,
+            prefills: 0,
             slot_steps: 0,
         })
     }
@@ -418,6 +507,9 @@ impl<'a> Engine<'a> {
         s.answer[slot].clear();
         s.occupied[slot] = true;
         s.dirty = true;
+        // the slot's cache page (if any) describes the retired occupant;
+        // the next forward must be a prefill to rebuild it from the row
+        s.pending[slot] = true;
         // a recycled slot may still carry a previous tenant's bank index;
         // plain admission means "the session's shared adapter state" =
         // identity slot 0 on the gathered path
@@ -448,12 +540,23 @@ impl<'a> Engine<'a> {
         Ok(slot)
     }
 
-    /// One batched forward over every occupied slot: upload the token
-    /// batch iff a live slot changed since the last upload, run the
-    /// artifact, append one greedy token per live row, and **retire** each
-    /// slot whose row emitted the stop token or hit its cap — returning
-    /// `(slot, answer)` for every retirement so the caller can reply and
-    /// re-fill the slot before the next forward.
+    /// One batched forward over every occupied slot, then append one
+    /// greedy token per live row and **retire** each slot whose row
+    /// emitted the stop token or hit its cap — returning `(slot, answer)`
+    /// for every retirement so the caller can reply and re-fill the slot
+    /// before the next forward.
+    ///
+    /// With cache artifacts present ([`Engine::cache_plan`]) the forward
+    /// is the KV-cached split: a *prefill* (full causal forward rebuilding
+    /// every row's resident cache page) whenever any slot was admitted
+    /// since the last one, else a *decode* that ships only the one-token
+    /// frontier and runs single-position attention against the resident
+    /// cache — O(1) host traffic and O(1) fresh compute per token
+    /// regardless of row length.  Otherwise the legacy full forward runs:
+    /// token batch uploaded iff a live slot changed, logits read at each
+    /// row's last filled position.  Both paths compute the identical
+    /// masked softmax-free argmax, so answers are byte-identical by
+    /// construction (asserted in `tests/serve_kv_cache.rs`).
     ///
     /// A retiring row's stop token is *not* written back into the token
     /// buffer and does not mark it dirty: retired rows never feed another
@@ -461,11 +564,18 @@ impl<'a> Engine<'a> {
     /// re-uploads on steps where nothing live changed.
     ///
     /// With `tenant_device` (a registered tenant's cached buffer set)
-    /// every adapter input resolves to a borrowed device handle and a
-    /// steady-state forward uploads *only* the token batch; without it,
-    /// `host_sets` are re-uploaded per forward (the fallback path).
+    /// every adapter input resolves to a borrowed device handle; without
+    /// it, `host_sets` are re-uploaded per forward (the fallback path).
     /// Device-store precedence mirrors the host path exactly, so cached
     /// and host answers are byte-identical by construction.
+    ///
+    /// Failure contract: a failed *prefill* surfaces as [`PrefillError`]
+    /// after releasing exactly the rows it was admitting (in-flight rows
+    /// keep their resident pages — the functional cache update never
+    /// happened); any other failure is a plain error and the step is
+    /// retry-safe — uploads re-run off their dirty flags, a cached decode
+    /// rewrites the same K/V it wrote last time, and rows only advance on
+    /// success.
     pub fn decode_step(
         &self,
         s: &mut DecodeSession,
@@ -477,6 +587,72 @@ impl<'a> Engine<'a> {
         if active == 0 {
             bail!("decode_step on a session with no occupied slots");
         }
+        let cached = match self.cache_plan(eval_kind) {
+            Some(plan) => self.cached_forward(s, tenant_device, host_sets, &plan)?,
+            None => None,
+        };
+        let logits = match cached {
+            Some(t) => StepLogits::Frontier(t),
+            // no plan, or a probe just latched `cache_broken`: the legacy
+            // forward is always correct here — the dirty flags guarantee
+            // the token buffer re-uploads whatever the cache path skipped
+            None => StepLogits::Full(self.full_forward(s, tenant_device, host_sets, eval_kind)?),
+        };
+        s.steps += 1;
+        s.slot_steps += active;
+        let (seq, v) = (s.seq, s.vocab);
+        let stop = self.stop_id as usize;
+        let mut retired = Vec::new();
+        for slot in 0..s.capacity {
+            if !s.occupied[slot] {
+                continue;
+            }
+            let pos = s.len[slot] - 1; // logits at last filled position
+            let row = logits.row(slot, pos, seq, v);
+            // greedy argmax; the stop token is masked out while the slot
+            // is under its min_new floor
+            let mask_stop = s.len[slot] < s.min_len[slot];
+            let mut best = if mask_stop && stop == 0 { 1 } else { 0 };
+            for t in (best + 1)..v {
+                if mask_stop && t == stop {
+                    continue;
+                }
+                if row[t] > row[best] {
+                    best = t;
+                }
+            }
+            let hit_stop = best == stop;
+            if !hit_stop {
+                s.answer[slot].push(self.tok.decode_one(best as i32)?);
+            }
+            if hit_stop || s.len[slot] + 1 >= s.limit[slot] || s.len[slot] >= seq - 1 {
+                // retire: free the slot, don't touch flat / dirty.  The
+                // slot's cache page is implicitly invalidated: re-filling
+                // sets `pending`, and the prefill that follows rebuilds it
+                // from the new occupant's row
+                s.occupied[slot] = false;
+                s.len[slot] = 0;
+                retired.push((slot, std::mem::take(&mut s.answer[slot])));
+            } else {
+                s.flat[slot * seq + s.len[slot]] = best as i32;
+                s.len[slot] += 1;
+                s.dirty = true;
+            }
+        }
+        Ok(retired)
+    }
+
+    /// The legacy one-shot forward: whole `(capacity, seq)` token buffer
+    /// through the eval artifact, full `(capacity, seq, vocab)` logits
+    /// back.  Pre-split reference path, still the only path for artifact
+    /// kinds without a cached pair.
+    fn full_forward(
+        &self,
+        s: &mut DecodeSession,
+        tenant_device: Option<&DeviceStore>,
+        host_sets: &[&ParamSet],
+        eval_kind: &str,
+    ) -> Result<crate::tensor::Tensor> {
         let exe = self.rt.executable(&self.config, eval_kind)?;
         if s.dirty {
             s.step_store
@@ -499,47 +675,199 @@ impl<'a> Engine<'a> {
             devices.push(d);
         }
         let args = build_args(&exe.spec, &devices, host_sets, None, &[])?;
-        let outs = exe.run_mixed(&self.rt.client, &args)?;
-        s.steps += 1;
-        s.slot_steps += active;
-        let logits = &outs[0];
-        let (seq, v) = (s.seq, s.vocab);
-        let stop = self.stop_id as usize;
-        let mut retired = Vec::new();
-        for slot in 0..s.capacity {
-            if !s.occupied[slot] {
-                continue;
-            }
-            let pos = s.len[slot] - 1; // logits at last filled position
-            let row = &logits.data()[slot * seq * v + pos * v..slot * seq * v + (pos + 1) * v];
-            // greedy argmax; the stop token is masked out while the slot
-            // is under its min_new floor
-            let mask_stop = s.len[slot] < s.min_len[slot];
-            let mut best = if mask_stop && stop == 0 { 1 } else { 0 };
-            for t in (best + 1)..v {
-                if mask_stop && t == stop {
-                    continue;
+        let mut outs = exe.run_mixed(&self.rt.client, &args)?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// One KV-cached forward: run `plan.prefill` when any slot was
+    /// admitted since the last prefill (rebuilding every occupied row's
+    /// cache page from the token buffer), else `plan.decode` (frontier
+    /// token + position vectors only, single-position attention against
+    /// the resident packed state).  Either way the artifact's array-root
+    /// output buffer goes straight back into the session's cache store —
+    /// it never touches the host — and `decode_out` reads just the
+    /// `(capacity, vocab)` frontier logits pane out of it.
+    ///
+    /// Returns `Ok(None)` after latching `cache_broken` when a probe
+    /// fails (artifact missing/uncompilable, tuple-shaped root, state
+    /// shape mismatch): the caller falls back to the legacy forward *in
+    /// the same step*, so a stale artifact directory degrades to the
+    /// pre-split behaviour instead of failing requests.
+    fn cached_forward(
+        &self,
+        s: &mut DecodeSession,
+        tenant_device: Option<&DeviceStore>,
+        host_sets: &[&ParamSet],
+        plan: &CachePlan,
+    ) -> Result<Option<crate::tensor::Tensor>> {
+        let needs_prefill = !s.primed || s.pending.iter().any(|&p| p);
+        let kind = if needs_prefill { plan.prefill } else { plan.decode };
+        let (Ok(exe), Ok(exe_out)) = (
+            self.rt.executable(&self.config, kind),
+            self.rt.executable(&self.config, "decode_out"),
+        ) else {
+            self.cache_broken.set(true);
+            return Ok(None);
+        };
+        if needs_prefill {
+            if let Err(e) = self.run_prefill(s, tenant_device, host_sets, &exe) {
+                if self.cache_broken.get() {
+                    return Ok(None); // probe failed: fall back, fail nothing
                 }
-                if row[t] > row[best] {
-                    best = t;
+                // release exactly the rows this prefill was admitting;
+                // in-flight rows keep decoding off their resident pages
+                let mut failed = Vec::new();
+                for slot in 0..s.capacity {
+                    if s.pending[slot] && s.occupied[slot] {
+                        s.release(slot);
+                        failed.push(slot);
+                    }
                 }
+                return Err(anyhow::Error::new(PrefillError {
+                    slots: failed,
+                    message: format!("{e:#}"),
+                }));
             }
-            let hit_stop = best == stop;
-            if !hit_stop {
-                s.answer[slot].push(self.tok.decode_one(best as i32)?);
+        } else if let Err(e) = self.run_cached_decode(s, tenant_device, host_sets, &exe) {
+            if self.cache_broken.get() {
+                return Ok(None);
             }
-            if hit_stop || s.len[slot] + 1 >= s.limit[slot] || s.len[slot] >= seq - 1 {
-                // retire: free the slot, don't touch flat / dirty
-                s.occupied[slot] = false;
-                s.len[slot] = 0;
-                retired.push((slot, std::mem::take(&mut s.answer[slot])));
-            } else {
-                s.flat[slot * seq + s.len[slot]] = best as i32;
-                s.len[slot] += 1;
-                s.dirty = true;
+            return Err(e);
+        }
+        // frontier logits live in the packed state; decode_out slices them
+        let args = build_args(&exe_out.spec, &[&s.cache], &[], None, &[])?;
+        let outs = exe_out.run_device(&self.rt.client, &args)?;
+        let buf = outs.first().context("decode_out produced no output buffer")?;
+        match crate::runtime::buffer_array_dims(buf) {
+            Ok(dims) if dims == [s.capacity, s.vocab] => {}
+            // a mis-shaped readout means stale decode_out artifacts: latch
+            // broken and recompute this step's logits the legacy way (the
+            // token buffer, not the cache, is the source of truth)
+            _ => {
+                self.cache_broken.set(true);
+                return Ok(None);
             }
         }
-        Ok(retired)
+        let logits = crate::runtime::buffer_to_tensor(buf, &[s.capacity, s.vocab])?;
+        Ok(Some(logits))
+    }
+
+    /// The prefill leg of [`Engine::cached_forward`]: upload the token
+    /// buffer (iff dirty — an admission always dirtied it) and per-row
+    /// lengths, run the full causal forward, and install the fresh packed
+    /// state as the session's cache page set.  Latches `cache_broken`
+    /// (and errors) when the output shape probe fails.
+    fn run_prefill(
+        &self,
+        s: &mut DecodeSession,
+        tenant_device: Option<&DeviceStore>,
+        host_sets: &[&ParamSet],
+        exe: &crate::runtime::Executable,
+    ) -> Result<()> {
+        crate::faults::check_thread(crate::faults::SITE_PREFILL)?;
+        if s.dirty {
+            s.step_store
+                .put_i32(&self.rt.client, "tokens", &[s.capacity, s.seq], &s.flat)?;
+            s.dirty = false;
+            s.uploads += 1;
+        }
+        // free rows carry len 0; the artifact clamps their frontier gather
+        // and their pages are never read (every admission re-prefills)
+        let lens: Vec<i32> = s.len.iter().map(|&l| l as i32).collect();
+        s.step_store.put_i32(&self.rt.client, "seq_lens", &[s.capacity], &lens)?;
+        if s.idx_dirty && exe.spec.inputs.iter().any(|i| i.name == "adapter_idx") {
+            s.step_store.put_i32(&self.rt.client, "adapter_idx", &[s.capacity], &s.slot_idx)?;
+            s.idx_dirty = false;
+            s.idx_uploads += 1;
+        }
+        let buf = {
+            let mut devices: Vec<&DeviceStore> = vec![&s.step_store, &self.device];
+            if let Some(d) = tenant_device {
+                devices.push(d);
+            }
+            let args = build_args(&exe.spec, &devices, host_sets, None, &[])?;
+            let mut outs = exe.run_device(&self.rt.client, &args)?;
+            if outs.is_empty() {
+                bail!("prefill produced no output buffer");
+            }
+            outs.swap_remove(0)
+        };
+        self.probe_state(s, &buf)?;
+        s.cache.put("kv_state", buf);
+        s.pending.iter_mut().for_each(|p| *p = false);
+        s.primed = true;
+        s.prefills += 1;
+        Ok(())
+    }
+
+    /// The steady-state leg: ship the `(capacity,)` frontier-token and
+    /// position vectors (8 bytes/slot — the *only* host→device traffic),
+    /// run single-position attention against the resident state, and swap
+    /// the functionally-updated state back in.  Retry-safe: re-running
+    /// rewrites the same K/V at the same positions and reproduces the
+    /// same frontier logits.
+    fn run_cached_decode(
+        &self,
+        s: &mut DecodeSession,
+        tenant_device: Option<&DeviceStore>,
+        host_sets: &[&ParamSet],
+        exe: &crate::runtime::Executable,
+    ) -> Result<()> {
+        crate::faults::check_thread(crate::faults::SITE_CACHE_UPLOAD)?;
+        let mut frontier = vec![0i32; s.capacity];
+        let mut positions = vec![0i32; s.capacity];
+        for slot in 0..s.capacity {
+            // free rows pin position 0 / token 0: rows are computed
+            // independently, so their garbage output is never read
+            if s.occupied[slot] {
+                frontier[slot] = s.flat[slot * s.seq + s.len[slot] - 1];
+                positions[slot] = (s.len[slot] - 1) as i32;
+            }
+        }
+        s.step_store.put_i32(&self.rt.client, "frontier", &[s.capacity], &frontier)?;
+        s.step_store.put_i32(&self.rt.client, "positions", &[s.capacity], &positions)?;
+        if s.idx_dirty && exe.spec.inputs.iter().any(|i| i.name == "adapter_idx") {
+            s.step_store.put_i32(&self.rt.client, "adapter_idx", &[s.capacity], &s.slot_idx)?;
+            s.idx_dirty = false;
+            s.idx_uploads += 1;
+        }
+        let buf = {
+            let mut devices: Vec<&DeviceStore> = vec![&s.cache, &s.step_store, &self.device];
+            if let Some(d) = tenant_device {
+                devices.push(d);
+            }
+            let args = build_args(&exe.spec, &devices, host_sets, None, &[])?;
+            let mut outs = exe.run_device(&self.rt.client, &args)?;
+            if outs.is_empty() {
+                bail!("decode produced no output buffer");
+            }
+            outs.swap_remove(0)
+        };
+        self.probe_state(s, &buf)?;
+        s.cache.put("kv_state", buf);
+        Ok(())
+    }
+
+    /// Validate a cache-artifact output against the packed-state contract
+    /// (`(capacity, kv_elems)` f32 array root); on mismatch latch
+    /// `cache_broken` so the session — and every later one — falls back
+    /// to full forwards instead of decoding against garbage.
+    fn probe_state(&self, s: &DecodeSession, buf: &xla::PjRtBuffer) -> Result<()> {
+        let dims = match crate::runtime::buffer_array_dims(buf) {
+            Ok(d) => d,
+            Err(e) => {
+                self.cache_broken.set(true);
+                return Err(e);
+            }
+        };
+        if dims != [s.capacity, s.kv_elems] {
+            self.cache_broken.set(true);
+            bail!(
+                "kv_state shape {:?} != expected [{}, {}] (stale artifacts?)",
+                dims, s.capacity, s.kv_elems
+            );
+        }
+        Ok(())
     }
 
     /// Run-to-completion decode of one batch: admit every prompt up front,
@@ -569,9 +897,58 @@ impl<'a> Engine<'a> {
         }
         self.last_decode_steps.set(s.steps());
         self.last_decode_uploads.set(s.uploads());
+        self.last_decode_prefills.set(s.prefills());
         Ok(answers)
     }
 }
+
+/// Logits produced by one decode step, abstracting over the two forward
+/// paths' output layouts so the argmax/retire loop is shared verbatim.
+enum StepLogits {
+    /// `(capacity, seq, vocab)` from the legacy full forward
+    Full(crate::tensor::Tensor),
+    /// `(capacity, vocab)` frontier pane from the KV-cached `decode_out`
+    Frontier(crate::tensor::Tensor),
+}
+
+impl StepLogits {
+    /// `slot`'s logits at its last filled position (`pos` = len-1; the
+    /// cached pane already *is* that position, by construction).
+    fn row(&self, slot: usize, pos: usize, seq: usize, v: usize) -> &[f32] {
+        match self {
+            StepLogits::Full(t) => &t.data()[slot * seq * v + pos * v..][..v],
+            StepLogits::Frontier(t) => &t.data()[slot * v..][..v],
+        }
+    }
+}
+
+/// Marker error for a failed prefill forward: the engine already released
+/// exactly the rows that prefill was admitting (their requests must be
+/// requeued or failed by the driver), while every in-flight row's
+/// resident cache page is untouched — the functional state update never
+/// happened — so the session keeps decoding.  Surfaced to clients (only
+/// once a request exhausts its re-admission budget) as
+/// [`ServeError::EngineFailure`]; this type never crosses the serve API.
+#[derive(Debug)]
+pub(crate) struct PrefillError {
+    /// already-released session slots whose admissions the prefill was
+    /// absorbing
+    pub(crate) slots: Vec<usize>,
+    pub(crate) message: String,
+}
+
+impl std::fmt::Display for PrefillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "prefill failed for {} admitted row(s): {}",
+            self.slots.len(),
+            self.message
+        )
+    }
+}
+
+impl std::error::Error for PrefillError {}
 
 /// Persistent slot-based decode state for one same-tenant continuous
 /// batch: a flattened `(batch, seq)` token buffer plus per-slot
@@ -600,10 +977,28 @@ pub struct DecodeSession {
     /// its own dirty flag
     slot_idx: Vec<i32>,
     idx_dirty: bool,
+    /// device-resident packed K/V + frontier-logits state (`kv_state`,
+    /// `(capacity, kv_elems)` f32), owned by the session: dropping the
+    /// session frees every cache page at once
+    cache: DeviceStore,
+    /// per-slot "admitted since the last successful prefill" flag — any
+    /// set bit makes the next forward a prefill, which rebuilds every
+    /// occupied row's page from the token buffer (page invalidation on
+    /// retire/re-fill is exactly this bit)
+    pending: Vec<bool>,
+    /// true once a prefill has populated `cache` this session
+    primed: bool,
+    /// packed-state row length in f32 elements (from the hyperparams; the
+    /// engine probes artifact outputs against it)
+    kv_elems: usize,
     steps: usize,
     uploads: usize,
     /// `adapter_idx` uploads so far (gathered sessions only; `<= steps`)
     idx_uploads: usize,
+    /// prefill forwards so far (`<= steps`; 0 on the full-forward path).
+    /// Token uploads only happen at prefills on the cached path, so
+    /// `uploads == prefills` there
+    prefills: usize,
     /// sum over forwards of occupied slots — the occupancy numerator (and
     /// exactly the number of generated tokens: one per live slot per step)
     slot_steps: usize,
@@ -637,6 +1032,24 @@ impl DecodeSession {
         self.idx_uploads
     }
 
+    /// Prefill forwards so far (0 on the full-forward path); cached
+    /// decode steps are `steps() - prefills()`.
+    pub fn prefills(&self) -> usize {
+        self.prefills
+    }
+
+    /// Bytes of packed K/V + frontier state resident on the device for
+    /// this session (0 until the first prefill, then the full page set —
+    /// pages are slot-indexed panes of one `(capacity, kv_elems)` f32
+    /// buffer, so residency is all-or-nothing by construction).
+    pub fn cache_resident_bytes(&self) -> u64 {
+        if self.primed {
+            (self.capacity * self.kv_elems * 4) as u64
+        } else {
+            0
+        }
+    }
+
     /// Occupied-slot-forwards so far == generated tokens so far.
     pub fn slot_steps(&self) -> usize {
         self.slot_steps
@@ -650,6 +1063,8 @@ impl DecodeSession {
         self.occupied[slot] = false;
         self.len[slot] = 0;
         self.answer[slot].clear();
+        // a released row must not force (or survive into) a prefill
+        self.pending[slot] = false;
     }
 
     /// Mean fraction of slots doing useful work per forward.
@@ -895,6 +1310,9 @@ impl ServeObs {
             queue: reg.series("serve_queue_ms", &tl),
             decode_steps: reg.counter("serve_decode_steps_total", &wl),
             decode_step_ms: reg.histogram("serve_decode_step_ms", &wl, DECODE_STEP_MS_BOUNDS),
+            prefills: reg.counter("serve_prefills_total", &wl),
+            prefill_ms: reg.histogram("serve_prefill_ms", &wl, DECODE_STEP_MS_BOUNDS),
+            cache_bytes: reg.gauge("serve_cache_resident_bytes", &wl),
             uploads: reg.counter("runtime_uploads_total", &wl),
             upload_bytes: reg.counter("runtime_upload_bytes_total", &wl),
             upload_step_bytes: reg.histogram(
@@ -992,6 +1410,12 @@ pub(crate) struct SessionRecorder {
     queue: Arc<Series>,
     decode_steps: Arc<Counter>,
     decode_step_ms: Arc<Histogram>,
+    /// prefill forwards (cache-page rebuilds); a strict subset of
+    /// `decode_steps`, with their latency broken out in `prefill_ms`
+    prefills: Arc<Counter>,
+    prefill_ms: Arc<Histogram>,
+    /// packed K/V + frontier state resident on this worker's device
+    cache_bytes: Arc<Gauge>,
     uploads: Arc<Counter>,
     upload_bytes: Arc<Counter>,
     upload_step_bytes: Arc<Histogram>,
@@ -1135,21 +1559,58 @@ impl SessionRecorder {
         }
     }
 
-    /// One decode forward: latency, occupancy level, and what the step
-    /// moved host→device (token-batch upload flag + byte delta).
-    pub(crate) fn step(&self, step_ms: f64, active: usize, uploaded: bool, upload_bytes: u64) {
+    /// One decode forward: latency, occupancy level, what the step moved
+    /// host→device (token-batch upload flag + byte delta), and the
+    /// session's device-resident cache footprint after the step.
+    pub(crate) fn step(
+        &self,
+        step_ms: f64,
+        active: usize,
+        uploaded: bool,
+        upload_bytes: u64,
+        cache_bytes: u64,
+    ) {
         if !self.enabled {
             return;
         }
         self.decode_steps.inc();
         self.decode_step_ms.observe(step_ms);
         self.occupied.set(active as f64);
+        self.cache_bytes.set(cache_bytes as f64);
         self.upload_step_bytes.observe(upload_bytes as f64);
         if uploaded {
             self.uploads.inc();
         }
         if upload_bytes > 0 {
             self.upload_bytes.add(upload_bytes);
+        }
+    }
+
+    /// The forward just recorded by [`SessionRecorder::step`] was a
+    /// prefill: count it and break its latency out of the step histogram.
+    pub(crate) fn prefill(&self, step_ms: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.prefills.inc();
+        self.prefill_ms.observe(step_ms);
+    }
+
+    /// `req`'s prompt was built into a cache page by the prefill that
+    /// just ran — the trace span between its `admit` and `first_token`.
+    pub(crate) fn prefill_span(&self, req: &Request) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(t) = &self.trace {
+            t.event(
+                "prefill",
+                vec![
+                    ("req", Json::Num(req.id as f64)),
+                    ("tenant", Json::Str(self.tenant.clone())),
+                    ("worker", Json::Num(self.worker as f64)),
+                ],
+            );
         }
     }
 }
@@ -1420,6 +1881,7 @@ pub(crate) fn run_decode_session(
         let pre = step_rec
             .enabled()
             .then(|| (Instant::now(), session.uploads(), crate::runtime::thread_upload_bytes()));
+        let prefills_before = session.prefills();
         // the forward, behind the chaos harness's failpoints (no-ops when
         // injection is disabled); `decode_step` is retry-safe — the token
         // upload re-runs off its dirty flag and rows only advance on
@@ -1432,6 +1894,31 @@ pub(crate) fn run_decode_session(
         {
             Ok(r) => r,
             Err(e) => {
+                if let Some(pe) = e.downcast_ref::<PrefillError>() {
+                    // a failed prefill fails only the rows it was
+                    // admitting — the engine already released them and
+                    // in-flight rows keep their resident pages.  Charge
+                    // each affected request one attempt: over budget
+                    // fails typed, the rest requeue for re-admission
+                    // (and a fresh prefill) next iteration.
+                    for &slot in &pe.slots {
+                        let Some((mut req, _, _)) = slots[slot].take() else { continue };
+                        req.attempts += 1;
+                        if req.attempts > policy.max_retries {
+                            let rec = recs.get(&req.adapter_id);
+                            rec.error(&req, 0, &pe.message);
+                            let _ = req.reply.send(Err(anyhow::Error::new(
+                                ServeError::EngineFailure {
+                                    attempts: req.attempts,
+                                    message: pe.message.clone(),
+                                },
+                            )));
+                        } else {
+                            waiting.push_back(req);
+                        }
+                    }
+                    continue;
+                }
                 if retries >= policy.max_retries {
                     failure = Some(format!("{e:#}"));
                     break;
@@ -1443,21 +1930,33 @@ pub(crate) fn run_decode_session(
                 continue;
             }
         };
+        let was_prefill = session.prefills() > prefills_before;
         if let Some((t0, uploads_before, bytes_before)) = pre {
+            let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             step_rec.step(
-                t0.elapsed().as_secs_f64() * 1e3,
+                step_ms,
                 active,
                 session.uploads() > uploads_before,
                 crate::runtime::thread_upload_bytes().saturating_sub(bytes_before),
+                session.cache_resident_bytes(),
             );
+            if was_prefill {
+                step_rec.prefill(step_ms);
+            }
         }
-        // every occupied row went through that forward: first tokens
+        // every occupied row went through that forward: first tokens (and
+        // the prefill span that built the row's cache page — a request's
+        // first forward is a prefill whenever the cached path is active)
         let now = Instant::now();
         for entry in slots.iter_mut().flatten() {
             if entry.1 {
                 entry.1 = false;
+                let rec = recs.get(&entry.0.adapter_id);
+                if was_prefill {
+                    rec.prefill_span(&entry.0);
+                }
                 let waited = now.saturating_duration_since(entry.0.enqueued);
-                recs.get(&entry.0.adapter_id).first_token(&entry.0, waited.as_secs_f64() * 1e3);
+                rec.first_token(&entry.0, waited.as_secs_f64() * 1e3);
             }
         }
         for (slot, answer) in retired {

@@ -357,6 +357,12 @@ fn worker_serve(
     // (tenants on a different eval kind still compile lazily, once)
     rt.executable(&spec.config, &spec.eval_kind)
         .with_context(|| format!("worker {wid}: compiling '{}'", spec.eval_kind))?;
+    // the KV-cached split compiles in the same setup window when present
+    // (stale artifact dirs skip it and the engine runs full forwards)
+    for kind in engine.cache_kinds(&spec.eval_kind).into_iter().flatten() {
+        rt.executable(&spec.config, kind)
+            .with_context(|| format!("worker {wid}: compiling '{kind}'"))?;
+    }
     let mut registry = AdapterRegistry::new(spec.registry_capacity.max(source.capacity()));
     registry.bind_obs(obs.registry(), wid);
     if let Some(t) = obs.trace() {
@@ -382,6 +388,10 @@ fn worker_serve(
             {
                 rt.executable(&spec.config, GATHERED_KIND)
                     .with_context(|| format!("worker {wid}: compiling '{GATHERED_KIND}'"))?;
+                for kind in engine.cache_kinds(GATHERED_KIND).into_iter().flatten() {
+                    rt.executable(&spec.config, kind)
+                        .with_context(|| format!("worker {wid}: compiling '{kind}'"))?;
+                }
             }
         }
     }

@@ -10,14 +10,17 @@
 //! ([`ServeError`]) with matching counters.
 
 use sqft::data::{Dataset, Sample, Task, Tokenizer};
-use sqft::faults::{FaultInjector, FaultKind, FaultRule, SITE_FORWARD, SITE_WORKER_PANIC};
+use sqft::faults::{
+    FaultInjector, FaultKind, FaultRule, SITE_CACHE_UPLOAD, SITE_FORWARD, SITE_PREFILL,
+    SITE_WORKER_PANIC,
+};
 use sqft::model::{checkpoint, init_base, ParamSet};
 use sqft::peft::Method;
 use sqft::pipeline;
 use sqft::runtime::{args::build_args, DeviceStore, HostValue, Manifest, Runtime};
 use sqft::serve::{
-    serve_pool_obs, AdapterEntry, EngineSpec, PoolOpts, Request, Scheduler, SchedulerOpts,
-    ServeError, ServeObs, SharedAdapterSource,
+    serve_pool_obs, AdapterEntry, Engine, EngineSpec, PoolOpts, Request, Scheduler,
+    SchedulerOpts, ServeError, ServeObs, SharedAdapterSource,
 };
 use sqft::tensor::{Rng, Tensor};
 use sqft::util::json::Json;
@@ -351,6 +354,106 @@ fn worker_panic_requeues_the_claimed_batch() {
     let snap = obs.registry().snapshot();
     assert!(snap.sum("serve_worker_crashes_total") >= 1.0, "crash must be counted");
     assert!(snap.sum("serve_sessions_rebuilt_total") >= 1.0, "requeue must be counted");
+}
+
+/// A failed prefill (`engine.prefill`) fails only the requests it was
+/// admitting: in-flight rows keep their resident cache pages and finish
+/// with fault-free bytes.  With retry budget 0 the admitted requests get
+/// a typed `EngineFailure`; with budget left they are requeued,
+/// re-admitted, and recover completely.
+#[test]
+fn injected_prefill_failure_fails_only_the_admitted_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let f = serve_fixture(&rt, &dir);
+    {
+        let probe = Engine::new(&rt, "sqft-tiny", &f.spec.frozen, None, "eval", 4).unwrap();
+        if !probe.kv_cache_active("eval") {
+            eprintln!("skipping: artifacts predate the KV-cache split");
+            return;
+        }
+    }
+    // 12 requests over an 8-slot artifact: the overflow wave can only be
+    // admitted by mid-session refills, so the *second* prefill of the run
+    // is a refill rebuild with rows already in flight
+    let reqs = chaos_requests(&f, 12);
+    let waiting = reqs.len() - f.hyper.batch;
+
+    let (baseline, _) = run_pool_chaos(&f, &reqs, 1, 2, FaultInjector::disabled());
+    let baseline: Vec<String> =
+        baseline.into_iter().map(|r| r.expect("fault-free run must not error")).collect();
+
+    // budget 0: the faulted refill prefill fails its admitted requests —
+    // and nothing else; every in-flight row answers baseline bytes
+    let inj = FaultInjector::seeded(29)
+        .with_rule(FaultRule::nth(SITE_PREFILL, FaultKind::Error, 1));
+    let (results, _obs) = run_pool_chaos(&f, &reqs, 1, 0, inj.clone());
+    assert_eq!(inj.fires(SITE_PREFILL), 1);
+    let mut failed = 0usize;
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(ans) => assert_eq!(ans, &baseline[i],
+                "in-flight request {i} diverged after a refill-prefill failure"),
+            Err(e) => {
+                let se = ServeError::of(e).expect("typed error expected");
+                assert!(matches!(se, ServeError::EngineFailure { .. }), "got {se}");
+                failed += 1;
+            }
+        }
+    }
+    assert!(failed >= 1, "the faulted prefill must fail its admitted requests");
+    assert!(failed <= waiting,
+        "blast radius {failed} exceeded the refill wave of {waiting}: \
+the prefill failure leaked into in-flight rows");
+
+    // budget left: the same failure only costs the admitted requests one
+    // re-admission attempt — everything recovers with baseline bytes
+    let inj = FaultInjector::seeded(29)
+        .with_rule(FaultRule::nth(SITE_PREFILL, FaultKind::Error, 1));
+    let (results, obs) = run_pool_chaos(&f, &reqs, 1, 2, inj.clone());
+    assert_eq!(inj.fires(SITE_PREFILL), 1);
+    for (i, r) in results.iter().enumerate() {
+        let ans = r.as_ref().expect("re-admission must recover the failed prefill's rows");
+        assert_eq!(ans, &baseline[i], "request {i} diverged after prefill recovery");
+    }
+    let snap = obs.registry().snapshot();
+    assert_eq!(snap.sum("serve_requests_total") as usize, reqs.len());
+}
+
+/// A transient cache-upload failure (`runtime.cache_upload`, the cached
+/// decode's frontier shipment) is absorbed entirely by the in-session
+/// retry budget: the cached step is retry-safe (re-running rewrites the
+/// same K/V and reproduces the same logits), so every answer stays
+/// byte-identical and the retry is counted.
+#[test]
+fn transient_cache_upload_failure_is_absorbed_by_retry() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let f = serve_fixture(&rt, &dir);
+    {
+        let probe = Engine::new(&rt, "sqft-tiny", &f.spec.frozen, None, "eval", 4).unwrap();
+        if !probe.kv_cache_active("eval") {
+            eprintln!("skipping: artifacts predate the KV-cache split");
+            return;
+        }
+    }
+    let reqs = chaos_requests(&f, 12);
+
+    let (baseline, _) = run_pool_chaos(&f, &reqs, 1, 2, FaultInjector::disabled());
+    let baseline: Vec<String> =
+        baseline.into_iter().map(|r| r.expect("fault-free run must not error")).collect();
+
+    let inj = FaultInjector::seeded(31)
+        .with_rule(FaultRule::nth(SITE_CACHE_UPLOAD, FaultKind::Error, 0));
+    let (results, obs) = run_pool_chaos(&f, &reqs, 1, 2, inj.clone());
+    assert_eq!(inj.fires(SITE_CACHE_UPLOAD), 1);
+    for (i, r) in results.iter().enumerate() {
+        let ans = r.as_ref().expect("a transient cached-decode failure must be retried");
+        assert_eq!(ans, &baseline[i], "request {i} diverged after a cached-step retry");
+    }
+    let snap = obs.registry().snapshot();
+    assert!(snap.sum("serve_retries_total") >= 1.0, "the retry must be counted");
+    assert_eq!(snap.sum("serve_requests_total") as usize, reqs.len());
 }
 
 /// A client that goes away (drops its [`CancelHandle`]) gets a typed

@@ -84,7 +84,11 @@ fn int4_serving_matches_fake_quant_reference_and_stays_packed() {
     assert_eq!(ans_i4, ans_f32, "INT4 serving diverged from fake-quant serving");
 
     // (c) steady-state decode ships only the token batch: all weight
-    // inputs are device-resident packed u8 / f32 buffers
+    // inputs are device-resident packed u8 / f32 buffers.  This is the
+    // legacy full-forward upload contract, so pin that leg (the cached
+    // split's tighter per-step accounting lives in serve_kv_cache.rs;
+    // (b) above already exercised it for both engines)
+    engine_i4.set_full_forward(true);
     let scope = UploadScope::begin();
     let _ = engine_i4.generate_batch(&prompts).unwrap();
     let token_batch = (hyper.batch * hyper.seq_len * 4) as u64;

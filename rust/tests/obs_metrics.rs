@@ -208,23 +208,78 @@ fn pool_counters_reconcile_with_trace_spans() {
     }
     assert_eq!(stats.per_worker.iter().map(|w| w.served).sum::<usize>(), served);
 
-    // bytewise upload reconciliation: every tenant is device-resident, so
-    // a decode step moves nothing, one token batch, and/or one per-row
-    // `adapter_idx` vector (the gathered mixed-tenant path) — never a
-    // partial buffer and never adapter weights
+    // bytewise upload reconciliation: every tenant is device-resident,
+    // so what a forward moves is fully determined by its kind.  On the
+    // KV-cached split a prefill ships the token batch plus the `seq_lens`
+    // vector, every other forward ships only the frontier + positions
+    // vectors, and gathered mixed sessions add whole per-row
+    // `adapter_idx` vectors — never a partial buffer and never adapter
+    // weights.  (Artifact dirs built before the split carry no prefill
+    // kinds; those runs fall back to the legacy token-batch-per-step
+    // contract, reconciled in the `else` arm so the test stays exact on
+    // both.)
     let token_batch_bytes = (f.hyper.batch * f.hyper.seq_len * 4) as u64;
-    let idx_bytes = (f.hyper.batch * 4) as u64;
+    let vec_bytes = (f.hyper.batch * 4) as u64;
     let steps = snap.sum("serve_decode_steps_total") as u64;
     let uploads = snap.sum("runtime_uploads_total") as u64;
+    let prefills = snap.sum("serve_prefills_total") as u64;
     assert!(uploads >= 1);
     assert!(uploads <= steps);
     let total_bytes = snap.sum("runtime_upload_bytes_total") as u64;
-    assert!(total_bytes >= uploads * token_batch_bytes);
-    let idx_total = total_bytes - uploads * token_batch_bytes;
-    assert_eq!(idx_total % idx_bytes, 0,
+    let non_idx_bytes = if prefills > 0 {
+        // token batches move exactly at prefill forwards, nowhere else
+        assert_eq!(uploads, prefills,
+            "cached decode must confine token-batch uploads to prefills");
+        prefills * (token_batch_bytes + vec_bytes) + (steps - prefills) * 2 * vec_bytes
+    } else {
+        uploads * token_batch_bytes
+    };
+    assert!(total_bytes >= non_idx_bytes,
+        "{total_bytes} bytes moved, below the {non_idx_bytes}-byte floor");
+    let idx_total = total_bytes - non_idx_bytes;
+    assert_eq!(idx_total % vec_bytes, 0,
         "non-token upload bytes must be whole adapter_idx vectors");
-    assert!(idx_total / idx_bytes <= steps,
+    assert!(idx_total / vec_bytes <= steps,
         "at most one adapter_idx upload per forward");
+
+    // prefill instruments reconcile three ways: the latency histogram
+    // observes once per counted prefill; the cache gauge peaks at exactly
+    // one resident page set (capacity × (2·L·S·d_model + vocab) f32s);
+    // and the trace carries one `prefill` span per served request —
+    // admission marks the row pending, so the forward producing a
+    // request's first token is always a page rebuild, on the same worker,
+    // timestamped between its admit and first_token spans
+    let prefill_hist: u64 = snap
+        .samples
+        .iter()
+        .filter(|sm| sm.name == "serve_prefill_ms")
+        .map(|sm| match &sm.value {
+            sqft::obs::Value::Histogram { count, .. } => *count,
+            _ => panic!("expected a histogram"),
+        })
+        .sum();
+    assert_eq!(prefill_hist, prefills, "serve_prefill_ms count != serve_prefills_total");
+    let prefill_events = events(&parsed, "prefill");
+    if prefills > 0 {
+        assert_eq!(prefill_events.len(), served,
+            "every served request's first token rides exactly one prefill");
+        let page_bytes = (f.hyper.batch
+            * (2 * f.hyper.n_layers * f.hyper.seq_len * f.hyper.d_model + f.hyper.vocab)
+            * 4) as u64;
+        assert_eq!(snap.gauge_peak_max("serve_cache_resident_bytes") as u64, page_bytes,
+            "resident-cache gauge must peak at one full page set per worker");
+        let firsts: BTreeMap<usize, &Json> =
+            events(&parsed, "first_token").iter().map(|e| (num(e, "req"), *e)).collect();
+        for e in &prefill_events {
+            let req = num(e, "req");
+            let (a, ft) = (admits[&req], firsts[&req]);
+            assert_eq!(num(a, "worker"), num(e, "worker"));
+            assert!(t_ms(a) <= t_ms(e) && t_ms(e) <= t_ms(ft),
+                "prefill span for req {req} must land between admit and first_token");
+        }
+    } else {
+        assert!(prefill_events.is_empty(), "prefill spans on the legacy path");
+    }
 
     // the cross-shard SchedulerMetrics merge equals the registry's sums.
     // A request can be scheduled more than once: survivors of a rebuilt

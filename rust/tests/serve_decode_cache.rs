@@ -92,7 +92,10 @@ fn cached_decode_is_byte_identical_and_uploads_only_tokens() {
     // steady-state decode uploads only the token batch — and only on
     // forwards where a *live* slot changed: retired rows no longer write
     // their stop token back into the buffer, so the upload counter is
-    // exact, not merely an upper bound
+    // exact, not merely an upper bound.  These are the *legacy-path*
+    // invariants, so pin the full-forward leg (the KV-cached split has
+    // its own exact accounting in serve_kv_cache.rs).
+    engine.set_full_forward(true);
     let tok_bytes = (f.hyper.batch * f.hyper.seq_len * 4) as u64;
     let dev = registry.device_set(&f.entries[0].id).unwrap();
     let scope = UploadScope::begin();

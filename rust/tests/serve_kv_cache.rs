@@ -1,0 +1,408 @@
+//! Device-resident K/V cache (ISSUE 10 acceptance): the prefill +
+//! decode_step split must be invisible in the answers and visible only
+//! in the traffic.
+//!
+//! What must hold:
+//!   - KV-cached decode answers byte-identically to the legacy
+//!     full-forward path (`Engine::set_full_forward`) for all three
+//!     serving kinds — uniform f32, gathered mixed-tenant, packed INT4;
+//!   - a cached run uploads *exactly* `prefills × (token batch +
+//!     seq_lens)` plus `(steps − prefills) × (frontier + positions)`
+//!     bytes — the one-token O(1) frontier is the whole steady-state
+//!     host traffic;
+//!   - slot retire + refill invalidates the row's cache page: the next
+//!     forward re-prefills, and refilled requests still answer
+//!     byte-identically to the full-forward reference;
+//!   - survivors of a rebuilt session (in-session retries exhausted)
+//!     re-prefill in the fresh session and complete with fault-free
+//!     bytes.
+//!
+//! Requires `make artifacts` built after the KV split (tests gate on
+//! [`Engine::kv_cache_active`] and skip against stale artifact dirs).
+
+use sqft::data::{Dataset, Task, Tokenizer};
+use sqft::faults::{FaultInjector, FaultKind, FaultRule, SITE_FORWARD};
+use sqft::model::{init_base, ParamSet};
+use sqft::nls::SearchSpace;
+use sqft::peft::Method;
+use sqft::pipeline;
+use sqft::runtime::{Runtime, UploadScope};
+use sqft::serve::{
+    serve_pool_obs, AdapterEntry, AdapterRegistry, Engine, EngineSpec, PoolOpts, Request, Router,
+    SchedulerOpts, ServeObs, SharedAdapterSource, GATHERED_KIND,
+};
+use sqft::tensor::Rng;
+use sqft::train::TrainOpts;
+use std::path::Path;
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+struct Fixture {
+    rt: Runtime,
+    hyper: sqft::runtime::ModelHyper,
+    frozen: ParamSet,
+    entries: Vec<AdapterEntry>,
+    prompts: Vec<String>,
+}
+
+/// Shared scenario; None when artifacts are absent (CI without `make
+/// artifacts`).
+fn fixture(tenants: usize) -> Option<Fixture> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let config = "sqft-tiny";
+    let hyper = rt.model(config).unwrap().clone();
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 83);
+    let base = init_base(&hyper, &mut Rng::new(85));
+    let prepared = pipeline::prepare(&rt, config, &base, Method::Lora, 0.0,
+                                     &ds.train, &tok, 0, &mut Rng::new(86)).unwrap();
+    let frozen = prepared.frozen_set().unwrap();
+    let mut entries = pipeline::tenant_adapters(&rt, config, &prepared, tenants,
+                                                &ds.train, &tok, 2, 600).unwrap();
+    // inject large per-tenant deltas so a stale or skipped adapter input
+    // would visibly change answers
+    for (i, e) in entries.iter_mut().enumerate() {
+        let mut rng = Rng::new(900 + i as u64);
+        let a_shape = e.host_sets[0].get("a_q").unwrap().shape().to_vec();
+        let b_shape = e.host_sets[0].get("b_q").unwrap().shape().to_vec();
+        e.host_sets[0].insert("a_q", sqft::tensor::Tensor::randn(&mut rng, &a_shape, 1.0));
+        e.host_sets[0].insert("b_q", sqft::tensor::Tensor::randn(&mut rng, &b_shape, 1.0));
+    }
+    let mut grng = Rng::new(87);
+    let prompts: Vec<String> =
+        (0..5).map(|_| task.gen_sample(&mut grng).prompt).collect();
+    Some(Fixture { rt, hyper, frozen, entries, prompts })
+}
+
+/// Byte-identical equivalence on the uniform f32 kind, for both adapter
+/// residencies (device set and per-forward host upload), plus the exact
+/// cached-path upload contract.
+#[test]
+fn cached_decode_matches_full_forward_and_ships_only_the_frontier() {
+    let Some(f) = fixture(2) else { return };
+    let engine = Engine::new(&f.rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+    if !engine.kv_cache_active("eval") {
+        eprintln!("skipping: artifacts predate the KV-cache split");
+        return;
+    }
+    let mut registry = AdapterRegistry::new(2);
+    for e in &f.entries {
+        registry.register_resident(&f.rt, &f.hyper, e.clone()).unwrap();
+    }
+
+    for e in &f.entries {
+        let dev = registry.device_set(&e.id).unwrap();
+        let sets: Vec<&ParamSet> = e.host_sets.iter().collect();
+
+        // reference: the legacy full causal forward every step
+        engine.set_full_forward(true);
+        let full = engine
+            .generate_batch_cached(Some(dev), &[], &e.eval_kind, &f.prompts)
+            .unwrap();
+        assert_eq!(engine.last_decode_prefills(), 0,
+            "full-forward reference must never touch the cached split");
+
+        // KV-cached split, device-resident adapter and host-upload adapter
+        engine.set_full_forward(false);
+        let cached = engine
+            .generate_batch_cached(Some(dev), &[], &e.eval_kind, &f.prompts)
+            .unwrap();
+        assert_eq!(cached, full, "cached path diverged for tenant {}", e.id);
+        assert!(engine.last_decode_prefills() >= 1, "cached run must prefill");
+        let host = engine.generate_batch_for(&sets, &e.eval_kind, &f.prompts).unwrap();
+        assert_eq!(host, full, "host-upload cached path diverged for tenant {}", e.id);
+    }
+
+    // exact traffic: a prefill ships the token batch + seq_lens, every
+    // other forward ships only the frontier + positions vectors — token
+    // batches never move outside a prefill
+    let dev = registry.device_set(&f.entries[0].id).unwrap();
+    let scope = UploadScope::begin();
+    let _ = engine
+        .generate_batch_cached(Some(dev), &[], &f.entries[0].eval_kind, &f.prompts)
+        .unwrap();
+    let steps = engine.last_decode_steps() as u64;
+    let prefills = engine.last_decode_prefills() as u64;
+    assert!(prefills >= 1 && prefills <= steps);
+    assert_eq!(engine.last_decode_uploads() as u64, prefills,
+        "token batches must move exactly at prefills");
+    let tok_bytes = (f.hyper.batch * f.hyper.seq_len * 4) as u64;
+    let vec_bytes = (f.hyper.batch * 4) as u64;
+    assert_eq!(
+        scope.bytes(),
+        prefills * (tok_bytes + vec_bytes) + (steps - prefills) * 2 * vec_bytes,
+        "cached decode moved bytes outside the prefill/frontier contract"
+    );
+}
+
+/// The gathered mixed-tenant kind rides the same split: a 4-tenant
+/// interleaved workload through the router answers byte-identically
+/// whether the mixed sessions run `prefill_gathered`/`decode_gathered`
+/// or the legacy `eval_gathered` full forward.
+#[test]
+fn gathered_cached_decode_matches_full_forward_reference() {
+    let Some(f) = fixture(4) else { return };
+    let probe = Engine::new(&f.rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+    if !probe.supports_gathered() || !probe.kv_cache_active(GATHERED_KIND) {
+        eprintln!("skipping: artifacts lack the gathered KV-cache kinds");
+        return;
+    }
+    let b = probe.artifact_batch().unwrap();
+    drop(probe);
+
+    // interleaved mixed-length rounds, so refills cross tenants mid-session
+    let task = Task::SynBoolq;
+    let mut grng = Rng::new(97);
+    let lens: [(Option<usize>, usize); 3] = [(Some(1), 0), (Some(4), 4), (Some(2), 1)];
+    let mut specs: Vec<(usize, String, Option<usize>, usize)> = Vec::new();
+    for (max_new, min_new) in lens {
+        for t in 0..4 {
+            specs.push((t, task.gen_sample(&mut grng).prompt, max_new, min_new));
+        }
+    }
+
+    let serve = |full_forward: bool| {
+        let engine = Engine::new(&f.rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+        engine.set_full_forward(full_forward);
+        let mut registry = AdapterRegistry::new(4);
+        for e in &f.entries {
+            registry.register_resident(&f.rt, &f.hyper, e.clone()).unwrap();
+        }
+        let mut router = Router::new(engine, registry);
+        let (tx, rx) = channel::<Request>();
+        let mut replies = Vec::new();
+        for (t, prompt, max_new, min_new) in &specs {
+            let (rtx, rrx) = channel();
+            let mut req = Request::new(Some(f.entries[*t].id.clone()), prompt.clone(), rtx);
+            req.max_new_tokens = *max_new;
+            req.min_new_tokens = *min_new;
+            tx.send(req).unwrap();
+            replies.push(rrx);
+        }
+        drop(tx);
+        let opts = SchedulerOpts {
+            max_batch: b,
+            aging: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let stats = router.serve(rx, opts).unwrap();
+        let answers: Vec<String> =
+            replies.into_iter().map(|r| r.recv().unwrap().unwrap()).collect();
+        (answers, stats)
+    };
+
+    let (expected, ref_stats) = serve(true);
+    let (answers, stats) = serve(false);
+    assert!(ref_stats.scheduler.mixed_batches >= 1 && stats.scheduler.mixed_batches >= 1,
+        "both legs must actually ride the gathered mixed-tenant path");
+    for (i, ans) in answers.iter().enumerate() {
+        assert_eq!(ans, &expected[i],
+            "request {i} (tenant {}) diverged from the full-forward reference", specs[i].0);
+    }
+    assert_eq!(stats.total.served, specs.len());
+    assert_eq!(stats.total.errors, 0);
+}
+
+/// The packed-INT4 kind rides the same split: `prefill_int4` /
+/// `decode_int4` answers byte-identically to the legacy `eval_int4`
+/// full forward on the same packed engine.
+#[test]
+fn int4_cached_decode_matches_full_forward() {
+    let Some(f) = fixture(1) else { return };
+    let config = "sqft-tiny";
+    let tok = Tokenizer::new();
+    let task = Task::SynBoolq;
+    let ds = Dataset::generate(task, 300, 0, 30, 13);
+    let prepared = pipeline::prepare(
+        &f.rt, config, &init_base(&f.hyper, &mut Rng::new(14)), Method::QaSparsePeft, 0.5,
+        &ds.train, &tok, 2, &mut Rng::new(15)).unwrap();
+    let (choices, alpha) = pipeline::default_space_for(&prepared.hyper);
+    let space = SearchSpace::new(&prepared.hyper, choices, alpha).unwrap();
+    let (trainer, _) = pipeline::finetune(
+        &f.rt, config, &prepared, space, &ds.train, &tok,
+        &TrainOpts { steps: 4, lr: 1e-3, log_every: 4, seed: 17, fixed_rank: false })
+        .unwrap();
+    let cfg = trainer.space.heuristic_config();
+    let merged = pipeline::merged_state(&prepared, &trainer, &cfg).unwrap();
+    let int4 = pipeline::int4_model(&prepared, &merged).unwrap();
+
+    let engine = Engine::new_int4(&f.rt, config, &int4, 4).unwrap();
+    if !engine.kv_cache_active("eval_int4") {
+        eprintln!("skipping: artifacts lack the INT4 KV-cache kinds");
+        return;
+    }
+    engine.set_full_forward(true);
+    let full = engine.generate_batch(&f.prompts).unwrap();
+    assert_eq!(engine.last_decode_prefills(), 0);
+    engine.set_full_forward(false);
+    let cached = engine.generate_batch(&f.prompts).unwrap();
+    assert!(engine.last_decode_prefills() >= 1, "INT4 cached run must prefill");
+    assert_eq!(cached, full, "INT4 cached decode diverged from the full forward");
+}
+
+/// Continuous-batching refill invalidates the freed slot's cache page:
+/// every refill admission forces a re-prefill, and the refilled rows
+/// still answer byte-identically to the full-forward reference.
+#[test]
+fn slot_refill_invalidates_the_cache_page_and_reprefills() {
+    let Some(f) = fixture(1) else { return };
+    let long_new = 6usize;
+    let engine = Engine::new(&f.rt, "sqft-tiny", &f.frozen, None, "eval", long_new).unwrap();
+    if !engine.kv_cache_active("eval") {
+        eprintln!("skipping: artifacts predate the KV-cache split");
+        return;
+    }
+    let b = engine.artifact_batch().unwrap();
+    assert!(b >= 2, "need at least two slots to mix short and long");
+
+    // one long row pins the session open while 2b-2 one-token requests
+    // retire and refill around it — every refill dirties a cache page
+    let task = Task::SynBoolq;
+    let mut grng = Rng::new(53);
+    let mut specs: Vec<(String, Option<usize>, usize)> = Vec::new();
+    specs.push((task.gen_sample(&mut grng).prompt, Some(long_new), long_new));
+    for _ in 0..(2 * b - 2) {
+        specs.push((task.gen_sample(&mut grng).prompt, Some(1), 0));
+    }
+    let dev_entry = &f.entries[0];
+    let sets: Vec<&ParamSet> = dev_entry.host_sets.iter().collect();
+
+    // drive one continuous session: admit until full, refill freed slots
+    // from the waiting list after every step; (answers, steps, prefills)
+    let drive = |_label: &str| {
+        let mut s = engine.begin_decode().unwrap();
+        let mut answers = vec![String::new(); specs.len()];
+        let mut slot_req = vec![usize::MAX; b];
+        let mut next = 0usize;
+        while next < specs.len() && s.active_slots() < b {
+            let (prompt, max_new, min_new) = &specs[next];
+            let slot = engine.admit(&mut s, prompt, *max_new, *min_new).unwrap();
+            slot_req[slot] = next;
+            next += 1;
+        }
+        while s.active_slots() > 0 {
+            for (slot, ans) in engine
+                .decode_step(&mut s, None, &sets, &dev_entry.eval_kind)
+                .unwrap()
+            {
+                answers[slot_req[slot]] = ans;
+                if next < specs.len() {
+                    let (prompt, max_new, min_new) = &specs[next];
+                    let slot2 = engine.admit(&mut s, prompt, *max_new, *min_new).unwrap();
+                    slot_req[slot2] = next;
+                    next += 1;
+                }
+            }
+        }
+        assert_eq!(next, specs.len(), "every request must be admitted");
+        (answers, s.steps(), s.prefills())
+    };
+
+    engine.set_full_forward(true);
+    let (expected, ref_steps, ref_prefills) = drive("full");
+    assert_eq!(ref_prefills, 0);
+    engine.set_full_forward(false);
+    let (answers, steps, prefills) = drive("cached");
+    assert_eq!(answers, expected, "refilled session diverged from the reference");
+    assert_eq!(steps, ref_steps, "the split must not change session length");
+    // the initial admission plus every refill wave re-prefills; the long
+    // row's later forwards ride the cache
+    assert!(prefills >= 2, "refill admissions must invalidate and re-prefill");
+    assert!(prefills < steps, "steady-state forwards must ride the resident cache");
+}
+
+/// Survivors of a rebuilt session re-prefill: exhaust the in-session
+/// retry budget with pinned forward faults, forcing the pool to tear the
+/// session down and re-admit its residents — the fresh session must
+/// rebuild every cache page and finish with fault-free bytes.
+#[test]
+fn rebuilt_session_survivors_reprefill_and_match_baseline() {
+    let Some(f) = fixture(2) else { return };
+    {
+        let probe = Engine::new(&f.rt, "sqft-tiny", &f.frozen, None, "eval", 4).unwrap();
+        if !probe.kv_cache_active("eval") {
+            eprintln!("skipping: artifacts predate the KV-cache split");
+            return;
+        }
+    }
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let source = SharedAdapterSource::new(f.hyper.clone(), 8);
+    source.register_all(f.entries.clone()).unwrap();
+    let spec = EngineSpec {
+        artifacts: dir,
+        config: "sqft-tiny".to_string(),
+        frozen: f.frozen.clone(),
+        eval_kind: "eval".to_string(),
+        max_new_tokens: 4,
+        registry_capacity: 8,
+        device_budget: 0,
+        degrade_ranks: Vec::new(),
+    };
+    let task = Task::SynBoolq;
+    let mut grng = Rng::new(59);
+    let reqs: Vec<(Option<String>, String)> = (0..12)
+        .map(|i| {
+            (Some(f.entries[i % f.entries.len()].id.clone()),
+             task.gen_sample(&mut grng).prompt)
+        })
+        .collect();
+
+    let run = |faults: FaultInjector, max_retries: usize| {
+        let (tx, rx) = channel::<Request>();
+        let mut replies = Vec::new();
+        for (id, p) in &reqs {
+            let (rtx, rrx) = channel();
+            tx.send(Request::new(id.clone(), p.clone(), rtx)).unwrap();
+            replies.push(rrx);
+        }
+        drop(tx);
+        let obs = ServeObs::new();
+        let kept = obs.clone();
+        serve_pool_obs(
+            &spec,
+            &source,
+            rx,
+            PoolOpts {
+                workers: 1,
+                sched: SchedulerOpts {
+                    max_batch: f.hyper.batch,
+                    aging: Duration::from_millis(20),
+                    max_retries,
+                    ..Default::default()
+                },
+                faults,
+            },
+            obs,
+        )
+        .unwrap();
+        let answers: Vec<anyhow::Result<String>> =
+            replies.into_iter().map(|r| r.recv().unwrap()).collect();
+        (answers, kept)
+    };
+
+    let (baseline, _) = run(FaultInjector::disabled(), 1);
+    let baseline: Vec<String> =
+        baseline.into_iter().map(|r| r.expect("fault-free run must not error")).collect();
+
+    // two consecutive forward failures exhaust retry budget 1 → the
+    // session is torn down and every resident re-admitted
+    let inj = FaultInjector::seeded(23)
+        .with_rule(FaultRule::window(SITE_FORWARD, FaultKind::Error, 1, 2));
+    let (results, obs) = run(inj.clone(), 1);
+    assert_eq!(inj.fires(SITE_FORWARD), 2);
+    for (i, r) in results.iter().enumerate() {
+        let ans = r.as_ref().expect("re-admission must recover every resident");
+        assert_eq!(ans, &baseline[i], "request {i} diverged after session rebuild");
+    }
+    let snap = obs.registry().snapshot();
+    assert!(snap.sum("serve_sessions_rebuilt_total") >= 1.0,
+        "the retry-exhausted session must be rebuilt");
+    assert!(snap.sum("serve_prefills_total") >= 2.0,
+        "rebuilt-session survivors must re-prefill their cache pages");
+}
